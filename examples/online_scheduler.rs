@@ -1,0 +1,63 @@
+//! The paper's future-work scheduler, working end to end: jobs with
+//! different tasks arrive at the coordinator; the online optimizer
+//! probes a short prefix, fits the Table II convex model family, picks
+//! the optimal container count per (device, task), caches the decision
+//! and serves the rest of the workload with it.
+//!
+//! Run: `cargo run --release --example online_scheduler`
+
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::router::SplitPolicy;
+use divide_and_save::coordinator::{
+    Coordinator, InferenceJob, OnlineOptimizer, OptimizeObjective,
+};
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::workload::{TaskProfile, Video};
+
+fn main() -> anyhow::Result<()> {
+    for device in DeviceSpec::all() {
+        println!("\n## {} — online optimal-k scheduling", device.name);
+        let mut base = ExperimentConfig::default();
+        base.device = device.clone();
+
+        let optimizer = OnlineOptimizer {
+            objective: OptimizeObjective::Weighted(0.5),
+            ..Default::default()
+        };
+        let mut coordinator = Coordinator::new(base.clone(), SplitPolicy::Online(optimizer));
+        let mut naive = Coordinator::new(base, SplitPolicy::Fixed(1));
+
+        let mut saved_time = 0.0;
+        let mut saved_energy = 0.0;
+        for (id, task) in [
+            (0u64, TaskProfile::yolo_tiny()),
+            (1, TaskProfile::simple_cnn()),
+            (2, TaskProfile::yolo_tiny()),
+            (3, TaskProfile::yolo_tiny()),
+        ] {
+            let job = InferenceJob {
+                id,
+                video: Video::paper_default(),
+                task: task.clone(),
+            };
+            let smart = coordinator.submit(job.clone())?;
+            let dumb = naive.submit(job)?;
+            saved_time += dumb.result.time_s - smart.result.time_s;
+            saved_energy += dumb.result.energy_j - smart.result.energy_j;
+            println!(
+                "  job {id} ({:<10}): k={} -> {:6.1}s {:6.1}J   (1 container: {:6.1}s {:6.1}J)",
+                task.name,
+                smart.containers_used,
+                smart.result.time_s,
+                smart.result.energy_j,
+                dumb.result.time_s,
+                dumb.result.energy_j,
+            );
+        }
+        for (key, d) in coordinator.decisions() {
+            println!("  cached decision {key}: k={} model {}", d.best_k, d.model.describe());
+        }
+        println!("  total saved: {saved_time:.1} s, {saved_energy:.1} J across 4 jobs");
+    }
+    Ok(())
+}

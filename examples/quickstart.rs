@@ -1,0 +1,36 @@
+//! Quickstart: the paper's method in ~30 lines of API.
+//!
+//! Splits the paper's 30-second video (720 frames) across 4 containers
+//! on a simulated Jetson TX2 and compares time / energy / power against
+//! the single-container benchmark — Fig. 3's headline cells.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::executor::run_sim;
+
+fn main() -> anyhow::Result<()> {
+    // The benchmark: one container, all four TX2 cores.
+    let mut cfg = ExperimentConfig::default();
+    cfg.containers = 1;
+    let benchmark = run_sim(&cfg)?;
+    println!(
+        "benchmark (1 container):  {:6.1} s  {:6.1} J  {:5.2} W",
+        benchmark.time_s, benchmark.energy_j, benchmark.avg_power_w
+    );
+
+    // Divide and save: 4 containers, 1 core + 180 frames each.
+    cfg.containers = 4;
+    let split = run_sim(&cfg)?;
+    println!(
+        "divide-and-save (k=4):    {:6.1} s  {:6.1} J  {:5.2} W",
+        split.time_s, split.energy_j, split.avg_power_w
+    );
+
+    let (t, e, p) = split.normalized(&benchmark);
+    println!("\nversus benchmark:");
+    println!("  time   {:5.1}% ({t:.3}x)   paper: -25%", (t - 1.0) * 100.0);
+    println!("  energy {:5.1}% ({e:.3}x)   paper: -15%", (e - 1.0) * 100.0);
+    println!("  power  {:+5.1}% ({p:.3}x)   paper: +13%", (p - 1.0) * 100.0);
+    Ok(())
+}

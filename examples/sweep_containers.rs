@@ -1,0 +1,55 @@
+//! Full container sweep on both devices — regenerates the data behind
+//! the paper's Fig. 3a/3b/3c and writes CSVs under `results/`.
+//!
+//! Run: `cargo run --release --example sweep_containers`
+
+use divide_and_save::bench::Table;
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::executor::run_sim;
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    for device in DeviceSpec::all() {
+        let k_max = device.memory.max_containers(720);
+        println!("\n## {} (1..{k_max} containers, 720 frames)", device.name);
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.device = device.clone();
+        cfg.containers = 1;
+        let bench = run_sim(&cfg)?;
+
+        let mut table =
+            Table::new(["k", "time_s", "energy_j", "power_w", "T/T1", "E/E1", "P/P1"]);
+        let mut csv = CsvWriter::new(["k", "time_s", "energy_j", "power_w", "t", "e", "p"]);
+        for k in 1..=k_max {
+            let mut c = cfg.clone();
+            c.containers = k;
+            let r = run_sim(&c)?;
+            let (t, e, p) = r.normalized(&bench);
+            table.row([
+                k.to_string(),
+                format!("{:.1}", r.time_s),
+                format!("{:.1}", r.energy_j),
+                format!("{:.2}", r.avg_power_w),
+                format!("{t:.3}"),
+                format!("{e:.3}"),
+                format!("{p:.3}"),
+            ]);
+            csv.row([
+                k.to_string(),
+                r.time_s.to_string(),
+                r.energy_j.to_string(),
+                r.avg_power_w.to_string(),
+                t.to_string(),
+                e.to_string(),
+                p.to_string(),
+            ]);
+        }
+        table.print();
+        let path = format!("results/fig3_{}.csv", device.name);
+        csv.save(&path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

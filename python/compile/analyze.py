@@ -1,0 +1,119 @@
+"""L2 analysis tool: HLO op census + L1 VMEM/MXU estimates for the
+shipped variants.
+
+Used by the §Perf pass (EXPERIMENTS.md) and runnable standalone:
+
+    cd python && python -m compile.analyze
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+import jax
+
+from . import aot
+from . import model as M
+from .kernels import matmul
+
+OP_RE = re.compile(r"\s+%?[\w.-]+ = \S+ ([\w-]+)\(")
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Count HLO opcodes in a module's text."""
+    ops: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = OP_RE.match(line)
+        if m:
+            ops[m.group(1)] = ops.get(m.group(1), 0) + 1
+    return ops
+
+
+def fusion_health(ops: Dict[str, int]) -> List[str]:
+    """Red flags for the L2 target 'fused where XLA can fuse, no
+    redundant recomputation / relayouts'."""
+    flags = []
+    if ops.get("while", 0) > 0:
+        flags.append(f"{ops['while']} while loop(s): grid not fully unrolled")
+    if ops.get("transpose", 0) > 0:
+        flags.append(f"{ops['transpose']} transpose(s): layout churn")
+    if ops.get("copy", 0) > 0:
+        flags.append(f"{ops['copy']} copy(s)")
+    if ops.get("convolution", 0) > 0:
+        flags.append(
+            f"{ops['convolution']} convolution(s): conv escaped the Pallas GEMM"
+        )
+    return flags
+
+
+def gemm_shapes(model_name: str, batch: int) -> List[Tuple[str, int, int, int]]:
+    """(layer, M, K, N) for every GEMM the model lowers to."""
+    shapes = []
+    if model_name == "yolo_tiny":
+        h = w = M.YOLO_INPUT[0]
+        for name, k, cin, cout, stride, _act in M.YOLO_BACKBONE:
+            h, w = -(-h // stride), -(-w // stride)
+            shapes.append((name, batch * h * w, k * k * cin, cout))
+            if name == "conv4":
+                h, w = h // 2, w // 2
+            if name == "conv5":
+                h, w = h // 2, w // 2
+        head_ch = M.NUM_ANCHORS * M.NATTR
+        shapes.append(("head_coarse", batch * 36, 128, head_ch))
+        shapes.append(("head_fine", batch * 144, 64, head_ch))
+    else:
+        h = w = M.CNN_INPUT[0]
+        for name, k, cin, cout, stride, _act in M.CNN_LAYERS:
+            h, w = -(-h // stride), -(-w // stride)
+            shapes.append((name, batch * h * w, k * k * cin, cout))
+        for name, din, dout, _act in M.CNN_DENSE:
+            shapes.append((name, batch, din, dout))
+    return shapes
+
+
+def kernel_report(model_name: str, batch: int) -> List[dict]:
+    """Per-GEMM block choice, VMEM footprint and MXU estimate."""
+    rows = []
+    for layer, m, k, n in gemm_shapes(model_name, batch):
+        bm, bn, bk = matmul.auto_blocks(m, k, n)
+        rows.append(
+            {
+                "layer": layer,
+                "mkn": (m, k, n),
+                "blocks": (bm, bn, bk),
+                "grid_steps": -(-m // bm) * -(-n // bn) * -(-k // bk),
+                "vmem_bytes": matmul.vmem_footprint_bytes(bm, bn, bk),
+                "mxu_est": matmul.mxu_utilization_estimate(m, k, n, bm, bn, bk),
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    for name, model_name, batch, use_ref in aot.VARIANTS:
+        fn, args = M.make_jitted(model_name, batch, use_ref=use_ref)
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        ops = op_census(text)
+        flags = fusion_health(ops)
+        print(f"\n== {name}: {sum(ops.values())} ops ==")
+        top = sorted(ops.items(), key=lambda kv: -kv[1])[:6]
+        print("  top ops:", ", ".join(f"{k}x{v}" for k, v in top))
+        print("  flags:", flags if flags else "clean")
+        if not use_ref:
+            for row in kernel_report(model_name, batch):
+                print(
+                    "  {layer:12} MKN{mkn} blocks{blocks} steps={grid_steps}"
+                    " vmem={vmem:.1f}MB mxu={mxu:.2f}".format(
+                        layer=row["layer"],
+                        mkn=row["mkn"],
+                        blocks=row["blocks"],
+                        grid_steps=row["grid_steps"],
+                        vmem=row["vmem_bytes"] / 1e6,
+                        mxu=row["mxu_est"],
+                    )
+                )
+
+
+if __name__ == "__main__":
+    main()

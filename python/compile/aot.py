@@ -1,0 +1,126 @@
+"""AOT compile path: lower every (model, batch) variant to HLO *text* and
+write an ``artifacts/manifest.json`` index the rust runtime consumes.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 rust crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Run once via ``make artifacts``; python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# (variant name, model, batch, use_ref). The *_ref variants lower the
+# pure-jnp network for the L2 perf comparison (EXPERIMENTS.md §Perf).
+VARIANTS = [
+    ("yolo_tiny_b1", "yolo_tiny", 1, False),
+    ("yolo_tiny_b2", "yolo_tiny", 2, False),
+    ("yolo_tiny_b4", "yolo_tiny", 4, False),
+    ("yolo_tiny_b8", "yolo_tiny", 8, False),
+    ("yolo_tiny_ref_b4", "yolo_tiny", 4, True),
+    ("simple_cnn_b1", "simple_cnn", 1, False),
+    ("simple_cnn_b8", "simple_cnn", 8, False),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked model weights MUST survive the
+    # text round-trip (default elides them as ``constant({...})``, which
+    # the rust-side parser would reject).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_variant(name: str, model: str, batch: int, use_ref: bool):
+    fn, example_args = M.make_jitted(model, batch, use_ref=use_ref)
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+
+    if model == "yolo_tiny":
+        outputs = [
+            {"name": "boxes_coarse", "shape": [batch, 108, M.NATTR]},
+            {"name": "boxes_fine", "shape": [batch, 432, M.NATTR]},
+        ]
+        flops = M.yolo_flops_per_frame()
+        params = M.param_count(M.init_yolo_params())
+        in_shape = [batch, *M.YOLO_INPUT]
+    else:
+        outputs = [{"name": "logits", "shape": [batch, 10]}]
+        flops = M.cnn_flops_per_frame()
+        params = M.param_count(M.init_cnn_params())
+        in_shape = [batch, *M.CNN_INPUT]
+
+    entry = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "model": model,
+        "batch": batch,
+        "ref_kernels": use_ref,
+        "input": {"shape": in_shape, "dtype": "f32"},
+        "outputs": outputs,
+        "flops_per_frame": flops,
+        "param_count": params,
+        "num_classes": M.NUM_CLASSES,
+        "num_anchors": M.NUM_ANCHORS,
+        "nattr": M.NATTR,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated variant names to build"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = []
+    for name, model, batch, use_ref in VARIANTS:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        text, entry = lower_variant(name, model, batch, use_ref)
+        path = os.path.join(args.out_dir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(entry)
+        print(
+            f"  {name}: {len(text) / 1e6:.2f} MB HLO text, "
+            f"{time.time() - t0:.1f}s"
+        )
+
+    manifest = {
+        "format": "hlo-text-v1",
+        "anchors_coarse": M.ANCHORS_COARSE.tolist(),
+        "anchors_fine": M.ANCHORS_FINE.tolist(),
+        "variants": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} variants to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO)."""
+
+from . import conv, decode, matmul, pool, ref  # noqa: F401

@@ -1,0 +1,99 @@
+"""L1: conv2d as im2col + the tiled Pallas GEMM kernel.
+
+The convolution is re-expressed for the MXU (DESIGN.md
+§Hardware-Adaptation): patches are extracted with static slices (a pure
+data-movement reshuffle XLA folds into the surrounding program) and the
+actual arithmetic — the (B*H'*W', kh*kw*Cin) x (kh*kw*Cin, Cout) GEMM
+with fused bias + leaky-ReLU epilogue — runs in
+``matmul.matmul_bias_act``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import matmul
+
+
+def extract_patches(x, kh: int, kw: int, stride: int, padding: str):
+    """im2col: NHWC -> (B, H', W', kh*kw*Cin) with (ki, kj, cin) ordering,
+    matching ``w.reshape(kh*kw*cin, cout)`` for HWIO weights."""
+    b, h, w, c = x.shape
+    if padding == "SAME":
+        # XLA-style SAME: total = (out-1)*stride + k - in, split low/high
+        # with the extra pixel on the high side (matches
+        # lax.conv_general_dilated, which pads asymmetrically for
+        # stride > 1 on even inputs).
+        out_h = -(-h // stride)
+        out_w = -(-w // stride)
+        tot_h = max(0, (out_h - 1) * stride + kh - h)
+        tot_w = max(0, (out_w - 1) * stride + kw - w)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (tot_h // 2, tot_h - tot_h // 2),
+                (tot_w // 2, tot_w - tot_w // 2),
+                (0, 0),
+            ),
+        )
+    elif padding == "VALID":
+        out_h = (h - kh) // stride + 1
+        out_w = (w - kw) // stride + 1
+    else:
+        raise ValueError(f"unknown padding {padding!r}")
+
+    cols = []
+    for ki in range(kh):
+        for kj in range(kw):
+            sl = x[
+                :,
+                ki : ki + (out_h - 1) * stride + 1 : stride,
+                kj : kj + (out_w - 1) * stride + 1 : stride,
+                :,
+            ]
+            cols.append(sl)
+    return jnp.concatenate(cols, axis=-1), out_h, out_w
+
+
+def conv2d_bias_act(
+    x,
+    w,
+    b,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    act: str = "leaky_relu",
+    block_m=None,
+    block_n=None,
+    block_k=None,
+):
+    """2-D convolution with fused bias + activation.
+
+    Args:
+      x: (B, H, W, Cin) NHWC input.
+      w: (kh, kw, Cin, Cout) HWIO weights.
+      b: (Cout,) bias.
+      stride: spatial stride (same in both dims).
+      padding: "SAME" or "VALID".
+      act: activation name from ``matmul.ACTIVATIONS``.
+
+    Returns:
+      (B, H', W', Cout) output.
+    """
+    kh, kw, cin, cout = w.shape
+    if x.shape[-1] != cin:
+        raise ValueError(f"Cin mismatch: x {x.shape} vs w {w.shape}")
+    patches, out_h, out_w = extract_patches(x, kh, kw, stride, padding)
+    bsz = x.shape[0]
+    lhs = patches.reshape(bsz * out_h * out_w, kh * kw * cin)
+    rhs = w.reshape(kh * kw * cin, cout)
+    y = matmul.matmul_bias_act(
+        lhs, rhs, b, act=act, block_m=block_m, block_n=block_n, block_k=block_k
+    )
+    return y.reshape(bsz, out_h, out_w, cout)
+
+
+def conv_flops(h_out: int, w_out: int, kh: int, kw: int, cin: int, cout: int) -> int:
+    """MACs*2 per image for one conv layer (bias+act ignored)."""
+    return 2 * h_out * w_out * kh * kw * cin * cout

@@ -1,0 +1,227 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation epilogue.
+
+This is the compute hot-spot of the whole stack: every convolution in the
+tiny-YOLO backbone is lowered to an im2col GEMM that lands here, and the
+dense layers of the simple CNN call it directly.
+
+TPU adaptation of the (normally CUDA) YOLO workload, per DESIGN.md
+§Hardware-Adaptation:
+
+  * the MXU systolic array is the compute primitive, so the kernel is a
+    (bm, bk) x (bk, bn) block matmul, not a thread-per-output-pixel loop;
+  * BlockSpec index maps express the HBM->VMEM streaming schedule that a
+    CUDA implementation would write with shared-memory threadblocks;
+  * the elementwise epilogue (bias add + leaky ReLU) is fused into the
+    output block while it is still resident in VMEM, avoiding an HBM
+    round-trip for the activation pass.
+
+Kernels are always lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers the grid
+into plain HLO (a fori loop of dynamic-slice/dot/dynamic-update-slice),
+which the rust runtime executes unmodified.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block-shape policy (§Perf iterations 1-3, see EXPERIMENTS.md §Perf).
+#
+# AUTO-sized blocks instead of fixed 128^3 tiles, chosen by problem size:
+#
+#  1. If the WHOLE padded problem (x + w + bias + out) fits
+#     SINGLE_STEP_VMEM (14 MiB of the 16 MiB TPU VMEM), use one grid
+#     step with block = problem. For this paper's scaled tiny-YOLO every
+#     GEMM at batch <= 4 qualifies — a legitimate whole-problem-in-VMEM
+#     kernel. It also sidesteps interpret mode's dominant cost (a
+#     full-array copy-back per grid step): 32.6 -> ~2 ms/frame measured.
+#  2. Otherwise tile: full K and N extents if they fit their caps (the
+#     MXU streams K-major without revisiting the output block), and
+#     grow bm under TILE_VMEM_BUDGET, leaving headroom to double-buffer
+#     the next x block. This is the path real YOLOv4-tiny sizes take;
+#     block-shape invariance tests pin its correctness.
+#
+# Padding is to multiples of 8 (f32 sublane), NOT powers of two — pow2
+# padding inflated K=288 to 512, nearly doubling HBM traffic (iteration
+# 2's measured regression).
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+SINGLE_STEP_VMEM = 14 * 1024 * 1024
+TILE_VMEM_BUDGET = 4 * 1024 * 1024
+MAX_BLOCK_M = 4096
+MAX_BLOCK_N = 512
+MAX_BLOCK_K = 2048
+
+
+def _ceil8(v: int) -> int:
+    return max(8, (v + 7) // 8 * 8)
+
+
+def auto_blocks(m: int, k: int, n: int, bytes_per_elem: int = 4):
+    """Pick (bm, bn, bk) for an (m,k)x(k,n) GEMM per the policy above."""
+    mm, kk, nn = _ceil8(m), _ceil8(k), _ceil8(n)
+    full = bytes_per_elem * (mm * kk + kk * nn + nn + mm * nn)
+    if full <= SINGLE_STEP_VMEM:
+        return mm, nn, kk
+    bk = min(kk, MAX_BLOCK_K)
+    bn = min(nn, MAX_BLOCK_N)
+    bm = 8
+    while bm < MAX_BLOCK_M and bm < mm:
+        nxt = bm * 2
+        footprint = bytes_per_elem * (nxt * bk + bk * bn + bn + nxt * bn)
+        if footprint > TILE_VMEM_BUDGET:
+            break
+        bm = nxt
+    return bm, bn, bk
+
+LEAKY_SLOPE = 0.1
+
+ACTIVATIONS = ("linear", "leaky_relu", "relu", "sigmoid")
+
+
+def apply_act(y, act: str):
+    """Elementwise epilogue used by the kernel and by ref.py."""
+    if act == "linear":
+        return y
+    if act == "leaky_relu":
+        return jnp.where(y >= 0, y, LEAKY_SLOPE * y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(y)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str, k_steps: int):
+    """Grid point (i, j, k): accumulate x[i,k] @ w[k,j] into the output
+    block (revisited across k), apply bias + activation on the last k step
+    while the block is still in VMEM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = apply_act(o_ref[...] + b_ref[...], act).astype(o_ref.dtype)
+
+
+def _pad_to(x, multiple, axis):
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _fit_block(requested: int, dim: int) -> int:
+    """Shrink a block edge for small problems: dim rounded up to a
+    multiple of 8, clamped to [8, requested]."""
+    return min(requested, _ceil8(dim))
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_m", "block_n", "block_k"))
+def matmul_bias_act(
+    x,
+    w,
+    b,
+    *,
+    act: str = "linear",
+    block_m=None,
+    block_n=None,
+    block_k=None,
+):
+    """``act(x @ w + b)`` as a tiled Pallas kernel.
+
+    Args:
+      x: (M, K) float array.
+      w: (K, N) float array.
+      b: (N,) float array, broadcast over rows.
+      act: one of ``ACTIVATIONS``.
+      block_m/n/k: tile edges; default None = ``auto_blocks`` policy.
+
+    Returns:
+      (M, N) array with the dtype of ``x``.
+    """
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    auto_m, auto_n, auto_k = auto_blocks(m, k, n)
+    bm = _fit_block(block_m or auto_m, m)
+    bn = _fit_block(block_n or auto_n, n)
+    bk = _fit_block(block_k or auto_k, k)
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    bp = _pad_to(b.reshape(1, n), bn, 1)
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, act=act, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+    bytes_per_elem: int = 4,
+) -> int:
+    """Analytic VMEM bytes resident per grid step (x block + w block +
+    bias row + output block). Used by the §Perf estimate and its test."""
+    return bytes_per_elem * (
+        block_m * block_k + block_k * block_n + block_n + block_m * block_n
+    )
+
+
+def mxu_utilization_estimate(
+    m: int,
+    k: int,
+    n: int,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+    mxu: int = 128,
+) -> float:
+    """Fraction of MXU lanes doing useful work for an (m,k)x(k,n) GEMM
+    tiled with the given blocks: padding waste x tile-edge waste."""
+
+    def ceil_div(a, b):
+        return -(-a // b)
+
+    eff_m = m / (ceil_div(m, block_m) * block_m)
+    eff_n = n / (ceil_div(n, block_n) * block_n)
+    eff_k = k / (ceil_div(k, block_k) * block_k)
+    tile_m = min(block_m, mxu) / mxu
+    tile_n = min(block_n, mxu) / mxu
+    return eff_m * eff_n * eff_k * tile_m * tile_n

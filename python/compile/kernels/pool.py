@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: 2x2/stride-2 max pooling.
+
+One grid step per image; the (H, W, C) feature map is a single VMEM block
+(largest map in tiny-YOLO is 24x24x32 = 73 KiB << 16 MiB VMEM), reduced
+with a reshape-max — the VPU-friendly formulation (8x128 lanes operate on
+the channel-minor layout).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, H, W, C)
+    _, h, w, c = x.shape
+    x = x.reshape(h // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(x, axis=(1, 3)).reshape(1, h // 2, w // 2, c)
+
+
+def maxpool2x2(x):
+    """Max-pool NHWC input with 2x2 window, stride 2.
+
+    H and W must be even (tiny-YOLO only pools even maps).
+    """
+    b, h, w, c = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2x2 needs even H,W; got {x.shape}")
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``*_ref`` mirrors the public signature of the corresponding kernel in
+matmul.py / conv.py / pool.py / decode.py; pytest + hypothesis assert
+allclose between the two over shape/dtype sweeps (python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.1
+
+
+def apply_act_ref(y, act: str):
+    if act == "linear":
+        return y
+    if act == "leaky_relu":
+        return jnp.where(y >= 0, y, LEAKY_SLOPE * y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(y)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def matmul_bias_act_ref(x, w, b, *, act: str = "linear"):
+    return apply_act_ref(jnp.dot(x, w) + b, act)
+
+
+def conv2d_bias_act_ref(x, w, b, *, stride: int = 1, padding: str = "SAME",
+                        act: str = "leaky_relu"):
+    """NHWC x HWIO convolution via lax.conv_general_dilated."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return apply_act_ref(y + b, act)
+
+
+def maxpool2x2_ref(x):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def decode_head_ref(x, anchors, num_classes: int):
+    b, h, w, ch = x.shape
+    a = anchors.shape[0]
+    nattr = 5 + num_classes
+    assert ch == a * nattr
+    x = x.reshape(b, h, w, a, nattr)
+    cell_y = jax.lax.broadcasted_iota(x.dtype, (h, w, a), 0)
+    cell_x = jax.lax.broadcasted_iota(x.dtype, (h, w, a), 1)
+    sig = jax.nn.sigmoid(x)
+    bx = (sig[..., 0] + cell_x) / w
+    by = (sig[..., 1] + cell_y) / h
+    bw = anchors[:, 0] * jnp.exp(x[..., 2])
+    bh = anchors[:, 1] * jnp.exp(x[..., 3])
+    out = jnp.concatenate(
+        [bx[..., None], by[..., None], bw[..., None], bh[..., None], sig[..., 4:]],
+        axis=-1,
+    )
+    return out.reshape(b, h * w * a, nattr)

@@ -1,0 +1,242 @@
+"""L2: the inference models, written in JAX on top of the L1 Pallas kernels.
+
+Two models, matching the paper's workloads:
+
+* ``yolo_tiny`` — a structurally faithful, scaled-down YOLOv4-tiny:
+  strided-conv + leaky-ReLU backbone, maxpool downsamples, and TWO
+  detection heads at different scales (6x6 and 12x12 grids, 3 anchors
+  each), each followed by the Pallas decode kernel. The paper's headline
+  experiments run YOLOv4-tiny on video frames; this model reproduces its
+  *shape* (multi-scale anchor detection, leaky-ReLU CNN) at a size a CPU
+  PJRT backend serves at interactive rates. Scale-down is a documented
+  substitution (DESIGN.md §2): the paper shows only frame COUNT matters
+  for time/energy, so per-frame cost is a calibrated scalar anyway.
+
+* ``simple_cnn`` — the §VI "simple CNN inference task": a small
+  conv/conv/pool/dense classifier.
+
+Weights are initialised from a fixed-seed PRNG and baked into the lowered
+HLO as constants, so the rust runtime feeds ONLY the frame batch — python
+never runs at serve time.
+
+Every conv/dense goes through ``kernels.matmul.matmul_bias_act`` (the
+Pallas GEMM); pure-jnp reference versions (``*_apply_ref``) exist for L2
+validation and the §Perf L2 comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv, decode, matmul, pool, ref
+
+NUM_CLASSES = 20
+NUM_ANCHORS = 3
+NATTR = 5 + NUM_CLASSES
+
+YOLO_INPUT = (96, 96, 3)
+CNN_INPUT = (32, 32, 3)
+
+# Anchor boxes as fractions of image size: coarse head (6x6 grid) and
+# fine head (12x12 grid) — mirroring YOLOv4-tiny's two-scale layout.
+ANCHORS_COARSE = np.array(
+    [[0.25, 0.30], [0.40, 0.50], [0.70, 0.80]], dtype=np.float32
+)
+ANCHORS_FINE = np.array(
+    [[0.06, 0.08], [0.12, 0.15], [0.20, 0.25]], dtype=np.float32
+)
+
+# (name, kh, cin, cout, stride, act) — the backbone; heads are 1x1 convs.
+YOLO_BACKBONE = [
+    ("conv1", 3, 3, 16, 2, "leaky_relu"),
+    ("conv2", 3, 16, 32, 2, "leaky_relu"),
+    ("conv3", 3, 32, 32, 1, "leaky_relu"),
+    ("conv4", 3, 32, 32, 1, "leaky_relu"),
+    # maxpool 24->12
+    ("conv5", 3, 32, 64, 1, "leaky_relu"),  # 12x12x64  (fine-head source)
+    # maxpool 12->6
+    ("conv6", 3, 64, 128, 1, "leaky_relu"),  # 6x6x128 (coarse-head source)
+]
+
+CNN_LAYERS = [
+    ("conv1", 3, 3, 16, 2, "leaky_relu"),  # 16x16x16
+    ("conv2", 3, 16, 32, 2, "leaky_relu"),  # 8x8x32
+    # maxpool 8->4  => flatten 512
+]
+CNN_DENSE = [("fc1", 512, 64, "relu"), ("fc2", 64, 10, "linear")]
+
+
+def _he_init(key, shape):
+    fan_in = int(np.prod(shape[:-1]))
+    return jax.random.normal(key, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+
+def init_yolo_params(seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Fixed-seed He-normal init for every tiny-YOLO weight."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jnp.ndarray] = {}
+    for name, k, cin, cout, _s, _a in YOLO_BACKBONE:
+        key, wk = jax.random.split(key)
+        params[f"{name}_w"] = _he_init(wk, (k, k, cin, cout))
+        params[f"{name}_b"] = jnp.zeros((cout,), jnp.float32)
+    head_ch = NUM_ANCHORS * NATTR
+    for name, cin in (("head_coarse", 128), ("head_fine", 64)):
+        key, wk = jax.random.split(key)
+        params[f"{name}_w"] = _he_init(wk, (1, 1, cin, head_ch))
+        params[f"{name}_b"] = jnp.zeros((head_ch,), jnp.float32)
+    return params
+
+
+def init_cnn_params(seed: int = 0) -> Dict[str, jnp.ndarray]:
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jnp.ndarray] = {}
+    for name, k, cin, cout, _s, _a in CNN_LAYERS:
+        key, wk = jax.random.split(key)
+        params[f"{name}_w"] = _he_init(wk, (k, k, cin, cout))
+        params[f"{name}_b"] = jnp.zeros((cout,), jnp.float32)
+    for name, din, dout, _a in CNN_DENSE:
+        key, wk = jax.random.split(key)
+        params[f"{name}_w"] = _he_init(wk, (din, dout))
+        params[f"{name}_b"] = jnp.zeros((dout,), jnp.float32)
+    return params
+
+
+def _backbone(params, x, conv_fn, pool_fn):
+    feats = {}
+    for name, _k, _cin, _cout, stride, act in YOLO_BACKBONE:
+        x = conv_fn(
+            x, params[f"{name}_w"], params[f"{name}_b"], stride=stride, act=act
+        )
+        if name == "conv4":
+            x = pool_fn(x)  # 24 -> 12
+        if name == "conv5":
+            feats["fine"] = x  # 12x12x64
+            x = pool_fn(x)  # 12 -> 6
+    feats["coarse"] = x  # 6x6x128
+    return feats
+
+
+def _heads(params, feats, conv_fn, decode_fn):
+    raw_c = conv_fn(
+        feats["coarse"],
+        params["head_coarse_w"],
+        params["head_coarse_b"],
+        stride=1,
+        act="linear",
+    )
+    raw_f = conv_fn(
+        feats["fine"],
+        params["head_fine_w"],
+        params["head_fine_b"],
+        stride=1,
+        act="linear",
+    )
+    boxes_c = decode_fn(raw_c, jnp.asarray(ANCHORS_COARSE), NUM_CLASSES)
+    boxes_f = decode_fn(raw_f, jnp.asarray(ANCHORS_FINE), NUM_CLASSES)
+    return boxes_c, boxes_f
+
+
+def yolo_tiny_apply(params, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pallas-kernel forward pass.
+
+    Args:
+      params: from ``init_yolo_params``.
+      x: (B, 96, 96, 3) frames in [0, 1].
+
+    Returns:
+      (boxes_coarse (B, 108, 25), boxes_fine (B, 432, 25)).
+    """
+    feats = _backbone(params, x, conv.conv2d_bias_act, pool.maxpool2x2)
+    return _heads(params, feats, conv.conv2d_bias_act, decode.decode_head)
+
+
+def yolo_tiny_apply_ref(params, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Same network through the pure-jnp oracle kernels (L2 ground truth)."""
+    feats = _backbone(params, x, ref.conv2d_bias_act_ref, ref.maxpool2x2_ref)
+    return _heads(params, feats, ref.conv2d_bias_act_ref, ref.decode_head_ref)
+
+
+def simple_cnn_apply(params, x) -> Tuple[jnp.ndarray]:
+    """Pallas-kernel simple-CNN forward: (B, 32, 32, 3) -> (B, 10) logits."""
+    for name, _k, _cin, _cout, stride, act in CNN_LAYERS:
+        x = conv.conv2d_bias_act(
+            x, params[f"{name}_w"], params[f"{name}_b"], stride=stride, act=act
+        )
+    x = pool.maxpool2x2(x)  # 8 -> 4
+    x = x.reshape(x.shape[0], -1)
+    for name, _din, _dout, act in CNN_DENSE:
+        x = matmul.matmul_bias_act(
+            x, params[f"{name}_w"], params[f"{name}_b"], act=act
+        )
+    return (x,)
+
+
+def simple_cnn_apply_ref(params, x) -> Tuple[jnp.ndarray]:
+    for name, _k, _cin, _cout, stride, act in CNN_LAYERS:
+        x = ref.conv2d_bias_act_ref(
+            x, params[f"{name}_w"], params[f"{name}_b"], stride=stride, act=act
+        )
+    x = ref.maxpool2x2_ref(x)
+    x = x.reshape(x.shape[0], -1)
+    for name, _din, _dout, act in CNN_DENSE:
+        x = ref.matmul_bias_act_ref(
+            x, params[f"{name}_w"], params[f"{name}_b"], act=act
+        )
+    return (x,)
+
+
+def yolo_flops_per_frame() -> int:
+    """Analytic FLOPs for one 96x96 frame through tiny-YOLO (manifest +
+    cost-model input)."""
+    h = w = YOLO_INPUT[0]
+    total = 0
+    for _name, k, cin, cout, stride, _act in YOLO_BACKBONE:
+        h, w = -(-h // stride), -(-w // stride)
+        total += conv.conv_flops(h, w, k, k, cin, cout)
+        if _name == "conv4":
+            h, w = h // 2, w // 2
+        if _name == "conv5":
+            h, w = h // 2, w // 2
+    head_ch = NUM_ANCHORS * NATTR
+    total += conv.conv_flops(6, 6, 1, 1, 128, head_ch)
+    total += conv.conv_flops(12, 12, 1, 1, 64, head_ch)
+    return total
+
+
+def cnn_flops_per_frame() -> int:
+    h = w = CNN_INPUT[0]
+    total = 0
+    for _name, k, cin, cout, stride, _act in CNN_LAYERS:
+        h, w = -(-h // stride), -(-w // stride)
+        total += conv.conv_flops(h, w, k, k, cin, cout)
+    for _name, din, dout, _act in CNN_DENSE:
+        total += 2 * din * dout
+    return total
+
+
+def param_count(params: Dict[str, jnp.ndarray]) -> int:
+    return int(sum(np.prod(v.shape) for v in params.values()))
+
+
+def make_jitted(model: str, batch: int, use_ref: bool = False):
+    """Returns (fn, example_args) with weights closed over as constants —
+    what aot.py lowers."""
+    if model == "yolo_tiny":
+        params = init_yolo_params()
+        apply = yolo_tiny_apply_ref if use_ref else yolo_tiny_apply
+        shape = (batch,) + YOLO_INPUT
+    elif model == "simple_cnn":
+        params = init_cnn_params()
+        apply = simple_cnn_apply_ref if use_ref else simple_cnn_apply
+        shape = (batch,) + CNN_INPUT
+    else:
+        raise ValueError(f"unknown model {model!r}")
+
+    fn = functools.partial(apply, params)
+    spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+    return fn, (spec,)

@@ -1,0 +1,95 @@
+"""Block-policy (§Perf) and analysis-tool tests: the auto-block choices
+must respect VMEM budgets, stay correct under every policy branch, and
+the shipped variants must lower to fusion-clean HLO."""
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import analyze, aot, model
+from compile.kernels import matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    m=st.integers(1, 50_000),
+    k=st.integers(1, 4096),
+    n=st.integers(1, 1024),
+)
+def test_auto_blocks_respect_budgets(m, k, n):
+    bm, bn, bk = matmul.auto_blocks(m, k, n)
+    footprint = 4 * (bm * bk + bk * bn + bn + bm * bn)
+    # single-step path uses the VMEM cap; tiled path the smaller budget
+    assert footprint <= matmul.SINGLE_STEP_VMEM
+    assert bm % 8 == 0 and bn % 8 == 0 and bk % 8 == 0
+    assert bm >= 8 and bn >= 8 and bk >= 8
+
+
+def test_single_step_for_model_gemms():
+    """Every GEMM of the shipped b4 model takes the single-step path
+    (the §Perf iteration-3 property that removed the while loops)."""
+    for layer, m, k, n in analyze.gemm_shapes("yolo_tiny", 4):
+        bm, bn, bk = matmul.auto_blocks(m, k, n)
+        steps = -(-m // bm) * -(-n // bn) * -(-k // bk)
+        assert steps == 1, f"{layer}: {steps} grid steps"
+
+
+def test_tiled_path_kicks_in_for_large_problems():
+    bm, bn, bk = matmul.auto_blocks(1_000_000, 1152, 128)
+    assert bm < 1_000_000
+    footprint = 4 * (bm * bk + bk * bn + bn + bm * bn)
+    assert footprint <= matmul.TILE_VMEM_BUDGET
+
+
+def test_tiled_path_is_still_correct():
+    """Force the tiled branch explicitly and compare against the oracle
+    (guards the path real YOLO sizes would take)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from compile.kernels import ref
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (300, 144), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (144, 48), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (48,), jnp.float32)
+    got = matmul.matmul_bias_act(x, w, b, act="leaky_relu",
+                                 block_m=64, block_n=16, block_k=32)
+    want = ref.matmul_bias_act_ref(x, w, b, act="leaky_relu")
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_op_census_counts():
+    text = """
+  a.1 = f32[2,2]{1,0} dot(x, y), foo
+  b.2 = f32[2,2]{1,0} add(a.1, a.1)
+  c.3 = f32[2,2]{1,0} add(b.2, b.2)
+"""
+    ops = analyze.op_census(text)
+    assert ops == {"dot": 1, "add": 2}
+
+
+def test_fusion_health_flags():
+    assert analyze.fusion_health({"dot": 3}) == []
+    flags = analyze.fusion_health({"while": 2, "transpose": 1, "convolution": 4})
+    assert len(flags) == 3
+
+
+@pytest.mark.parametrize("name,model_name,batch,use_ref", aot.VARIANTS[:1])
+def test_shipped_variant_is_fusion_clean(name, model_name, batch, use_ref):
+    fn, args = model.make_jitted(model_name, batch, use_ref=use_ref)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    ops = analyze.op_census(text)
+    assert analyze.fusion_health(ops) == [], f"{name}: {analyze.fusion_health(ops)}"
+
+
+def test_gemm_shapes_flops_consistency():
+    """The analyzer's GEMM inventory must account for the model's
+    analytic FLOPs exactly (2*M*K*N summed == flops_per_frame * batch)."""
+    for model_name, per_frame in [
+        ("yolo_tiny", model.yolo_flops_per_frame()),
+        ("simple_cnn", model.cnn_flops_per_frame()),
+    ]:
+        batch = 4
+        total = sum(2 * m * k * n for _l, m, k, n in analyze.gemm_shapes(model_name, batch))
+        assert total == per_frame * batch, model_name

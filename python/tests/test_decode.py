@@ -1,0 +1,59 @@
+"""L1 correctness: detection-head decode kernel vs oracle + semantic
+invariants (box centers in [0,1], scores are probabilities)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _anchors(a):
+    return jnp.linspace(0.05, 0.8, 2 * a, dtype=jnp.float32).reshape(a, 2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 13),
+    w=st.integers(1, 13),
+    a=st.integers(1, 4),
+    c=st.integers(1, 30),
+)
+def test_decode_matches_ref(b, h, w, a, c):
+    nattr = 5 + c
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, h, w, a * nattr))
+    anch = _anchors(a)
+    got = decode.decode_head(x, anch, c)
+    want = ref.decode_head_ref(x, anch, c)
+    assert got.shape == (b, h * w * a, nattr)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_decode_semantics():
+    """Centers in [0,1]; obj/cls in (0,1); zero logits land mid-cell."""
+    b, h, w, a, c = 2, 4, 4, 3, 20
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, h, w, a * (5 + c))) * 3
+    boxes = decode.decode_head(x, _anchors(a), c)
+    bx, by = boxes[..., 0], boxes[..., 1]
+    assert float(bx.min()) >= 0 and float(bx.max()) <= 1
+    assert float(by.min()) >= 0 and float(by.max()) <= 1
+    scores = boxes[..., 4:]
+    assert float(scores.min()) > 0 and float(scores.max()) < 1
+
+    zeros = jnp.zeros((1, 2, 2, a * (5 + c)))
+    zb = decode.decode_head(zeros, _anchors(a), c)
+    # sigmoid(0)=0.5 -> first cell center at 0.25 on a 2-cell grid
+    np.testing.assert_allclose(zb[0, 0, 0], 0.25, rtol=1e-6)
+    # wh = anchor * exp(0) = anchor
+    np.testing.assert_allclose(zb[0, 0, 2:4], _anchors(a)[0], rtol=1e-6)
+
+
+def test_decode_channel_mismatch_raises():
+    x = jnp.zeros((1, 4, 4, 30))
+    with pytest.raises(ValueError):
+        decode.decode_head(x, _anchors(3), 20)  # needs 75 channels

@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas GEMM kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, activations and block sizes; the kernel must be
+bit-close to the oracle for every draw (the CORE correctness signal for
+the whole stack — every conv and dense layer routes through this kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 160),
+    n=st.integers(1, 96),
+    act=st.sampled_from(matmul.ACTIVATIONS),
+)
+def test_matmul_matches_ref_shapes(m, k, n, act):
+    x = _rand(0, (m, k))
+    w = _rand(1, (k, n))
+    b = _rand(2, (n,))
+    got = matmul.matmul_bias_act(x, w, b, act=act)
+    want = ref.matmul_bias_act_ref(x, w, b, act=act)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32, 64, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the tiling choice."""
+    x = _rand(3, (77, 53))
+    w = _rand(4, (53, 19))
+    b = _rand(5, (19,))
+    got = matmul.matmul_bias_act(
+        x, w, b, act="leaky_relu", block_m=bm, block_n=bn, block_k=bk
+    )
+    want = ref.matmul_bias_act_ref(x, w, b, act="leaky_relu")
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_bf16():
+    x = _rand(0, (64, 64), jnp.bfloat16)
+    w = _rand(1, (64, 64), jnp.bfloat16)
+    b = _rand(2, (64,), jnp.bfloat16)
+    got = matmul.matmul_bias_act(x, w, b, act="linear")
+    want = ref.matmul_bias_act_ref(x, w, b, act="linear")
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_matmul_single_element():
+    x = jnp.array([[2.0]])
+    w = jnp.array([[3.0]])
+    b = jnp.array([1.0])
+    got = matmul.matmul_bias_act(x, w, b)
+    np.testing.assert_allclose(got, [[7.0]], rtol=1e-6)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises((ValueError, TypeError)):
+        matmul.matmul_bias_act(_rand(0, (4, 5)), _rand(1, (6, 3)), _rand(2, (3,)))
+    with pytest.raises((ValueError, TypeError)):
+        matmul.matmul_bias_act(_rand(0, (4, 5)), _rand(1, (5, 3)), _rand(2, (4,)))
+
+
+def test_matmul_rejects_bad_activation():
+    with pytest.raises((ValueError, TypeError)):
+        matmul.matmul_bias_act(
+            _rand(0, (4, 4)), _rand(1, (4, 4)), _rand(2, (4,)), act="gelu"
+        )
+
+
+def test_leaky_relu_negative_slope():
+    """Epilogue really is leaky (not plain) ReLU, slope 0.1 as in YOLO."""
+    x = jnp.array([[-10.0, 10.0]])
+    w = jnp.eye(2)
+    b = jnp.zeros(2)
+    got = matmul.matmul_bias_act(x, w, b, act="leaky_relu")
+    np.testing.assert_allclose(got, [[-1.0, 10.0]], rtol=1e-6)
+
+
+def test_vmem_footprint_within_tpu_budget():
+    """Default blocks must fit VMEM (16 MiB on current TPUs) with
+
+    double-buffering headroom (DESIGN.md §Perf)."""
+    bytes_per_step = matmul.vmem_footprint_bytes()
+    assert bytes_per_step * 2 < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_estimate_monotone():
+    full = matmul.mxu_utilization_estimate(1024, 1024, 1024)
+    ragged = matmul.mxu_utilization_estimate(1000, 1000, 1000)
+    tiny = matmul.mxu_utilization_estimate(8, 8, 8)
+    assert full == pytest.approx(1.0)
+    assert 0 < ragged <= 1.0
+    assert tiny < ragged

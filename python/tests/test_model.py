@@ -1,0 +1,99 @@
+"""L2 correctness: tiny-YOLO / simple-CNN through Pallas kernels vs the
+pure-jnp reference network, plus structural invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def yolo_params():
+    return model.init_yolo_params()
+
+
+@pytest.fixture(scope="module")
+def cnn_params():
+    return model.init_cnn_params()
+
+
+def _frames(batch, shape, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (batch,) + shape)
+
+
+@pytest.mark.parametrize("batch", [1, 2, 4])
+def test_yolo_pallas_matches_ref(yolo_params, batch):
+    x = _frames(batch, model.YOLO_INPUT)
+    c, f = model.yolo_tiny_apply(yolo_params, x)
+    cr, fr = model.yolo_tiny_apply_ref(yolo_params, x)
+    np.testing.assert_allclose(c, cr, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(f, fr, rtol=1e-3, atol=1e-4)
+
+
+def test_yolo_output_shapes(yolo_params):
+    c, f = model.yolo_tiny_apply(yolo_params, _frames(2, model.YOLO_INPUT))
+    assert c.shape == (2, 6 * 6 * 3, model.NATTR)
+    assert f.shape == (2, 12 * 12 * 3, model.NATTR)
+
+
+def test_yolo_deterministic(yolo_params):
+    x = _frames(1, model.YOLO_INPUT)
+    a1, _ = model.yolo_tiny_apply(yolo_params, x)
+    a2, _ = model.yolo_tiny_apply(yolo_params, x)
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_yolo_batch_consistency(yolo_params):
+    """Each frame's detections must be independent of its batch peers —
+    THE property the paper's splitting method relies on."""
+    x = _frames(4, model.YOLO_INPUT)
+    c4, f4 = model.yolo_tiny_apply(yolo_params, x)
+    c1, f1 = model.yolo_tiny_apply(yolo_params, x[2:3])
+    np.testing.assert_allclose(c4[2:3], c1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(f4[2:3], f1, rtol=1e-4, atol=1e-5)
+
+
+def test_init_reproducible():
+    p1 = model.init_yolo_params(seed=7)
+    p2 = model.init_yolo_params(seed=7)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+    p3 = model.init_yolo_params(seed=8)
+    assert any(not np.array_equal(p1[k], p3[k]) for k in p1)
+
+
+def test_param_count_matches_architecture(yolo_params):
+    expected = 0
+    for _n, k, cin, cout, _s, _a in model.YOLO_BACKBONE:
+        expected += k * k * cin * cout + cout
+    head_ch = model.NUM_ANCHORS * model.NATTR
+    expected += 128 * head_ch + head_ch + 64 * head_ch + head_ch
+    assert model.param_count(yolo_params) == expected
+
+
+def test_flops_positive_and_conv_dominated():
+    fl = model.yolo_flops_per_frame()
+    assert fl > 10_000_000  # a real CNN, not a toy stub
+    assert model.cnn_flops_per_frame() < fl
+
+
+@pytest.mark.parametrize("batch", [1, 4])
+def test_cnn_pallas_matches_ref(cnn_params, batch):
+    x = _frames(batch, model.CNN_INPUT)
+    (got,) = model.simple_cnn_apply(cnn_params, x)
+    (want,) = model.simple_cnn_apply_ref(cnn_params, x)
+    assert got.shape == (batch, 10)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_make_jitted_variants():
+    for m, batch in (("yolo_tiny", 2), ("simple_cnn", 4)):
+        fn, args = model.make_jitted(m, batch)
+        out = jax.jit(fn).lower(*args)
+        assert out is not None
+    with pytest.raises(ValueError):
+        model.make_jitted("resnet50", 1)

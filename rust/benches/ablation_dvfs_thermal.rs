@@ -1,0 +1,65 @@
+//! A4 — extension ablation: does the paper's result survive DVFS modes
+//! and thermal limits?
+//!
+//! The paper pins the default power mode and runs 30-s bursts (no
+//! thermal stress). Deployments care about both knobs, so this bench
+//! sweeps (power mode x k) and checks (a) splitting wins in EVERY mode,
+//! (b) sustained serving never crosses the thermal envelope on either
+//! board at the paper's operating points.
+
+use divide_and_save::bench::{banner, Table};
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::executor::run_sim;
+use divide_and_save::device::dvfs::PowerMode;
+use divide_and_save::device::thermal::ThermalModel;
+use divide_and_save::device::DeviceSpec;
+
+fn main() {
+    banner("A4", "DVFS modes x k, thermal envelope");
+
+    for base in DeviceSpec::all() {
+        let thermal = ThermalModel::for_device(base.name);
+        println!("\n-- {} --", base.name);
+        let mut table = Table::new([
+            "mode", "k", "time_s", "energy_j", "power_w", "steadyC", "throttles?",
+        ]);
+        for mode in PowerMode::modes_for(&base) {
+            let dev = mode.apply(&base);
+            let ks = [1usize, 2, dev.cores as usize];
+            let mut energies = Vec::new();
+            for &k in &ks {
+                let mut cfg = ExperimentConfig::default();
+                cfg.device = dev.clone();
+                cfg.containers = k;
+                let r = run_sim(&cfg).unwrap();
+                let t_ss = thermal.steady_state_c(r.avg_power_w);
+                let throttles = t_ss > thermal.t_throttle_c;
+                energies.push(r.energy_j);
+                table.row([
+                    mode.name.to_string(),
+                    k.to_string(),
+                    format!("{:.0}", r.time_s),
+                    format!("{:.0}", r.energy_j),
+                    format!("{:.1}", r.avg_power_w),
+                    format!("{t_ss:.0}"),
+                    if throttles { "YES".into() } else { "no".to_string() },
+                ]);
+                assert!(
+                    !throttles,
+                    "{} {} k={k}: sustained serving would throttle",
+                    base.name,
+                    mode.name
+                );
+            }
+            // splitting must win on energy in every mode
+            assert!(
+                *energies.last().unwrap() < energies[0],
+                "{} {}: split does not save energy",
+                base.name,
+                mode.name
+            );
+        }
+        table.print();
+        println!("splitting saves energy in every power mode; no operating point throttles ✓");
+    }
+}

@@ -1,0 +1,64 @@
+//! A2 — ablation: the scheduler-interference model.
+//!
+//! The paper attributes TX2's degradation past k=4 to the CPU scheduler
+//! struggling when containers outnumber cores. Our model carries that
+//! as `I(k) = 1 + alpha*max(0, k-C)/C`. Sweeping alpha shows alpha=0
+//! ERASES the observed degradation (k=6 would tie k=4) while the
+//! calibrated alpha reproduces it — evidence the term is load-bearing,
+//! plus a first-principles cross-check from context-switch costs.
+
+use divide_and_save::bench::{banner, Table};
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::executor::run_sim;
+use divide_and_save::sched::interference;
+
+fn main() {
+    banner("A2", "interference-model ablation (TX2)");
+    let alphas = [0.0, 0.2, 0.4, 0.8];
+    let mut table = Table::new(["k", "a=0.0", "a=0.2", "a=0.4 (calibrated)", "a=0.8"]);
+    let t_ratio = |alpha: f64, k: usize| -> f64 {
+        let mut cfg = ExperimentConfig::default();
+        cfg.device.interference_alpha = alpha;
+        cfg.containers = 1;
+        let bench = run_sim(&cfg).unwrap();
+        cfg.containers = k;
+        run_sim(&cfg).unwrap().time_s / bench.time_s
+    };
+    let mut grid = Vec::new();
+    for k in 1..=6usize {
+        let mut row = vec![k.to_string()];
+        let mut vals = Vec::new();
+        for &a in &alphas {
+            let v = t_ratio(a, k);
+            vals.push(v);
+            row.push(format!("{v:.3}"));
+        }
+        grid.push(vals);
+        table.row(row);
+    }
+    table.print();
+
+    // alpha = 0: k=6 ties k=4 (CFS sharing is lossless in the model)
+    assert!(
+        (grid[5][0] - grid[3][0]).abs() < 0.005,
+        "without interference, k=6 must tie k=4"
+    );
+    // calibrated alpha: k=6 strictly worse than k=4, as the paper observed
+    assert!(
+        grid[5][2] > grid[3][2] + 0.05,
+        "calibrated alpha must reproduce the TX2 degradation"
+    );
+    println!("\nalpha=0 erases the paper's k>4 degradation; alpha=0.4 reproduces it ✓");
+
+    // First-principles cross-check: per-frame time inflation implied by
+    // involuntary context switches.
+    let mut cs = Table::new(["k", "ctx-switch overhead", "model I(k)-1"]);
+    for k in 4..=8usize {
+        let o = interference::context_switch_overhead(k, 4.0, 2000.0, 50e-6);
+        let i = interference::penalty(k, 4.0, 0.4) - 1.0;
+        cs.row([k.to_string(), format!("{:.3}", o), format!("{i:.3}")]);
+    }
+    cs.print();
+    println!("(2000 switches/s x 50us at k-C oversubscription lands within ~2x of the");
+    println!(" calibrated alpha — the fitted constant is physically plausible.)");
+}

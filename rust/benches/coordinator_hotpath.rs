@@ -1,0 +1,112 @@
+//! L3 performance microbenches: the coordinator hot paths (§Perf).
+//!
+//! SIM experiment throughput (the sweep benches iterate hundreds of
+//! runs), splitter, combiner-scale NMS/decode, JSON parse, DES core.
+//! Also, when artifacts exist, the REAL-path per-batch inference cost of
+//! the pallas-lowered vs pure-jnp-lowered HLO (L1/L2 perf comparison).
+
+use divide_and_save::bench::{banner, bench, Table};
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::executor::run_sim;
+use divide_and_save::detect::{decode_output, nms, NmsParams};
+use divide_and_save::sched::EventQueue;
+use divide_and_save::util::json::Json;
+use divide_and_save::util::rng::Rng;
+use divide_and_save::workload::{split_even, FrameGenerator};
+
+fn main() {
+    banner("L3 perf", "coordinator hot paths");
+    let mut results = Vec::new();
+
+    // Full SIM experiment (720 frames, k=4): the unit of every sweep.
+    let cfg = {
+        let mut c = ExperimentConfig::default();
+        c.containers = 4;
+        c
+    };
+    results.push(bench("sim_experiment_720f_k4", 3, 30, || {
+        let r = run_sim(&cfg).unwrap();
+        std::hint::black_box(r.energy_j);
+    }));
+
+    // Coarse-sensor variant (100 ms sampling) — the accuracy/speed knob.
+    let cfg_coarse = {
+        let mut c = cfg.clone();
+        c.sensor_period_s = 0.1;
+        c
+    };
+    results.push(bench("sim_experiment_coarse_sensor", 3, 30, || {
+        std::hint::black_box(run_sim(&cfg_coarse).unwrap().energy_j);
+    }));
+
+    //
+
+    // Splitter at serving rates.
+    results.push(bench("split_even_720x12_x1000", 2, 20, || {
+        for _ in 0..1000 {
+            std::hint::black_box(split_even(720, 12));
+        }
+    }));
+
+    // Decode + NMS on a realistic head buffer (540 boxes/frame).
+    let mut rng = Rng::new(1);
+    let boxes: Vec<f32> = (0..540 * 25).map(|_| rng.f64() as f32).collect();
+    let params = NmsParams::default();
+    results.push(bench("decode_nms_540boxes", 5, 50, || {
+        let cands = decode_output(&boxes, 25, 0, params.score_threshold);
+        std::hint::black_box(nms(cands, &params));
+    }));
+
+    // Frame generation (REAL-path input production).
+    let gen = FrameGenerator::yolo(0);
+    results.push(bench("framegen_batch4", 3, 50, || {
+        std::hint::black_box(gen.batch(0, 4));
+    }));
+
+    // Manifest-sized JSON parse.
+    let manifest_like = std::fs::read_to_string("artifacts/manifest.json")
+        .unwrap_or_else(|_| r#"{"variants": []}"#.to_string());
+    results.push(bench("json_parse_manifest", 5, 100, || {
+        std::hint::black_box(Json::parse(&manifest_like).unwrap());
+    }));
+
+    // DES core: 100k events.
+    results.push(bench("des_100k_events", 2, 20, || {
+        let mut q = EventQueue::new();
+        let mut r = Rng::new(2);
+        for _ in 0..100_000 {
+            q.push(r.range_f64(0.0, 1e6), 0u32);
+        }
+        while q.pop().is_some() {}
+    }));
+
+    println!();
+    for r in &results {
+        println!("{}", r.report_line());
+    }
+
+    // REAL-path L1/L2 comparison if artifacts are present.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use divide_and_save::runtime::{Engine, Manifest};
+        println!("\n-- L1/L2: pallas-lowered vs pure-jnp-lowered HLO (PJRT CPU, batch 4) --");
+        let m = Manifest::load("artifacts").unwrap();
+        let gen = FrameGenerator::yolo(9);
+        let input = gen.batch(0, 4);
+        let mut table = Table::new(["variant", "mean ms/batch", "ms/frame"]);
+        for variant in ["yolo_tiny_b4", "yolo_tiny_ref_b4"] {
+            let e = Engine::load(&m, variant).unwrap();
+            let r = bench(variant, 2, 10, || {
+                std::hint::black_box(e.run(&input).unwrap());
+            });
+            table.row([
+                variant.to_string(),
+                format!("{:.1}", r.stats.mean * 1e3),
+                format!("{:.1}", r.stats.mean * 1e3 / 4.0),
+            ]);
+        }
+        table.print();
+        println!("(interpret-mode pallas lowers to HLO while-loops; the gap vs the");
+        println!(" XLA-fused reference bounds the CPU-substitute cost — on real TPU the");
+        println!(" Mosaic path replaces it. See DESIGN.md §Perf.)");
+    }
+}

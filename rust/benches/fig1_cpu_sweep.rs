@@ -1,0 +1,81 @@
+//! E1 — paper Fig. 1: single container, sweep `--cpus` from 0.1 to the
+//! device core count; report inference time and energy for the full
+//! 720-frame video on both devices.
+//!
+//! Expected shape (paper): steep time/energy drop up to ~2 cores, then
+//! strong diminishing returns — TX2's 4th core barely helps; Orin gains
+//! little beyond 2 cores for a single container.
+
+use divide_and_save::bench::{banner, Table};
+use divide_and_save::device::{DeviceSpec, PowerSensor};
+use divide_and_save::energy::meter_schedule;
+use divide_and_save::sched::{CpuScheduler, JobSpec};
+use divide_and_save::util::csv::CsvWriter;
+
+fn cpu_grid(cores: f64) -> Vec<f64> {
+    let mut g = vec![0.1, 0.25, 0.5, 0.75];
+    let mut c = 1.0;
+    while c <= cores + 1e-9 {
+        g.push(c);
+        c += 0.5;
+    }
+    g
+}
+
+fn main() {
+    banner("E1 / Fig.1", "single container, cpus sweep, 720 frames");
+    let sensor = PowerSensor::default();
+    for device in DeviceSpec::all() {
+        println!("\n-- {} --", device.name);
+        let mut table = Table::new(["cpus", "time_s", "energy_j", "power_w"]);
+        let mut csv = CsvWriter::new(["cpus", "time_s", "energy_j", "power_w"]);
+        let mut prev_time = f64::INFINITY;
+        let mut prev_energy = f64::INFINITY;
+        for cpus in cpu_grid(device.cores) {
+            let sched = CpuScheduler::new(&device);
+            let schedule = sched.run(&[JobSpec {
+                container_id: 0,
+                frames: 720,
+                cpus,
+                ready_at_s: 0.0,
+            }]);
+            let rep = meter_schedule(&device, &sensor, &schedule);
+            assert!(
+                rep.time_s <= prev_time + 1e-9 && rep.energy_j <= prev_energy + 1e-6,
+                "Fig.1 curves must be monotone non-increasing"
+            );
+            prev_time = rep.time_s;
+            prev_energy = rep.energy_j;
+            table.row([
+                format!("{cpus:.2}"),
+                format!("{:.1}", rep.time_s),
+                format!("{:.1}", rep.energy_j),
+                format!("{:.2}", rep.avg_power_w),
+            ]);
+            csv.row([
+                cpus.to_string(),
+                rep.time_s.to_string(),
+                rep.energy_j.to_string(),
+                rep.avg_power_w.to_string(),
+            ]);
+        }
+        table.print();
+        let path = format!("results/fig1_{}.csv", device.name);
+        csv.save(&path).unwrap();
+        println!("wrote {path}");
+
+        // The paper's qualitative claim: the last core is nearly free of
+        // benefit for a single container.
+        let t = |c: f64| {
+            let sched = CpuScheduler::new(&device);
+            sched
+                .run(&[JobSpec { container_id: 0, frames: 720, cpus: c, ready_at_s: 0.0 }])
+                .makespan_s
+        };
+        let last_core_gain = 1.0 - t(device.cores) / t(device.cores - 1.0);
+        println!(
+            "last core adds only {:.1}% speedup (paper: 'slight improvement')",
+            last_core_gain * 100.0
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! E2/E3/E4 — paper Fig. 3a (normalized time), 3b (normalized energy),
+//! 3c (normalized average power) vs container count, on TX2 (k ≤ 6) and
+//! AGX Orin (k ≤ 12), with the paper's reported anchors printed beside
+//! our measurements.
+
+use divide_and_save::bench::{banner, Table};
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::executor::run_sim;
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::util::csv::CsvWriter;
+
+/// Paper anchors read from §VI text: (k, T/T1, E/E1, P/P1), NaN = not
+/// reported.
+fn paper_anchors(device: &str) -> Vec<(usize, f64, f64, f64)> {
+    match device {
+        "jetson-tx2" => vec![
+            (2, 0.81, 0.90, f64::NAN),
+            (4, 0.75, 0.85, 1.13),
+        ],
+        _ => vec![
+            (2, 0.57, 0.75, f64::NAN),
+            (4, 0.38, 0.60, f64::NAN),
+            (12, 0.30, 0.57, 1.84),
+        ],
+    }
+}
+
+fn main() {
+    banner("E2-E4 / Fig.3", "normalized time/energy/power vs containers");
+    for device in DeviceSpec::all() {
+        let k_max = device.memory.max_containers(720);
+        println!("\n-- {} (k = 1..{k_max}) --", device.name);
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.device = device.clone();
+        cfg.containers = 1;
+        let bench = run_sim(&cfg).unwrap();
+
+        let mut table = Table::new(["k", "T/T1", "E/E1", "P/P1"]);
+        let mut csv = CsvWriter::new(["k", "t_ratio", "e_ratio", "p_ratio"]);
+        let mut series = Vec::new();
+        for k in 1..=k_max {
+            let mut c = cfg.clone();
+            c.containers = k;
+            let r = run_sim(&c).unwrap();
+            let (t, e, p) = r.normalized(&bench);
+            series.push((k, t, e, p));
+            table.row([k.to_string(), format!("{t:.3}"), format!("{e:.3}"), format!("{p:.3}")]);
+            csv.row([k.to_string(), t.to_string(), e.to_string(), p.to_string()]);
+        }
+        table.print();
+        let path = format!("results/fig3_{}.csv", device.name);
+        csv.save(&path).unwrap();
+
+        println!("\npaper anchors vs measured:");
+        let mut cmp = Table::new(["k", "metric", "paper", "measured", "abs err"]);
+        for (k, tp, ep, pp) in paper_anchors(device.name) {
+            let &(_, t, e, p) = series.iter().find(|(kk, ..)| *kk == k).unwrap();
+            for (name, paper, got) in [("time", tp, t), ("energy", ep, e), ("power", pp, p)] {
+                if paper.is_nan() {
+                    continue;
+                }
+                cmp.row([
+                    k.to_string(),
+                    name.to_string(),
+                    format!("{paper:.2}"),
+                    format!("{got:.3}"),
+                    format!("{:.3}", (got - paper).abs()),
+                ]);
+                assert!(
+                    (got - paper).abs() < 0.05,
+                    "{} k={k} {name}: {got:.3} vs paper {paper}",
+                    device.name
+                );
+            }
+        }
+        cmp.print();
+
+        // Qualitative shape checks from §VI.
+        if device.name == "jetson-tx2" {
+            let t4 = series[3].1;
+            let t6 = series[5].1;
+            assert!(t6 > t4, "TX2 must degrade beyond k=4 (t4={t4:.3} t6={t6:.3})");
+            println!("TX2 degradation beyond 4 containers reproduced ✓");
+        } else {
+            let t4 = series[3].1;
+            let t12 = series[11].1;
+            assert!(t12 < t4 && (t4 - t12) < 0.12, "Orin curve must flatten past k=4");
+            println!("Orin flattening beyond 4 containers reproduced ✓");
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! A5 — extension: serving under realistic traffic.
+//!
+//! The paper evaluates one video at a time; an MEC server sees a
+//! stream. This bench drives the coordinator with Poisson and bursty
+//! MMPP arrivals (motion-triggered-camera style) at the same mean rate
+//! and compares split policies on p95 latency, throughput and energy —
+//! showing the paper's method is exactly what keeps a loaded server
+//! inside its latency budget (service time drops ~4x on Orin).
+
+use divide_and_save::bench::{banner, Table};
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::router::SplitPolicy;
+use divide_and_save::coordinator::{Coordinator, OnlineOptimizer};
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::server::{serve, ServeConfig};
+use divide_and_save::workload::ArrivalProcess;
+
+fn main() {
+    banner("A5", "serving under Poisson + bursty MMPP traffic (Orin, SIM)");
+
+    let mk_base = || {
+        let mut c = ExperimentConfig::default();
+        c.device = DeviceSpec::orin();
+        c
+    };
+    // Mean arrival: one 96-frame job every 12 s; bursts at 6x.
+    let poisson = ArrivalProcess::Poisson { rate_per_s: 1.0 / 12.0 };
+    let mmpp = ArrivalProcess::Mmpp {
+        calm_rate_per_s: 0.05,
+        burst_rate_per_s: 0.35,
+        mean_calm_s: 130.0,
+        mean_burst_s: 20.0,
+    };
+    assert!((mmpp.mean_rate() - poisson.mean_rate()).abs() / poisson.mean_rate() < 0.35);
+
+    let mut table = Table::new([
+        "traffic", "policy", "p50_lat_s", "p95_lat_s", "frames/s", "energy_kj",
+    ]);
+    let mut p95 = std::collections::BTreeMap::new();
+    for (tname, arrival) in [("poisson", poisson.clone()), ("mmpp-bursty", mmpp.clone())] {
+        for (pname, policy) in [
+            ("k=1 (naive)", SplitPolicy::Fixed(1)),
+            ("k=4", SplitPolicy::Fixed(4)),
+            ("online", SplitPolicy::Online(OnlineOptimizer::default())),
+        ] {
+            let mut coordinator = Coordinator::new(mk_base(), policy);
+            let report = serve(
+                &mut coordinator,
+                &ServeConfig {
+                    jobs: 60,
+                    arrival: Some(arrival.clone()),
+                    frames_per_job: 96,
+                    seed: 11,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            p95.insert((tname, pname), report.latency.p95);
+            table.row([
+                tname.to_string(),
+                pname.to_string(),
+                format!("{:.1}", report.latency.p50),
+                format!("{:.1}", report.latency.p95),
+                format!("{:.1}", report.frames_per_s),
+                format!("{:.1}", report.total_energy_j / 1e3),
+            ]);
+        }
+    }
+    table.print();
+
+    for tname in ["poisson", "mmpp-bursty"] {
+        let naive = p95[&(tname, "k=1 (naive)")];
+        let online = p95[&(tname, "online")];
+        assert!(
+            online < naive,
+            "{tname}: online p95 {online:.1}s should beat naive {naive:.1}s"
+        );
+    }
+    println!("\nonline split policy beats the naive single container on p95 latency");
+    println!("under both traffic shapes ✓ (splitting = headroom under load)");
+}

@@ -1,0 +1,105 @@
+//! E5 — paper Table II: fit the convex models (quadratic on TX2,
+//! exponential on Orin) to the normalized sweep and print the fitted
+//! formulae beside the paper's, with reference values and R².
+
+use divide_and_save::bench::{banner, Table};
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::executor::run_sim;
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::modelfit::{
+    convexity_ok, fit_exponential, fit_quadratic, r2_of_fit, FittedModel,
+};
+
+struct PaperRow {
+    metric: &'static str,
+    reference: &'static str,
+    model: &'static str,
+}
+
+fn paper_rows(device: &str) -> Vec<PaperRow> {
+    match device {
+        "jetson-tx2" => vec![
+            PaperRow { metric: "Time", reference: "325 s", model: "0.026x^2 - 0.21x + 1.17" },
+            PaperRow { metric: "Energy", reference: "942 J", model: "0.015x^2 - 0.12x + 1.10" },
+            PaperRow { metric: "Power", reference: "2.9 W", model: "-0.016x^2 + 0.12x + 0.90" },
+        ],
+        _ => vec![
+            PaperRow { metric: "Time", reference: "54 s", model: "0.33 + 1.77e^{-0.98x}" },
+            PaperRow { metric: "Energy", reference: "700 J", model: "0.59 + 1.14e^{-1.03x}" },
+            PaperRow { metric: "Power", reference: "13 W", model: "1.85 - 1.24e^{-0.38x}" },
+        ],
+    }
+}
+
+fn main() {
+    banner("E5 / Table II", "fitted models (x = number of containers)");
+    for device in DeviceSpec::all() {
+        let k_max = device.memory.max_containers(720);
+        let mut cfg = ExperimentConfig::default();
+        cfg.device = device.clone();
+        cfg.containers = 1;
+        let bench = run_sim(&cfg).unwrap();
+
+        let mut xs = Vec::new();
+        let mut series: Vec<Vec<f64>> = vec![Vec::new(), Vec::new(), Vec::new()];
+        for k in 1..=k_max {
+            let mut c = cfg.clone();
+            c.containers = k;
+            let r = run_sim(&c).unwrap();
+            let (t, e, p) = r.normalized(&bench);
+            xs.push(k as f64);
+            series[0].push(t);
+            series[1].push(e);
+            series[2].push(p);
+        }
+
+        println!("\n-- {} --", device.name);
+        let use_exponential = device.name == "jetson-agx-orin";
+        let refs = [
+            format!("{:.0} s", bench.time_s),
+            format!("{:.0} J", bench.energy_j),
+            format!("{:.1} W", bench.avg_power_w),
+        ];
+        let mut table = Table::new(["metric", "paper ref", "our ref", "paper model", "our model", "R^2"]);
+        for (i, row) in paper_rows(device.name).iter().enumerate() {
+            let ys = &series[i];
+            let model = if use_exponential {
+                FittedModel::Exponential(fit_exponential(&xs, ys).expect("exp fit"))
+            } else {
+                FittedModel::Quadratic(fit_quadratic(&xs, ys).expect("quad fit"))
+            };
+            let r2 = r2_of_fit(&model, &xs, ys);
+            // TX2's quadratic has to straddle the k>4 interference kink
+            // (the paper's own Fig. 3 shows the same tension), so its
+            // bar is slightly lower than Orin's smooth exponential.
+            let r2_floor = if use_exponential { 0.97 } else { 0.94 };
+            assert!(
+                r2 > r2_floor,
+                "{} {}: fit R^2 {r2:.3} below {r2_floor}",
+                device.name,
+                row.metric
+            );
+            // paper: time & energy models are convex (decreasing benefit)
+            if row.metric != "Power" {
+                assert!(
+                    convexity_ok(ys, 0.02),
+                    "{} {} curve should be convex",
+                    device.name,
+                    row.metric
+                );
+            }
+            table.row([
+                row.metric.to_string(),
+                row.reference.to_string(),
+                refs[i].clone(),
+                row.model.to_string(),
+                model.describe(),
+                format!("{r2:.4}"),
+            ]);
+        }
+        table.print();
+    }
+    println!("\n(Coefficients need not match the paper digit-for-digit — the substrate");
+    println!(" is a calibrated simulator — but family, convexity, reference values and");
+    println!(" the fitted curves' shape reproduce Table II.)");
+}

@@ -1,0 +1,138 @@
+//! Self-built benchmark harness (criterion is not in the offline vendor
+//! set): warmup + timed iterations, mean ± σ, and aligned table printing
+//! shared by every `rust/benches/*.rs` target.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub stats: Summary,
+}
+
+/// Run `f` with `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, stats: summarize(&samples) }
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:40} {:>10.3} ms ±{:>7.3} ms  (n={}, p95 {:.3} ms)",
+            self.name,
+            self.stats.mean * 1e3,
+            self.stats.std * 1e3,
+            self.iters,
+            self.stats.p95 * 1e3
+        )
+    }
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    header: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        let header: Vec<String> = header.into_iter().map(Into::into).collect();
+        let widths = header.iter().map(|h| h.len()).collect();
+        Table { header, widths, rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "table arity");
+        for (w, c) in self.widths.iter_mut().zip(&row) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, (c, w)) in cells.iter().zip(widths).enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{c:>w$}", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &self.widths));
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * (self.widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &self.widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Standard bench banner so all harnesses look alike in bench_output.
+pub fn banner(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_exact_iterations() {
+        let mut count = 0;
+        let r = bench("t", 2, 5, || count += 1);
+        assert_eq!(count, 7); // 2 warmup + 5 timed
+        assert_eq!(r.iters, 5);
+        assert!(r.stats.mean >= 0.0);
+    }
+
+    #[test]
+    fn report_line_contains_name() {
+        let r = bench("my_case", 0, 3, || {});
+        assert!(r.report_line().contains("my_case"));
+    }
+
+    #[test]
+    fn table_aligns_and_renders() {
+        let mut t = Table::new(["k", "time_s", "ratio"]);
+        t.row(["1", "325.0", "1.000"]);
+        t.row(["12", "16.2", "0.300"]);
+        let s = t.render();
+        assert!(s.contains("time_s"));
+        assert!(s.lines().count() == 4);
+        // right-aligned: "k" column holds "12"
+        assert!(s.lines().nth(3).unwrap().trim_start().starts_with("12"));
+    }
+
+    #[test]
+    #[should_panic(expected = "table arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only"]);
+    }
+}

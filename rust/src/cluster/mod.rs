@@ -1,0 +1,19 @@
+//! Multi-device edge cluster (extension — the paper's closing future
+//! work: "explore the use of our splitting approach in a distributed
+//! edge computing setting, where multiple devices collaborate").
+//!
+//! A cluster of heterogeneous Jetson nodes receives a stream of video
+//! jobs. A placement policy assigns each job to a node; on the node the
+//! job runs with the divide-and-save split (optimal k per the node's
+//! fitted models). Policies:
+//!
+//! * `RoundRobin` — naive fairness.
+//! * `LeastLoaded` — earliest-available node (makespan-greedy).
+//! * `EnergyAware` — EASE-style ([13] in the paper): pick the node
+//!   minimizing predicted energy for the job, breaking ties on
+//!   completion time, using exactly the calibrated device models the
+//!   single-device experiments validated.
+
+pub mod placement;
+
+pub use placement::{Cluster, ClusterReport, NodeState, PlacementPolicy};

@@ -1,0 +1,301 @@
+//! Typed experiment configuration: JSON file + CLI overrides + presets.
+//!
+//! Everything a run needs is in one `ExperimentConfig`, so benches,
+//! examples and the CLI all construct runs the same way.
+
+use crate::device::DeviceSpec;
+use crate::util::cli::Parsed;
+use crate::util::json::Json;
+use crate::workload::{TaskProfile, Video};
+
+/// Execution mode for the parallel executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Discrete-event simulation on the calibrated device model
+    /// (regenerates the paper's figures).
+    Sim,
+    /// Real PJRT inference on throttled worker threads (wall-clock is
+    /// measured; power is modeled from utilization).
+    Real,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" => Some(ExecMode::Sim),
+            "real" => Some(ExecMode::Real),
+            _ => None,
+        }
+    }
+}
+
+/// Full description of one experiment run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub device: DeviceSpec,
+    pub task: TaskProfile,
+    pub video: Video,
+    /// Number of containers (the paper's `x`).
+    pub containers: usize,
+    pub mode: ExecMode,
+    /// Power-sensor sampling period (paper: 10 ms).
+    pub sensor_period_s: f64,
+    /// Startup cost override (None = device default).
+    pub startup_s: Option<f64>,
+    /// RNG seed for synthetic data.
+    pub seed: u64,
+    /// Artifacts directory for REAL mode.
+    pub artifacts_dir: String,
+    /// Model variant for REAL mode (e.g. "yolo_tiny_b4").
+    pub variant: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("unknown device {0:?} (expected tx2|orin)")]
+    UnknownDevice(String),
+    #[error("unknown task {0:?} (expected yolo_tiny|simple_cnn)")]
+    UnknownTask(String),
+    #[error("unknown mode {0:?} (expected sim|real)")]
+    UnknownMode(String),
+    #[error("bad config field {field}: {msg}")]
+    BadField { field: &'static str, msg: String },
+    #[error("config io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("config json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+}
+
+impl Default for ExperimentConfig {
+    /// The paper's base experiment: TX2, YOLO, 30-s video, benchmark
+    /// single container, SIM mode.
+    fn default() -> Self {
+        ExperimentConfig {
+            device: DeviceSpec::tx2(),
+            task: TaskProfile::yolo_tiny(),
+            video: Video::paper_default(),
+            containers: 1,
+            mode: ExecMode::Sim,
+            sensor_period_s: 0.010,
+            startup_s: None,
+            seed: 0,
+            artifacts_dir: "artifacts".to_string(),
+            variant: "yolo_tiny_b4".to_string(),
+        }
+    }
+}
+
+fn task_by_name(name: &str) -> Option<TaskProfile> {
+    match name.to_ascii_lowercase().as_str() {
+        "yolo" | "yolo_tiny" => Some(TaskProfile::yolo_tiny()),
+        "cnn" | "simple_cnn" => Some(TaskProfile::simple_cnn()),
+        _ => None,
+    }
+}
+
+impl ExperimentConfig {
+    /// Resolve the effective device spec (startup override applied).
+    pub fn effective_device(&self) -> DeviceSpec {
+        let mut dev = self.device.clone();
+        if let Some(s) = self.startup_s {
+            dev.container_startup_s = s;
+        }
+        dev
+    }
+
+    /// Load from a JSON object (all fields optional; defaults fill in).
+    pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(d) = v.get("device").and_then(Json::as_str) {
+            cfg.device = DeviceSpec::by_name(d)
+                .ok_or_else(|| ConfigError::UnknownDevice(d.to_string()))?;
+        }
+        if let Some(t) = v.get("task").and_then(Json::as_str) {
+            cfg.task =
+                task_by_name(t).ok_or_else(|| ConfigError::UnknownTask(t.to_string()))?;
+        }
+        if let Some(m) = v.get("mode").and_then(Json::as_str) {
+            cfg.mode =
+                ExecMode::parse(m).ok_or_else(|| ConfigError::UnknownMode(m.to_string()))?;
+        }
+        if let Some(f) = v.get("frames").and_then(Json::as_usize) {
+            cfg.video = Video::with_frames("config", f, cfg.video.fps);
+        }
+        if let Some(k) = v.get("containers").and_then(Json::as_usize) {
+            if k == 0 {
+                return Err(ConfigError::BadField {
+                    field: "containers",
+                    msg: "must be >= 1".into(),
+                });
+            }
+            cfg.containers = k;
+        }
+        if let Some(p) = v.get("sensor_period_s").and_then(Json::as_f64) {
+            if p <= 0.0 {
+                return Err(ConfigError::BadField {
+                    field: "sensor_period_s",
+                    msg: "must be positive".into(),
+                });
+            }
+            cfg.sensor_period_s = p;
+        }
+        if let Some(s) = v.get("startup_s").and_then(Json::as_f64) {
+            cfg.startup_s = Some(s);
+        }
+        if let Some(s) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = s as u64;
+        }
+        if let Some(d) = v.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = d.to_string();
+        }
+        if let Some(d) = v.get("variant").and_then(Json::as_str) {
+            cfg.variant = d.to_string();
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Apply CLI overrides (highest precedence).
+    pub fn apply_cli(&mut self, p: &Parsed) -> Result<(), ConfigError> {
+        if let Some(d) = p.get("device") {
+            self.device = DeviceSpec::by_name(d)
+                .ok_or_else(|| ConfigError::UnknownDevice(d.to_string()))?;
+        }
+        if let Some(t) = p.get("task") {
+            self.task =
+                task_by_name(t).ok_or_else(|| ConfigError::UnknownTask(t.to_string()))?;
+        }
+        if let Some(m) = p.get("mode") {
+            self.mode =
+                ExecMode::parse(m).ok_or_else(|| ConfigError::UnknownMode(m.to_string()))?;
+        }
+        if let Some(k) = p.get("containers") {
+            let k: usize = k.parse().map_err(|_| ConfigError::BadField {
+                field: "containers",
+                msg: format!("not an integer: {k:?}"),
+            })?;
+            if k == 0 {
+                return Err(ConfigError::BadField {
+                    field: "containers",
+                    msg: "must be >= 1".into(),
+                });
+            }
+            self.containers = k;
+        }
+        if let Some(f) = p.get("frames") {
+            let f: usize = f.parse().map_err(|_| ConfigError::BadField {
+                field: "frames",
+                msg: format!("not an integer: {f:?}"),
+            })?;
+            self.video = Video::with_frames("cli", f, self.video.fps);
+        }
+        if let Some(a) = p.get("artifacts") {
+            self.artifacts_dir = a.to_string();
+        }
+        if let Some(v) = p.get("variant") {
+            self.variant = v.to_string();
+        }
+        Ok(())
+    }
+
+    /// Serialize (for provenance records next to experiment outputs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("device", Json::str(self.device.name)),
+            ("task", Json::str(&self.task.name)),
+            ("frames", Json::num(self.video.frame_count() as f64)),
+            ("containers", Json::num(self.containers as f64)),
+            (
+                "mode",
+                Json::str(match self.mode {
+                    ExecMode::Sim => "sim",
+                    ExecMode::Real => "real",
+                }),
+            ),
+            ("sensor_period_s", Json::num(self.sensor_period_s)),
+            ("seed", Json::num(self.seed as f64)),
+            ("variant", Json::str(&self.variant)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::{Command, OptSpec};
+
+    #[test]
+    fn default_is_paper_benchmark() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.device.name, "jetson-tx2");
+        assert_eq!(c.containers, 1);
+        assert_eq!(c.video.frame_count(), 720);
+        assert_eq!(c.mode, ExecMode::Sim);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(
+            r#"{"device": "orin", "task": "simple_cnn", "containers": 4,
+                "frames": 100, "mode": "real", "seed": 9}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.device.name, "jetson-agx-orin");
+        assert_eq!(c.task.name, "simple_cnn");
+        assert_eq!(c.containers, 4);
+        assert_eq!(c.video.frame_count(), 100);
+        assert_eq!(c.mode, ExecMode::Real);
+        assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_values() {
+        for (src, what) in [
+            (r#"{"device": "nano"}"#, "device"),
+            (r#"{"task": "resnet"}"#, "task"),
+            (r#"{"mode": "hybrid"}"#, "mode"),
+            (r#"{"containers": 0}"#, "containers"),
+            (r#"{"sensor_period_s": -1}"#, "period"),
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(src).unwrap()).is_err(),
+                "{what} should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn cli_overrides_config() {
+        let cmd = Command::new("t", "t")
+            .opt(OptSpec::opt("device", ""))
+            .opt(OptSpec::opt("containers", ""));
+        let parsed = cmd.parse(["--device", "orin", "--containers", "6"]).unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_cli(&parsed).unwrap();
+        assert_eq!(c.device.name, "jetson-agx-orin");
+        assert_eq!(c.containers, 6);
+    }
+
+    #[test]
+    fn to_json_roundtrip() {
+        let c = ExperimentConfig::default();
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.device.name, c.device.name);
+        assert_eq!(c2.containers, c.containers);
+        assert_eq!(c2.video.frame_count(), c.video.frame_count());
+    }
+
+    #[test]
+    fn startup_override() {
+        let j = Json::parse(r#"{"startup_s": 2.5}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.effective_device().container_startup_s, 2.5);
+        assert_eq!(ExperimentConfig::default().effective_device().container_startup_s, 0.0);
+    }
+}

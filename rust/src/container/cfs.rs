@@ -1,0 +1,191 @@
+//! CFS bandwidth controller arithmetic — how Docker implements
+//! `--cpus=X`.
+//!
+//! `docker run --cpus=2.5` sets `cpu.cfs_quota_us = 2.5 * period` with
+//! `period = 100ms`: in every 100 ms window the cgroup may consume at
+//! most 250 ms of CPU time across all cores, then it is throttled until
+//! the next window. This module models that accounting exactly; the SIM
+//! executor uses `runtime_for`, and the REAL executor uses
+//! `ThrottleClock` as a token bucket around actual PJRT calls.
+
+/// One cgroup's CPU bandwidth limit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CfsBandwidth {
+    /// Allowed CPU-seconds per wall-clock second (the `--cpus` value).
+    pub cpus: f64,
+    /// Enforcement period in seconds (Docker default: 100 ms).
+    pub period_s: f64,
+}
+
+impl CfsBandwidth {
+    pub fn new(cpus: f64) -> Self {
+        assert!(cpus > 0.0, "--cpus must be positive");
+        CfsBandwidth { cpus, period_s: 0.100 }
+    }
+
+    pub fn with_period(mut self, period_s: f64) -> Self {
+        assert!(period_s > 0.0);
+        self.period_s = period_s;
+        self
+    }
+
+    /// Quota per period in CPU-seconds (`cpu.cfs_quota_us / 1e6`).
+    pub fn quota_s(&self) -> f64 {
+        self.cpus * self.period_s
+    }
+
+    /// Wall-clock time needed to accumulate `cpu_s` of CPU time under
+    /// this limit, assuming the workload would otherwise use
+    /// `parallelism` cores flat-out.
+    ///
+    /// The effective consumption rate is `min(cpus, parallelism)`
+    /// CPU-seconds per wall second: the quota caps it, and a workload
+    /// that can only keep `parallelism` threads busy can't use more
+    /// even if the quota allows it.
+    pub fn runtime_for(&self, cpu_s: f64, parallelism: f64) -> f64 {
+        assert!(cpu_s >= 0.0 && parallelism > 0.0);
+        cpu_s / self.cpus.min(parallelism)
+    }
+
+    /// Number of full periods the workload gets throttled in while
+    /// consuming `cpu_s` at `parallelism` demand (0 when quota >= demand).
+    pub fn throttled_periods(&self, cpu_s: f64, parallelism: f64) -> u64 {
+        if parallelism <= self.cpus {
+            return 0;
+        }
+        (self.runtime_for(cpu_s, parallelism) / self.period_s) as u64
+    }
+}
+
+/// Token-bucket clock for the REAL executor: before each unit of work
+/// (one PJRT batch call), `acquire(cost)` sleeps just long enough that
+/// long-run CPU usage never exceeds the `--cpus` limit.
+#[derive(Debug)]
+pub struct ThrottleClock {
+    bw: CfsBandwidth,
+    /// CPU-seconds consumed so far.
+    consumed_s: f64,
+    /// Wall-clock start.
+    started: std::time::Instant,
+}
+
+impl ThrottleClock {
+    pub fn new(bw: CfsBandwidth) -> Self {
+        ThrottleClock { bw, consumed_s: 0.0, started: std::time::Instant::now() }
+    }
+
+    /// Record `cpu_s` of work about to run and return how long to sleep
+    /// first so the budget `consumed <= cpus * elapsed` holds.
+    pub fn debt_before(&mut self, cpu_s: f64) -> std::time::Duration {
+        assert!(cpu_s >= 0.0);
+        self.consumed_s += cpu_s;
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let earliest_ok = self.consumed_s / self.bw.cpus;
+        if earliest_ok > elapsed {
+            std::time::Duration::from_secs_f64(earliest_ok - elapsed)
+        } else {
+            std::time::Duration::ZERO
+        }
+    }
+
+    /// Blocking acquire: sleep off the debt.
+    pub fn acquire(&mut self, cpu_s: f64) {
+        let debt = self.debt_before(cpu_s);
+        if !debt.is_zero() {
+            std::thread::sleep(debt);
+        }
+    }
+
+    pub fn consumed_s(&self) -> f64 {
+        self.consumed_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{close, ensure, forall};
+
+    #[test]
+    fn docker_cpus_quota() {
+        let bw = CfsBandwidth::new(2.5);
+        assert!((bw.quota_s() - 0.25).abs() < 1e-12);
+        assert_eq!(bw.period_s, 0.100);
+    }
+
+    #[test]
+    fn runtime_quota_bound() {
+        // 10 CPU-seconds of perfectly-parallel work under --cpus=2
+        // takes 5 wall seconds.
+        let bw = CfsBandwidth::new(2.0);
+        assert!((bw.runtime_for(10.0, 8.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runtime_parallelism_bound() {
+        // A single-threaded workload can't exploit --cpus=4.
+        let bw = CfsBandwidth::new(4.0);
+        assert!((bw.runtime_for(10.0, 1.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fractional_cpus_slows_proportionally() {
+        // --cpus=0.1 (the paper's Fig. 1 low end): 1 CPU-second takes 10 s.
+        let bw = CfsBandwidth::new(0.1);
+        assert!((bw.runtime_for(1.0, 1.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throttling_only_when_demand_exceeds_quota() {
+        let bw = CfsBandwidth::new(2.0);
+        assert_eq!(bw.throttled_periods(10.0, 1.0), 0);
+        assert!(bw.throttled_periods(10.0, 4.0) > 0);
+    }
+
+    #[test]
+    fn runtime_monotone_in_cpus() {
+        forall(
+            5,
+            100,
+            |r| {
+                let c1 = r.range_f64(0.1, 4.0);
+                let c2 = c1 + r.range_f64(0.01, 4.0);
+                let work = r.range_f64(0.1, 100.0);
+                let par = r.range_f64(0.5, 8.0);
+                (c1, c2, work, par)
+            },
+            |&(c1, c2, work, par)| {
+                let t1 = CfsBandwidth::new(c1).runtime_for(work, par);
+                let t2 = CfsBandwidth::new(c2).runtime_for(work, par);
+                ensure(t2 <= t1 + 1e-9, format!("more cpus slower: {t1} -> {t2}"))
+            },
+        );
+    }
+
+    #[test]
+    fn throttle_clock_accumulates_consumption() {
+        let mut clk = ThrottleClock::new(CfsBandwidth::new(1000.0));
+        clk.acquire(0.001);
+        clk.acquire(0.002);
+        assert!(close(clk.consumed_s(), 0.003, 1e-12).is_ok());
+    }
+
+    #[test]
+    fn throttle_clock_enforces_rate() {
+        // --cpus equivalent 10: consuming 0.05 CPU-seconds instantly must
+        // cost at least ~5 ms of wall-clock.
+        let mut clk = ThrottleClock::new(CfsBandwidth::new(10.0));
+        let start = std::time::Instant::now();
+        clk.acquire(0.05);
+        let elapsed = start.elapsed().as_secs_f64();
+        assert!(elapsed >= 0.004, "elapsed={elapsed}");
+    }
+
+    #[test]
+    fn debt_is_zero_when_under_budget() {
+        let mut clk = ThrottleClock::new(CfsBandwidth::new(4.0));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        // 5 ms elapsed at 4 cpus = 20 ms budget; 1 ms of work fits.
+        assert!(clk.debt_before(0.001).is_zero());
+    }
+}

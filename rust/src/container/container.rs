@@ -1,0 +1,150 @@
+//! Container lifecycle: images, create/start/stop, resource assignment.
+
+use super::cfs::CfsBandwidth;
+
+/// An immutable container image ("yolo-container" in the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageSpec {
+    pub name: String,
+    /// HLO artifact variant this image serves (e.g. "yolo_tiny_b4").
+    pub model_variant: String,
+    /// Image + runtime memory footprint when running, MiB.
+    pub memory_mib: f64,
+    /// Cold-start cost in seconds (container create + model load).
+    pub startup_s: f64,
+}
+
+impl ImageSpec {
+    pub fn yolo(variant: &str) -> Self {
+        ImageSpec {
+            name: format!("yolo-container:{variant}"),
+            model_variant: variant.to_string(),
+            memory_mib: 900.0,
+            startup_s: 2.5,
+        }
+    }
+}
+
+/// Docker-like lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    Created,
+    Running,
+    Exited,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ContainerError {
+    #[error("invalid transition: {0:?} -> {1:?}")]
+    BadTransition(ContainerState, ContainerState),
+    #[error("cpu limit must be positive, got {0}")]
+    BadCpuLimit(f64),
+}
+
+/// One container instance with its resource assignment.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: u64,
+    pub image: ImageSpec,
+    pub cpus: CfsBandwidth,
+    state: ContainerState,
+    /// Simulated timestamps (seconds on the experiment clock).
+    pub created_at_s: f64,
+    pub started_at_s: Option<f64>,
+    pub exited_at_s: Option<f64>,
+}
+
+impl Container {
+    /// `docker create --cpus=<cpus> <image>`.
+    pub fn create(id: u64, image: ImageSpec, cpus: f64, now_s: f64) -> Result<Self, ContainerError> {
+        if cpus <= 0.0 {
+            return Err(ContainerError::BadCpuLimit(cpus));
+        }
+        Ok(Container {
+            id,
+            image,
+            cpus: CfsBandwidth::new(cpus),
+            state: ContainerState::Created,
+            created_at_s: now_s,
+            started_at_s: None,
+            exited_at_s: None,
+        })
+    }
+
+    pub fn state(&self) -> ContainerState {
+        self.state
+    }
+
+    /// `docker start` — becomes Running after the image's startup cost.
+    pub fn start(&mut self, now_s: f64) -> Result<f64, ContainerError> {
+        if self.state != ContainerState::Created {
+            return Err(ContainerError::BadTransition(self.state, ContainerState::Running));
+        }
+        self.state = ContainerState::Running;
+        let ready = now_s + self.image.startup_s;
+        self.started_at_s = Some(ready);
+        Ok(ready)
+    }
+
+    pub fn stop(&mut self, now_s: f64) -> Result<(), ContainerError> {
+        if self.state != ContainerState::Running {
+            return Err(ContainerError::BadTransition(self.state, ContainerState::Exited));
+        }
+        self.state = ContainerState::Exited;
+        self.exited_at_s = Some(now_s);
+        Ok(())
+    }
+
+    /// Total lifetime (for accounting), if finished.
+    pub fn lifetime_s(&self) -> Option<f64> {
+        self.exited_at_s.map(|e| e - self.created_at_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img() -> ImageSpec {
+        ImageSpec::yolo("yolo_tiny_b4")
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut c = Container::create(1, img(), 2.0, 10.0).unwrap();
+        assert_eq!(c.state(), ContainerState::Created);
+        let ready = c.start(11.0).unwrap();
+        assert!((ready - 13.5).abs() < 1e-12); // 2.5 s startup
+        assert_eq!(c.state(), ContainerState::Running);
+        c.stop(20.0).unwrap();
+        assert_eq!(c.state(), ContainerState::Exited);
+        assert!((c.lifetime_s().unwrap() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_cpu_limits() {
+        assert_eq!(
+            Container::create(1, img(), 0.0, 0.0).unwrap_err(),
+            ContainerError::BadCpuLimit(0.0)
+        );
+        assert!(Container::create(1, img(), -1.0, 0.0).is_err());
+        assert!(Container::create(1, img(), 0.1, 0.0).is_ok()); // paper's Fig.1 low end
+    }
+
+    #[test]
+    fn rejects_bad_transitions() {
+        let mut c = Container::create(1, img(), 1.0, 0.0).unwrap();
+        assert!(c.stop(1.0).is_err()); // not started
+        c.start(1.0).unwrap();
+        assert!(c.start(2.0).is_err()); // double start
+        c.stop(3.0).unwrap();
+        assert!(c.stop(4.0).is_err()); // double stop
+    }
+
+    #[test]
+    fn image_naming() {
+        let i = ImageSpec::yolo("yolo_tiny_b1");
+        assert_eq!(i.name, "yolo-container:yolo_tiny_b1");
+        assert_eq!(i.model_variant, "yolo_tiny_b1");
+    }
+}

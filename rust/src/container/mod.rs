@@ -1,0 +1,17 @@
+//! Container runtime substrate — the substitute for Docker on the
+//! Jetson boards (DESIGN.md §2).
+//!
+//! Models what the paper actually uses from Docker: image-based
+//! creation, a lifecycle (Created → Running → Exited), a fractional
+//! `--cpus` limit enforced by the CFS bandwidth controller
+//! (quota/period), per-container memory accounting and a startup cost.
+//! `cfs` implements the same quota arithmetic cgroups v2 uses, and is
+//! reused by the REAL executor as a token-bucket thread throttle.
+
+pub mod cfs;
+pub mod container;
+pub mod pool;
+
+pub use cfs::CfsBandwidth;
+pub use container::{Container, ContainerError, ContainerState, ImageSpec};
+pub use pool::ContainerPool;

@@ -1,0 +1,134 @@
+//! Container pool: creates the paper's "k containers with C/k cpus each"
+//! topology, enforcing the device memory cap.
+
+use super::container::{Container, ContainerError, ImageSpec};
+use crate::device::DeviceSpec;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PoolError {
+    #[error("k must be >= 1")]
+    ZeroContainers,
+    #[error("{k} containers exceed device memory (max {max} for this workload)")]
+    OutOfMemory { k: usize, max: usize },
+    #[error(transparent)]
+    Container(#[from] ContainerError),
+}
+
+/// A homogeneous pool of `k` containers sharing the device evenly —
+/// exactly the topology of the paper's Fig. 2.
+#[derive(Debug, Clone)]
+pub struct ContainerPool {
+    pub containers: Vec<Container>,
+    /// cpus granted to each container (= device cores / k).
+    pub cpus_each: f64,
+}
+
+impl ContainerPool {
+    /// Create (not yet start) `k` containers for `total_frames` of work
+    /// on `device`, splitting the cores evenly.
+    pub fn create(
+        device: &DeviceSpec,
+        image: &ImageSpec,
+        k: usize,
+        total_frames: usize,
+        now_s: f64,
+    ) -> Result<Self, PoolError> {
+        if k == 0 {
+            return Err(PoolError::ZeroContainers);
+        }
+        let per_frames = total_frames.div_ceil(k);
+        if !device.memory.fits(k, per_frames) {
+            return Err(PoolError::OutOfMemory {
+                k,
+                max: device.memory.max_containers(total_frames),
+            });
+        }
+        let cpus_each = device.cores / k as f64;
+        let containers = (0..k)
+            .map(|i| Container::create(i as u64, image.clone(), cpus_each, now_s))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ContainerPool { containers, cpus_each })
+    }
+
+    pub fn len(&self) -> usize {
+        self.containers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.containers.is_empty()
+    }
+
+    /// Start all containers at `now_s`; returns when the LAST becomes
+    /// ready (starts proceed in parallel, as `docker start` does).
+    pub fn start_all(&mut self, now_s: f64) -> Result<f64, PoolError> {
+        let mut last_ready = now_s;
+        for c in &mut self.containers {
+            let ready = c.start(now_s)?;
+            last_ready = last_ready.max(ready);
+        }
+        Ok(last_ready)
+    }
+
+    pub fn stop_all(&mut self, now_s: f64) -> Result<(), PoolError> {
+        for c in &mut self.containers {
+            c.stop(now_s)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::ContainerState;
+
+    fn img() -> ImageSpec {
+        let mut i = ImageSpec::yolo("yolo_tiny_b4");
+        i.memory_mib = 900.0;
+        i
+    }
+
+    #[test]
+    fn splits_cores_evenly() {
+        let dev = DeviceSpec::tx2();
+        let pool = ContainerPool::create(&dev, &img(), 4, 720, 0.0).unwrap();
+        assert_eq!(pool.len(), 4);
+        assert!((pool.cpus_each - 1.0).abs() < 1e-12);
+        let pool2 = ContainerPool::create(&dev, &img(), 3, 720, 0.0).unwrap();
+        assert!((pool2.cpus_each - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn enforces_memory_cap() {
+        let dev = DeviceSpec::tx2();
+        // paper: max 6 containers on TX2
+        assert!(ContainerPool::create(&dev, &img(), 6, 720, 0.0).is_ok());
+        let err = ContainerPool::create(&dev, &img(), 7, 720, 0.0).unwrap_err();
+        assert_eq!(err, PoolError::OutOfMemory { k: 7, max: 6 });
+
+        let orin = DeviceSpec::orin();
+        assert!(ContainerPool::create(&orin, &img(), 12, 720, 0.0).is_ok());
+        assert!(ContainerPool::create(&orin, &img(), 13, 720, 0.0).is_err());
+    }
+
+    #[test]
+    fn zero_k_rejected() {
+        let dev = DeviceSpec::tx2();
+        assert_eq!(
+            ContainerPool::create(&dev, &img(), 0, 720, 0.0).unwrap_err(),
+            PoolError::ZeroContainers
+        );
+    }
+
+    #[test]
+    fn start_all_parallel_ready_time() {
+        let dev = DeviceSpec::tx2();
+        let mut pool = ContainerPool::create(&dev, &img(), 3, 720, 5.0).unwrap();
+        let ready = pool.start_all(5.0).unwrap();
+        // parallel starts: ready = now + startup, NOT now + 3*startup
+        assert!((ready - (5.0 + img().startup_s)).abs() < 1e-12);
+        assert!(pool.containers.iter().all(|c| c.state() == ContainerState::Running));
+        pool.stop_all(30.0).unwrap();
+        assert!(pool.containers.iter().all(|c| c.state() == ContainerState::Exited));
+    }
+}

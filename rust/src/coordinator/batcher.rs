@@ -1,0 +1,127 @@
+//! Frame batcher: groups a segment's frames into engine-sized batches.
+//!
+//! The AOT executables are lowered for fixed batch sizes; the batcher
+//! plans which (start, count) chunks a container will push through its
+//! engine, padding only the final short chunk. Also picks the best
+//! variant for a segment length (largest batch that doesn't waste more
+//! than the allowed pad fraction).
+
+/// One planned engine call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPlanItem {
+    pub start_frame: usize,
+    pub count: usize,
+}
+
+/// Plan batches of size `batch` covering `[start, start+len)`.
+pub fn plan_batches(start: usize, len: usize, batch: usize) -> Vec<BatchPlanItem> {
+    assert!(batch >= 1, "batch must be >= 1");
+    let mut out = Vec::with_capacity(len.div_ceil(batch));
+    let mut f = start;
+    let end = start + len;
+    while f < end {
+        let count = batch.min(end - f);
+        out.push(BatchPlanItem { start_frame: f, count });
+        f += count;
+    }
+    out
+}
+
+/// Padded-frame overhead of running `len` frames at batch size `batch`:
+/// wasted frames / total executed frames.
+pub fn pad_waste(len: usize, batch: usize) -> f64 {
+    if len == 0 {
+        return 0.0;
+    }
+    let executed = len.div_ceil(batch) * batch;
+    (executed - len) as f64 / executed as f64
+}
+
+/// Choose the largest batch size from `available` whose padding waste on
+/// a segment of `len` frames stays under `max_waste` (falls back to the
+/// smallest available).
+pub fn choose_batch(len: usize, available: &[usize], max_waste: f64) -> usize {
+    assert!(!available.is_empty());
+    let mut sizes = available.to_vec();
+    sizes.sort_unstable();
+    let mut best = sizes[0];
+    for &b in &sizes {
+        if pad_waste(len, b) <= max_waste {
+            best = b;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+
+    #[test]
+    fn plan_exact_multiple() {
+        let plan = plan_batches(0, 8, 4);
+        assert_eq!(
+            plan,
+            vec![
+                BatchPlanItem { start_frame: 0, count: 4 },
+                BatchPlanItem { start_frame: 4, count: 4 }
+            ]
+        );
+    }
+
+    #[test]
+    fn plan_with_tail() {
+        let plan = plan_batches(100, 10, 4);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan[2], BatchPlanItem { start_frame: 108, count: 2 });
+    }
+
+    #[test]
+    fn plan_empty_segment() {
+        assert!(plan_batches(5, 0, 4).is_empty());
+    }
+
+    #[test]
+    fn waste_arithmetic() {
+        assert_eq!(pad_waste(8, 4), 0.0);
+        assert!((pad_waste(9, 4) - 3.0 / 12.0).abs() < 1e-12);
+        assert_eq!(pad_waste(0, 4), 0.0);
+        assert_eq!(pad_waste(1, 8), 7.0 / 8.0);
+    }
+
+    #[test]
+    fn choose_prefers_big_batches_when_cheap() {
+        // 180-frame segment: batch 4 wastes 0, batch 8 wastes 4/184
+        assert_eq!(choose_batch(180, &[1, 2, 4, 8], 0.05), 8);
+        // 1-frame segment: anything above 1 wastes >= 50%
+        assert_eq!(choose_batch(1, &[1, 2, 4, 8], 0.05), 1);
+    }
+
+    #[test]
+    fn plan_covers_exactly_property() {
+        forall(
+            37,
+            200,
+            |r| {
+                (
+                    r.range_u64(0, 1000) as usize,
+                    r.range_u64(0, 500) as usize,
+                    r.range_u64(1, 16) as usize,
+                )
+            },
+            |&(start, len, batch)| {
+                let plan = plan_batches(start, len, batch);
+                let total: usize = plan.iter().map(|p| p.count).sum();
+                ensure(total == len, "coverage mismatch")?;
+                let mut expect = start;
+                for p in &plan {
+                    ensure(p.start_frame == expect, "not contiguous")?;
+                    ensure(p.count >= 1 && p.count <= batch, "bad count")?;
+                    expect += p.count;
+                }
+                Ok(())
+            },
+        );
+    }
+}

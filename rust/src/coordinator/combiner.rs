@@ -1,0 +1,150 @@
+//! Step (4) of the paper's method: "The results from all the containers
+//! are then combined and presented to the user."
+//!
+//! Each container returns detections for its contiguous frame segment;
+//! the combiner validates the segments form an exact cover and merges
+//! detections into global frame order. Because YOLO processes frames
+//! independently, the merge is a pure concatenation — no cross-segment
+//! reconciliation — which is exactly why the task is splittable.
+
+use crate::detect::Detection;
+use crate::workload::{splitter::is_exact_cover, Segment};
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CombineError {
+    #[error("segments do not exactly cover [0, {total}) frames")]
+    NotACover { total: usize },
+    #[error("segment {index} contains detection for frame {frame} outside [{start}, {end})")]
+    OutOfRange { index: usize, frame: usize, start: usize, end: usize },
+    #[error("result count {got} != segment count {want}")]
+    CountMismatch { got: usize, want: usize },
+}
+
+/// Merge per-segment detection lists into global frame order.
+pub fn combine_segments(
+    segments: &[Segment],
+    per_segment: &[Vec<Detection>],
+    total_frames: usize,
+) -> Result<Vec<Detection>, CombineError> {
+    if per_segment.len() != segments.len() {
+        return Err(CombineError::CountMismatch {
+            got: per_segment.len(),
+            want: segments.len(),
+        });
+    }
+    if !is_exact_cover(segments, total_frames) {
+        return Err(CombineError::NotACover { total: total_frames });
+    }
+    let mut out = Vec::with_capacity(per_segment.iter().map(Vec::len).sum());
+    for (seg, dets) in segments.iter().zip(per_segment) {
+        for d in dets {
+            if d.frame < seg.start_frame || d.frame >= seg.end_frame() {
+                return Err(CombineError::OutOfRange {
+                    index: seg.index,
+                    frame: d.frame,
+                    start: seg.start_frame,
+                    end: seg.end_frame(),
+                });
+            }
+        }
+        out.extend(dets.iter().copied());
+    }
+    // Segments are contiguous and detections within a segment are
+    // appended in processing order; sort by frame for a stable global
+    // order (ties keep insertion order via stable sort).
+    out.sort_by_key(|d| d.frame);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detect::{BBox, Detection};
+    use crate::workload::split_even;
+
+    fn det(frame: usize) -> Detection {
+        Detection {
+            frame,
+            bbox: BBox::new(0.5, 0.5, 0.1, 0.1),
+            class_id: 0,
+            score: 0.9,
+        }
+    }
+
+    #[test]
+    fn merges_in_frame_order() {
+        let segs = split_even(10, 2);
+        let merged = combine_segments(
+            &segs,
+            &[vec![det(4), det(1)], vec![det(7), det(5)]],
+            10,
+        )
+        .unwrap();
+        let frames: Vec<usize> = merged.iter().map(|d| d.frame).collect();
+        assert_eq!(frames, vec![1, 4, 5, 7]);
+    }
+
+    #[test]
+    fn rejects_out_of_segment_detection() {
+        let segs = split_even(10, 2);
+        let err = combine_segments(&segs, &[vec![det(7)], vec![]], 10).unwrap_err();
+        assert!(matches!(err, CombineError::OutOfRange { frame: 7, .. }));
+    }
+
+    #[test]
+    fn rejects_wrong_result_count() {
+        let segs = split_even(10, 2);
+        let err = combine_segments(&segs, &[vec![]], 10).unwrap_err();
+        assert_eq!(err, CombineError::CountMismatch { got: 1, want: 2 });
+    }
+
+    #[test]
+    fn rejects_non_cover() {
+        let segs = vec![crate::workload::Segment { index: 0, start_frame: 0, len: 5 }];
+        let err = combine_segments(&segs, &[vec![]], 10).unwrap_err();
+        assert_eq!(err, CombineError::NotACover { total: 10 });
+    }
+
+    #[test]
+    fn empty_detections_ok() {
+        let segs = split_even(720, 6);
+        let empty: Vec<Vec<Detection>> = vec![Vec::new(); 6];
+        assert!(combine_segments(&segs, &empty, 720).unwrap().is_empty());
+    }
+
+    #[test]
+    fn split_invariance_property() {
+        // The combined result must not depend on k — the heart of the
+        // paper's "splittable task" premise.
+        use crate::util::proptest::{ensure, forall};
+        forall(
+            19,
+            50,
+            |r| {
+                let total = r.range_u64(1, 300) as usize;
+                let k = r.range_u64(1, 8) as usize;
+                // synthesize detections: every 3rd frame has one
+                let dets: Vec<Detection> =
+                    (0..total).filter(|f| f % 3 == 0).map(det).collect();
+                (total, k, dets)
+            },
+            |(total, k, dets)| {
+                let segs = split_even(*total, *k);
+                let per: Vec<Vec<Detection>> = segs
+                    .iter()
+                    .map(|s| {
+                        dets.iter()
+                            .filter(|d| d.frame >= s.start_frame && d.frame < s.end_frame())
+                            .copied()
+                            .collect()
+                    })
+                    .collect();
+                let merged = combine_segments(&segs, &per, *total).unwrap();
+                ensure(merged.len() == dets.len(), "lost detections")?;
+                let frames: Vec<usize> = merged.iter().map(|d| d.frame).collect();
+                let want: Vec<usize> = dets.iter().map(|d| d.frame).collect();
+                ensure(frames == want, "order changed by splitting")
+            },
+        );
+    }
+}

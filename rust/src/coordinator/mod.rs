@@ -1,0 +1,29 @@
+//! The paper's contribution, as a coordinator: split a video's frames
+//! into `k` equal segments, launch `k` containers each with `C/k` cpus,
+//! run inference in parallel, merge the results, and meter time /
+//! energy / power (§V steps 1–4).
+//!
+//! Two interchangeable executors:
+//! * [`executor::run_sim`] — discrete-event simulation on the calibrated
+//!   device model; regenerates the paper's figures.
+//! * [`executor::run_real`] — real PJRT inference on throttled worker
+//!   threads (one per container, each with its own isolated runtime);
+//!   wall-clock is measured, power is modeled from the executed trace.
+//!
+//! On top of them:
+//! * [`combiner`] — order-preserving merge of per-segment detections.
+//! * [`optimizer`] — the paper's future-work online scheduler: probes a
+//!   few k, fits the Table II convex models, picks the optimal k.
+//! * [`router`]/[`batcher`] — a serving front: jobs in, optimal split
+//!   chosen, batches through the engine, detections out.
+
+pub mod batcher;
+pub mod combiner;
+pub mod executor;
+pub mod optimizer;
+pub mod router;
+
+pub use combiner::combine_segments;
+pub use executor::{run_sim, ExperimentResult, SegmentResult};
+pub use optimizer::{OnlineOptimizer, OptimizeObjective};
+pub use router::{Coordinator, InferenceJob, JobResult};

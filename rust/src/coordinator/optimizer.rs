@@ -1,0 +1,179 @@
+//! Online optimal-k scheduler — the paper's closing future-work item:
+//! "obtaining the optimal number of containers in an online fashion in
+//! order to enhance the energy efficiency and reduce the processing
+//! time of the edge system."
+//!
+//! Strategy: probe a small set of container counts on a short prefix of
+//! the workload, fit the Table II convex model family to the probes,
+//! and pick the k minimizing the chosen objective, clamped to the
+//! memory cap. Convexity of the fitted family is what makes the argmin
+//! trustworthy between probe points.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::executor::{run_sim, ExperimentResult};
+use crate::modelfit::{fit_exponential, fit_quadratic, FittedModel};
+
+/// What to minimize.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizeObjective {
+    Time,
+    Energy,
+    /// `w * time_ratio + (1-w) * energy_ratio`.
+    Weighted(f64),
+}
+
+/// Result of one optimization round.
+#[derive(Debug, Clone)]
+pub struct OptimizerDecision {
+    pub best_k: usize,
+    pub probes: Vec<(usize, f64)>,
+    pub model: FittedModel,
+    pub objective: OptimizeObjective,
+}
+
+/// Probing online optimizer over the SIM executor (the REAL path uses
+/// the same fit on measured probes — see `examples/online_scheduler`).
+#[derive(Debug, Clone)]
+pub struct OnlineOptimizer {
+    /// Frames to spend per probe (small prefix of the video).
+    pub probe_frames: usize,
+    /// Container counts to probe (defaults to {1, 2, max/2, max}).
+    pub probe_ks: Option<Vec<usize>>,
+    pub objective: OptimizeObjective,
+}
+
+impl Default for OnlineOptimizer {
+    fn default() -> Self {
+        OnlineOptimizer { probe_frames: 48, probe_ks: None, objective: OptimizeObjective::Energy }
+    }
+}
+
+impl OnlineOptimizer {
+    fn objective_value(&self, r: &ExperimentResult, bench: &ExperimentResult) -> f64 {
+        let (t, e, _) = r.normalized(bench);
+        match self.objective {
+            OptimizeObjective::Time => t,
+            OptimizeObjective::Energy => e,
+            OptimizeObjective::Weighted(w) => w * t + (1.0 - w) * e,
+        }
+    }
+
+    /// Probe, fit, decide.
+    pub fn decide(&self, cfg: &ExperimentConfig) -> Result<OptimizerDecision> {
+        let device = cfg.effective_device();
+        let k_max = device.memory.max_containers(cfg.video.frame_count()).max(1);
+        let default_ks = {
+            let mut ks = vec![1usize, 2, (k_max / 2).max(3), k_max];
+            ks.dedup();
+            ks.retain(|&k| k >= 1 && k <= k_max);
+            ks.sort_unstable();
+            ks.dedup();
+            ks
+        };
+        let ks = self.probe_ks.clone().unwrap_or(default_ks);
+        assert!(!ks.is_empty());
+
+        // Probe on a short prefix.
+        let mut probe_cfg = cfg.clone();
+        probe_cfg.video =
+            crate::workload::Video::with_frames("probe", self.probe_frames, cfg.video.fps);
+        probe_cfg.containers = 1;
+        let bench = run_sim(&probe_cfg)?;
+
+        let mut probes = Vec::with_capacity(ks.len());
+        for &k in &ks {
+            let mut c = probe_cfg.clone();
+            c.containers = k;
+            let r = run_sim(&c)?;
+            probes.push((k, self.objective_value(&r, &bench)));
+        }
+
+        let xs: Vec<f64> = probes.iter().map(|(k, _)| *k as f64).collect();
+        let ys: Vec<f64> = probes.iter().map(|(_, v)| *v).collect();
+
+        // Prefer the family that fits better (Table II uses quadratic
+        // for TX2, exponential for Orin; picking by R² recovers that).
+        let quad = fit_quadratic(&xs, &ys).map(FittedModel::Quadratic);
+        let expo = fit_exponential(&xs, &ys).map(FittedModel::Exponential);
+        let model = match (quad, expo) {
+            (Some(q), Some(e)) => {
+                let r2q = crate::modelfit::r2_of_fit(&q, &xs, &ys);
+                let r2e = crate::modelfit::r2_of_fit(&e, &xs, &ys);
+                if r2e > r2q { e } else { q }
+            }
+            (Some(q), None) => q,
+            (None, Some(e)) => e,
+            (None, None) => anyhow::bail!("model fitting failed on probes"),
+        };
+
+        let best_k = model.argmin(k_max);
+        Ok(OptimizerDecision { best_k, probes, model, objective: self.objective })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+
+    #[test]
+    fn tx2_energy_optimum_is_near_four() {
+        // Paper: TX2 best energy at 4 containers, degrading beyond.
+        let cfg = ExperimentConfig::default();
+        let opt = OnlineOptimizer { objective: OptimizeObjective::Energy, ..Default::default() };
+        let d = opt.decide(&cfg).unwrap();
+        assert!(
+            (3..=5).contains(&d.best_k),
+            "best_k={} probes={:?} model={}",
+            d.best_k,
+            d.probes,
+            d.model.describe()
+        );
+    }
+
+    #[test]
+    fn orin_optimum_is_high_k() {
+        // Paper: Orin most efficient at 12 (flattening past 4).
+        let mut cfg = ExperimentConfig::default();
+        cfg.device = DeviceSpec::orin();
+        let opt = OnlineOptimizer { objective: OptimizeObjective::Time, ..Default::default() };
+        let d = opt.decide(&cfg).unwrap();
+        assert!(d.best_k >= 8, "best_k={} model={}", d.best_k, d.model.describe());
+    }
+
+    #[test]
+    fn weighted_objective_between_extremes() {
+        let cfg = ExperimentConfig::default();
+        let t = OnlineOptimizer { objective: OptimizeObjective::Weighted(1.0), ..Default::default() }
+            .decide(&cfg)
+            .unwrap();
+        let e = OnlineOptimizer { objective: OptimizeObjective::Weighted(0.0), ..Default::default() }
+            .decide(&cfg)
+            .unwrap();
+        // both must be feasible and within the TX2 cap
+        for d in [&t, &e] {
+            assert!((1..=6).contains(&d.best_k));
+        }
+    }
+
+    #[test]
+    fn respects_memory_cap() {
+        let cfg = ExperimentConfig::default(); // TX2: cap 6
+        let d = OnlineOptimizer::default().decide(&cfg).unwrap();
+        assert!(d.best_k <= 6);
+    }
+
+    #[test]
+    fn custom_probe_ks() {
+        let cfg = ExperimentConfig::default();
+        let opt = OnlineOptimizer {
+            probe_ks: Some(vec![1, 2, 3, 4, 5, 6]),
+            ..Default::default()
+        };
+        let d = opt.decide(&cfg).unwrap();
+        assert_eq!(d.probes.len(), 6);
+        assert!((1..=6).contains(&d.best_k));
+    }
+}

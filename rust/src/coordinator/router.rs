@@ -1,0 +1,178 @@
+//! Request router: the serving front of the coordinator.
+//!
+//! Jobs (videos to analyze) arrive; the router picks the container
+//! count — fixed, or online-optimized per device/task via the
+//! [`OnlineOptimizer`] with decision caching — dispatches to the
+//! configured executor, and returns the combined result. Metrics are
+//! recorded per job.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::executor::{self, ExperimentResult};
+use crate::coordinator::optimizer::{OnlineOptimizer, OptimizerDecision};
+use crate::metrics::Registry;
+use crate::workload::{TaskProfile, Video};
+
+/// How the router chooses k.
+#[derive(Debug, Clone)]
+pub enum SplitPolicy {
+    /// Always use this many containers.
+    Fixed(usize),
+    /// Run the online optimizer once per (device, task) and cache it.
+    Online(OnlineOptimizer),
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceJob {
+    pub id: u64,
+    pub video: Video,
+    pub task: TaskProfile,
+}
+
+/// Completed request.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub containers_used: usize,
+    pub result: ExperimentResult,
+}
+
+/// The coordinator: configuration + split policy + metrics.
+#[derive(Debug)]
+pub struct Coordinator {
+    pub base: ExperimentConfig,
+    pub policy: SplitPolicy,
+    pub metrics: Registry,
+    decisions: BTreeMap<String, OptimizerDecision>,
+}
+
+impl Coordinator {
+    pub fn new(base: ExperimentConfig, policy: SplitPolicy) -> Self {
+        Coordinator { base, policy, metrics: Registry::new(), decisions: BTreeMap::new() }
+    }
+
+    /// Decide the container count for a job (cached per device+task).
+    pub fn decide_k(&mut self, job: &InferenceJob) -> Result<usize> {
+        match &self.policy {
+            SplitPolicy::Fixed(k) => Ok(*k),
+            SplitPolicy::Online(opt) => {
+                let key = format!("{}/{}", self.base.device.name, job.task.name);
+                if let Some(d) = self.decisions.get(&key) {
+                    return Ok(d.best_k);
+                }
+                let mut cfg = self.base.clone();
+                cfg.task = job.task.clone();
+                cfg.video = job.video.clone();
+                let d = opt.decide(&cfg)?;
+                let k = d.best_k;
+                log::info!(
+                    "router: optimized k={k} for {key} (model: {})",
+                    d.model.describe()
+                );
+                self.decisions.insert(key, d);
+                Ok(k)
+            }
+        }
+    }
+
+    /// Process one job end to end.
+    pub fn submit(&mut self, job: InferenceJob) -> Result<JobResult> {
+        let k = self.decide_k(&job)?;
+        let mut cfg = self.base.clone();
+        cfg.task = job.task.clone();
+        cfg.video = job.video.clone();
+        cfg.containers = k;
+
+        let t0 = std::time::Instant::now();
+        let result = executor::run(&cfg)?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        self.metrics.inc("jobs_completed", 1);
+        self.metrics.inc("frames_processed", result.frames as u64);
+        self.metrics.histogram("job_wall_s").record_s(wall);
+        self.metrics.histogram("job_sim_time_s").record_s(result.time_s);
+        self.metrics.set_gauge("last_energy_j", result.energy_j);
+
+        Ok(JobResult { id: job.id, containers_used: k, result })
+    }
+
+    /// Cached optimizer decisions (for inspection / tests).
+    pub fn decisions(&self) -> &BTreeMap<String, OptimizerDecision> {
+        &self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, frames: usize) -> InferenceJob {
+        InferenceJob {
+            id,
+            video: Video::with_frames("job", frames, 24.0),
+            task: TaskProfile::yolo_tiny(),
+        }
+    }
+
+    #[test]
+    fn fixed_policy_uses_k() {
+        let mut c = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let r = c.submit(job(1, 240)).unwrap();
+        assert_eq!(r.containers_used, 4);
+        assert_eq!(r.result.frames, 240);
+        assert_eq!(c.metrics.counter("jobs_completed"), 1);
+        assert_eq!(c.metrics.counter("frames_processed"), 240);
+    }
+
+    #[test]
+    fn online_policy_caches_decision() {
+        let mut c = Coordinator::new(
+            ExperimentConfig::default(),
+            SplitPolicy::Online(OnlineOptimizer::default()),
+        );
+        let r1 = c.submit(job(1, 120)).unwrap();
+        assert_eq!(c.decisions().len(), 1);
+        let r2 = c.submit(job(2, 120)).unwrap();
+        assert_eq!(c.decisions().len(), 1, "decision must be cached");
+        assert_eq!(r1.containers_used, r2.containers_used);
+    }
+
+    #[test]
+    fn online_decision_beats_naive_single_container() {
+        let mut online = Coordinator::new(
+            ExperimentConfig::default(),
+            SplitPolicy::Online(OnlineOptimizer::default()),
+        );
+        let mut naive =
+            Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(1));
+        let r_online = online.submit(job(1, 720)).unwrap();
+        let r_naive = naive.submit(job(1, 720)).unwrap();
+        assert!(
+            r_online.result.energy_j < r_naive.result.energy_j,
+            "online {} should beat naive {}",
+            r_online.result.energy_j,
+            r_naive.result.energy_j
+        );
+        assert!(r_online.result.time_s < r_naive.result.time_s);
+    }
+
+    #[test]
+    fn different_tasks_get_separate_decisions() {
+        let mut c = Coordinator::new(
+            ExperimentConfig::default(),
+            SplitPolicy::Online(OnlineOptimizer::default()),
+        );
+        c.submit(job(1, 120)).unwrap();
+        c.submit(InferenceJob {
+            id: 2,
+            video: Video::with_frames("j", 120, 24.0),
+            task: TaskProfile::simple_cnn(),
+        })
+        .unwrap();
+        assert_eq!(c.decisions().len(), 2);
+    }
+}

@@ -1,0 +1,117 @@
+//! Bounding boxes in normalized center-size form (what the decode
+//! kernel emits) and IoU.
+
+/// Center-form box, all coordinates fractions of image size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BBox {
+    pub cx: f64,
+    pub cy: f64,
+    pub w: f64,
+    pub h: f64,
+}
+
+impl BBox {
+    pub fn new(cx: f64, cy: f64, w: f64, h: f64) -> Self {
+        BBox { cx, cy, w, h }
+    }
+
+    pub fn area(&self) -> f64 {
+        (self.w.max(0.0)) * (self.h.max(0.0))
+    }
+
+    /// Corner form (x0, y0, x1, y1).
+    pub fn corners(&self) -> (f64, f64, f64, f64) {
+        (
+            self.cx - self.w / 2.0,
+            self.cy - self.h / 2.0,
+            self.cx + self.w / 2.0,
+            self.cy + self.h / 2.0,
+        )
+    }
+
+    /// Intersection-over-union with another box.
+    pub fn iou(&self, other: &BBox) -> f64 {
+        let (ax0, ay0, ax1, ay1) = self.corners();
+        let (bx0, by0, bx1, by1) = other.corners();
+        let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+        let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+        let inter = ix * iy;
+        let union = self.area() + other.area() - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+}
+
+/// One final detection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Detection {
+    /// Global frame index in the source video.
+    pub frame: usize,
+    pub bbox: BBox,
+    pub class_id: usize,
+    /// objectness * class probability.
+    pub score: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+
+    #[test]
+    fn iou_identical_is_one() {
+        let b = BBox::new(0.5, 0.5, 0.2, 0.2);
+        assert!((b.iou(&b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        let a = BBox::new(0.2, 0.2, 0.1, 0.1);
+        let b = BBox::new(0.8, 0.8, 0.1, 0.1);
+        assert_eq!(a.iou(&b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // two unit-ish boxes sharing half their area
+        let a = BBox::new(0.25, 0.5, 0.5, 1.0);
+        let b = BBox::new(0.5, 0.5, 0.5, 1.0);
+        // intersection 0.25*1, union 0.75 -> 1/3
+        assert!((a.iou(&b) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_area_boxes() {
+        let z = BBox::new(0.5, 0.5, 0.0, 0.0);
+        let b = BBox::new(0.5, 0.5, 0.2, 0.2);
+        assert_eq!(z.iou(&b), 0.0);
+        assert_eq!(z.iou(&z), 0.0);
+    }
+
+    #[test]
+    fn iou_properties() {
+        forall(
+            41,
+            300,
+            |r| {
+                let mk = |r: &mut crate::util::rng::Rng| {
+                    BBox::new(
+                        r.range_f64(0.0, 1.0),
+                        r.range_f64(0.0, 1.0),
+                        r.range_f64(0.01, 0.6),
+                        r.range_f64(0.01, 0.6),
+                    )
+                };
+                (mk(r), mk(r))
+            },
+            |&(a, b)| {
+                let iou = a.iou(&b);
+                ensure((0.0..=1.0 + 1e-12).contains(&iou), format!("iou={iou}"))?;
+                ensure((a.iou(&b) - b.iou(&a)).abs() < 1e-12, "not symmetric")
+            },
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! Detection post-processing on the rust side: the PJRT executable
+//! returns decoded boxes (the L1 decode kernel ran in-graph); this
+//! module turns them into final detections — confidence thresholding,
+//! per-class scores and non-maximum suppression.
+
+pub mod bbox;
+pub mod nms;
+pub mod quality;
+
+pub use bbox::{BBox, Detection};
+pub use nms::{decode_output, nms, NmsParams};
+pub use quality::{evaluate, MatchParams, QualityReport};

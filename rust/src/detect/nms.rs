@@ -1,0 +1,162 @@
+//! Confidence thresholding + per-class non-maximum suppression over the
+//! decoded head output, plus the flat-buffer parser for what the PJRT
+//! executable returns.
+
+use super::bbox::{BBox, Detection};
+
+/// NMS configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NmsParams {
+    /// Keep boxes with objectness*class >= this.
+    pub score_threshold: f64,
+    /// Suppress same-class boxes with IoU above this.
+    pub iou_threshold: f64,
+    /// Cap on detections per frame (0 = unlimited).
+    pub max_per_frame: usize,
+}
+
+impl Default for NmsParams {
+    fn default() -> Self {
+        NmsParams { score_threshold: 0.25, iou_threshold: 0.45, max_per_frame: 100 }
+    }
+}
+
+/// Parse one frame's decoded head buffer into candidate detections.
+///
+/// `boxes` is `n_boxes * nattr` floats laid out `[bx, by, bw, bh, obj,
+/// cls0..clsC-1]` (what `decode.py` emits). The best class is taken per
+/// box; score = obj * cls.
+pub fn decode_output(
+    boxes: &[f32],
+    nattr: usize,
+    frame: usize,
+    score_threshold: f64,
+) -> Vec<Detection> {
+    assert!(nattr > 5, "nattr must include classes");
+    assert_eq!(boxes.len() % nattr, 0, "buffer not a multiple of nattr");
+    let mut out = Vec::new();
+    for chunk in boxes.chunks_exact(nattr) {
+        let obj = chunk[4] as f64;
+        // fast reject on objectness alone (score <= obj)
+        if obj < score_threshold {
+            continue;
+        }
+        let (mut best_c, mut best_p) = (0usize, f64::NEG_INFINITY);
+        for (c, &p) in chunk[5..].iter().enumerate() {
+            if (p as f64) > best_p {
+                best_p = p as f64;
+                best_c = c;
+            }
+        }
+        let score = obj * best_p;
+        if score >= score_threshold {
+            out.push(Detection {
+                frame,
+                bbox: BBox::new(chunk[0] as f64, chunk[1] as f64, chunk[2] as f64, chunk[3] as f64),
+                class_id: best_c,
+                score,
+            });
+        }
+    }
+    out
+}
+
+/// Greedy per-class NMS. Input need not be sorted.
+pub fn nms(mut candidates: Vec<Detection>, params: &NmsParams) -> Vec<Detection> {
+    candidates.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut kept: Vec<Detection> = Vec::new();
+    for cand in candidates {
+        if params.max_per_frame > 0 && kept.len() >= params.max_per_frame {
+            break;
+        }
+        let suppressed = kept.iter().any(|k| {
+            k.class_id == cand.class_id && k.bbox.iou(&cand.bbox) > params.iou_threshold
+        });
+        if !suppressed {
+            kept.push(cand);
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(cx: f64, score: f64, class_id: usize) -> Detection {
+        Detection { frame: 0, bbox: BBox::new(cx, 0.5, 0.2, 0.2), class_id, score }
+    }
+
+    #[test]
+    fn nms_suppresses_overlapping_same_class() {
+        let out = nms(
+            vec![det(0.50, 0.9, 1), det(0.51, 0.8, 1), det(0.52, 0.7, 1)],
+            &NmsParams::default(),
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].score, 0.9);
+    }
+
+    #[test]
+    fn nms_keeps_different_classes() {
+        let out = nms(vec![det(0.5, 0.9, 1), det(0.5, 0.8, 2)], &NmsParams::default());
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn nms_keeps_distant_same_class() {
+        let out = nms(vec![det(0.2, 0.9, 1), det(0.8, 0.8, 1)], &NmsParams::default());
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn nms_respects_cap() {
+        let cands: Vec<Detection> =
+            (0..50).map(|i| det(0.015 * i as f64, 0.5 + 0.001 * i as f64, 0)).collect();
+        let mut p = NmsParams::default();
+        p.max_per_frame = 5;
+        p.iou_threshold = 0.99; // keep everything overlapping-wise
+        assert_eq!(nms(cands, &p).len(), 5);
+    }
+
+    #[test]
+    fn nms_sorted_by_score() {
+        let out = nms(
+            vec![det(0.1, 0.3, 0), det(0.5, 0.9, 0), det(0.9, 0.6, 0)],
+            &NmsParams::default(),
+        );
+        let scores: Vec<f64> = out.iter().map(|d| d.score).collect();
+        assert_eq!(scores, vec![0.9, 0.6, 0.3]);
+    }
+
+    #[test]
+    fn decode_output_layout() {
+        // two boxes, nattr = 7 (2 classes)
+        let nattr = 7;
+        #[rustfmt::skip]
+        let buf: Vec<f32> = vec![
+            // bx   by   bw   bh   obj  c0   c1
+            0.5, 0.5, 0.1, 0.1, 0.9, 0.2, 0.8,
+            0.2, 0.2, 0.1, 0.1, 0.1, 0.9, 0.1, // low obj -> dropped
+        ];
+        let dets = decode_output(&buf, nattr, 3, 0.25);
+        assert_eq!(dets.len(), 1);
+        assert_eq!(dets[0].frame, 3);
+        assert_eq!(dets[0].class_id, 1);
+        assert!((dets[0].score - 0.72).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_output_empty_and_threshold() {
+        let buf: Vec<f32> = vec![0.5, 0.5, 0.1, 0.1, 0.6, 0.3, 0.3];
+        // obj*cls = 0.18 < 0.25 -> dropped even though obj passes
+        assert!(decode_output(&buf, 7, 0, 0.25).is_empty());
+        assert!(decode_output(&[], 7, 0, 0.25).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn decode_output_bad_buffer_len() {
+        decode_output(&[0.0; 10], 7, 0, 0.25);
+    }
+}

@@ -1,0 +1,160 @@
+//! Detection-quality metrics (extension): greedy IoU matching,
+//! precision/recall/F1, and a set-similarity score used to QUANTIFY the
+//! paper's accuracy claim — that splitting "neither negatively impacts
+//! the performance nor the accuracy of the model's inference".
+//!
+//! The e2e tests assert detections are bit-identical across k; these
+//! metrics exist for the general case (e.g. comparing against a
+//! reference model or a quantized variant), reporting how close two
+//! detection sets are.
+
+use super::bbox::Detection;
+
+/// Matching configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MatchParams {
+    /// Minimum IoU for a true-positive match.
+    pub iou_threshold: f64,
+    /// Require class agreement for a match.
+    pub class_sensitive: bool,
+}
+
+impl Default for MatchParams {
+    fn default() -> Self {
+        MatchParams { iou_threshold: 0.5, class_sensitive: true }
+    }
+}
+
+/// Precision/recall summary of predictions vs reference.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QualityReport {
+    pub true_positives: usize,
+    pub false_positives: usize,
+    pub false_negatives: usize,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+/// Greedy score-ordered matching per frame (the standard detection
+/// evaluation protocol: each reference box matches at most one
+/// prediction).
+pub fn evaluate(
+    predictions: &[Detection],
+    reference: &[Detection],
+    params: &MatchParams,
+) -> QualityReport {
+    let mut preds: Vec<&Detection> = predictions.iter().collect();
+    preds.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut ref_used = vec![false; reference.len()];
+    let mut tp = 0usize;
+
+    for p in preds {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, r) in reference.iter().enumerate() {
+            if ref_used[i] || r.frame != p.frame {
+                continue;
+            }
+            if params.class_sensitive && r.class_id != p.class_id {
+                continue;
+            }
+            let iou = p.bbox.iou(&r.bbox);
+            if iou >= params.iou_threshold
+                && best.map(|(_, b)| iou > b).unwrap_or(true)
+            {
+                best = Some((i, iou));
+            }
+        }
+        if let Some((i, _)) = best {
+            ref_used[i] = true;
+            tp += 1;
+        }
+    }
+
+    let fp = predictions.len() - tp;
+    let fn_ = reference.len() - tp;
+    let precision = if predictions.is_empty() { 1.0 } else { tp as f64 / predictions.len() as f64 };
+    let recall = if reference.is_empty() { 1.0 } else { tp as f64 / reference.len() as f64 };
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    QualityReport {
+        true_positives: tp,
+        false_positives: fp,
+        false_negatives: fn_,
+        precision,
+        recall,
+        f1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detect::BBox;
+
+    fn det(frame: usize, cx: f64, class_id: usize, score: f64) -> Detection {
+        Detection { frame, bbox: BBox::new(cx, 0.5, 0.2, 0.2), class_id, score }
+    }
+
+    #[test]
+    fn identical_sets_are_perfect() {
+        let dets = vec![det(0, 0.3, 1, 0.9), det(1, 0.7, 2, 0.8)];
+        let r = evaluate(&dets, &dets, &MatchParams::default());
+        assert_eq!(r.true_positives, 2);
+        assert_eq!((r.precision, r.recall, r.f1), (1.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn misses_and_ghosts_counted() {
+        let reference = vec![det(0, 0.3, 1, 0.9), det(0, 0.7, 1, 0.9)];
+        let preds = vec![det(0, 0.3, 1, 0.8), det(0, 0.95, 1, 0.7)]; // one hit, one ghost
+        let r = evaluate(&preds, &reference, &MatchParams::default());
+        assert_eq!(r.true_positives, 1);
+        assert_eq!(r.false_positives, 1);
+        assert_eq!(r.false_negatives, 1);
+        assert!((r.precision - 0.5).abs() < 1e-12);
+        assert!((r.recall - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_sensitivity() {
+        let reference = vec![det(0, 0.3, 1, 0.9)];
+        let preds = vec![det(0, 0.3, 2, 0.9)];
+        let strict = evaluate(&preds, &reference, &MatchParams::default());
+        assert_eq!(strict.true_positives, 0);
+        let lax = evaluate(
+            &preds,
+            &reference,
+            &MatchParams { class_sensitive: false, ..Default::default() },
+        );
+        assert_eq!(lax.true_positives, 1);
+    }
+
+    #[test]
+    fn frames_do_not_cross_match() {
+        let reference = vec![det(0, 0.3, 1, 0.9)];
+        let preds = vec![det(1, 0.3, 1, 0.9)];
+        let r = evaluate(&preds, &reference, &MatchParams::default());
+        assert_eq!(r.true_positives, 0);
+    }
+
+    #[test]
+    fn one_ref_matches_at_most_one_pred() {
+        let reference = vec![det(0, 0.3, 1, 0.9)];
+        let preds = vec![det(0, 0.3, 1, 0.9), det(0, 0.31, 1, 0.8)];
+        let r = evaluate(&preds, &reference, &MatchParams::default());
+        assert_eq!(r.true_positives, 1);
+        assert_eq!(r.false_positives, 1);
+    }
+
+    #[test]
+    fn empty_cases() {
+        let r = evaluate(&[], &[], &MatchParams::default());
+        assert_eq!((r.precision, r.recall, r.f1), (1.0, 1.0, 1.0));
+        let r = evaluate(&[], &[det(0, 0.3, 1, 0.9)], &MatchParams::default());
+        assert_eq!(r.recall, 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! DVFS / power-mode model (extension).
+//!
+//! The paper pins each Jetson to its default nvpmodel power mode and
+//! disables the TX2's Denver cores "for consistency". Real deployments
+//! pick a mode: Jetsons expose presets trading clock (and sometimes
+//! core count) against power — e.g. TX2 MAXN vs MAXQ, Orin MAXN vs
+//! 30 W/15 W caps. This module models modes as (frequency scale, core
+//! count, power scale) triples applied on top of a calibrated
+//! `DeviceSpec`, letting the optimizer answer "which (mode, k) pair
+//! minimizes energy?" — a strictly richer version of the paper's k-only
+//! knob.
+//!
+//! First-order semantics (standard CMOS scaling):
+//!   time  ~ 1/f_scale
+//!   dynamic power ~ f_scale^3 (f * V^2 with V roughly ∝ f)
+//!   idle power ~ f_scale      (clock tree + leakage, linearized)
+
+use super::spec::DeviceSpec;
+
+/// One nvpmodel-style power mode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerMode {
+    pub name: &'static str,
+    /// CPU clock relative to the calibrated (default) mode.
+    pub freq_scale: f64,
+    /// Cores enabled in this mode.
+    pub cores: f64,
+}
+
+impl PowerMode {
+    /// Modes for a device, default first. Shapes follow the published
+    /// nvpmodel tables (values are representative, not vendor-exact).
+    pub fn modes_for(device: &DeviceSpec) -> Vec<PowerMode> {
+        match device.name {
+            "jetson-tx2" => vec![
+                PowerMode { name: "MAXP (default)", freq_scale: 1.0, cores: 4.0 },
+                PowerMode { name: "MAXN", freq_scale: 1.15, cores: 4.0 },
+                PowerMode { name: "MAXQ", freq_scale: 0.60, cores: 4.0 },
+            ],
+            _ => vec![
+                PowerMode { name: "MAXN (default)", freq_scale: 1.0, cores: 12.0 },
+                PowerMode { name: "30W", freq_scale: 0.80, cores: 8.0 },
+                PowerMode { name: "15W", freq_scale: 0.55, cores: 4.0 },
+            ],
+        }
+    }
+
+    /// Apply this mode to a calibrated spec, producing a derived spec.
+    pub fn apply(&self, base: &DeviceSpec) -> DeviceSpec {
+        assert!(self.freq_scale > 0.0 && self.cores >= 1.0);
+        let mut d = base.clone();
+        d.cores = self.cores.min(base.cores);
+        d.base_frame_s = base.base_frame_s / self.freq_scale;
+        d.power.cores = d.cores;
+        d.power.idle_w = base.power.idle_w * self.freq_scale;
+        d.power.core_w = base.power.core_w * self.freq_scale.powi(3);
+        d
+    }
+}
+
+/// Energy for the paper's workload (frames, k containers) in a mode.
+pub fn mode_energy(base: &DeviceSpec, mode: &PowerMode, frames: usize, k: usize) -> (f64, f64) {
+    use crate::device::PowerSensor;
+    use crate::energy::meter_schedule;
+    use crate::sched::CpuScheduler;
+    let dev = mode.apply(base);
+    let sched = CpuScheduler::new(&dev);
+    let res = sched.run_equal_split(k.min(dev.cores as usize * 3), frames, 0.0);
+    let rep = meter_schedule(&dev, &PowerSensor::default(), &res);
+    (rep.time_s, rep.energy_j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_mode_is_identity() {
+        let tx2 = DeviceSpec::tx2();
+        let m = &PowerMode::modes_for(&tx2)[0];
+        let d = m.apply(&tx2);
+        assert_eq!(d.base_frame_s, tx2.base_frame_s);
+        assert_eq!(d.cores, tx2.cores);
+        assert_eq!(d.power.idle_w, tx2.power.idle_w);
+    }
+
+    #[test]
+    fn maxq_slower_but_lower_power() {
+        let tx2 = DeviceSpec::tx2();
+        let maxq = PowerMode::modes_for(&tx2)
+            .into_iter()
+            .find(|m| m.name.starts_with("MAXQ"))
+            .unwrap();
+        let d = maxq.apply(&tx2);
+        assert!(d.base_frame_s > tx2.base_frame_s);
+        assert!(d.power.peak() < tx2.power.peak());
+    }
+
+    #[test]
+    fn orin_low_power_modes_drop_cores() {
+        let orin = DeviceSpec::orin();
+        let m15 = PowerMode::modes_for(&orin)
+            .into_iter()
+            .find(|m| m.name == "15W")
+            .unwrap();
+        let d = m15.apply(&orin);
+        assert_eq!(d.cores, 4.0);
+        assert_eq!(d.power.cores, 4.0);
+    }
+
+    #[test]
+    fn race_to_idle_vs_slow_and_steady() {
+        // Cubic dynamic power means downclocking SAVES energy per frame
+        // when idle power is small relative to dynamic — and the model
+        // must expose that trade coherently: MAXQ strictly slower,
+        // MAXN strictly faster, both with finite positive energy.
+        let tx2 = DeviceSpec::tx2();
+        let modes = PowerMode::modes_for(&tx2);
+        let (t_def, e_def) = mode_energy(&tx2, &modes[0], 720, 4);
+        let (t_maxn, _e_maxn) = mode_energy(&tx2, &modes[1], 720, 4);
+        let (t_maxq, e_maxq) = mode_energy(&tx2, &modes[2], 720, 4);
+        assert!(t_maxn < t_def && t_def < t_maxq);
+        assert!(e_maxq > 0.0 && e_def > 0.0);
+    }
+
+    #[test]
+    fn splitting_still_wins_in_every_mode() {
+        // The paper's effect is mode-independent: k=cores beats k=1 on
+        // energy in every power mode.
+        for base in [DeviceSpec::tx2(), DeviceSpec::orin()] {
+            for mode in PowerMode::modes_for(&base) {
+                let dev = mode.apply(&base);
+                let k = dev.cores as usize;
+                let (_, e1) = mode_energy(&base, &mode, 720, 1);
+                let (_, ek) = mode_energy(&base, &mode, 720, k);
+                assert!(
+                    ek < e1,
+                    "{} {}: k={k} energy {ek} !< k=1 {e1}",
+                    base.name,
+                    mode.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Device memory model.
+//!
+//! The paper caps the container count by memory: "a maximum of six
+//! containers on the Jetson TX2 [8 GB] and twelve on the AGX Orin
+//! [32 GB]". Each container carries the YOLO runtime + weights + frame
+//! buffers; the OS and the shared page cache take a fixed cut.
+
+/// Memory accounting in MiB.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryModel {
+    /// Total board memory.
+    pub total_mib: f64,
+    /// Reserved for OS / display / page cache.
+    pub reserved_mib: f64,
+    /// Footprint of one container (image layers + runtime + model).
+    pub per_container_mib: f64,
+    /// Extra per-container cost proportional to its segment's frames
+    /// (decode buffers), MiB per frame.
+    pub per_frame_mib: f64,
+}
+
+impl MemoryModel {
+    /// Memory used by `k` containers each holding `frames_per_container`
+    /// buffered frames.
+    pub fn usage_mib(&self, k: usize, frames_per_container: usize) -> f64 {
+        k as f64 * (self.per_container_mib + self.per_frame_mib * frames_per_container as f64)
+    }
+
+    /// Available memory for containers.
+    pub fn available_mib(&self) -> f64 {
+        (self.total_mib - self.reserved_mib).max(0.0)
+    }
+
+    /// Whether `k` containers fit.
+    pub fn fits(&self, k: usize, frames_per_container: usize) -> bool {
+        self.usage_mib(k, frames_per_container) <= self.available_mib()
+    }
+
+    /// Largest container count that fits (each container buffers a
+    /// 1/k share of `total_frames`).
+    pub fn max_containers(&self, total_frames: usize) -> usize {
+        let mut k = 0;
+        loop {
+            let next = k + 1;
+            let per = total_frames.div_ceil(next);
+            if self.fits(next, per) {
+                k = next;
+                if k >= 1024 {
+                    return k; // effectively unbounded
+                }
+            } else {
+                return k;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+
+    #[test]
+    fn usage_scales_with_k_and_frames() {
+        let m = MemoryModel {
+            total_mib: 8192.0,
+            reserved_mib: 1024.0,
+            per_container_mib: 1000.0,
+            per_frame_mib: 0.5,
+        };
+        assert_eq!(m.usage_mib(2, 100), 2.0 * (1000.0 + 50.0));
+        assert!(m.fits(2, 100));
+        assert!(!m.fits(8, 100));
+    }
+
+    #[test]
+    fn paper_container_caps_hold() {
+        // The calibrated presets must reproduce the paper's stated caps:
+        // 6 containers max on TX2, 12 on AGX Orin, for the 720-frame video.
+        let tx2 = DeviceSpec::tx2();
+        let orin = DeviceSpec::orin();
+        assert_eq!(tx2.memory.max_containers(720), 6, "TX2 cap");
+        assert_eq!(orin.memory.max_containers(720), 12, "Orin cap");
+    }
+
+    #[test]
+    fn zero_frames_still_costs_runtime() {
+        let m = MemoryModel {
+            total_mib: 4096.0,
+            reserved_mib: 0.0,
+            per_container_mib: 1024.0,
+            per_frame_mib: 0.0,
+        };
+        assert_eq!(m.max_containers(0), 4);
+    }
+
+    #[test]
+    fn reserved_larger_than_total() {
+        let m = MemoryModel {
+            total_mib: 1000.0,
+            reserved_mib: 2000.0,
+            per_container_mib: 10.0,
+            per_frame_mib: 0.0,
+        };
+        assert_eq!(m.available_mib(), 0.0);
+        assert_eq!(m.max_containers(10), 0);
+    }
+}

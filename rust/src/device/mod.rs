@@ -1,0 +1,29 @@
+//! Edge-device models: the substitute for the paper's Jetson TX2 /
+//! AGX Orin testbed (DESIGN.md §2).
+//!
+//! The paper's effect rests on two measured curves per device:
+//!
+//! 1. the *intra-container core-scaling curve* — how much faster one
+//!    YOLO instance gets as its container is allotted more CPU
+//!    (their Fig. 1: strong diminishing returns), and
+//! 2. the *power model* — idle draw plus dynamic per-busy-core draw
+//!    (their Fig. 3c: splitting raises average power, i.e. utilization).
+//!
+//! We implement exactly those two curves, calibrated against the paper's
+//! published anchor ratios (`calibrate`), plus the 10 ms sampled power
+//! sensor the Jetson boards expose (`sensor`).
+
+pub mod calibrate;
+pub mod dvfs;
+pub mod memory;
+pub mod power;
+pub mod sensor;
+pub mod spec;
+pub mod speedup;
+pub mod thermal;
+
+pub use memory::MemoryModel;
+pub use power::PowerModel;
+pub use sensor::PowerSensor;
+pub use spec::DeviceSpec;
+pub use speedup::SpeedupCurve;

@@ -1,0 +1,87 @@
+//! Device power model: `P = idle + core_w * busy_core_equivalents`.
+//!
+//! This is the standard linear CPU-utilization power model, the same
+//! family the authors' own prior Jetson profiling work fits ([8] in the
+//! paper). `busy` is the number of core-equivalents doing useful work
+//! (see `SpeedupCurve::busy_cores`), capped at the physical core count.
+
+/// Linear utilization power model in watts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerModel {
+    /// Board idle draw (W) — SoC + memory + rails, no compute.
+    pub idle_w: f64,
+    /// Incremental draw per fully-busy core (W).
+    pub core_w: f64,
+    /// Physical core count (busy is clamped to this).
+    pub cores: f64,
+}
+
+impl PowerModel {
+    pub fn new(idle_w: f64, core_w: f64, cores: f64) -> Self {
+        assert!(idle_w >= 0.0 && core_w >= 0.0 && cores > 0.0);
+        PowerModel { idle_w, core_w, cores }
+    }
+
+    /// Instantaneous power at `busy` core-equivalents.
+    pub fn power(&self, busy: f64) -> f64 {
+        let b = busy.clamp(0.0, self.cores);
+        self.idle_w + self.core_w * b
+    }
+
+    /// Peak (all cores busy).
+    pub fn peak(&self) -> f64 {
+        self.power(self.cores)
+    }
+
+    /// Energy (J) for holding `busy` cores for `dt` seconds.
+    pub fn energy(&self, busy: f64, dt: f64) -> f64 {
+        assert!(dt >= 0.0);
+        self.power(busy) * dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+
+    #[test]
+    fn idle_and_peak() {
+        let m = PowerModel::new(1.77, 0.38, 4.0);
+        assert!((m.power(0.0) - 1.77).abs() < 1e-12);
+        assert!((m.peak() - (1.77 + 4.0 * 0.38)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamps_busy_to_cores() {
+        let m = PowerModel::new(1.0, 1.0, 4.0);
+        assert_eq!(m.power(10.0), m.power(4.0));
+        assert_eq!(m.power(-3.0), m.power(0.0));
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let m = PowerModel::new(2.0, 0.5, 8.0);
+        assert!((m.energy(4.0, 10.0) - 40.0).abs() < 1e-12);
+        assert_eq!(m.energy(4.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn monotone_in_busy() {
+        forall(
+            3,
+            100,
+            |r| {
+                let m = PowerModel::new(
+                    r.range_f64(0.0, 10.0),
+                    r.range_f64(0.0, 5.0),
+                    r.range_f64(1.0, 16.0),
+                );
+                let b1 = r.range_f64(0.0, 20.0);
+                let b2 = b1 + r.range_f64(0.0, 5.0);
+                (m, b1, b2)
+            },
+            |&(m, b1, b2)| ensure(m.power(b2) >= m.power(b1) - 1e-12, "not monotone"),
+        );
+    }
+}

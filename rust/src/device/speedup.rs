@@ -1,0 +1,165 @@
+//! Intra-container core-scaling curve.
+//!
+//! One inference process does not speed up linearly with cores (paper
+//! Fig. 1; the reason splitting wins at all). We model the per-frame
+//! time *factor* relative to a single core as a saturating-Amdahl
+//! family:
+//!
+//! ```text
+//! tau(c) = (u + p * c^-gamma) / (u + p)    for c >= 1
+//! tau(c) = 1 / c                           for 0 < c < 1   (CFS share)
+//! ```
+//!
+//! `tau(1) = 1` by construction; speedup is `s(c) = 1/tau(c)`. Below one
+//! core, Docker's `--cpus` fraction is a pure CFS bandwidth share, so
+//! time is exactly inverse-proportional.
+
+/// Parameters of the scaling curve (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeedupCurve {
+    /// Serial-ish weight `u` (>= 0).
+    pub u: f64,
+    /// Parallel weight `p` (>= 0, u + p > 0).
+    pub p: f64,
+    /// Core-scaling exponent (1.0 = classic Amdahl).
+    pub gamma: f64,
+}
+
+impl SpeedupCurve {
+    pub fn new(u: f64, p: f64, gamma: f64) -> Self {
+        assert!(u >= 0.0 && p >= 0.0 && u + p > 0.0, "degenerate curve");
+        assert!(gamma > 0.0, "gamma must be positive");
+        SpeedupCurve { u, p, gamma }
+    }
+
+    /// Classic Amdahl's law with parallel fraction `f`.
+    pub fn amdahl(f: f64) -> Self {
+        assert!((0.0..=1.0).contains(&f));
+        SpeedupCurve::new(1.0 - f, f, 1.0)
+    }
+
+    /// Per-frame time factor at `c` cpus, relative to one core.
+    pub fn time_factor(&self, c: f64) -> f64 {
+        assert!(c > 0.0, "cpus must be positive, got {c}");
+        if c < 1.0 {
+            1.0 / c
+        } else {
+            // Clamp at perfect linear scaling: gamma > 1 curves would
+            // otherwise go superlinear (s(c) > c) far from the fitted
+            // region, which is unphysical.
+            ((self.u + self.p * c.powf(-self.gamma)) / (self.u + self.p)).max(1.0 / c)
+        }
+    }
+
+    /// Speedup over one core: `s(c) = 1 / tau(c)`.
+    pub fn speedup(&self, c: f64) -> f64 {
+        1.0 / self.time_factor(c)
+    }
+
+    /// Average busy core-equivalents while one container computes with
+    /// `c` cpus: work per frame is 1 core-second-unit by normalization,
+    /// done in `tau(c)` time-units => `1/tau(c)` cores busy on average.
+    /// Never exceeds the allotment `c`.
+    pub fn busy_cores(&self, c: f64) -> f64 {
+        self.speedup(c).min(c)
+    }
+
+    /// Parallel efficiency at `c` cpus (`s(c)/c`, in (0, 1]).
+    pub fn efficiency(&self, c: f64) -> f64 {
+        self.speedup(c) / c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{close, ensure, forall};
+
+    #[test]
+    fn tau_is_one_at_one_core() {
+        for curve in [
+            SpeedupCurve::amdahl(0.9),
+            SpeedupCurve::new(0.25, 0.81, 1.44),
+            SpeedupCurve::new(0.0, 1.0, 1.0),
+        ] {
+            assert!((curve.time_factor(1.0) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fractional_cpus_is_inverse_linear() {
+        let c = SpeedupCurve::amdahl(0.9);
+        assert!((c.time_factor(0.5) - 2.0).abs() < 1e-12);
+        assert!((c.time_factor(0.1) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_parallel_scales_linearly() {
+        let c = SpeedupCurve::new(0.0, 1.0, 1.0);
+        assert!((c.speedup(4.0) - 4.0).abs() < 1e-9);
+        assert!((c.efficiency(8.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pure_serial_never_speeds_up() {
+        let c = SpeedupCurve::new(1.0, 0.0, 1.0);
+        assert!((c.speedup(16.0) - 1.0).abs() < 1e-12);
+        assert!((c.busy_cores(16.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn amdahl_matches_textbook() {
+        // f = 0.888..., 4 cores -> s = 1/((1-f) + f/4) = 3.0
+        let c = SpeedupCurve::amdahl(8.0 / 9.0);
+        assert!((c.speedup(4.0) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotonicity_and_sublinearity_properties() {
+        forall(
+            11,
+            200,
+            |r| {
+                let u = r.range_f64(0.01, 1.0);
+                let p = r.range_f64(0.1, 1.0);
+                let gamma = r.range_f64(0.3, 2.0);
+                let c1 = r.range_f64(0.05, 16.0);
+                let c2 = c1 + r.range_f64(0.01, 8.0);
+                (SpeedupCurve::new(u, p, gamma), c1, c2)
+            },
+            |&(curve, c1, c2)| {
+                // more cpus never slower
+                ensure(
+                    curve.time_factor(c2) <= curve.time_factor(c1) + 1e-12,
+                    format!("tau not monotone: tau({c1}) < tau({c2})"),
+                )?;
+                // speedup never exceeds the allotment (no superlinearity)
+                ensure(
+                    curve.speedup(c2) <= c2.max(1.0) + 1e-9,
+                    format!("superlinear speedup at {c2}"),
+                )?;
+                // busy cores bounded by allotment
+                ensure(curve.busy_cores(c1) <= c1 + 1e-9, "busy > allotment")
+            },
+        );
+    }
+
+    #[test]
+    fn efficiency_decreases_with_cores() {
+        let c = SpeedupCurve::new(0.11, 0.89, 1.0);
+        let mut prev = f64::INFINITY;
+        for cores in [1.0, 2.0, 3.0, 4.0, 8.0] {
+            let e = c.efficiency(cores);
+            assert!(e <= prev + 1e-12, "efficiency must decrease");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn continuity_at_one_core() {
+        let c = SpeedupCurve::new(0.2, 0.8, 1.3);
+        let below = c.time_factor(1.0 - 1e-9);
+        let at = c.time_factor(1.0);
+        assert!(close(below, at, 1e-6).is_ok());
+    }
+}

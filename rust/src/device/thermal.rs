@@ -1,0 +1,166 @@
+//! Thermal model (extension): first-order RC thermal circuit +
+//! throttling.
+//!
+//! The paper's 30-second runs don't hit thermal limits, but sustained
+//! serving does, and splitting (which RAISES average power, Fig. 3c)
+//! reaches the throttle point sooner. This module quantifies that
+//! trade: junction temperature follows `C dT/dt = P - (T - T_amb)/R`;
+//! above `t_throttle` the clock (and hence throughput) is cut until the
+//! device cools.
+
+/// First-order thermal parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThermalModel {
+    /// Ambient, °C.
+    pub t_amb_c: f64,
+    /// Thermal resistance junction→ambient, °C/W.
+    pub r_c_per_w: f64,
+    /// Thermal capacitance, J/°C.
+    pub c_j_per_c: f64,
+    /// Throttle trip point, °C.
+    pub t_throttle_c: f64,
+    /// Clock scale while throttled.
+    pub throttle_scale: f64,
+}
+
+impl ThermalModel {
+    /// Representative passive-heatsink Jetson (TX2-class) values.
+    pub fn jetson_default() -> Self {
+        ThermalModel {
+            t_amb_c: 25.0,
+            r_c_per_w: 5.0,
+            c_j_per_c: 60.0,
+            t_throttle_c: 85.0,
+            throttle_scale: 0.6,
+        }
+    }
+
+    /// Device-matched parameters: the TX2 module ships a passive
+    /// heatsink (~5 °C/W); the AGX Orin devkit is a 15–60 W design with
+    /// a large fan-cooled sink (~1.5 °C/W).
+    pub fn for_device(device_name: &str) -> Self {
+        match device_name {
+            "jetson-agx-orin" => ThermalModel {
+                r_c_per_w: 1.5,
+                c_j_per_c: 180.0,
+                ..Self::jetson_default()
+            },
+            _ => Self::jetson_default(),
+        }
+    }
+
+    /// Steady-state temperature at constant power.
+    pub fn steady_state_c(&self, power_w: f64) -> f64 {
+        self.t_amb_c + self.r_c_per_w * power_w
+    }
+
+    /// Whether constant `power_w` EVER throttles (steady state above
+    /// the trip point).
+    pub fn sustainable_w(&self) -> f64 {
+        (self.t_throttle_c - self.t_amb_c) / self.r_c_per_w
+    }
+
+    /// Integrate T(t) under constant power from `t0_c` over `dt_s`.
+    pub fn step(&self, t0_c: f64, power_w: f64, dt_s: f64) -> f64 {
+        assert!(dt_s >= 0.0);
+        let tau = self.r_c_per_w * self.c_j_per_c;
+        let t_inf = self.steady_state_c(power_w);
+        t_inf + (t0_c - t_inf) * (-dt_s / tau).exp()
+    }
+
+    /// Time to reach the throttle point from `t0_c` at constant power
+    /// (None if never).
+    pub fn time_to_throttle_s(&self, t0_c: f64, power_w: f64) -> Option<f64> {
+        let t_inf = self.steady_state_c(power_w);
+        if t_inf <= self.t_throttle_c || t0_c >= self.t_throttle_c {
+            return if t0_c >= self.t_throttle_c { Some(0.0) } else { None };
+        }
+        let tau = self.r_c_per_w * self.c_j_per_c;
+        // solve t_throttle = t_inf + (t0 - t_inf) e^{-t/tau}
+        let ratio = (self.t_throttle_c - t_inf) / (t0_c - t_inf);
+        Some(-tau * ratio.ln())
+    }
+
+    /// Long-run average throughput scale under duty-cycled throttling
+    /// at constant demand power `power_w` (1.0 if never throttles).
+    pub fn sustained_scale(&self, power_w: f64) -> f64 {
+        if power_w <= self.sustainable_w() {
+            1.0
+        } else {
+            // duty cycle between full clock (heating) and throttled
+            // (cooling at scale^3-reduced power, CMOS cubic)
+            let p_throttled = power_w * self.throttle_scale.powi(3);
+            if p_throttled >= self.sustainable_w() {
+                return self.throttle_scale; // stays hot even throttled
+            }
+            // fraction of time at full clock so avg power = sustainable
+            let f = (self.sustainable_w() - p_throttled) / (power_w - p_throttled);
+            f + (1.0 - f) * self.throttle_scale
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+
+    #[test]
+    fn steady_state_linear_in_power() {
+        let m = ThermalModel::jetson_default();
+        assert_eq!(m.steady_state_c(0.0), 25.0);
+        assert_eq!(m.steady_state_c(4.0), 45.0);
+    }
+
+    #[test]
+    fn step_converges_to_steady_state() {
+        let m = ThermalModel::jetson_default();
+        let t = m.step(25.0, 4.0, 1e6);
+        assert!((t - m.steady_state_c(4.0)).abs() < 1e-6);
+        // short step moves toward steady state monotonically
+        let t1 = m.step(25.0, 4.0, 10.0);
+        let t2 = m.step(t1, 4.0, 10.0);
+        assert!(25.0 < t1 && t1 < t2 && t2 < m.steady_state_c(4.0));
+    }
+
+    #[test]
+    fn paper_workloads_do_not_throttle() {
+        // Both boards' benchmark powers are far below the sustainable
+        // envelope — consistent with the paper not mentioning thermals.
+        for spec in DeviceSpec::all() {
+            let m = ThermalModel::for_device(spec.name);
+            let p = spec.power.peak();
+            assert!(
+                m.time_to_throttle_s(m.t_amb_c, p).is_none()
+                    || m.time_to_throttle_s(m.t_amb_c, p).unwrap() > 30.0,
+                "{}: 30 s run should not trip the throttle",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn time_to_throttle_math() {
+        let m = ThermalModel::jetson_default();
+        // 20 W -> steady 125 C > 85 C: finite time
+        let t = m.time_to_throttle_s(25.0, 20.0).unwrap();
+        assert!(t > 0.0);
+        // verify by stepping
+        let reached = m.step(25.0, 20.0, t);
+        assert!((reached - m.t_throttle_c).abs() < 1e-6);
+        // already hot -> 0
+        assert_eq!(m.time_to_throttle_s(90.0, 20.0), Some(0.0));
+        // low power -> never
+        assert_eq!(m.time_to_throttle_s(25.0, 1.0), None);
+    }
+
+    #[test]
+    fn sustained_scale_degrades_gracefully() {
+        let m = ThermalModel::jetson_default();
+        assert_eq!(m.sustained_scale(5.0), 1.0);
+        let s = m.sustained_scale(15.0);
+        assert!(s < 1.0 && s >= m.throttle_scale);
+        // monotone non-increasing in power
+        assert!(m.sustained_scale(25.0) <= s);
+    }
+}

@@ -1,0 +1,111 @@
+//! Battery model (extension).
+//!
+//! The paper's intro motivates energy efficiency with battery-powered
+//! edge devices; this module closes that loop: given a battery and a
+//! split policy, how many videos can the device process before dying,
+//! and how does the paper's method extend lifetime?
+//!
+//! Model: ideal capacity in watt-hours with a usable fraction (depth of
+//! discharge) and a Peukert-style efficiency penalty at high draw.
+
+/// A battery pack.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Battery {
+    pub capacity_wh: f64,
+    /// Usable fraction (depth of discharge), (0, 1].
+    pub usable_frac: f64,
+    /// Draw (W) above which efficiency starts dropping.
+    pub rated_draw_w: f64,
+    /// Efficiency loss slope past the rated draw (fraction per W).
+    pub overdraw_penalty_per_w: f64,
+}
+
+impl Battery {
+    /// A typical 50 Wh drone/robot pack.
+    pub fn pack_50wh() -> Self {
+        Battery {
+            capacity_wh: 50.0,
+            usable_frac: 0.85,
+            rated_draw_w: 20.0,
+            overdraw_penalty_per_w: 0.01,
+        }
+    }
+
+    /// Usable energy in joules.
+    pub fn usable_j(&self) -> f64 {
+        self.capacity_wh * 3600.0 * self.usable_frac
+    }
+
+    /// Delivery efficiency at a given average draw.
+    pub fn efficiency(&self, draw_w: f64) -> f64 {
+        assert!(draw_w >= 0.0);
+        let over = (draw_w - self.rated_draw_w).max(0.0);
+        (1.0 - over * self.overdraw_penalty_per_w).max(0.5)
+    }
+
+    /// How many identical jobs (each `energy_j` at `avg_power_w`) the
+    /// battery can run.
+    pub fn jobs_supported(&self, energy_j: f64, avg_power_w: f64) -> usize {
+        assert!(energy_j > 0.0);
+        let eff = self.efficiency(avg_power_w);
+        (self.usable_j() * eff / energy_j).floor() as usize
+    }
+
+    /// Runtime in hours at constant draw.
+    pub fn runtime_h(&self, draw_w: f64) -> f64 {
+        assert!(draw_w > 0.0);
+        self.usable_j() * self.efficiency(draw_w) / draw_w / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::executor::run_sim;
+
+    #[test]
+    fn usable_energy() {
+        let b = Battery::pack_50wh();
+        assert!((b.usable_j() - 50.0 * 3600.0 * 0.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_drops_past_rated_draw() {
+        let b = Battery::pack_50wh();
+        assert_eq!(b.efficiency(10.0), 1.0);
+        assert_eq!(b.efficiency(20.0), 1.0);
+        assert!(b.efficiency(30.0) < 1.0);
+        assert!(b.efficiency(200.0) >= 0.5); // floor
+    }
+
+    #[test]
+    fn runtime_inversely_proportional_at_low_draw() {
+        let b = Battery::pack_50wh();
+        let r5 = b.runtime_h(5.0);
+        let r10 = b.runtime_h(10.0);
+        assert!((r5 / r10 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn splitting_extends_battery_life() {
+        // The paper's pitch, quantified: on a 50 Wh pack, a TX2 doing
+        // back-to-back 720-frame videos completes MORE videos at k=4
+        // than at k=1, despite the higher average power (energy/job is
+        // what matters).
+        let b = Battery::pack_50wh();
+        let mut cfg = ExperimentConfig::default();
+        cfg.containers = 1;
+        let r1 = run_sim(&cfg).unwrap();
+        cfg.containers = 4;
+        let r4 = run_sim(&cfg).unwrap();
+        let jobs1 = b.jobs_supported(r1.energy_j, r1.avg_power_w);
+        let jobs4 = b.jobs_supported(r4.energy_j, r4.avg_power_w);
+        assert!(
+            jobs4 > jobs1,
+            "k=4 should process more videos per charge: {jobs4} vs {jobs1}"
+        );
+        // and finish each faster
+        assert!(r4.time_s < r1.time_s);
+    }
+}

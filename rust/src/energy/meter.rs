@@ -1,0 +1,117 @@
+//! Meter a simulated schedule: busy-core trace -> P(t) -> sampled
+//! energy/average power, exactly as the paper computes its metrics
+//! ("sum of the power readings multiplied by the time period between
+//! subsequent power samples").
+
+use crate::device::{DeviceSpec, PowerSensor};
+use crate::sched::ScheduleResult;
+
+/// The three metrics of the paper's evaluation, absolute.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyReport {
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    /// Number of sensor samples taken.
+    pub samples: usize,
+}
+
+impl EnergyReport {
+    /// Normalize against a benchmark report (paper Fig. 3).
+    pub fn normalized(&self, benchmark: &EnergyReport) -> (f64, f64, f64) {
+        (
+            self.time_s / benchmark.time_s,
+            self.energy_j / benchmark.energy_j,
+            self.avg_power_w / benchmark.avg_power_w,
+        )
+    }
+}
+
+/// Run the sampled sensor over a schedule's busy trace.
+///
+/// Power at time t is `device.power.power(busy(t))` — idle draw is
+/// always present, dynamic draw follows utilization. The sensor samples
+/// every `sensor.period_s` (paper: 10 ms) and rectangle-integrates.
+pub fn meter_schedule(
+    device: &DeviceSpec,
+    sensor: &PowerSensor,
+    schedule: &ScheduleResult,
+) -> EnergyReport {
+    let duration = schedule.makespan_s;
+    let reading = sensor.meter(duration, |t| device.power.power(schedule.busy_at(t)));
+    EnergyReport {
+        time_s: duration,
+        energy_j: reading.energy_j,
+        avg_power_w: reading.avg_power_w,
+        samples: reading.samples.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::CpuScheduler;
+
+    #[test]
+    fn benchmark_energy_matches_table2_ref() {
+        // 1 container, all cores, 720 frames: Table II says 942 J / 2.9 W
+        // on TX2 and 700 J / 13 W on Orin.
+        for (spec, ref_e, ref_p) in [
+            (DeviceSpec::tx2(), 942.0, 2.9),
+            (DeviceSpec::orin(), 700.0, 13.0),
+        ] {
+            let res = CpuScheduler::new(&spec).run_equal_split(1, 720, 0.0);
+            let rep = meter_schedule(&spec, &PowerSensor::default(), &res);
+            let e_err = (rep.energy_j - ref_e).abs() / ref_e;
+            let p_err = (rep.avg_power_w - ref_p).abs() / ref_p;
+            assert!(e_err < 0.02, "{}: E={} vs {}", spec.name, rep.energy_j, ref_e);
+            assert!(p_err < 0.02, "{}: P={} vs {}", spec.name, rep.avg_power_w, ref_p);
+        }
+    }
+
+    #[test]
+    fn paper_energy_ratios_hold() {
+        let sensor = PowerSensor::default();
+        let cases = [
+            (DeviceSpec::tx2(), vec![(2usize, 0.90), (4, 0.85)]),
+            (DeviceSpec::orin(), vec![(2, 0.75), (4, 0.60), (12, 0.57)]),
+        ];
+        for (spec, anchors) in cases {
+            let sched = CpuScheduler::new(&spec);
+            let bench = meter_schedule(&spec, &sensor, &sched.run_equal_split(1, 720, 0.0));
+            for (k, want) in anchors {
+                let rep =
+                    meter_schedule(&spec, &sensor, &sched.run_equal_split(k, 720, 0.0));
+                let (_, e_ratio, _) = rep.normalized(&bench);
+                assert!(
+                    (e_ratio - want).abs() < 0.04,
+                    "{} k={k}: E ratio {e_ratio:.3} vs paper {want}",
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn splitting_raises_average_power() {
+        // Fig. 3c: more containers -> higher utilization -> higher power.
+        let spec = DeviceSpec::orin();
+        let sensor = PowerSensor::default();
+        let sched = CpuScheduler::new(&spec);
+        let mut prev = 0.0;
+        for k in [1usize, 2, 4, 8, 12] {
+            let rep = meter_schedule(&spec, &sensor, &sched.run_equal_split(k, 720, 0.0));
+            assert!(rep.avg_power_w >= prev - 1e-6, "k={k}");
+            prev = rep.avg_power_w;
+        }
+    }
+
+    #[test]
+    fn sample_count_matches_duration() {
+        let spec = DeviceSpec::tx2();
+        let res = CpuScheduler::new(&spec).run_equal_split(2, 100, 0.0);
+        let rep = meter_schedule(&spec, &PowerSensor::new(0.01), &res);
+        let expect = (res.makespan_s / 0.01).ceil() as usize;
+        assert!((rep.samples as i64 - expect as i64).abs() <= 1);
+    }
+}

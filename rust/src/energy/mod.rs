@@ -1,0 +1,9 @@
+//! Energy metering: integrates the device power model over a busy-core
+//! trace through the sampled sensor — the full substitute for reading
+//! the Jetson INA rails during a run.
+
+pub mod battery;
+pub mod meter;
+
+pub use battery::Battery;
+pub use meter::{meter_schedule, EnergyReport};

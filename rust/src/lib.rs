@@ -1,0 +1,46 @@
+//! # divide-and-save
+//!
+//! Production-grade reproduction of *"Divide and Save: Splitting Workload
+//! Among Containers in an Edge Device to Save Energy and Time"*
+//! (Khoshsirat, Perin, Rossi — IEEE ICC Workshops 2023).
+//!
+//! The paper shows that splitting a splittable inference task (video
+//! object detection with YOLOv4-tiny) into `k` equal segments, running
+//! them in `k` containers each limited to `C/k` CPU cores, reduces both
+//! wall-clock time and energy on Nvidia Jetson edge boards.
+//!
+//! This crate is the L3 rust coordinator of a three-layer stack:
+//!
+//! * **L1** Pallas kernels (tiled GEMM conv, maxpool, head decode) —
+//!   `python/compile/kernels/`, build-time only.
+//! * **L2** JAX tiny-YOLO / simple-CNN models lowered AOT to HLO text —
+//!   `python/compile/model.py` + `aot.py`, build-time only.
+//! * **L3** this crate: request router, workload splitter, container
+//!   pool, parallel executor, result combiner, energy metering, a
+//!   calibrated edge-device simulator (TX2 / AGX Orin presets), a PJRT
+//!   runtime that executes the AOT artifacts on the request path, and
+//!   benches regenerating every figure/table of the paper.
+//!
+//! See `DESIGN.md` for the substitution table (paper testbed → this
+//! repo) and the experiment index.
+
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod container;
+pub mod coordinator;
+pub mod detect;
+pub mod device;
+pub mod energy;
+pub mod metrics;
+pub mod modelfit;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod trace;
+pub mod util;
+pub mod workload;
+
+pub use config::ExperimentConfig;
+pub use coordinator::Coordinator;
+pub use device::DeviceSpec;

@@ -1,0 +1,415 @@
+//! `dsplit` — CLI for the divide-and-save coordinator.
+//!
+//! Subcommands:
+//!   run       one experiment (device, task, k, mode) -> metrics JSON
+//!   sweep     container sweep (Fig. 3 data) -> table + CSV
+//!   cpus      single-container cpu sweep (Fig. 1 data) -> table + CSV
+//!   fit       fit Table II models to a sweep
+//!   optimize  online optimal-k decision
+//!   serve     serving session over the coordinator
+//!   variants  list AOT artifact variants
+
+use anyhow::{anyhow, Result};
+
+use divide_and_save::config::{ExecMode, ExperimentConfig};
+use divide_and_save::coordinator::executor::{run, run_sim};
+use divide_and_save::coordinator::router::SplitPolicy;
+use divide_and_save::coordinator::{Coordinator, OnlineOptimizer};
+use divide_and_save::device::PowerSensor;
+use divide_and_save::energy::meter_schedule;
+use divide_and_save::modelfit::{fit_exponential, fit_quadratic, FittedModel};
+use divide_and_save::bench::Table;
+use divide_and_save::sched::CpuScheduler;
+use divide_and_save::server::{serve, ServeConfig};
+use divide_and_save::util::cli::{CliError, Command, OptSpec};
+use divide_and_save::util::csv::CsvWriter;
+use divide_and_save::util::logging;
+
+fn common_opts(cmd: Command) -> Command {
+    cmd.opt(OptSpec::opt("device", "device preset (tx2|orin)").with_default("tx2"))
+        .opt(OptSpec::opt("task", "task (yolo_tiny|simple_cnn)").with_default("yolo_tiny"))
+        .opt(OptSpec::opt("frames", "total frames").with_default("720"))
+        .opt(OptSpec::opt("mode", "executor (sim|real)").with_default("sim"))
+        .opt(OptSpec::opt("artifacts", "artifacts dir").with_default("artifacts"))
+        .opt(OptSpec::opt("variant", "model variant for real mode").with_default("yolo_tiny_b4"))
+        .opt(OptSpec::opt("csv", "write results CSV to this path"))
+}
+
+fn build_config(p: &divide_and_save::util::cli::Parsed) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_cli(p)?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("run", "run one experiment"))
+        .opt(OptSpec::opt("containers", "number of containers").with_default("1"));
+    let p = parse_or_help(&cmd, args)?;
+    let mut cfg = build_config(&p)?;
+    cfg.containers = p.get_usize("containers")?.unwrap_or(1);
+    let res = run(&cfg)?;
+    println!("{}", result_json(&res).pretty());
+    Ok(())
+}
+
+fn result_json(r: &divide_and_save::coordinator::ExperimentResult) -> divide_and_save::util::json::Json {
+    use divide_and_save::util::json::Json;
+    Json::obj(vec![
+        ("device", Json::str(&r.device)),
+        ("task", Json::str(&r.task)),
+        ("containers", Json::num(r.containers as f64)),
+        ("frames", Json::num(r.frames as f64)),
+        (
+            "mode",
+            Json::str(match r.mode {
+                ExecMode::Sim => "sim",
+                ExecMode::Real => "real",
+            }),
+        ),
+        ("time_s", Json::num(r.time_s)),
+        ("energy_j", Json::num(r.energy_j)),
+        ("avg_power_w", Json::num(r.avg_power_w)),
+        ("detections", Json::num(r.total_detections as f64)),
+    ])
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("sweep", "container sweep (Fig. 3 data)"))
+        .opt(OptSpec::opt("max-k", "max containers (default: device memory cap)"));
+    let p = parse_or_help(&cmd, args)?;
+    let cfg = build_config(&p)?;
+    let device = cfg.effective_device();
+    let k_max = match p.get_usize("max-k")? {
+        Some(k) => k,
+        None => device.memory.max_containers(cfg.video.frame_count()),
+    };
+
+    let mut bench_cfg = cfg.clone();
+    bench_cfg.containers = 1;
+    let bench = run(&bench_cfg)?;
+
+    let mut table = Table::new(["k", "time_s", "energy_j", "power_w", "T/T1", "E/E1", "P/P1"]);
+    let mut csv = CsvWriter::new(["k", "time_s", "energy_j", "power_w", "t_ratio", "e_ratio", "p_ratio"]);
+    for k in 1..=k_max {
+        let mut c = cfg.clone();
+        c.containers = k;
+        let r = run(&c)?;
+        let (t, e, pw) = r.normalized(&bench);
+        table.row([
+            k.to_string(),
+            format!("{:.1}", r.time_s),
+            format!("{:.1}", r.energy_j),
+            format!("{:.2}", r.avg_power_w),
+            format!("{t:.3}"),
+            format!("{e:.3}"),
+            format!("{pw:.3}"),
+        ]);
+        csv.row([
+            k.to_string(),
+            r.time_s.to_string(),
+            r.energy_j.to_string(),
+            r.avg_power_w.to_string(),
+            t.to_string(),
+            e.to_string(),
+            pw.to_string(),
+        ]);
+    }
+    table.print();
+    if let Some(path) = p.get("csv") {
+        csv.save(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_cpus(args: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("cpus", "single-container cpu sweep (Fig. 1 data)"));
+    let p = parse_or_help(&cmd, args)?;
+    let cfg = build_config(&p)?;
+    let device = cfg.effective_device();
+    let sensor = PowerSensor::new(cfg.sensor_period_s);
+    let frames = cfg.video.frame_count();
+
+    let mut table = Table::new(["cpus", "time_s", "energy_j", "power_w"]);
+    let mut csv = CsvWriter::new(["cpus", "time_s", "energy_j", "power_w"]);
+    for cpus in fig1_cpu_grid(device.cores) {
+        let sched = CpuScheduler::new(&device)
+            .with_base_frame(cfg.task.base_frame_s(device.base_frame_s));
+        let jobs = [divide_and_save::sched::JobSpec {
+            container_id: 0,
+            frames,
+            cpus,
+            ready_at_s: 0.0,
+        }];
+        let schedule = sched.run(&jobs);
+        let rep = meter_schedule(&device, &sensor, &schedule);
+        table.row([
+            format!("{cpus:.1}"),
+            format!("{:.1}", rep.time_s),
+            format!("{:.1}", rep.energy_j),
+            format!("{:.2}", rep.avg_power_w),
+        ]);
+        csv.row([
+            cpus.to_string(),
+            rep.time_s.to_string(),
+            rep.energy_j.to_string(),
+            rep.avg_power_w.to_string(),
+        ]);
+    }
+    table.print();
+    if let Some(path) = p.get("csv") {
+        csv.save(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// The paper's Fig. 1 x-axis: 0.1 up to the device core count.
+pub fn fig1_cpu_grid(cores: f64) -> Vec<f64> {
+    let mut grid = vec![0.1, 0.25, 0.5, 0.75];
+    let mut c = 1.0;
+    while c <= cores + 1e-9 {
+        grid.push(c);
+        c += 0.5;
+    }
+    grid
+}
+
+fn cmd_fit(args: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("fit", "fit Table II models to a container sweep"));
+    let p = parse_or_help(&cmd, args)?;
+    let cfg = build_config(&p)?;
+    let device = cfg.effective_device();
+    let k_max = device.memory.max_containers(cfg.video.frame_count());
+
+    let mut bench_cfg = cfg.clone();
+    bench_cfg.containers = 1;
+    let bench = run_sim(&bench_cfg)?;
+
+    let mut xs = Vec::new();
+    let mut t_ys = Vec::new();
+    let mut e_ys = Vec::new();
+    let mut p_ys = Vec::new();
+    for k in 1..=k_max {
+        let mut c = cfg.clone();
+        c.containers = k;
+        let r = run_sim(&c)?;
+        let (t, e, pw) = r.normalized(&bench);
+        xs.push(k as f64);
+        t_ys.push(t);
+        e_ys.push(e);
+        p_ys.push(pw);
+    }
+
+    let mut table = Table::new(["metric", "ref", "model", "family"]);
+    for (name, ys, reference) in [
+        ("Time", &t_ys, format!("{:.0} s", bench.time_s)),
+        ("Energy", &e_ys, format!("{:.0} J", bench.energy_j)),
+        ("Power", &p_ys, format!("{:.1} W", bench.avg_power_w)),
+    ] {
+        let (model, family) = pick_model(&xs, ys)
+            .ok_or_else(|| anyhow!("fit failed for {name}"))?;
+        table.row([name.to_string(), reference, model.describe(), family.to_string()]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Fit both families, keep the better R² (Table II: TX2 -> quadratic,
+/// Orin -> exponential; this selection recovers that split).
+pub fn pick_model(xs: &[f64], ys: &[f64]) -> Option<(FittedModel, &'static str)> {
+    let quad = fit_quadratic(xs, ys).map(FittedModel::Quadratic);
+    let expo = fit_exponential(xs, ys).map(FittedModel::Exponential);
+    match (quad, expo) {
+        (Some(q), Some(e)) => {
+            let r2q = divide_and_save::modelfit::r2_of_fit(&q, xs, ys);
+            let r2e = divide_and_save::modelfit::r2_of_fit(&e, xs, ys);
+            if r2e > r2q {
+                Some((e, "exponential"))
+            } else {
+                Some((q, "quadratic"))
+            }
+        }
+        (Some(q), None) => Some((q, "quadratic")),
+        (None, Some(e)) => Some((e, "exponential")),
+        (None, None) => None,
+    }
+}
+
+fn cmd_optimize(args: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("optimize", "online optimal-k decision"))
+        .opt(OptSpec::opt("objective", "time|energy").with_default("energy"));
+    let p = parse_or_help(&cmd, args)?;
+    let cfg = build_config(&p)?;
+    let objective = match p.get_or("objective", "energy") {
+        "time" => divide_and_save::coordinator::OptimizeObjective::Time,
+        _ => divide_and_save::coordinator::OptimizeObjective::Energy,
+    };
+    let opt = OnlineOptimizer { objective, ..Default::default() };
+    let d = opt.decide(&cfg)?;
+    println!("probes: {:?}", d.probes);
+    println!("model:  {}", d.model.describe());
+    println!("best k: {}", d.best_k);
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("serve", "serving session"))
+        .opt(OptSpec::opt("jobs", "number of jobs").with_default("20"))
+        .opt(OptSpec::opt("job-frames", "frames per job").with_default("96"))
+        .opt(OptSpec::opt("containers", "fixed k (omit for online policy)"));
+    let p = parse_or_help(&cmd, args)?;
+    let cfg = build_config(&p)?;
+    let policy = match p.get_usize("containers")? {
+        Some(k) => SplitPolicy::Fixed(k),
+        None => SplitPolicy::Online(OnlineOptimizer::default()),
+    };
+    let mut coordinator = Coordinator::new(cfg, policy);
+    let report = serve(
+        &mut coordinator,
+        &ServeConfig {
+            jobs: p.get_usize("jobs")?.unwrap_or(20),
+            frames_per_job: p.get_usize("job-frames")?.unwrap_or(96),
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "jobs={} frames={} wall={:.1}s  throughput={:.2} jobs/s {:.1} frames/s",
+        report.jobs, report.frames, report.wall_s, report.jobs_per_s, report.frames_per_s
+    );
+    println!(
+        "latency mean={:.2}s p95={:.2}s  service mean={:.2}s  energy={:.0} J",
+        report.latency.mean, report.latency.p95, report.service.mean, report.total_energy_j
+    );
+    println!("{}", coordinator.metrics.to_json().pretty());
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("trace", "record or replay an experiment trace"))
+        .opt(OptSpec::opt("containers", "number of containers").with_default("4"))
+        .opt(OptSpec::opt("record", "write a trace JSON to this path"))
+        .opt(OptSpec::opt("replay", "replay a trace JSON from this path"));
+    let p = parse_or_help(&cmd, args)?;
+    if let Some(path) = p.get("replay") {
+        let trace = divide_and_save::trace::TraceRecord::load(path)?;
+        let result = trace.replay(1e-9)?;
+        println!("replay OK: {} k={} time={:.1}s energy={:.1}J (matches recording)",
+                 result.device, result.containers, result.time_s, result.energy_j);
+        return Ok(());
+    }
+    let mut cfg = build_config(&p)?;
+    cfg.containers = p.get_usize("containers")?.unwrap_or(4);
+    let result = run_sim(&cfg)?;
+    let trace = divide_and_save::trace::TraceRecord::capture(&cfg, &result);
+    let path = p.get("record").unwrap_or("results/trace.json");
+    trace.save(path)?;
+    println!("recorded {path}: time={:.1}s energy={:.1}J", result.time_s, result.energy_j);
+    Ok(())
+}
+
+fn cmd_battery(args: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("battery", "videos-per-charge under a split policy"))
+        .opt(OptSpec::opt("containers", "number of containers").with_default("4"))
+        .opt(OptSpec::opt("capacity-wh", "battery capacity").with_default("50"));
+    let p = parse_or_help(&cmd, args)?;
+    let mut cfg = build_config(&p)?;
+    cfg.containers = p.get_usize("containers")?.unwrap_or(4);
+    let mut battery = divide_and_save::energy::Battery::pack_50wh();
+    if let Some(wh) = p.get_f64("capacity-wh")? {
+        battery.capacity_wh = wh;
+    }
+    let r = run_sim(&cfg)?;
+    let jobs = battery.jobs_supported(r.energy_j, r.avg_power_w);
+    println!(
+        "{} k={}: {:.1} J/video at {:.1} W -> {} videos per {:.0} Wh charge ({:.1} h busy)",
+        r.device, r.containers, r.energy_j, r.avg_power_w, jobs, battery.capacity_wh,
+        jobs as f64 * r.time_s / 3600.0
+    );
+    Ok(())
+}
+
+fn cmd_variants(args: &[String]) -> Result<()> {
+    let cmd = Command::new("variants", "list AOT artifact variants")
+        .opt(OptSpec::opt("artifacts", "artifacts dir").with_default("artifacts"));
+    let p = parse_or_help(&cmd, args)?;
+    let manifest =
+        divide_and_save::runtime::Manifest::load(p.get_or("artifacts", "artifacts"))?;
+    let mut table = Table::new(["name", "model", "batch", "params", "MFLOPs/frame"]);
+    for v in &manifest.variants {
+        table.row([
+            v.name.clone(),
+            v.model.clone(),
+            v.batch.to_string(),
+            v.param_count.to_string(),
+            format!("{:.1}", v.flops_per_frame as f64 / 1e6),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn parse_or_help(
+    cmd: &Command,
+    args: &[String],
+) -> Result<divide_and_save::util::cli::Parsed> {
+    match cmd.parse(args.iter().map(String::as_str)) {
+        Ok(p) => Ok(p),
+        Err(CliError::HelpRequested) => {
+            print!("{}", cmd.help());
+            std::process::exit(0);
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
+const USAGE: &str = "dsplit — divide-and-save coordinator
+
+USAGE: dsplit <command> [options]   (--help per command)
+
+COMMANDS:
+  run        run one experiment
+  sweep      container sweep (Fig. 3 data)
+  cpus       single-container cpu sweep (Fig. 1 data)
+  fit        fit Table II models
+  optimize   online optimal-k decision
+  serve      serving session
+  trace      record / replay an experiment trace
+  battery    videos-per-charge under a split policy
+  variants   list AOT artifact variants
+";
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match args.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => {
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match sub {
+        "run" => cmd_run(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "cpus" => cmd_cpus(&rest),
+        "fit" => cmd_fit(&rest),
+        "optimize" => cmd_optimize(&rest),
+        "serve" => cmd_serve(&rest),
+        "trace" => cmd_trace(&rest),
+        "battery" => cmd_battery(&rest),
+        "variants" => cmd_variants(&rest),
+        "--help" | "-h" | "help" => {
+            print!("{USAGE}");
+            return;
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,264 @@
+//! Metrics registry: counters, gauges and latency histograms for the
+//! serving path, with JSON/CSV export. Lock-free hot-path increments
+//! (atomics); histograms use fixed log-scale buckets so recording is
+//! allocation-free.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Log-scale latency histogram: buckets at 1us * 1.5^i, ~96 buckets up
+/// past 1000 s.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum in nanoseconds for mean computation.
+    sum_ns: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 96;
+const HIST_BASE: f64 = 1.5;
+const HIST_MIN_NS: f64 = 1_000.0; // 1 us
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_for(ns: f64) -> usize {
+        if ns <= HIST_MIN_NS {
+            return 0;
+        }
+        let idx = (ns / HIST_MIN_NS).log(HIST_BASE).floor() as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    /// Upper bound of bucket i in nanoseconds.
+    fn bucket_upper_ns(i: usize) -> f64 {
+        HIST_MIN_NS * HIST_BASE.powi(i as i32 + 1)
+    }
+
+    pub fn record_s(&self, seconds: f64) {
+        self.record_ns((seconds * 1e9).max(0.0));
+    }
+
+    pub fn record_ns(&self, ns: f64) {
+        let idx = Self::bucket_for(ns);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e9
+    }
+
+    /// Approximate quantile from bucket upper bounds; `q` in [0,1].
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_upper_ns(i) / 1e9;
+            }
+        }
+        Self::bucket_upper_ns(HIST_BUCKETS - 1) / 1e9
+    }
+}
+
+/// Central registry. Cheap to clone references around via `&Registry`.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Get or create a histogram handle (Arc so hot paths don't hold the
+    /// registry lock while recording).
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Export everything as JSON.
+    pub fn to_json(&self) -> Json {
+        let counters: Vec<(String, Json)> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+            .collect();
+        let gauges: Vec<(String, Json)> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v)))
+            .collect();
+        let hists: Vec<(String, Json)> = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("mean_s", Json::num(h.mean_s())),
+                        ("p50_s", Json::num(h.quantile_s(0.50))),
+                        ("p95_s", Json::num(h.quantile_s(0.95))),
+                        ("p99_s", Json::num(h.quantile_s(0.99))),
+                    ]),
+                )
+            })
+            .collect();
+        let to_obj = |pairs: Vec<(String, Json)>| {
+            Json::Object(pairs.into_iter().collect())
+        };
+        Json::obj(vec![
+            ("counters", to_obj(counters)),
+            ("gauges", to_obj(gauges)),
+            ("histograms", to_obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let r = Registry::new();
+        r.inc("requests", 1);
+        r.inc("requests", 2);
+        assert_eq!(r.counter("requests"), 3);
+        assert_eq!(r.counter("missing"), 0);
+        r.set_gauge("power_w", 2.9);
+        assert_eq!(r.gauge("power_w"), Some(2.9));
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.record_s(i as f64 / 1000.0); // 1ms .. 1s
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_s(0.5);
+        let p95 = h.quantile_s(0.95);
+        let p99 = h.quantile_s(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // log-bucketed => within a factor of HIST_BASE of the truth
+        assert!(p50 > 0.3 && p50 < 0.8, "p50={p50}");
+        assert!(p99 > 0.7 && p99 < 1.6, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_mean_exact() {
+        let h = Histogram::new();
+        h.record_s(0.1);
+        h.record_s(0.3);
+        assert!((h.mean_s() - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.quantile_s(0.5), 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let r = std::sync::Arc::new(Registry::new());
+        let h = r.histogram("lat");
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let h = h.clone();
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        h.record_s(0.001);
+                        r.inc("n", 1);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 8000);
+        assert_eq!(r.counter("n"), 8000);
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let r = Registry::new();
+        r.inc("a", 5);
+        r.set_gauge("g", 1.5);
+        r.histogram("h").record_s(0.01);
+        let j = r.to_json();
+        assert_eq!(j.get("counters").unwrap().get("a").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("gauges").unwrap().get("g").unwrap().as_f64(), Some(1.5));
+        assert_eq!(
+            j.get("histograms").unwrap().get("h").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! Fit-quality evaluation: R² against observations and discrete
+//! convexity checks (the paper emphasizes its fitted models are convex,
+//! which is what makes the online optimal-k search well-behaved).
+
+use super::FittedModel;
+use crate::util::stats::r_squared;
+
+/// R² of a fitted model over observation pairs.
+pub fn r2_of_fit(model: &FittedModel, xs: &[f64], ys: &[f64]) -> f64 {
+    let pred: Vec<f64> = xs.iter().map(|&x| model.eval(x)).collect();
+    r_squared(&pred, ys)
+}
+
+/// Discrete convexity of a sampled curve: second differences >= -tol.
+pub fn convexity_ok(ys: &[f64], tol: f64) -> bool {
+    ys.windows(3).all(|w| w[2] - 2.0 * w[1] + w[0] >= -tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelfit::{ExpModel, PolyModel};
+
+    #[test]
+    fn r2_perfect_fit() {
+        let m = FittedModel::Quadratic(PolyModel { a2: 1.0, a1: 0.0, a0: 0.0 });
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [1.0, 4.0, 9.0];
+        assert!((r2_of_fit(&m, &xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_bad_fit_is_low() {
+        let m = FittedModel::Exponential(ExpModel { a: 100.0, b: 0.0, c: 0.0 });
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [1.0, 2.0, 3.0];
+        assert!(r2_of_fit(&m, &xs, &ys) < 0.0);
+    }
+
+    #[test]
+    fn convexity_detection() {
+        assert!(convexity_ok(&[4.0, 1.0, 0.0, 1.0, 4.0], 1e-9)); // x^2 samples
+        assert!(!convexity_ok(&[0.0, 1.0, 0.0], 1e-9)); // concave bump
+        assert!(convexity_ok(&[1.0, 1.0], 1e-9)); // too short: trivially ok
+        // decaying exponential is convex
+        let ys: Vec<f64> = (1..=12).map(|k| 0.33 + 1.77 * (-0.98 * k as f64).exp()).collect();
+        assert!(convexity_ok(&ys, 1e-9));
+    }
+}

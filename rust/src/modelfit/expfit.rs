@@ -1,0 +1,179 @@
+//! Exponential model fit `y = a + b*exp(c*x)` (Table II, Orin rows)
+//! via Gauss–Newton with a line search, seeded by a log-linear
+//! initialization.
+
+use crate::util::stats::{least_squares, solve_linear};
+
+/// `a + b * exp(c * x)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpModel {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl ExpModel {
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a + self.b * (self.c * x).exp()
+    }
+
+    /// Convex iff b >= 0 (second derivative `b*c^2*e^{cx}`).
+    pub fn is_convex(&self) -> bool {
+        self.b >= 0.0
+    }
+
+    /// Asymptote as x -> inf for decaying models (c < 0).
+    pub fn asymptote(&self) -> f64 {
+        self.a
+    }
+}
+
+fn sse(m: &ExpModel, xs: &[f64], ys: &[f64]) -> f64 {
+    xs.iter().zip(ys).map(|(&x, &y)| (m.eval(x) - y).powi(2)).sum()
+}
+
+/// Initial guess: assume a ~ min(y) - small margin (decay) or max(y)
+/// (growth), then log-linear regression of `|y - a|`.
+fn init_guess(xs: &[f64], ys: &[f64]) -> ExpModel {
+    let decaying = ys.first() > ys.last();
+    let (lo, hi) = ys.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &y| {
+        (lo.min(y), hi.max(y))
+    });
+    let span = (hi - lo).max(1e-9);
+    let a = if decaying { lo - 0.05 * span } else { hi + 0.05 * span };
+    // log(|y - a|) = log|b| + c x
+    let mut design = Vec::with_capacity(xs.len() * 2);
+    let mut targets = Vec::with_capacity(xs.len());
+    for (&x, &y) in xs.iter().zip(ys) {
+        let d = (y - a).abs().max(1e-12);
+        design.extend_from_slice(&[1.0, x]);
+        targets.push(d.ln());
+    }
+    match least_squares(&design, &targets, xs.len(), 2) {
+        Some(beta) => {
+            let b_mag = beta[0].exp();
+            let sign = if ys[0] >= a { 1.0 } else { -1.0 };
+            ExpModel { a, b: sign * b_mag, c: beta[1] }
+        }
+        None => ExpModel { a, b: span, c: -1.0 },
+    }
+}
+
+/// Gauss–Newton with backtracking; returns `None` if it cannot improve
+/// on the initialization at all (degenerate data).
+pub fn fit_exponential(xs: &[f64], ys: &[f64]) -> Option<ExpModel> {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 3 {
+        return None;
+    }
+    let mut m = init_guess(xs, ys);
+    let mut err = sse(&m, xs, ys);
+    for _ in 0..200 {
+        // Jacobian: d/da = 1, d/db = e^{cx}, d/dc = b x e^{cx}
+        let n = xs.len();
+        let mut jtj = vec![0.0; 9];
+        let mut jtr = vec![0.0; 3];
+        for i in 0..n {
+            let e = (m.c * xs[i]).exp();
+            let row = [1.0, e, m.b * xs[i] * e];
+            let resid = ys[i] - m.eval(xs[i]);
+            for a in 0..3 {
+                jtr[a] += row[a] * resid;
+                for b in 0..3 {
+                    jtj[a * 3 + b] += row[a] * row[b];
+                }
+            }
+        }
+        // Levenberg damping for stability
+        for d in 0..3 {
+            jtj[d * 3 + d] *= 1.0 + 1e-8;
+        }
+        let step = solve_linear(&mut jtj, &mut jtr, 3)?;
+        // backtracking line search
+        let mut t = 1.0;
+        let mut improved = false;
+        for _ in 0..30 {
+            let cand = ExpModel {
+                a: m.a + t * step[0],
+                b: m.b + t * step[1],
+                c: m.c + t * step[2],
+            };
+            let cand_err = sse(&cand, xs, ys);
+            if cand_err < err && cand_err.is_finite() {
+                m = cand;
+                err = cand_err;
+                improved = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        if !improved {
+            break;
+        }
+        if err < 1e-18 {
+            break;
+        }
+    }
+    if err.is_finite() {
+        Some(m)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_paper_orin_time_model() {
+        // Table II: 0.33 + 1.77 e^{-0.98x}
+        let truth = ExpModel { a: 0.33, b: 1.77, c: -0.98 };
+        let xs: Vec<f64> = (1..=12).map(|k| k as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| truth.eval(x)).collect();
+        let fit = fit_exponential(&xs, &ys).unwrap();
+        assert!(close(fit.a, truth.a, 1e-4).is_ok(), "a={}", fit.a);
+        assert!(close(fit.b, truth.b, 1e-3).is_ok(), "b={}", fit.b);
+        assert!(close(fit.c, truth.c, 1e-3).is_ok(), "c={}", fit.c);
+        assert!(fit.is_convex());
+    }
+
+    #[test]
+    fn recovers_growth_model() {
+        // Orin power row grows: 1.85 - 1.24 e^{-0.38x} (negative b).
+        let truth = ExpModel { a: 1.85, b: -1.24, c: -0.38 };
+        let xs: Vec<f64> = (1..=12).map(|k| k as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| truth.eval(x)).collect();
+        let fit = fit_exponential(&xs, &ys).unwrap();
+        assert!(close(fit.a, truth.a, 1e-2).is_ok(), "a={}", fit.a);
+        assert!(close(fit.b, truth.b, 1e-2).is_ok(), "b={}", fit.b);
+        assert!(close(fit.c, truth.c, 1e-2).is_ok(), "c={}", fit.c);
+        assert!(!fit.is_convex());
+    }
+
+    #[test]
+    fn noisy_recovery() {
+        let truth = ExpModel { a: 0.59, b: 1.14, c: -1.03 }; // Orin energy
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (1..=12).map(|k| k as f64).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|&x| truth.eval(x) + rng.normal_ms(0.0, 0.005)).collect();
+        let fit = fit_exponential(&xs, &ys).unwrap();
+        assert!((fit.a - truth.a).abs() < 0.05);
+        assert!((fit.c - truth.c).abs() < 0.25);
+    }
+
+    #[test]
+    fn too_few_points() {
+        assert!(fit_exponential(&[1.0, 2.0], &[1.0, 0.5]).is_none());
+    }
+
+    #[test]
+    fn asymptote_matches_a() {
+        let m = ExpModel { a: 0.33, b: 1.77, c: -0.98 };
+        assert_eq!(m.asymptote(), 0.33);
+        assert!((m.eval(50.0) - 0.33).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,81 @@
+//! Model fitting for Table II: quadratic (TX2) and exponential-decay
+//! (AGX Orin) convex models of normalized time / energy / power as a
+//! function of the container count.
+
+pub mod crossval;
+pub mod expfit;
+pub mod eval;
+pub mod polyfit;
+
+pub use crossval::select_by_cv;
+pub use expfit::{fit_exponential, ExpModel};
+pub use eval::{convexity_ok, r2_of_fit};
+pub use polyfit::{fit_quadratic, PolyModel};
+
+/// Which functional family Table II uses for a device.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FittedModel {
+    /// `a*x^2 + b*x + c` (TX2 rows).
+    Quadratic(PolyModel),
+    /// `a + b*exp(c*x)` (Orin rows).
+    Exponential(ExpModel),
+}
+
+impl FittedModel {
+    pub fn eval(&self, x: f64) -> f64 {
+        match self {
+            FittedModel::Quadratic(m) => m.eval(x),
+            FittedModel::Exponential(m) => m.eval(x),
+        }
+    }
+
+    /// Container count minimizing the model on `[1, k_max]` (the paper's
+    /// future-work online scheduler uses this).
+    pub fn argmin(&self, k_max: usize) -> usize {
+        (1..=k_max)
+            .min_by(|&a, &b| {
+                self.eval(a as f64)
+                    .partial_cmp(&self.eval(b as f64))
+                    .unwrap()
+            })
+            .unwrap_or(1)
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            FittedModel::Quadratic(m) => {
+                format!("{:.4}x^2 + {:+.4}x + {:+.4}", m.a2, m.a1, m.a0)
+            }
+            FittedModel::Exponential(m) => {
+                format!("{:.4} + {:.4}*exp({:.4}x)", m.a, m.b, m.c)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmin_of_quadratic() {
+        // paper TX2 time model: 0.026x^2 - 0.21x + 1.17, vertex ~4.04
+        let m = FittedModel::Quadratic(PolyModel { a2: 0.026, a1: -0.21, a0: 1.17 });
+        assert_eq!(m.argmin(6), 4);
+    }
+
+    #[test]
+    fn argmin_of_exponential_decay() {
+        // paper Orin time model: 0.33 + 1.77 e^{-0.98x} — monotone down
+        let m = FittedModel::Exponential(ExpModel { a: 0.33, b: 1.77, c: -0.98 });
+        assert_eq!(m.argmin(12), 12);
+    }
+
+    #[test]
+    fn describe_contains_coefficients() {
+        let q = FittedModel::Quadratic(PolyModel { a2: 0.026, a1: -0.21, a0: 1.17 });
+        assert!(q.describe().contains("0.026"));
+        let e = FittedModel::Exponential(ExpModel { a: 0.33, b: 1.77, c: -0.98 });
+        assert!(e.describe().contains("exp"));
+    }
+}

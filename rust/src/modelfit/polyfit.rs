@@ -1,0 +1,103 @@
+//! Quadratic least-squares fit (Table II, TX2 rows).
+
+use crate::util::stats::least_squares;
+
+/// `a2*x^2 + a1*x + a0`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolyModel {
+    pub a2: f64,
+    pub a1: f64,
+    pub a0: f64,
+}
+
+impl PolyModel {
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a2 * x * x + self.a1 * x + self.a0
+    }
+
+    /// Convex iff the leading coefficient is non-negative.
+    pub fn is_convex(&self) -> bool {
+        self.a2 >= 0.0
+    }
+
+    /// Continuous vertex location (minimum if convex).
+    pub fn vertex(&self) -> Option<f64> {
+        if self.a2.abs() < 1e-15 {
+            None
+        } else {
+            Some(-self.a1 / (2.0 * self.a2))
+        }
+    }
+}
+
+/// OLS quadratic through `(x, y)` points. Needs >= 3 distinct x.
+pub fn fit_quadratic(xs: &[f64], ys: &[f64]) -> Option<PolyModel> {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 3 {
+        return None;
+    }
+    let mut design = Vec::with_capacity(xs.len() * 3);
+    for &x in xs {
+        design.extend_from_slice(&[1.0, x, x * x]);
+    }
+    let beta = least_squares(&design, ys, xs.len(), 3)?;
+    Some(PolyModel { a0: beta[0], a1: beta[1], a2: beta[2] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{close, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_exact_quadratic() {
+        let xs: Vec<f64> = (1..=6).map(|k| k as f64).collect();
+        let truth = PolyModel { a2: 0.026, a1: -0.21, a0: 1.17 }; // paper TX2 time
+        let ys: Vec<f64> = xs.iter().map(|&x| truth.eval(x)).collect();
+        let fit = fit_quadratic(&xs, &ys).unwrap();
+        assert!(close(fit.a2, truth.a2, 1e-9).is_ok());
+        assert!(close(fit.a1, truth.a1, 1e-9).is_ok());
+        assert!(close(fit.a0, truth.a0, 1e-9).is_ok());
+        assert!(fit.is_convex());
+        assert!(close(fit.vertex().unwrap(), 4.038, 0.01).is_ok());
+    }
+
+    #[test]
+    fn too_few_points() {
+        assert!(fit_quadratic(&[1.0, 2.0], &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn degenerate_same_x_is_singular() {
+        assert!(fit_quadratic(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn noisy_fit_recovers_approximately() {
+        let mut rng = Rng::new(77);
+        let truth = PolyModel { a2: 0.015, a1: -0.12, a0: 1.10 }; // TX2 energy
+        let xs: Vec<f64> = (1..=24).map(|k| k as f64 * 0.25).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|&x| truth.eval(x) + rng.normal_ms(0.0, 0.002)).collect();
+        let fit = fit_quadratic(&xs, &ys).unwrap();
+        assert!((fit.a2 - truth.a2).abs() < 0.005);
+        assert!((fit.a1 - truth.a1).abs() < 0.02);
+    }
+
+    #[test]
+    fn linear_data_gives_near_zero_a2() {
+        forall(
+            3,
+            30,
+            |r| (r.range_f64(-2.0, 2.0), r.range_f64(-1.0, 1.0)),
+            |&(slope, icept)| {
+                let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+                let ys: Vec<f64> = xs.iter().map(|&x| slope * x + icept).collect();
+                let fit = fit_quadratic(&xs, &ys).unwrap();
+                close(fit.a2, 0.0, 1e-8)?;
+                close(fit.a1, slope, 1e-7)
+            },
+        );
+    }
+}

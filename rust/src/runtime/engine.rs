@@ -1,0 +1,136 @@
+//! Compile-once / execute-many PJRT engine for one model variant.
+//!
+//! Interchange is HLO *text* (see aot.py for why: jax >= 0.5 emits
+//! protos with 64-bit ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids). Execution takes a flat NHWC f32 batch and
+//! returns one flat f32 buffer per model output.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, VariantInfo};
+
+/// Output buffers of one inference call, in the model's tuple order.
+#[derive(Debug, Clone)]
+pub struct InferenceOutput {
+    pub buffers: Vec<Vec<f32>>,
+    /// Wall time of the execute call (host→device copy + run + copy
+    /// back), seconds.
+    pub latency_s: f64,
+}
+
+/// One compiled executable bound to a PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub info: VariantInfo,
+    input_dims: Vec<i64>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine").field("variant", &self.info.name).finish()
+    }
+}
+
+impl Engine {
+    /// Load + compile a variant from the artifact directory.
+    pub fn load(manifest: &Manifest, variant: &str) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Self::load_with_client(client, manifest, variant)
+    }
+
+    /// Compile on an existing client (the pool shares one CPU client so
+    /// containers don't each spin up a PJRT runtime).
+    pub fn load_with_client(
+        client: xla::PjRtClient,
+        manifest: &Manifest,
+        variant: &str,
+    ) -> Result<Engine> {
+        let info = manifest.variant(variant)?.clone();
+        let path = manifest.hlo_path(&info);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compile {variant}"))?;
+        let input_dims: Vec<i64> = info.input_shape.iter().map(|&d| d as i64).collect();
+        Ok(Engine { client, exe, info, input_dims })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Batch size this executable was lowered for.
+    pub fn batch(&self) -> usize {
+        self.info.batch
+    }
+
+    /// Run one batch. `input` must be exactly `batch * frame_elems`
+    /// f32 values (NHWC flattened). Short batches must be padded by the
+    /// caller (`pad_batch`).
+    pub fn run(&self, input: &[f32]) -> Result<InferenceOutput> {
+        if input.len() != self.info.input_elems() {
+            bail!(
+                "input length {} != expected {} for {}",
+                input.len(),
+                self.info.input_elems(),
+                self.info.name
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let lit = xla::Literal::vec1(input).reshape(&self.input_dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let leaves = out_lit.to_tuple()?;
+        if leaves.len() != self.info.outputs.len() {
+            bail!(
+                "output arity {} != manifest {} for {}",
+                leaves.len(),
+                self.info.outputs.len(),
+                self.info.name
+            );
+        }
+        let mut buffers = Vec::with_capacity(leaves.len());
+        for leaf in leaves {
+            buffers.push(leaf.to_vec::<f32>()?);
+        }
+        Ok(InferenceOutput { buffers, latency_s: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Pad a short final batch with zero frames to the executable's
+    /// batch size; returns (padded buffer, real frame count).
+    pub fn pad_batch(&self, frames: &[f32]) -> (Vec<f32>, usize) {
+        let fe = self.info.frame_elems();
+        assert_eq!(frames.len() % fe, 0, "ragged frame buffer");
+        let real = frames.len() / fe;
+        assert!(real <= self.batch(), "batch overflow: {real} > {}", self.batch());
+        if real == self.batch() {
+            return (frames.to_vec(), real);
+        }
+        let mut padded = Vec::with_capacity(self.info.input_elems());
+        padded.extend_from_slice(frames);
+        padded.resize(self.info.input_elems(), 0.0);
+        (padded, real)
+    }
+
+    /// Per-frame element count of output `output_idx` — the stride used
+    /// to slice a (possibly padded) batch output back into frames.
+    pub fn output_frame_elems(&self, output_idx: usize) -> usize {
+        self.info.outputs[output_idx].1[1..].iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests need the artifacts directory; they live in
+    // rust/tests/runtime_integration.rs so `cargo test --lib` stays
+    // hermetic. Unit-testable pieces:
+    use super::*;
+
+    #[test]
+    fn inference_output_is_clonable() {
+        let o = InferenceOutput { buffers: vec![vec![1.0]], latency_s: 0.1 };
+        assert_eq!(o.clone().buffers[0][0], 1.0);
+    }
+}

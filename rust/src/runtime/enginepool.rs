@@ -1,0 +1,72 @@
+//! Per-thread engine cache.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so
+//! engines cannot be shared across threads. That constraint maps cleanly
+//! onto the paper's architecture anyway: each *container* is an isolated
+//! process with its own runtime, so the REAL executor gives every
+//! container worker thread its own client + compiled executable
+//! (`Engine::load`), exactly like `docker run` starting k independent
+//! YOLO processes.
+//!
+//! `EnginePool` is the single-threaded convenience for benches, examples
+//! and the serving loop's main thread: one client, compile-once-per-
+//! variant caching.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use super::manifest::Manifest;
+
+/// Lazily-compiled engine cache (single-threaded; see module docs).
+pub struct EnginePool {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<BTreeMap<String, Rc<Engine>>>,
+}
+
+impl std::fmt::Debug for EnginePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EnginePool")
+            .field("dir", &self.manifest.dir)
+            .field("cached", &self.cache.borrow().len())
+            .finish()
+    }
+}
+
+impl EnginePool {
+    pub fn new(artifacts_dir: &str) -> Result<EnginePool> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(EnginePool { manifest, client, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Get (compiling on first use) the engine for a variant.
+    pub fn engine(&self, variant: &str) -> Result<Rc<Engine>> {
+        if let Some(e) = self.cache.borrow().get(variant) {
+            return Ok(e.clone());
+        }
+        let engine =
+            Rc::new(Engine::load_with_client(self.client.clone(), &self.manifest, variant)?);
+        self.cache.borrow_mut().insert(variant.to_string(), engine.clone());
+        Ok(engine)
+    }
+
+    /// Variants available in the manifest.
+    pub fn available(&self) -> Vec<String> {
+        self.manifest.variants.iter().map(|v| v.name.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Pool behaviour against real artifacts is covered in
+    // rust/tests/runtime_integration.rs.
+}

@@ -1,0 +1,187 @@
+//! Typed reader for `artifacts/manifest.json` (produced by aot.py).
+
+use crate::util::json::Json;
+
+/// One AOT-compiled model variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantInfo {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub batch: usize,
+    pub ref_kernels: bool,
+    /// NHWC input shape including batch.
+    pub input_shape: Vec<usize>,
+    /// (name, shape) per output, in tuple order.
+    pub outputs: Vec<(String, Vec<usize>)>,
+    pub flops_per_frame: u64,
+    pub param_count: u64,
+    pub nattr: usize,
+    pub sha256: String,
+}
+
+impl VariantInfo {
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn frame_elems(&self) -> usize {
+        self.input_shape[1..].iter().product()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variants: Vec<VariantInfo>,
+    /// Directory the manifest was loaded from (files are relative).
+    pub dir: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("manifest io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("manifest schema: {0}")]
+    Schema(String),
+    #[error("unknown variant {0:?} (have: {1:?})")]
+    UnknownVariant(String, Vec<String>),
+}
+
+fn schema(msg: &str) -> ManifestError {
+    ManifestError::Schema(msg.to_string())
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(format!("{dir}/manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &str) -> Result<Manifest, ManifestError> {
+        let root = Json::parse(text)?;
+        let vs = root
+            .get("variants")
+            .and_then(Json::as_array)
+            .ok_or_else(|| schema("missing variants array"))?;
+        let mut variants = Vec::with_capacity(vs.len());
+        for v in vs {
+            let get_str = |k: &str| {
+                v.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| schema(&format!("missing string {k}")))
+            };
+            let get_num = |k: &str| {
+                v.get(k).and_then(Json::as_usize).ok_or_else(|| schema(&format!("missing number {k}")))
+            };
+            let input_shape: Vec<usize> = v
+                .get("input")
+                .and_then(|i| i.get("shape"))
+                .and_then(Json::as_array)
+                .ok_or_else(|| schema("missing input.shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let outputs = v
+                .get("outputs")
+                .and_then(Json::as_array)
+                .ok_or_else(|| schema("missing outputs"))?
+                .iter()
+                .map(|o| {
+                    let name = o
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or("out")
+                        .to_string();
+                    let shape: Vec<usize> = o
+                        .get("shape")
+                        .and_then(Json::as_array)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default();
+                    (name, shape)
+                })
+                .collect();
+            variants.push(VariantInfo {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                model: get_str("model")?,
+                batch: get_num("batch")?,
+                ref_kernels: v.get("ref_kernels").and_then(Json::as_bool).unwrap_or(false),
+                input_shape,
+                outputs,
+                flops_per_frame: get_num("flops_per_frame")? as u64,
+                param_count: get_num("param_count")? as u64,
+                nattr: v.get("nattr").and_then(Json::as_usize).unwrap_or(0),
+                sha256: get_str("sha256")?,
+            });
+        }
+        Ok(Manifest { variants, dir: dir.to_string() })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo, ManifestError> {
+        self.variants.iter().find(|v| v.name == name).ok_or_else(|| {
+            ManifestError::UnknownVariant(
+                name.to_string(),
+                self.variants.iter().map(|v| v.name.clone()).collect(),
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, v: &VariantInfo) -> String {
+        format!("{}/{}", self.dir, v.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "variants": [
+        {"name": "yolo_tiny_b2", "file": "yolo_tiny_b2.hlo.txt",
+         "model": "yolo_tiny", "batch": 2, "ref_kernels": false,
+         "input": {"shape": [2, 96, 96, 3], "dtype": "f32"},
+         "outputs": [{"name": "boxes_coarse", "shape": [2, 108, 25]},
+                      {"name": "boxes_fine", "shape": [2, 432, 25]}],
+         "flops_per_frame": 41223168, "param_count": 130486,
+         "nattr": 25, "sha256": "abc"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, "artifacts").unwrap();
+        assert_eq!(m.variants.len(), 1);
+        let v = m.variant("yolo_tiny_b2").unwrap();
+        assert_eq!(v.batch, 2);
+        assert_eq!(v.input_shape, vec![2, 96, 96, 3]);
+        assert_eq!(v.input_elems(), 2 * 96 * 96 * 3);
+        assert_eq!(v.frame_elems(), 96 * 96 * 3);
+        assert_eq!(v.outputs.len(), 2);
+        assert_eq!(v.outputs[1].1, vec![2, 432, 25]);
+        assert_eq!(m.hlo_path(v), "artifacts/yolo_tiny_b2.hlo.txt");
+    }
+
+    #[test]
+    fn unknown_variant_lists_known() {
+        let m = Manifest::parse(SAMPLE, "artifacts").unwrap();
+        match m.variant("nope") {
+            Err(ManifestError::UnknownVariant(n, known)) => {
+                assert_eq!(n, "nope");
+                assert_eq!(known, vec!["yolo_tiny_b2".to_string()]);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", ".").is_err());
+        assert!(Manifest::parse(r#"{"variants": [{}]}"#, ".").is_err());
+        assert!(Manifest::parse("not json", ".").is_err());
+    }
+}

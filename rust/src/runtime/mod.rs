@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt` + the manifest.
+//!
+//! * `manifest` — typed view of `artifacts/manifest.json`.
+//! * `engine` — compile-once / execute-many wrapper around the `xla`
+//!   crate (PJRT CPU client), returning flat `f32` buffers.
+//! * `enginepool` — shares one PJRT client across the container worker
+//!   threads and caches compiled executables per variant.
+
+pub mod engine;
+pub mod enginepool;
+pub mod manifest;
+
+pub use engine::{Engine, InferenceOutput};
+pub use enginepool::EnginePool;
+pub use manifest::{Manifest, VariantInfo};

@@ -1,0 +1,329 @@
+//! Fair multicore scheduler over the DES core.
+//!
+//! Simulates `k` containers processing their frame segments in parallel,
+//! each under a CFS `--cpus` share, frame by frame. Produces per-
+//! container finish times, the makespan, and the piecewise-constant
+//! busy-core trace that the energy meter integrates — stragglers from
+//! uneven splits show up as trace steps, exactly like the real boards'
+//! power tails.
+
+use super::des::EventQueue;
+use super::interference;
+use crate::device::DeviceSpec;
+
+/// One container's workload assignment.
+#[derive(Debug, Clone, Copy)]
+pub struct JobSpec {
+    pub container_id: u64,
+    /// Frames in this container's segment.
+    pub frames: usize,
+    /// CFS cpu share (`--cpus`).
+    pub cpus: f64,
+    /// When this container becomes ready (startup included), seconds.
+    pub ready_at_s: f64,
+}
+
+/// A span of constant aggregate busy-cores.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSegment {
+    pub t0_s: f64,
+    pub t1_s: f64,
+    pub busy_cores: f64,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct ScheduleResult {
+    /// (container_id, finish time) per job, in input order.
+    pub finish_s: Vec<(u64, f64)>,
+    /// Completion time of the last container.
+    pub makespan_s: f64,
+    /// Busy-core trace from t=0 to the makespan.
+    pub trace: Vec<TraceSegment>,
+    /// Total frames processed.
+    pub frames_done: usize,
+}
+
+impl ScheduleResult {
+    /// Busy cores at time `t` (0 outside all segments).
+    pub fn busy_at(&self, t: f64) -> f64 {
+        // trace is time-ordered; binary search the containing segment
+        let idx = self
+            .trace
+            .partition_point(|seg| seg.t1_s <= t);
+        match self.trace.get(idx) {
+            Some(seg) if seg.t0_s <= t => seg.busy_cores,
+            _ => 0.0,
+        }
+    }
+
+    /// Integral of busy-cores over the whole trace (core-seconds).
+    pub fn core_seconds(&self) -> f64 {
+        self.trace.iter().map(|s| (s.t1_s - s.t0_s) * s.busy_cores).sum()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Ready(usize),
+    FrameDone(usize),
+}
+
+/// Scheduler wrapping a device model.
+#[derive(Debug, Clone)]
+pub struct CpuScheduler<'a> {
+    pub device: &'a DeviceSpec,
+    /// Per-frame base CPU demand in 1-core-seconds (defaults to the
+    /// device's YOLO calibration; the simple-CNN task scales it down).
+    pub base_frame_s: f64,
+}
+
+impl<'a> CpuScheduler<'a> {
+    pub fn new(device: &'a DeviceSpec) -> Self {
+        CpuScheduler { device, base_frame_s: device.base_frame_s }
+    }
+
+    pub fn with_base_frame(mut self, base_frame_s: f64) -> Self {
+        assert!(base_frame_s > 0.0);
+        self.base_frame_s = base_frame_s;
+        self
+    }
+
+    /// Run the simulation for `jobs` (the containers of one experiment).
+    pub fn run(&self, jobs: &[JobSpec]) -> ScheduleResult {
+        assert!(!jobs.is_empty(), "no jobs");
+        let k = jobs.len();
+        let penalty =
+            interference::penalty(k, self.device.cores, self.device.interference_alpha);
+
+        // Per-frame wall time for each job under its cpu share.
+        let service: Vec<f64> = jobs
+            .iter()
+            .map(|j| self.base_frame_s * self.device.curve.time_factor(j.cpus) * penalty)
+            .collect();
+        let busy_each: Vec<f64> =
+            jobs.iter().map(|j| self.device.curve.busy_cores(j.cpus)).collect();
+
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut remaining: Vec<usize> = jobs.iter().map(|j| j.frames).collect();
+        let mut finish: Vec<Option<f64>> = vec![None; k];
+        let mut active: Vec<bool> = vec![false; k];
+        for (i, j) in jobs.iter().enumerate() {
+            if j.frames == 0 {
+                finish[i] = Some(j.ready_at_s);
+            } else {
+                q.push(j.ready_at_s, Ev::Ready(i));
+            }
+        }
+
+        let mut trace: Vec<TraceSegment> = Vec::new();
+        let mut seg_start = 0.0;
+        let mut busy_level = 0.0;
+        let mut frames_done = 0usize;
+        let total_busy = |active: &[bool]| -> f64 {
+            let sum: f64 = active
+                .iter()
+                .zip(&busy_each)
+                .filter(|(a, _)| **a)
+                .map(|(_, b)| *b)
+                .sum();
+            sum.min(self.device.cores)
+        };
+
+        let close_segment = |t: f64, seg_start: &mut f64, busy_level: &mut f64, new_busy: f64, trace: &mut Vec<TraceSegment>| {
+            if (t - *seg_start) > 1e-12 && *busy_level > 0.0 {
+                trace.push(TraceSegment { t0_s: *seg_start, t1_s: t, busy_cores: *busy_level });
+            }
+            *seg_start = t;
+            *busy_level = new_busy;
+        };
+
+        while let Some((t, ev)) = q.pop() {
+            match ev {
+                Ev::Ready(i) => {
+                    active[i] = true;
+                    let nb = total_busy(&active);
+                    close_segment(t, &mut seg_start, &mut busy_level, nb, &mut trace);
+                    q.push(t + service[i], Ev::FrameDone(i));
+                }
+                Ev::FrameDone(i) => {
+                    remaining[i] -= 1;
+                    frames_done += 1;
+                    if remaining[i] == 0 {
+                        active[i] = false;
+                        finish[i] = Some(t);
+                        let nb = total_busy(&active);
+                        close_segment(t, &mut seg_start, &mut busy_level, nb, &mut trace);
+                    } else {
+                        q.push(t + service[i], Ev::FrameDone(i));
+                    }
+                }
+            }
+        }
+
+        let finish_s: Vec<(u64, f64)> = jobs
+            .iter()
+            .zip(&finish)
+            .map(|(j, f)| (j.container_id, f.expect("job never finished")))
+            .collect();
+        let makespan_s =
+            finish_s.iter().map(|(_, f)| *f).fold(0.0f64, f64::max);
+        ScheduleResult { finish_s, makespan_s, trace, frames_done }
+    }
+
+    /// Convenience: the paper's equal-split topology — `k` containers,
+    /// `cores/k` cpus each, frames split as evenly as possible, all
+    /// ready at `ready_at_s`.
+    pub fn run_equal_split(
+        &self,
+        k: usize,
+        total_frames: usize,
+        ready_at_s: f64,
+    ) -> ScheduleResult {
+        assert!(k >= 1);
+        let cpus = self.device.cores / k as f64;
+        let base = total_frames / k;
+        let extra = total_frames % k;
+        let jobs: Vec<JobSpec> = (0..k)
+            .map(|i| JobSpec {
+                container_id: i as u64,
+                frames: base + usize::from(i < extra),
+                cpus,
+                ready_at_s,
+            })
+            .collect();
+        self.run(&jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{close, ensure, forall};
+
+    fn tx2() -> DeviceSpec {
+        DeviceSpec::tx2()
+    }
+
+    #[test]
+    fn single_container_all_cores_matches_ref_time() {
+        let dev = tx2();
+        let sched = CpuScheduler::new(&dev);
+        let res = sched.run_equal_split(1, 720, 0.0);
+        assert_eq!(res.frames_done, 720);
+        assert!((res.makespan_s - dev.ref_time_s).abs() / dev.ref_time_s < 0.01,
+                "makespan={}", res.makespan_s);
+    }
+
+    #[test]
+    fn paper_tx2_time_ratios() {
+        let dev = tx2();
+        let sched = CpuScheduler::new(&dev);
+        let t1 = sched.run_equal_split(1, 720, 0.0).makespan_s;
+        let t2 = sched.run_equal_split(2, 720, 0.0).makespan_s;
+        let t4 = sched.run_equal_split(4, 720, 0.0).makespan_s;
+        assert!((t2 / t1 - 0.81).abs() < 0.02, "T2/T1={}", t2 / t1);
+        assert!((t4 / t1 - 0.75).abs() < 0.02, "T4/T1={}", t4 / t1);
+        // degradation past k = cores (the paper's observation)
+        let t6 = sched.run_equal_split(6, 720, 0.0).makespan_s;
+        assert!(t6 > t4, "t6={t6} should exceed t4={t4}");
+    }
+
+    #[test]
+    fn paper_orin_time_ratios() {
+        let dev = DeviceSpec::orin();
+        let sched = CpuScheduler::new(&dev);
+        let t1 = sched.run_equal_split(1, 720, 0.0).makespan_s;
+        for (k, want) in [(2usize, 0.57), (4, 0.38), (12, 0.30)] {
+            let tk = sched.run_equal_split(k, 720, 0.0).makespan_s;
+            assert!((tk / t1 - want).abs() < 0.02, "k={k}: {}", tk / t1);
+        }
+    }
+
+    #[test]
+    fn trace_covers_run_and_integrates() {
+        let dev = tx2();
+        let res = CpuScheduler::new(&dev).run_equal_split(2, 100, 0.0);
+        assert!(!res.trace.is_empty());
+        assert!((res.trace[0].t0_s - 0.0).abs() < 1e-9);
+        let last = res.trace.last().unwrap();
+        assert!((last.t1_s - res.makespan_s).abs() < 1e-9);
+        // segments are contiguous and ordered
+        for w in res.trace.windows(2) {
+            assert!(w[0].t1_s <= w[1].t0_s + 1e-9);
+        }
+        // busy never exceeds cores
+        for seg in &res.trace {
+            assert!(seg.busy_cores <= dev.cores + 1e-9);
+        }
+    }
+
+    #[test]
+    fn busy_at_lookup() {
+        let dev = tx2();
+        let res = CpuScheduler::new(&dev).run_equal_split(4, 80, 0.0);
+        assert!(res.busy_at(res.makespan_s / 2.0) > 0.0);
+        assert_eq!(res.busy_at(res.makespan_s + 1.0), 0.0);
+        assert_eq!(res.busy_at(-1.0), 0.0);
+    }
+
+    #[test]
+    fn staggered_ready_times_respected() {
+        let dev = tx2();
+        let sched = CpuScheduler::new(&dev);
+        let jobs = [
+            JobSpec { container_id: 0, frames: 10, cpus: 2.0, ready_at_s: 0.0 },
+            JobSpec { container_id: 1, frames: 10, cpus: 2.0, ready_at_s: 5.0 },
+        ];
+        let res = sched.run(&jobs);
+        let f0 = res.finish_s[0].1;
+        let f1 = res.finish_s[1].1;
+        assert!(f1 > f0, "late starter finishes later");
+        assert!(f1 >= 5.0 + 10.0 * dev.base_frame_s * dev.curve.time_factor(2.0) - 1e-9);
+    }
+
+    #[test]
+    fn zero_frame_job_finishes_immediately() {
+        let dev = tx2();
+        let jobs = [
+            JobSpec { container_id: 0, frames: 0, cpus: 4.0, ready_at_s: 1.0 },
+            JobSpec { container_id: 1, frames: 5, cpus: 4.0, ready_at_s: 0.0 },
+        ];
+        let res = CpuScheduler::new(&dev).run(&jobs);
+        assert_eq!(res.finish_s[0].1, 1.0);
+        assert_eq!(res.frames_done, 5);
+    }
+
+    #[test]
+    fn frame_conservation_property() {
+        let dev = tx2();
+        forall(
+            31,
+            40,
+            |r| {
+                let k = r.range_u64(1, 6) as usize;
+                let frames = r.range_u64(1, 500) as usize;
+                (k, frames)
+            },
+            |&(k, frames)| {
+                let res = CpuScheduler::new(&dev).run_equal_split(k, frames, 0.0);
+                ensure(res.frames_done == frames, "lost frames")?;
+                // core-seconds ~ frames * base / efficiency-type bounds
+                ensure(res.core_seconds() > 0.0, "no work recorded")
+            },
+        );
+    }
+
+    #[test]
+    fn equal_split_balances_frames() {
+        let dev = tx2();
+        // 722 frames over 4 containers -> 181,181,180,180
+        let res = CpuScheduler::new(&dev).run_equal_split(4, 722, 0.0);
+        assert_eq!(res.frames_done, 722);
+        // finish times of the two frame-count classes differ by one service
+        let mut finishes: Vec<f64> = res.finish_s.iter().map(|(_, f)| *f).collect();
+        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let service = dev.base_frame_s * dev.curve.time_factor(1.0);
+        assert!(close(finishes[3] - finishes[0], service, 1e-6).is_ok());
+    }
+}

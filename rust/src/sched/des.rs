@@ -1,0 +1,169 @@
+//! Discrete-event simulation core: a monotonic clock + time-ordered
+//! event queue with stable FIFO ordering for simultaneous events.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at `time_s`. `seq` breaks ties FIFO.
+#[derive(Debug, Clone)]
+pub struct ScheduledEvent<E> {
+    pub time_s: f64,
+    seq: u64,
+    pub event: E,
+}
+
+impl<E> PartialEq for ScheduledEvent<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_s == other.time_s && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for ScheduledEvent<E> {}
+
+impl<E> Ord for ScheduledEvent<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so earliest time pops first,
+        // lowest seq first among ties.
+        other
+            .time_s
+            .partial_cmp(&self.time_s)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> PartialOrd for ScheduledEvent<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Time-ordered event queue with a monotonic clock.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<ScheduledEvent<E>>,
+    now_s: f64,
+    next_seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now_s: 0.0, next_seq: 0 }
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Schedule `event` at absolute time `time_s` (>= now).
+    pub fn push(&mut self, time_s: f64, event: E) {
+        assert!(
+            time_s >= self.now_s - 1e-12,
+            "cannot schedule in the past: {time_s} < {}",
+            self.now_s
+        );
+        assert!(time_s.is_finite(), "non-finite event time");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(ScheduledEvent { time_s, seq, event });
+    }
+
+    /// Schedule relative to now.
+    pub fn push_in(&mut self, delay_s: f64, event: E) {
+        assert!(delay_s >= 0.0);
+        self.push(self.now_s + delay_s, event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its time.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|se| {
+            debug_assert!(se.time_s >= self.now_s - 1e-12, "clock went backwards");
+            self.now_s = self.now_s.max(se.time_s);
+            (se.time_s, se.event)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.now_s(), 3.0);
+    }
+
+    #[test]
+    fn simultaneous_events_are_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(5.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(2.0, ());
+        q.pop();
+        assert_eq!(q.now_s(), 2.0);
+        q.push_in(0.5, ());
+        assert_eq!(q.pop().unwrap().0, 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot schedule in the past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ());
+        q.pop();
+        q.push(1.0, ());
+    }
+
+    #[test]
+    fn random_order_property() {
+        forall(
+            17,
+            50,
+            |r: &mut Rng| (0..100).map(|_| r.range_f64(0.0, 1000.0)).collect::<Vec<f64>>(),
+            |times| {
+                let mut q = EventQueue::new();
+                for &t in times {
+                    q.push(t, ());
+                }
+                let mut prev = f64::NEG_INFINITY;
+                while let Some((t, ())) = q.pop() {
+                    ensure(t >= prev, format!("out of order: {t} after {prev}"))?;
+                    prev = t;
+                }
+                Ok(())
+            },
+        );
+    }
+}

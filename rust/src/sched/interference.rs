@@ -1,0 +1,94 @@
+//! Multi-container interference model.
+//!
+//! The paper observes (TX2, §VI): "when the number of containers is
+//! increased beyond the number of available CPU cores ... it becomes
+//! challenging for the CPU scheduler to allocate the CPU cores
+//! effectively, worsening the performance". Below the core count the
+//! CFS fair-sharing is essentially lossless; beyond it, context-switch
+//! churn and cache thrash add a penalty that grows with the
+//! oversubscription ratio.
+//!
+//! `I(k) = 1 + alpha * max(0, k - C) / C`, applied multiplicatively to
+//! per-frame service time. `alpha` is a calibrated device constant
+//! (ablation A2 sweeps it; 0 disables the model and — as the ablation
+//! shows — erases the paper's observed TX2 degradation past k=4).
+
+/// Interference multiplier for `k` containers on `cores` CPUs.
+pub fn penalty(k: usize, cores: f64, alpha: f64) -> f64 {
+    assert!(k >= 1 && cores > 0.0 && alpha >= 0.0);
+    let over = (k as f64 - cores).max(0.0);
+    1.0 + alpha * over / cores
+}
+
+/// Context-switch overhead estimate (seconds of lost CPU per second):
+/// each oversubscribed container forces ~`switches_per_s` involuntary
+/// switches costing `switch_cost_s` each. Used by the A2 ablation to
+/// ground `alpha` in first principles.
+pub fn context_switch_overhead(
+    k: usize,
+    cores: f64,
+    switches_per_s: f64,
+    switch_cost_s: f64,
+) -> f64 {
+    let over = (k as f64 - cores).max(0.0);
+    over * switches_per_s * switch_cost_s / cores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+
+    #[test]
+    fn no_penalty_at_or_below_core_count() {
+        assert_eq!(penalty(1, 4.0, 0.4), 1.0);
+        assert_eq!(penalty(4, 4.0, 0.4), 1.0);
+        assert_eq!(penalty(12, 12.0, 0.4), 1.0);
+    }
+
+    #[test]
+    fn penalty_grows_past_core_count() {
+        let p5 = penalty(5, 4.0, 0.4);
+        let p6 = penalty(6, 4.0, 0.4);
+        assert!(p5 > 1.0 && p6 > p5);
+        assert!((p6 - 1.2).abs() < 1e-12); // 1 + 0.4 * 2/4
+    }
+
+    #[test]
+    fn alpha_zero_disables() {
+        for k in 1..=16 {
+            assert_eq!(penalty(k, 4.0, 0.0), 1.0);
+        }
+    }
+
+    #[test]
+    fn switch_overhead_scales() {
+        assert_eq!(context_switch_overhead(4, 4.0, 100.0, 1e-5), 0.0);
+        let o6 = context_switch_overhead(6, 4.0, 100.0, 1e-5);
+        let o8 = context_switch_overhead(8, 4.0, 100.0, 1e-5);
+        assert!(o6 > 0.0 && o8 > o6);
+    }
+
+    #[test]
+    fn penalty_properties() {
+        forall(
+            23,
+            200,
+            |r| {
+                (
+                    r.range_u64(1, 32) as usize,
+                    r.range_f64(1.0, 16.0),
+                    r.range_f64(0.0, 2.0),
+                )
+            },
+            |&(k, cores, alpha)| {
+                let p = penalty(k, cores, alpha);
+                ensure(p >= 1.0, "penalty below 1")?;
+                ensure(
+                    penalty(k + 1, cores, alpha) >= p,
+                    "penalty not monotone in k",
+                )
+            },
+        );
+    }
+}

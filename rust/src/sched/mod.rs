@@ -1,0 +1,12 @@
+//! CPU scheduling substrate: a discrete-event simulation core (`des`)
+//! and a fair multicore scheduler (`cpu`) that executes container
+//! workloads over it, producing the busy-core trace the power meter
+//! integrates. `interference` models the paper's observed degradation
+//! when more containers than cores fight the scheduler.
+
+pub mod cpu;
+pub mod des;
+pub mod interference;
+
+pub use cpu::{CpuScheduler, JobSpec, ScheduleResult, TraceSegment};
+pub use des::{EventQueue, ScheduledEvent};

@@ -1,0 +1,160 @@
+//! Serving loop: an open-loop request generator + FIFO job queue over
+//! the [`Coordinator`], reporting latency percentiles and throughput —
+//! the "MEC server" harness around the paper's method.
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, InferenceJob};
+use crate::util::rng::Rng;
+use crate::util::stats::{summarize, Summary};
+use crate::workload::{ArrivalProcess, TaskProfile, Video};
+
+/// Workload description for a serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Number of jobs to serve.
+    pub jobs: usize,
+    /// Mean inter-arrival time (s, exponential); 0 = closed loop
+    /// (next job arrives when the previous finishes).
+    pub mean_interarrival_s: f64,
+    /// Explicit arrival process (overrides `mean_interarrival_s` when
+    /// set) — lets serving experiments use bursty MMPP traffic.
+    pub arrival: Option<ArrivalProcess>,
+    /// Frames per job video.
+    pub frames_per_job: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            jobs: 20,
+            mean_interarrival_s: 0.0,
+            arrival: None,
+            frames_per_job: 96,
+            seed: 7,
+        }
+    }
+}
+
+/// Serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub jobs: usize,
+    pub frames: usize,
+    /// End-to-end per-job latency (queue wait + service), seconds.
+    pub latency: Summary,
+    /// Service time only.
+    pub service: Summary,
+    pub wall_s: f64,
+    pub jobs_per_s: f64,
+    pub frames_per_s: f64,
+    pub total_energy_j: f64,
+}
+
+/// Run a serving session. Time semantics depend on the executor mode:
+/// in SIM the "clock" is simulated device time; in REAL it is
+/// wall-clock.
+pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeReport> {
+    assert!(cfg.jobs > 0);
+    let mut rng = Rng::new(cfg.seed);
+
+    // Open-loop arrival times (closed loop computes arrivals on the fly:
+    // the next job arrives exactly when the previous one finishes).
+    let (open_loop, arrivals) = match (&cfg.arrival, cfg.mean_interarrival_s) {
+        (Some(process), _) => (true, process.arrivals(cfg.jobs, &mut rng)),
+        (None, mean) if mean > 0.0 => (
+            true,
+            ArrivalProcess::Poisson { rate_per_s: 1.0 / mean }.arrivals(cfg.jobs, &mut rng),
+        ),
+        _ => (false, vec![0.0; cfg.jobs]),
+    };
+
+    let mut clock = 0.0f64; // when the server becomes free
+    let mut latencies = Vec::with_capacity(cfg.jobs);
+    let mut services = Vec::with_capacity(cfg.jobs);
+    let mut total_energy = 0.0;
+    let mut frames = 0usize;
+
+    for (i, &open_arrival) in arrivals.iter().enumerate() {
+        let arrival = if open_loop { open_arrival } else { clock };
+        let job = InferenceJob {
+            id: i as u64,
+            video: Video::with_frames("serve", cfg.frames_per_job, 24.0),
+            task: TaskProfile::yolo_tiny(),
+        };
+        let start = clock.max(arrival);
+        let res = coordinator.submit(job)?;
+        let service = res.result.time_s;
+        let finish = start + service;
+        latencies.push(finish - arrival);
+        services.push(service);
+        total_energy += res.result.energy_j;
+        frames += res.result.frames;
+        clock = finish;
+    }
+
+    let wall = clock;
+    Ok(ServeReport {
+        jobs: cfg.jobs,
+        frames,
+        latency: summarize(&latencies),
+        service: summarize(&services),
+        wall_s: wall,
+        jobs_per_s: cfg.jobs as f64 / wall,
+        frames_per_s: frames as f64 / wall,
+        total_energy_j: total_energy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::router::SplitPolicy;
+
+    fn coordinator(k: usize) -> Coordinator {
+        Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(k))
+    }
+
+    #[test]
+    fn closed_loop_latency_equals_service() {
+        let mut c = coordinator(2);
+        let report = serve(
+            &mut c,
+            &ServeConfig { jobs: 5, mean_interarrival_s: 0.0, frames_per_job: 48, seed: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(report.jobs, 5);
+        assert_eq!(report.frames, 240);
+        // closed loop: no queueing wait
+        assert!((report.latency.mean - report.service.mean).abs() < 1e-9);
+        assert!(report.jobs_per_s > 0.0);
+    }
+
+    #[test]
+    fn open_loop_queueing_adds_wait() {
+        // Arrivals much faster than service -> latency >> service.
+        let mut c = coordinator(1);
+        let report = serve(
+            &mut c,
+            &ServeConfig { jobs: 10, mean_interarrival_s: 0.01, frames_per_job: 48, seed: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(report.latency.mean > report.service.mean * 2.0);
+    }
+
+    #[test]
+    fn splitting_raises_throughput() {
+        let cfgs = ServeConfig { jobs: 8, mean_interarrival_s: 0.0, frames_per_job: 96, seed: 3, ..Default::default() };
+        let r1 = serve(&mut coordinator(1), &cfgs).unwrap();
+        let r4 = serve(&mut coordinator(4), &cfgs).unwrap();
+        assert!(
+            r4.frames_per_s > r1.frames_per_s * 1.2,
+            "split {} vs single {}",
+            r4.frames_per_s,
+            r1.frames_per_s
+        );
+        assert!(r4.total_energy_j < r1.total_energy_j);
+    }
+}

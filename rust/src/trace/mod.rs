@@ -1,0 +1,157 @@
+//! Experiment trace recording + replay (extension).
+//!
+//! Every experiment can be recorded as a JSON trace (config + metrics +
+//! per-segment outcomes) for provenance, and replayed later to check
+//! reproducibility — SIM runs are deterministic, so a replay must match
+//! the recorded metrics exactly.
+
+use anyhow::{Context, Result};
+
+use crate::config::{ExecMode, ExperimentConfig};
+use crate::coordinator::executor::{run_sim, ExperimentResult};
+use crate::util::json::Json;
+
+/// A recorded experiment.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub config: ExperimentConfig,
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    pub segment_finish_s: Vec<f64>,
+}
+
+impl TraceRecord {
+    pub fn capture(cfg: &ExperimentConfig, result: &ExperimentResult) -> Self {
+        TraceRecord {
+            config: cfg.clone(),
+            time_s: result.time_s,
+            energy_j: result.energy_j,
+            avg_power_w: result.avg_power_w,
+            segment_finish_s: result.segments.iter().map(|s| s.finish_s).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("time_s", Json::num(self.time_s)),
+            ("energy_j", Json::num(self.energy_j)),
+            ("avg_power_w", Json::num(self.avg_power_w)),
+            (
+                "segment_finish_s",
+                Json::arr(self.segment_finish_s.iter().map(|&f| Json::num(f))),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let config = ExperimentConfig::from_json(
+            v.get("config").context("trace missing config")?,
+        )?;
+        let num = |k: &str| -> Result<f64> {
+            v.get(k).and_then(Json::as_f64).with_context(|| format!("trace missing {k}"))
+        };
+        Ok(TraceRecord {
+            config,
+            time_s: num("time_s")?,
+            energy_j: num("energy_j")?,
+            avg_power_w: num("avg_power_w")?,
+            segment_finish_s: v
+                .get("segment_finish_s")
+                .and_then(Json::as_array)
+                .context("trace missing segment_finish_s")?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect(),
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Re-run the recorded config and compare. SIM runs must match to
+    /// floating-point noise; returns the replayed result.
+    pub fn replay(&self, tolerance: f64) -> Result<ExperimentResult> {
+        anyhow::ensure!(
+            self.config.mode == ExecMode::Sim,
+            "only SIM traces replay deterministically"
+        );
+        let result = run_sim(&self.config)?;
+        let check = |name: &str, got: f64, want: f64| -> Result<()> {
+            let err = if want == 0.0 { got.abs() } else { ((got - want) / want).abs() };
+            anyhow::ensure!(
+                err <= tolerance,
+                "replay mismatch on {name}: got {got}, recorded {want}"
+            );
+            Ok(())
+        };
+        check("time_s", result.time_s, self.time_s)?;
+        check("energy_j", result.energy_j, self.energy_j)?;
+        check("avg_power_w", result.avg_power_w, self.avg_power_w)?;
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> TraceRecord {
+        let mut cfg = ExperimentConfig::default();
+        cfg.containers = 3;
+        let result = run_sim(&cfg).unwrap();
+        TraceRecord::capture(&cfg, &result)
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = record();
+        let j = r.to_json();
+        let r2 = TraceRecord::from_json(&j).unwrap();
+        assert_eq!(r2.time_s, r.time_s);
+        assert_eq!(r2.energy_j, r.energy_j);
+        assert_eq!(r2.segment_finish_s, r.segment_finish_s);
+        assert_eq!(r2.config.containers, 3);
+    }
+
+    #[test]
+    fn file_roundtrip_and_replay() {
+        let r = record();
+        let path = std::env::temp_dir().join("dsplit_trace_test.json");
+        let path = path.to_str().unwrap();
+        r.save(path).unwrap();
+        let loaded = TraceRecord::load(path).unwrap();
+        let replayed = loaded.replay(1e-9).unwrap();
+        assert_eq!(replayed.containers, 3);
+    }
+
+    #[test]
+    fn replay_detects_tampering() {
+        let mut r = record();
+        r.energy_j *= 1.5; // corrupt the record
+        assert!(r.replay(1e-6).is_err());
+    }
+
+    #[test]
+    fn real_traces_refuse_replay() {
+        let mut r = record();
+        r.config.mode = ExecMode::Real;
+        assert!(r.replay(1e-6).is_err());
+    }
+
+    #[test]
+    fn malformed_json_rejected() {
+        assert!(TraceRecord::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Declarative command-line parser (the offline vendor set has no clap).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`,
+//! positionals, defaults, required options and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One option/flag specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Flags take no value; options do.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+    pub required: bool,
+}
+
+impl OptSpec {
+    pub fn opt(name: &'static str, help: &'static str) -> Self {
+        OptSpec { name, help, is_flag: false, default: None, required: false }
+    }
+
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        OptSpec { name, help, is_flag: true, default: None, required: false }
+    }
+
+    pub fn with_default(mut self, d: &'static str) -> Self {
+        self.default = Some(d);
+        self
+    }
+
+    pub fn required(mut self) -> Self {
+        self.required = true;
+        self
+    }
+}
+
+/// A parsed invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|_| CliError::BadValue(name.into(), v.into())))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|_| CliError::BadValue(name.into(), v.into())))
+            .transpose()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+    #[error("invalid value for --{0}: {1:?}")]
+    BadValue(String, String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+/// A command = name + description + option specs.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, spec: OptSpec) -> Self {
+        self.opts.push(spec);
+        self
+    }
+
+    /// Parse raw args (not including argv[0] / the subcommand itself).
+    pub fn parse<I, S>(&self, args: I) -> Result<Parsed, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut parsed = Parsed::default();
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                parsed.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = args.into_iter().map(|s| s.as_ref().to_string()).peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.is_flag {
+                    parsed.flags.insert(name, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    parsed.values.insert(name, val);
+                }
+            } else {
+                parsed.positionals.push(arg);
+            }
+        }
+        for spec in &self.opts {
+            if spec.required && !parsed.values.contains_key(spec.name) {
+                return Err(CliError::MissingRequired(spec.name.to_string()));
+            }
+        }
+        Ok(parsed)
+    }
+
+    /// Generated help text.
+    pub fn help(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(out, "OPTIONS:");
+        for spec in &self.opts {
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            let mut line = format!("  --{}{}", spec.name, kind);
+            while line.len() < 30 {
+                line.push(' ');
+            }
+            let _ = write!(out, "{line}{}", spec.help);
+            if let Some(d) = spec.default {
+                let _ = write!(out, " [default: {d}]");
+            }
+            if spec.required {
+                let _ = write!(out, " (required)");
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("demo", "test command")
+            .opt(OptSpec::opt("device", "device preset").with_default("tx2"))
+            .opt(OptSpec::opt("containers", "number of containers"))
+            .opt(OptSpec::flag("verbose", "chatty output"))
+            .opt(OptSpec::opt("out", "output path").required())
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let p = cmd()
+            .parse(["--device", "orin", "--verbose", "--out=x.json", "pos1"])
+            .unwrap();
+        assert_eq!(p.get("device"), Some("orin"));
+        assert!(p.flag("verbose"));
+        assert_eq!(p.get("out"), Some("x.json"));
+        assert_eq!(p.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse(["--out", "o"]).unwrap();
+        assert_eq!(p.get("device"), Some("tx2"));
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let p = cmd().parse(["--containers", "4", "--out", "o"]).unwrap();
+        assert_eq!(p.get_usize("containers").unwrap(), Some(4));
+        assert_eq!(p.get_f64("containers").unwrap(), Some(4.0));
+        let p = cmd().parse(["--containers", "x", "--out", "o"]).unwrap();
+        assert!(p.get_usize("containers").is_err());
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(
+            cmd().parse(["--nope", "--out", "o"]).unwrap_err(),
+            CliError::Unknown("nope".into())
+        );
+        assert_eq!(
+            cmd().parse(["--out"]).unwrap_err(),
+            CliError::MissingValue("out".into())
+        );
+        assert_eq!(
+            cmd().parse([] as [&str; 0]).unwrap_err(),
+            CliError::MissingRequired("out".into())
+        );
+        assert_eq!(cmd().parse(["--help"]).unwrap_err(), CliError::HelpRequested);
+    }
+
+    #[test]
+    fn help_mentions_every_option() {
+        let h = cmd().help();
+        for name in ["device", "containers", "verbose", "out"] {
+            assert!(h.contains(&format!("--{name}")), "{h}");
+        }
+        assert!(h.contains("[default: tx2]"));
+        assert!(h.contains("(required)"));
+    }
+}

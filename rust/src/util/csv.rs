@@ -1,0 +1,95 @@
+//! Minimal CSV writer for experiment outputs (RFC 4180 quoting).
+
+use std::fmt::Write as _;
+
+/// Accumulates rows and renders a CSV string; `save` writes it to disk.
+#[derive(Debug, Clone)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        CsvWriter { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Push one row; panics if the arity doesn't match the header
+    /// (an arity bug is always a programmer error here).
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let write_row = |out: &mut String, row: &[String]| {
+            for (i, cell) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+                    let _ = write!(out, "\"{}\"", cell.replace('"', "\"\""));
+                } else {
+                    out.push_str(cell);
+                }
+            }
+            out.push('\n');
+        };
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut w = CsvWriter::new(["k", "time_s"]);
+        w.row(["1", "3.25"]);
+        w.row(["2", "2.61"]);
+        assert_eq!(w.render(), "k,time_s\n1,3.25\n2,2.61\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn quotes_special_cells() {
+        let mut w = CsvWriter::new(["a", "b"]);
+        w.row(["x,y", "he said \"hi\""]);
+        assert_eq!(w.render(), "a,b\n\"x,y\",\"he said \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::new(["a", "b"]);
+        w.row(["only-one"]);
+    }
+}

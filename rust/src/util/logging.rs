@@ -1,0 +1,80 @@
+//! Tiny `log`-facade backend: leveled, timestamped stderr logger,
+//! level picked via `DSPLIT_LOG` (error|warn|info|debug|trace).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            let t = START.elapsed().as_secs_f64();
+            eprintln!(
+                "[{t:9.3}s {:5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name; defaults to `Info` on anything unrecognized.
+pub fn parse_level(s: &str) -> log::LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => log::LevelFilter::Off,
+        "error" => log::LevelFilter::Error,
+        "warn" => log::LevelFilter::Warn,
+        "debug" => log::LevelFilter::Debug,
+        "trace" => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    }
+}
+
+/// Install the logger once (idempotent; later calls are no-ops).
+pub fn init() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = std::env::var("DSPLIT_LOG")
+        .map(|v| parse_level(&v))
+        .unwrap_or(log::LevelFilter::Info);
+    let logger = Box::new(StderrLogger { level });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("error"), log::LevelFilter::Error);
+        assert_eq!(parse_level("TRACE"), log::LevelFilter::Trace);
+        assert_eq!(parse_level("bogus"), log::LevelFilter::Info);
+        assert_eq!(parse_level("off"), log::LevelFilter::Off);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init(); // must not panic
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (no serde / clap / rand / proptest in the vendor set): JSON, CLI
+//! parsing, PRNG, statistics, CSV, logging and a property-test harness.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,280 @@
+//! Statistics + small linear algebra used across the simulator, the
+//! model-fitting module and the bench harness: summary stats, Welford
+//! online accumulation, percentiles, Gaussian elimination and ordinary
+//! least squares.
+
+/// Summary of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Compute a full summary (sorts a copy for the percentiles).
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize of empty sample");
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = mean(xs);
+    Summary {
+        n: xs.len(),
+        mean,
+        std: stddev(xs),
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        p50: percentile_sorted(&sorted, 50.0),
+        p95: percentile_sorted(&sorted, 95.0),
+        p99: percentile_sorted(&sorted, 99.0),
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice; `q` in [0,100].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (q / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// Welford online mean/variance accumulator — the power meter uses this
+/// so the 10 ms sampling loop allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Solve `A x = b` in-place by Gaussian elimination with partial
+/// pivoting. `a` is row-major n×n. Returns `None` if singular.
+pub fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for row in col + 1..n {
+            if a[row * n + col].abs() > a[piv * n + col].abs() {
+                piv = row;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for k in 0..n {
+                a.swap(col * n + k, piv * n + k);
+            }
+            b.swap(col, piv);
+        }
+        // eliminate
+        for row in col + 1..n {
+            let f = a[row * n + col] / a[col * n + col];
+            for k in col..n {
+                a[row * n + k] -= f * a[col * n + k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row * n + k] * x[k];
+        }
+        x[row] = acc / a[row * n + row];
+    }
+    Some(x)
+}
+
+/// Ordinary least squares: find beta minimizing ||X beta - y||² via the
+/// normal equations. `x` is row-major (rows × cols).
+pub fn least_squares(x: &[f64], y: &[f64], rows: usize, cols: usize) -> Option<Vec<f64>> {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(y.len(), rows);
+    // XtX (cols × cols) and Xty
+    let mut xtx = vec![0.0; cols * cols];
+    let mut xty = vec![0.0; cols];
+    for r in 0..rows {
+        for i in 0..cols {
+            let xi = x[r * cols + i];
+            xty[i] += xi * y[r];
+            for j in 0..cols {
+                xtx[i * cols + j] += xi * x[r * cols + j];
+            }
+        }
+    }
+    solve_linear(&mut xtx, &mut xty, cols)
+}
+
+/// Coefficient of determination for predictions vs observations.
+pub fn r_squared(pred: &[f64], obs: &[f64]) -> f64 {
+    assert_eq!(pred.len(), obs.len());
+    let m = mean(obs);
+    let ss_tot: f64 = obs.iter().map(|y| (y - m).powi(2)).sum();
+    let ss_res: f64 = obs.iter().zip(pred).map(|(y, p)| (y - p).powi(2)).sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 { 1.0 } else { f64::NEG_INFINITY }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolation() {
+        let sorted = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&sorted, 0.0), 10.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 40.0);
+        assert!((percentile_sorted(&sorted, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64) * 0.37 - 5.0).collect();
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((o.variance() - variance(&xs)).abs() < 1e-9);
+        assert_eq!(o.min(), xs[0]);
+        assert_eq!(o.max(), *xs.last().unwrap());
+    }
+
+    #[test]
+    fn solve_identity_and_known_system() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut b = vec![3.0, 4.0];
+        assert_eq!(solve_linear(&mut a, &mut b, 2).unwrap(), vec![3.0, 4.0]);
+
+        // 2x + y = 5; x - y = 1  => x = 2, y = 1
+        let mut a = vec![2.0, 1.0, 1.0, -1.0];
+        let mut b = vec![5.0, 1.0];
+        let x = solve_linear(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-12 && (x[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve_linear(&mut a, &mut b, 2).is_none());
+    }
+
+    #[test]
+    fn least_squares_recovers_line() {
+        // y = 3 + 2x with no noise
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut design = Vec::new();
+        let mut y = Vec::new();
+        for &x in &xs {
+            design.extend_from_slice(&[1.0, x]);
+            y.push(3.0 + 2.0 * x);
+        }
+        let beta = least_squares(&design, &y, xs.len(), 2).unwrap();
+        assert!((beta[0] - 3.0).abs() < 1e-9);
+        assert!((beta[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn r_squared_perfect_and_mean_model() {
+        let obs = [1.0, 2.0, 3.0];
+        assert!((r_squared(&obs, &obs) - 1.0).abs() < 1e-12);
+        let pred = [2.0, 2.0, 2.0]; // mean model -> R² = 0
+        assert!(r_squared(&pred, &obs).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! Arrival processes (extension): request-arrival models for serving
+//! experiments — Poisson, deterministic, and a two-state MMPP for
+//! bursty edge traffic (e.g. motion-triggered cameras).
+
+use crate::util::rng::Rng;
+
+/// An arrival process generating inter-arrival gaps.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Fixed gap.
+    Deterministic { gap_s: f64 },
+    /// Exponential gaps at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// Markov-modulated Poisson: alternates calm/burst states.
+    Mmpp {
+        calm_rate_per_s: f64,
+        burst_rate_per_s: f64,
+        /// Mean sojourn in each state, seconds.
+        mean_calm_s: f64,
+        mean_burst_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Generate the first `n` arrival timestamps (sorted, from 0).
+    pub fn arrivals(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0;
+        match self {
+            ArrivalProcess::Deterministic { gap_s } => {
+                assert!(*gap_s > 0.0);
+                for i in 0..n {
+                    out.push(i as f64 * gap_s);
+                }
+            }
+            ArrivalProcess::Poisson { rate_per_s } => {
+                assert!(*rate_per_s > 0.0);
+                for _ in 0..n {
+                    t += rng.exponential(*rate_per_s);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Mmpp {
+                calm_rate_per_s,
+                burst_rate_per_s,
+                mean_calm_s,
+                mean_burst_s,
+            } => {
+                assert!(*calm_rate_per_s > 0.0 && *burst_rate_per_s > 0.0);
+                let mut in_burst = false;
+                let mut state_ends = rng.exponential(1.0 / mean_calm_s);
+                while out.len() < n {
+                    let rate = if in_burst { *burst_rate_per_s } else { *calm_rate_per_s };
+                    let gap = rng.exponential(rate);
+                    if t + gap > state_ends {
+                        // state switch before the next arrival
+                        t = state_ends;
+                        in_burst = !in_burst;
+                        let mean = if in_burst { *mean_burst_s } else { *mean_calm_s };
+                        state_ends = t + rng.exponential(1.0 / mean);
+                        continue;
+                    }
+                    t += gap;
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Long-run mean rate (arrivals per second).
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Deterministic { gap_s } => 1.0 / gap_s,
+            ArrivalProcess::Poisson { rate_per_s } => *rate_per_s,
+            ArrivalProcess::Mmpp {
+                calm_rate_per_s,
+                burst_rate_per_s,
+                mean_calm_s,
+                mean_burst_s,
+            } => {
+                let total = mean_calm_s + mean_burst_s;
+                (calm_rate_per_s * mean_calm_s + burst_rate_per_s * mean_burst_s) / total
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn deterministic_gaps() {
+        let mut rng = Rng::new(1);
+        let a = ArrivalProcess::Deterministic { gap_s: 2.0 }.arrivals(4, &mut rng);
+        assert_eq!(a, vec![0.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut rng = Rng::new(2);
+        let a = ArrivalProcess::Poisson { rate_per_s: 5.0 }.arrivals(20_000, &mut rng);
+        let rate = a.len() as f64 / a.last().unwrap();
+        assert!((rate - 5.0).abs() < 0.15, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_positive() {
+        let mut rng = Rng::new(3);
+        for p in [
+            ArrivalProcess::Poisson { rate_per_s: 2.0 },
+            ArrivalProcess::Mmpp {
+                calm_rate_per_s: 1.0,
+                burst_rate_per_s: 20.0,
+                mean_calm_s: 10.0,
+                mean_burst_s: 2.0,
+            },
+        ] {
+            let a = p.arrivals(500, &mut rng);
+            assert_eq!(a.len(), 500);
+            assert!(a.windows(2).all(|w| w[1] >= w[0]));
+            assert!(a[0] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // Squared coefficient of variation of gaps: Poisson ~1, MMPP > 1.
+        let mut rng = Rng::new(4);
+        let mmpp = ArrivalProcess::Mmpp {
+            calm_rate_per_s: 0.5,
+            burst_rate_per_s: 30.0,
+            mean_calm_s: 20.0,
+            mean_burst_s: 2.0,
+        };
+        let gaps = |xs: &[f64]| -> Vec<f64> { xs.windows(2).map(|w| w[1] - w[0]).collect() };
+        let a_p = ArrivalProcess::Poisson { rate_per_s: mmpp.mean_rate() }
+            .arrivals(20_000, &mut rng);
+        let a_m = mmpp.arrivals(20_000, &mut rng);
+        let cv2 = |g: &[f64]| stats::variance(g) / stats::mean(g).powi(2);
+        let cv2_p = cv2(&gaps(&a_p));
+        let cv2_m = cv2(&gaps(&a_m));
+        assert!((cv2_p - 1.0).abs() < 0.12, "poisson cv2={cv2_p}");
+        assert!(cv2_m > 1.5, "mmpp cv2={cv2_m} should be bursty");
+    }
+
+    #[test]
+    fn mean_rate_formulae() {
+        assert_eq!(ArrivalProcess::Deterministic { gap_s: 0.5 }.mean_rate(), 2.0);
+        assert_eq!(ArrivalProcess::Poisson { rate_per_s: 3.0 }.mean_rate(), 3.0);
+        let m = ArrivalProcess::Mmpp {
+            calm_rate_per_s: 1.0,
+            burst_rate_per_s: 9.0,
+            mean_calm_s: 5.0,
+            mean_burst_s: 5.0,
+        };
+        assert_eq!(m.mean_rate(), 5.0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Synthetic frame generation for REAL-mode execution.
+//!
+//! The paper's finding that frame *content* does not affect cost lets us
+//! feed deterministic synthetic frames to the PJRT executable. Frames
+//! are f32 NHWC in [0, 1], seeded per frame index so any segment can be
+//! regenerated independently by any container (no shared state on the
+//! parallel path).
+
+use crate::util::rng::Rng;
+
+/// Generates frames for a given model input shape.
+#[derive(Debug, Clone)]
+pub struct FrameGenerator {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    seed: u64,
+}
+
+impl FrameGenerator {
+    pub fn new(height: usize, width: usize, channels: usize, seed: u64) -> Self {
+        assert!(height > 0 && width > 0 && channels > 0);
+        FrameGenerator { height, width, channels, seed }
+    }
+
+    /// For the tiny-YOLO input (96, 96, 3).
+    pub fn yolo(seed: u64) -> Self {
+        FrameGenerator::new(96, 96, 3, seed)
+    }
+
+    pub fn frame_elems(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+
+    /// Generate frame `index` (deterministic in (seed, index)).
+    pub fn frame(&self, index: usize) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        (0..self.frame_elems()).map(|_| rng.f64() as f32).collect()
+    }
+
+    /// Generate a contiguous batch `[start, start+count)` as one flat
+    /// NHWC buffer (what the PJRT executable takes).
+    pub fn batch(&self, start: usize, count: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(count * self.frame_elems());
+        for i in 0..count {
+            out.extend_from_slice(&self.frame(start + i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_index() {
+        let g = FrameGenerator::yolo(7);
+        assert_eq!(g.frame(3), g.frame(3));
+        assert_ne!(g.frame(3), g.frame(4));
+        let g2 = FrameGenerator::yolo(8);
+        assert_ne!(g.frame(3), g2.frame(3));
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        let g = FrameGenerator::yolo(1);
+        assert!(g.frame(0).iter().all(|v| (0.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn batch_concatenates_frames() {
+        let g = FrameGenerator::new(2, 2, 1, 5);
+        let b = g.batch(10, 3);
+        assert_eq!(b.len(), 3 * 4);
+        assert_eq!(&b[0..4], g.frame(10).as_slice());
+        assert_eq!(&b[4..8], g.frame(11).as_slice());
+        assert_eq!(&b[8..12], g.frame(12).as_slice());
+    }
+
+    #[test]
+    fn segment_independence() {
+        // Container B generating frames 100.. gets the same data whether
+        // or not container A generated 0..100 first.
+        let g = FrameGenerator::yolo(42);
+        let direct = g.frame(100);
+        let _ = g.batch(0, 100);
+        assert_eq!(g.frame(100), direct);
+    }
+
+    #[test]
+    fn yolo_shape() {
+        let g = FrameGenerator::yolo(0);
+        assert_eq!(g.frame_elems(), 96 * 96 * 3);
+        assert_eq!(g.frame(0).len(), 27648);
+    }
+}

@@ -1,0 +1,15 @@
+//! Workload model: videos, synthetic frames, task cost profiles and the
+//! temporal splitter — the substitute for the paper's 30-second test
+//! video and its segmentation.
+
+pub mod arrival;
+pub mod frames;
+pub mod splitter;
+pub mod task;
+pub mod video;
+
+pub use arrival::ArrivalProcess;
+pub use frames::FrameGenerator;
+pub use splitter::{split_even, split_weighted, Segment};
+pub use task::TaskProfile;
+pub use video::Video;

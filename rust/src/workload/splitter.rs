@@ -1,0 +1,177 @@
+//! Temporal data splitting — step (1) of the paper's method:
+//! "The test data ... is split into equal size segments ... along the
+//! time dimension of the video, resulting in the same number of frames
+//! for each segment."
+
+/// A contiguous frame range `[start, start+len)` assigned to one
+/// container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub index: usize,
+    pub start_frame: usize,
+    pub len: usize,
+}
+
+impl Segment {
+    pub fn end_frame(&self) -> usize {
+        self.start_frame + self.len
+    }
+}
+
+/// Split `total_frames` into `k` contiguous, maximally-even segments
+/// (sizes differ by at most one; earlier segments take the remainder).
+pub fn split_even(total_frames: usize, k: usize) -> Vec<Segment> {
+    assert!(k >= 1, "k must be >= 1");
+    let base = total_frames / k;
+    let extra = total_frames % k;
+    let mut segments = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        segments.push(Segment { index: i, start_frame: start, len });
+        start += len;
+    }
+    segments
+}
+
+/// Split proportionally to `weights` (ablation A3: uneven splits).
+/// Uses largest-remainder apportionment so lengths sum exactly.
+pub fn split_weighted(total_frames: usize, weights: &[f64]) -> Vec<Segment> {
+    assert!(!weights.is_empty());
+    assert!(weights.iter().all(|w| *w > 0.0), "weights must be positive");
+    let wsum: f64 = weights.iter().sum();
+    let ideal: Vec<f64> =
+        weights.iter().map(|w| total_frames as f64 * w / wsum).collect();
+    let mut lens: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+    let assigned: usize = lens.iter().sum();
+    // distribute the remainder by largest fractional part
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = ideal[a] - ideal[a].floor();
+        let fb = ideal[b] - ideal[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    for &i in order.iter().take(total_frames - assigned) {
+        lens[i] += 1;
+    }
+    let mut segments = Vec::with_capacity(weights.len());
+    let mut start = 0;
+    for (i, len) in lens.into_iter().enumerate() {
+        segments.push(Segment { index: i, start_frame: start, len });
+        start += len;
+    }
+    segments
+}
+
+/// Invariant check used by tests and the combiner: segments are
+/// contiguous, ordered, disjoint, and cover `[0, total)` exactly.
+pub fn is_exact_cover(segments: &[Segment], total_frames: usize) -> bool {
+    let mut expect = 0;
+    for (i, s) in segments.iter().enumerate() {
+        if s.index != i || s.start_frame != expect {
+            return false;
+        }
+        expect = s.end_frame();
+    }
+    expect == total_frames
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+
+    #[test]
+    fn even_split_exact() {
+        let segs = split_even(720, 4);
+        assert_eq!(segs.len(), 4);
+        assert!(segs.iter().all(|s| s.len == 180));
+        assert!(is_exact_cover(&segs, 720));
+    }
+
+    #[test]
+    fn uneven_remainder_spread() {
+        let segs = split_even(722, 4);
+        let lens: Vec<usize> = segs.iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![181, 181, 180, 180]);
+        assert!(is_exact_cover(&segs, 722));
+    }
+
+    #[test]
+    fn k_larger_than_frames() {
+        let segs = split_even(3, 6);
+        let lens: Vec<usize> = segs.iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![1, 1, 1, 0, 0, 0]);
+        assert!(is_exact_cover(&segs, 3));
+    }
+
+    #[test]
+    fn single_segment_is_whole_video() {
+        let segs = split_even(720, 1);
+        assert_eq!(segs, vec![Segment { index: 0, start_frame: 0, len: 720 }]);
+    }
+
+    #[test]
+    fn weighted_split_proportions() {
+        let segs = split_weighted(100, &[1.0, 3.0]);
+        assert_eq!(segs[0].len, 25);
+        assert_eq!(segs[1].len, 75);
+        assert!(is_exact_cover(&segs, 100));
+    }
+
+    #[test]
+    fn weighted_split_largest_remainder() {
+        let segs = split_weighted(10, &[1.0, 1.0, 1.0]);
+        let lens: Vec<usize> = segs.iter().map(|s| s.len).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 10);
+        assert!(lens.iter().all(|&l| l == 3 || l == 4));
+    }
+
+    #[test]
+    fn split_even_properties() {
+        forall(
+            13,
+            300,
+            |r| (r.range_u64(0, 5000) as usize, r.range_u64(1, 32) as usize),
+            |&(frames, k)| {
+                let segs = split_even(frames, k);
+                ensure(segs.len() == k, "wrong segment count")?;
+                ensure(is_exact_cover(&segs, frames), "not an exact cover")?;
+                let max = segs.iter().map(|s| s.len).max().unwrap();
+                let min = segs.iter().map(|s| s.len).min().unwrap();
+                ensure(max - min <= 1, format!("imbalance: {min}..{max}"))
+            },
+        );
+    }
+
+    #[test]
+    fn split_weighted_properties() {
+        forall(
+            29,
+            200,
+            |r| {
+                let frames = r.range_u64(0, 2000) as usize;
+                let k = r.range_u64(1, 12) as usize;
+                let weights: Vec<f64> =
+                    (0..k).map(|_| r.range_f64(0.1, 10.0)).collect();
+                (frames, weights)
+            },
+            |(frames, weights)| {
+                let segs = split_weighted(*frames, weights);
+                ensure(is_exact_cover(&segs, *frames), "not an exact cover")
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_k_panics() {
+        split_even(10, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nonpositive_weight_panics() {
+        split_weighted(10, &[1.0, 0.0]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Task cost profiles.
+//!
+//! A task is what runs per frame inside a container. The device's
+//! `base_frame_s` is calibrated for YOLOv4-tiny; other tasks (the §VI
+//! simple CNN) scale by their FLOP ratio. In REAL mode the per-frame
+//! cost is *measured* by timing the AOT artifact through PJRT
+//! (`runtime::engine` provides the timing; `calibrated` builds a profile
+//! from it).
+
+/// Cost profile of one inference task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskProfile {
+    pub name: String,
+    /// Analytic FLOPs per frame (from the AOT manifest).
+    pub flops_per_frame: u64,
+    /// Cost relative to the device's YOLO calibration (1.0 = YOLO).
+    pub relative_cost: f64,
+}
+
+/// FLOPs of the tiny-YOLO variant produced by `python/compile/model.py`
+/// (manifest value; asserted against the manifest in integration tests).
+pub const YOLO_TINY_FLOPS: u64 = 41_223_168;
+
+/// FLOPs of the §VI simple CNN.
+pub const SIMPLE_CNN_FLOPS: u64 = 877_824;
+
+impl TaskProfile {
+    /// The paper's main workload.
+    pub fn yolo_tiny() -> Self {
+        TaskProfile {
+            name: "yolo_tiny".to_string(),
+            flops_per_frame: YOLO_TINY_FLOPS,
+            relative_cost: 1.0,
+        }
+    }
+
+    /// The §VI "simple CNN inference task". Relative cost from the FLOP
+    /// ratio (both models run the same kernel path, so FLOPs dominate).
+    pub fn simple_cnn() -> Self {
+        TaskProfile {
+            name: "simple_cnn".to_string(),
+            flops_per_frame: SIMPLE_CNN_FLOPS,
+            relative_cost: SIMPLE_CNN_FLOPS as f64 / YOLO_TINY_FLOPS as f64,
+        }
+    }
+
+    /// Build a profile from a measured per-frame time (REAL mode
+    /// calibration) against a device whose YOLO base time is known.
+    pub fn calibrated(name: &str, flops_per_frame: u64, measured_frame_s: f64, yolo_frame_s: f64) -> Self {
+        assert!(measured_frame_s > 0.0 && yolo_frame_s > 0.0);
+        TaskProfile {
+            name: name.to_string(),
+            flops_per_frame,
+            relative_cost: measured_frame_s / yolo_frame_s,
+        }
+    }
+
+    /// Per-frame base time on `device_base_frame_s` (the device's 1-core
+    /// YOLO time).
+    pub fn base_frame_s(&self, device_base_frame_s: f64) -> f64 {
+        device_base_frame_s * self.relative_cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yolo_is_unit_cost() {
+        let t = TaskProfile::yolo_tiny();
+        assert_eq!(t.relative_cost, 1.0);
+        assert_eq!(t.base_frame_s(1.3556), 1.3556);
+    }
+
+    #[test]
+    fn cnn_is_cheaper() {
+        let t = TaskProfile::simple_cnn();
+        assert!(t.relative_cost < 0.2, "cnn should be ~11x cheaper");
+        assert!(t.relative_cost > 0.0);
+    }
+
+    #[test]
+    fn calibrated_ratio() {
+        let t = TaskProfile::calibrated("x", 1000, 0.5, 1.0);
+        assert_eq!(t.relative_cost, 0.5);
+        assert_eq!(t.base_frame_s(2.0), 1.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Video metadata model.
+//!
+//! The paper's §IV finding drives the design: "the *number of frames* in
+//! a video has the greatest impact on the energy and time needed for
+//! YOLO inference. Other characteristics ... such as the frame size, the
+//! bitrate, or even the number of objects per frame, have minimal
+//! effect". So a `Video` carries all of those attributes (and the E7
+//! bench verifies their non-effect on the cost model), but only
+//! `frame_count` matters for scheduling.
+
+/// Metadata of an input video.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Video {
+    pub name: String,
+    pub duration_s: f64,
+    pub fps: f64,
+    pub width: u32,
+    pub height: u32,
+    pub bitrate_kbps: u32,
+    /// Mean objects per frame (content complexity; no cost effect).
+    pub objects_per_frame: f64,
+}
+
+impl Video {
+    /// The paper's base experiment: a 30-second video. At 24 fps that is
+    /// 720 frames.
+    pub fn paper_default() -> Self {
+        Video {
+            name: "paper-30s".to_string(),
+            duration_s: 30.0,
+            fps: 24.0,
+            width: 1280,
+            height: 720,
+            bitrate_kbps: 4000,
+            objects_per_frame: 3.0,
+        }
+    }
+
+    pub fn with_frames(name: &str, frames: usize, fps: f64) -> Self {
+        assert!(fps > 0.0);
+        Video {
+            name: name.to_string(),
+            duration_s: frames as f64 / fps,
+            fps,
+            width: 1280,
+            height: 720,
+            bitrate_kbps: 4000,
+            objects_per_frame: 3.0,
+        }
+    }
+
+    /// Total frame count (rounded to nearest; fps*duration is exact for
+    /// the presets).
+    pub fn frame_count(&self) -> usize {
+        (self.duration_s * self.fps).round() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_720_frames() {
+        let v = Video::paper_default();
+        assert_eq!(v.frame_count(), 720);
+        assert_eq!(v.duration_s, 30.0);
+    }
+
+    #[test]
+    fn with_frames_roundtrips() {
+        for frames in [1usize, 7, 100, 719, 720, 1000] {
+            let v = Video::with_frames("t", frames, 24.0);
+            assert_eq!(v.frame_count(), frames, "frames={frames}");
+        }
+    }
+
+    #[test]
+    fn fractional_fps() {
+        let v = Video::with_frames("ntsc", 900, 29.97);
+        assert_eq!(v.frame_count(), 900);
+    }
+}

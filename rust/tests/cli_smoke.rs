@@ -1,0 +1,115 @@
+//! CLI smoke tests: every `dsplit` subcommand through the real binary.
+
+use std::process::Command;
+
+fn dsplit(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_dsplit"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn dsplit");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, text) = dsplit(&[]);
+    assert!(!ok);
+    assert!(text.contains("USAGE"));
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = dsplit(&["--help"]);
+    assert!(ok);
+    for cmd in ["run", "sweep", "cpus", "fit", "optimize", "serve", "trace", "battery"] {
+        assert!(text.contains(cmd), "missing {cmd} in {text}");
+    }
+}
+
+#[test]
+fn run_outputs_metrics_json() {
+    let (ok, text) = dsplit(&["run", "--containers", "4"]);
+    assert!(ok, "{text}");
+    let json_start = text.find('{').expect("json in output");
+    let v = divide_and_save::util::json::Json::parse(text[json_start..].trim()).unwrap();
+    assert_eq!(v.get("containers").unwrap().as_usize(), Some(4));
+    assert!(v.get("time_s").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn sweep_prints_every_k() {
+    let (ok, text) = dsplit(&["sweep", "--device", "tx2", "--frames", "120"]);
+    assert!(ok, "{text}");
+    for k in 1..=6 {
+        assert!(
+            text.lines().any(|l| l.trim_start().starts_with(&format!("{k} "))),
+            "k={k} row missing:\n{text}"
+        );
+    }
+}
+
+#[test]
+fn fit_prints_three_metrics() {
+    let (ok, text) = dsplit(&["fit", "--device", "orin", "--frames", "240"]);
+    assert!(ok, "{text}");
+    for metric in ["Time", "Energy", "Power"] {
+        assert!(text.contains(metric), "{text}");
+    }
+}
+
+#[test]
+fn optimize_reports_best_k() {
+    let (ok, text) = dsplit(&["optimize", "--device", "tx2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("best k:"), "{text}");
+}
+
+#[test]
+fn trace_record_and_replay_roundtrip() {
+    let path = std::env::temp_dir().join("dsplit_cli_trace.json");
+    let path = path.to_str().unwrap();
+    let (ok, text) = dsplit(&["trace", "--containers", "2", "--frames", "120", "--record", path]);
+    assert!(ok, "{text}");
+    let (ok, text) = dsplit(&["trace", "--replay", path]);
+    assert!(ok, "{text}");
+    assert!(text.contains("replay OK"), "{text}");
+}
+
+#[test]
+fn battery_reports_videos_per_charge() {
+    let (ok, text) = dsplit(&["battery", "--device", "orin", "--containers", "12"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("videos per"), "{text}");
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let (ok, text) = dsplit(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+}
+
+#[test]
+fn bad_device_is_diagnostic() {
+    let (ok, text) = dsplit(&["run", "--device", "nano"]);
+    assert!(!ok);
+    assert!(text.contains("nano"), "{text}");
+}
+
+#[test]
+fn variants_lists_artifacts_when_present() {
+    if !std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists()
+    {
+        return;
+    }
+    let (ok, text) = dsplit(&["variants"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("yolo_tiny_b4"), "{text}");
+}

@@ -1,0 +1,152 @@
+//! End-to-end integration: the full coordinator pipeline in both modes,
+//! including the splittability guarantee (same detections regardless of
+//! k) that the paper's method rests on.
+
+use divide_and_save::config::{ExecMode, ExperimentConfig};
+use divide_and_save::coordinator::executor::{run_real, run_sim};
+use divide_and_save::coordinator::router::SplitPolicy;
+use divide_and_save::coordinator::{Coordinator, InferenceJob, OnlineOptimizer};
+use divide_and_save::detect::Detection;
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::workload::{TaskProfile, Video};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn real_cfg(k: usize, frames: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.mode = ExecMode::Real;
+    c.containers = k;
+    c.video = Video::with_frames("e2e", frames, 24.0);
+    c.variant = "yolo_tiny_b4".to_string();
+    c
+}
+
+#[test]
+fn sim_full_paper_grid_is_sane() {
+    // Every (device, k) cell the paper evaluates must run and produce
+    // positive, internally-consistent metrics.
+    for device in DeviceSpec::all() {
+        let k_max = device.memory.max_containers(720);
+        for k in 1..=k_max {
+            let mut cfg = ExperimentConfig::default();
+            cfg.device = device.clone();
+            cfg.containers = k;
+            let r = run_sim(&cfg).unwrap();
+            assert!(r.time_s > 0.0 && r.energy_j > 0.0 && r.avg_power_w > 0.0);
+            // E = P̄ * T must hold to sensor accuracy
+            let err = (r.energy_j - r.avg_power_w * r.time_s).abs() / r.energy_j;
+            assert!(err < 1e-6, "{} k={k}: E != P*T", device.name);
+            assert_eq!(r.segments.len(), k);
+            assert_eq!(r.frames, 720);
+        }
+    }
+}
+
+#[test]
+fn real_mode_detections_invariant_under_split() {
+    // Run the same 8 frames with k=1 and k=2 REAL containers: the
+    // combined detection multiset must be identical (frames are
+    // processed independently). This is the paper's core premise,
+    // verified through actual PJRT inference.
+    require_artifacts!();
+    let r1 = run_real(&real_cfg(1, 8)).unwrap();
+    let r2 = run_real(&real_cfg(2, 8)).unwrap();
+
+    let collect = |r: &divide_and_save::coordinator::ExperimentResult| -> Vec<Detection> {
+        let mut d: Vec<Detection> =
+            r.segments.iter().flat_map(|s| s.detections.iter().copied()).collect();
+        d.sort_by(|a, b| {
+            (a.frame, a.class_id)
+                .cmp(&(b.frame, b.class_id))
+                .then(a.score.partial_cmp(&b.score).unwrap().reverse())
+        });
+        d
+    };
+    let d1 = collect(&r1);
+    let d2 = collect(&r2);
+    assert_eq!(d1.len(), d2.len(), "detection counts differ");
+    assert!(!d1.is_empty(), "no detections at all is suspicious");
+    for (a, b) in d1.iter().zip(&d2) {
+        assert_eq!(a.frame, b.frame);
+        assert_eq!(a.class_id, b.class_id);
+        assert!((a.score - b.score).abs() < 1e-4);
+        assert!((a.bbox.cx - b.bbox.cx).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn real_mode_parallel_split_scales_with_host_cores() {
+    // On a multi-core host, 2 real containers beat 1 on wall-clock
+    // (each engine call is ~1 core). On a 1-core host the two workers
+    // serialize: the split must then cost at most a modest scheduling
+    // overhead, never a pathological slowdown.
+    require_artifacts!();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let r1 = run_real(&real_cfg(1, 24)).unwrap();
+    let r2 = run_real(&real_cfg(2, 24)).unwrap();
+    if cores >= 2 {
+        assert!(
+            r2.time_s < r1.time_s * 0.85,
+            "split {:.2}s should beat single {:.2}s on {cores} cores",
+            r2.time_s,
+            r1.time_s
+        );
+    } else {
+        assert!(
+            r2.time_s < r1.time_s * 1.5,
+            "1-core host: split {:.2}s vs single {:.2}s exceeds scheduling overhead budget",
+            r2.time_s,
+            r1.time_s
+        );
+    }
+}
+
+#[test]
+fn real_mode_respects_memory_cap() {
+    require_artifacts!();
+    let cfg = real_cfg(7, 8); // TX2 cap is 6
+    // REAL mode doesn't model TX2 memory (it runs on the host), but the
+    // SIM gate in the router still applies; run_real itself succeeds.
+    // The coordinator path with SIM probing enforces the cap:
+    let mut coordinator = Coordinator::new(
+        ExperimentConfig::default(),
+        SplitPolicy::Online(OnlineOptimizer::default()),
+    );
+    let job = InferenceJob {
+        id: 1,
+        video: Video::with_frames("j", 720, 24.0),
+        task: TaskProfile::yolo_tiny(),
+    };
+    let k = coordinator.decide_k(&job).unwrap();
+    assert!(k <= 6, "optimizer must respect the TX2 cap, got {k}");
+    drop(cfg);
+}
+
+#[test]
+fn coordinator_end_to_end_online_policy() {
+    let mut c = Coordinator::new(
+        ExperimentConfig::default(),
+        SplitPolicy::Online(OnlineOptimizer::default()),
+    );
+    let res = c
+        .submit(InferenceJob {
+            id: 42,
+            video: Video::paper_default(),
+            task: TaskProfile::yolo_tiny(),
+        })
+        .unwrap();
+    assert_eq!(res.id, 42);
+    assert!(res.containers_used >= 2, "online policy should split");
+    assert!(res.result.time_s < 325.0, "should beat the benchmark");
+}

@@ -1,0 +1,123 @@
+//! Failure injection: every user-reachable misuse path must fail with a
+//! diagnostic error, never a wrong-answer success.
+
+use divide_and_save::config::{ExecMode, ExperimentConfig};
+use divide_and_save::coordinator::executor::{run_real, run_sim};
+use divide_and_save::runtime::{Engine, Manifest};
+use divide_and_save::util::json::Json;
+use divide_and_save::workload::Video;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn missing_artifacts_dir_is_clean_error() {
+    let err = Manifest::load("/nonexistent/artifacts").unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("io"), "{msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_clean_error() {
+    let dir = std::env::temp_dir().join("dsplit_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json !").unwrap();
+    let err = Manifest::load(dir.to_str().unwrap()).unwrap_err();
+    assert!(format!("{err}").contains("json"));
+}
+
+#[test]
+fn manifest_referencing_missing_hlo_fails_at_load() {
+    let dir = std::env::temp_dir().join("dsplit_missing_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"variants": [{"name": "ghost", "file": "ghost.hlo.txt",
+            "model": "yolo_tiny", "batch": 1, "ref_kernels": false,
+            "input": {"shape": [1, 96, 96, 3], "dtype": "f32"},
+            "outputs": [{"name": "o", "shape": [1, 108, 25]}],
+            "flops_per_frame": 1, "param_count": 1, "nattr": 25,
+            "sha256": "x"}]}"#,
+    )
+    .unwrap();
+    let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+    assert!(Engine::load(&m, "ghost").is_err());
+}
+
+#[test]
+fn corrupt_hlo_text_fails_to_parse() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("dsplit_corrupt_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    // valid manifest entry pointing at garbage HLO
+    let manifest = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+    std::fs::write(dir.join("manifest.json"), &manifest).unwrap();
+    for v in Json::parse(&manifest).unwrap().get("variants").unwrap().as_array().unwrap() {
+        let f = v.get("file").unwrap().as_str().unwrap();
+        std::fs::write(dir.join(f), "HloModule garbage\n!!!").unwrap();
+    }
+    let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+    assert!(Engine::load(&m, "yolo_tiny_b1").is_err());
+}
+
+#[test]
+fn real_mode_unknown_variant_is_clean_error() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.mode = ExecMode::Real;
+    cfg.variant = "yolo_tiny_b999".to_string();
+    cfg.video = Video::with_frames("t", 4, 24.0);
+    let err = run_real(&cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("b999"), "{err:#}");
+}
+
+#[test]
+fn sim_over_memory_is_clean_error() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.containers = 64;
+    let err = run_sim(&cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("memory") || msg.contains("exceed"), "{msg}");
+}
+
+#[test]
+fn config_file_errors_are_diagnostic() {
+    let err = ExperimentConfig::from_file("/nonexistent/config.json").unwrap_err();
+    assert!(format!("{err}").contains("io"));
+
+    let dir = std::env::temp_dir().join("dsplit_bad_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("cfg.json");
+    std::fs::write(&p, r#"{"device": "jetson-nano"}"#).unwrap();
+    let err = ExperimentConfig::from_file(p.to_str().unwrap()).unwrap_err();
+    assert!(format!("{err}").contains("nano"));
+}
+
+#[test]
+fn zero_frame_video_runs_trivially() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.video = Video::with_frames("empty", 0, 24.0);
+    cfg.containers = 4;
+    let r = run_sim(&cfg).unwrap();
+    assert_eq!(r.frames, 0);
+    assert_eq!(r.time_s, 0.0);
+    assert_eq!(r.energy_j, 0.0);
+}
+
+#[test]
+fn more_containers_than_frames_still_correct() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.video = Video::with_frames("tiny", 3, 24.0);
+    cfg.containers = 6;
+    let r = run_sim(&cfg).unwrap();
+    assert_eq!(r.frames, 3);
+    assert!(r.time_s > 0.0);
+    // three segments carry one frame each, three carry zero
+    let loaded = r.segments.iter().filter(|s| s.segment.len > 0).count();
+    assert_eq!(loaded, 3);
+}

@@ -1,0 +1,174 @@
+//! Integration tests over the PJRT runtime + real AOT artifacts.
+//!
+//! Require `make artifacts` to have produced `artifacts/` (the Makefile
+//! test target guarantees ordering).
+
+use divide_and_save::runtime::{Engine, EnginePool, Manifest};
+use divide_and_save::workload::FrameGenerator;
+
+fn artifacts() -> &'static str {
+    "artifacts"
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_lists_expected_variants() {
+    require_artifacts!();
+    let m = Manifest::load(artifacts()).unwrap();
+    for name in ["yolo_tiny_b1", "yolo_tiny_b4", "yolo_tiny_ref_b4", "simple_cnn_b1"] {
+        assert!(m.variant(name).is_ok(), "missing {name}");
+    }
+    let v = m.variant("yolo_tiny_b4").unwrap();
+    assert_eq!(v.input_shape, vec![4, 96, 96, 3]);
+    assert_eq!(v.outputs.len(), 2);
+    assert_eq!(v.nattr, 25);
+    assert_eq!(v.flops_per_frame, 41_223_168);
+}
+
+#[test]
+fn engine_runs_and_output_shapes_match_manifest() {
+    require_artifacts!();
+    let m = Manifest::load(artifacts()).unwrap();
+    let e = Engine::load(&m, "yolo_tiny_b1").unwrap();
+    let gen = FrameGenerator::yolo(0);
+    let out = e.run(&gen.batch(0, 1)).unwrap();
+    assert_eq!(out.buffers.len(), 2);
+    assert_eq!(out.buffers[0].len(), 108 * 25);
+    assert_eq!(out.buffers[1].len(), 432 * 25);
+    assert!(out.latency_s > 0.0);
+}
+
+#[test]
+fn decoded_boxes_are_semantically_valid() {
+    require_artifacts!();
+    let m = Manifest::load(artifacts()).unwrap();
+    let e = Engine::load(&m, "yolo_tiny_b1").unwrap();
+    let gen = FrameGenerator::yolo(3);
+    let out = e.run(&gen.batch(5, 1)).unwrap();
+    for buffer in &out.buffers {
+        for box_attrs in buffer.chunks_exact(25) {
+            let (bx, by, bw, bh) = (box_attrs[0], box_attrs[1], box_attrs[2], box_attrs[3]);
+            assert!((0.0..=1.0).contains(&bx), "bx={bx}");
+            assert!((0.0..=1.0).contains(&by), "by={by}");
+            assert!(bw > 0.0 && bh > 0.0, "non-positive size");
+            // obj + classes are sigmoid outputs
+            for &s in &box_attrs[4..] {
+                assert!((0.0..=1.0).contains(&s), "score={s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_variants_agree_with_single_frame() {
+    // THE splittability property at the runtime level: running a frame
+    // inside a batch-of-4 executable gives the same boxes as running it
+    // through the batch-of-1 executable.
+    require_artifacts!();
+    let m = Manifest::load(artifacts()).unwrap();
+    let e1 = Engine::load(&m, "yolo_tiny_b1").unwrap();
+    let e4 = Engine::load(&m, "yolo_tiny_b4").unwrap();
+    let gen = FrameGenerator::yolo(11);
+
+    let out4 = e4.run(&gen.batch(0, 4)).unwrap();
+    for frame in 0..4 {
+        let out1 = e1.run(&gen.batch(frame, 1)).unwrap();
+        for oi in 0..2 {
+            let per = e4.output_frame_elems(oi);
+            let got = &out4.buffers[oi][frame * per..(frame + 1) * per];
+            let want = &out1.buffers[oi];
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(want) {
+                assert!((g - w).abs() < 2e-4, "frame {frame} out {oi}: {g} vs {w}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pallas_and_ref_hlo_agree_in_rust() {
+    // The pallas-kernel HLO and the pure-jnp HLO are different programs
+    // computing the same network — they must agree through the rust
+    // runtime too (mirror of the python test, via PJRT).
+    require_artifacts!();
+    let m = Manifest::load(artifacts()).unwrap();
+    let ep = Engine::load(&m, "yolo_tiny_b4").unwrap();
+    let er = Engine::load(&m, "yolo_tiny_ref_b4").unwrap();
+    let gen = FrameGenerator::yolo(23);
+    let input = gen.batch(0, 4);
+    let a = ep.run(&input).unwrap();
+    let b = er.run(&input).unwrap();
+    for oi in 0..2 {
+        for (x, y) in a.buffers[oi].iter().zip(&b.buffers[oi]) {
+            assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn padding_short_batches_is_lossless() {
+    require_artifacts!();
+    let m = Manifest::load(artifacts()).unwrap();
+    let e4 = Engine::load(&m, "yolo_tiny_b4").unwrap();
+    let e1 = Engine::load(&m, "yolo_tiny_b1").unwrap();
+    let gen = FrameGenerator::yolo(31);
+    // 3 real frames through the batch-4 engine, padded
+    let (padded, real) = e4.pad_batch(&gen.batch(0, 3));
+    assert_eq!(real, 3);
+    assert_eq!(padded.len(), 4 * 96 * 96 * 3);
+    let out = e4.run(&padded).unwrap();
+    // frame 2 must match the single-frame run
+    let single = e1.run(&gen.batch(2, 1)).unwrap();
+    let per = e4.output_frame_elems(0);
+    let got = &out.buffers[0][2 * per..3 * per];
+    for (g, w) in got.iter().zip(&single.buffers[0]) {
+        assert!((g - w).abs() < 2e-4);
+    }
+}
+
+#[test]
+fn engine_rejects_wrong_input_length() {
+    require_artifacts!();
+    let m = Manifest::load(artifacts()).unwrap();
+    let e = Engine::load(&m, "yolo_tiny_b1").unwrap();
+    assert!(e.run(&vec![0.0; 17]).is_err());
+}
+
+#[test]
+fn engine_pool_caches_compilations() {
+    require_artifacts!();
+    let pool = EnginePool::new(artifacts()).unwrap();
+    assert!(pool.available().contains(&"yolo_tiny_b1".to_string()));
+    let t0 = std::time::Instant::now();
+    let _e1 = pool.engine("yolo_tiny_b1").unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _e2 = pool.engine("yolo_tiny_b1").unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 10, "cache hit not fast: {second:?} vs {first:?}");
+    assert!(pool.engine("no_such_variant").is_err());
+}
+
+#[test]
+fn simple_cnn_variant_runs() {
+    require_artifacts!();
+    let m = Manifest::load(artifacts()).unwrap();
+    let e = Engine::load(&m, "simple_cnn_b1").unwrap();
+    let gen = FrameGenerator::new(32, 32, 3, 0);
+    let out = e.run(&gen.batch(0, 1)).unwrap();
+    assert_eq!(out.buffers.len(), 1);
+    assert_eq!(out.buffers[0].len(), 10);
+    assert!(out.buffers[0].iter().all(|v| v.is_finite()));
+}
