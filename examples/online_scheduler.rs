@@ -4,6 +4,12 @@
 //! the optimal container count per (device, task), caches the decision
 //! and serves the rest of the workload with it.
 //!
+//! The serving engine consults the same optimizer under an
+//! *availability cap* (`decide_k_constrained`): when other jobs already
+//! hold part of the device, the split is sized to the cores and memory
+//! actually free — the last section shows the decision shrinking with
+//! the grant.
+//!
 //! Run: `cargo run --release --example online_scheduler`
 
 use divide_and_save::config::ExperimentConfig;
@@ -58,6 +64,20 @@ fn main() -> anyhow::Result<()> {
             println!("  cached decision {key}: k={} model {}", d.best_k, d.model.describe());
         }
         println!("  total saved: {saved_time:.1} s, {saved_energy:.1} J across 4 jobs");
+
+        // --- availability-constrained decisions (the engine's view) ---
+        let mem = device.memory.available_mib();
+        println!("  availability-constrained k (what a half-busy device gets):");
+        for frac in [1.0, 0.5, 0.25] {
+            let avail = (device.cores * frac).max(1.0);
+            let job = InferenceJob {
+                id: 99,
+                video: Video::paper_default(),
+                task: TaskProfile::yolo_tiny(),
+            };
+            let k = coordinator.decide_k_constrained(&job, avail, mem * frac)?;
+            println!("    {avail:4.1} cores free -> k={k}");
+        }
     }
     Ok(())
 }

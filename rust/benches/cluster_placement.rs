@@ -1,9 +1,12 @@
-//! A6 — extension: the paper's distributed-edge future work.
+//! A6 — extension: the paper's distributed-edge future work, on the
+//! shared serving engine.
 //!
 //! A heterogeneous cluster (2x TX2 + 1x AGX Orin) serves a stream of
-//! 120-frame video jobs, every node running divide-and-save internally
-//! (its energy-optimal k). Compares placement policies on total energy,
-//! makespan and mean latency.
+//! 120-frame video jobs through the event-driven engine, every node
+//! running divide-and-save internally (its energy-optimal k). Compares
+//! placement policies on total energy, makespan and mean latency —
+//! energy now comes from each device's aggregated busy timeline (idle
+//! paid once per device busy period, nothing while asleep).
 
 use divide_and_save::bench::{banner, Table};
 use divide_and_save::cluster::{Cluster, PlacementPolicy};
@@ -12,7 +15,7 @@ use divide_and_save::util::rng::Rng;
 use divide_and_save::workload::ArrivalProcess;
 
 fn main() {
-    banner("A6", "multi-device placement (2x TX2 + 1x Orin, 40 jobs)");
+    banner("A6", "multi-device placement (2x TX2 + 1x Orin, 40 jobs, engine)");
 
     let mut rng = Rng::new(21);
     let arrivals =
@@ -22,7 +25,7 @@ fn main() {
     let devices = || vec![DeviceSpec::tx2(), DeviceSpec::tx2(), DeviceSpec::orin()];
 
     let mut table = Table::new([
-        "policy", "energy_kj", "makespan_s", "mean_lat_s", "jobs/node",
+        "policy", "energy_kj", "makespan_s", "mean_lat_s", "jobs/node", "util/node",
     ]);
     let mut results = Vec::new();
     for (name, policy) in [
@@ -37,6 +40,14 @@ fn main() {
             format!("{:.0}", report.makespan_s),
             format!("{:.1}", report.mean_latency_s),
             format!("{:?}", report.jobs_per_node),
+            format!(
+                "{:?}",
+                report
+                    .node_utilization
+                    .iter()
+                    .map(|u| (u * 100.0).round() / 100.0)
+                    .collect::<Vec<_>>()
+            ),
         ]);
         results.push((name, report));
     }

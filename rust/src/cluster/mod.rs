@@ -3,17 +3,27 @@
 //! edge computing setting, where multiple devices collaborate").
 //!
 //! A cluster of heterogeneous Jetson nodes receives a stream of video
-//! jobs. A placement policy assigns each job to a node; on the node the
-//! job runs with the divide-and-save split (optimal k per the node's
-//! fitted models). Policies:
+//! jobs through the shared event-driven serving engine
+//! ([`crate::server::engine`]): the cluster is just the multi-node
+//! configuration of the same engine that powers the single-device MEC
+//! server. A [`PlacementPolicy`] assigns each job to a node; on the
+//! node the job runs with the divide-and-save split (optimal k per the
+//! node's fitted models), optionally overlapping with other jobs when
+//! the node has concurrency slots. Policies:
 //!
-//! * `RoundRobin` — naive fairness.
+//! * `RoundRobin` — strict rotation, pinned at submission (naive
+//!   fairness).
 //! * `LeastLoaded` — earliest-available node (makespan-greedy).
 //! * `EnergyAware` — EASE-style ([13] in the paper): pick the node
 //!   minimizing predicted energy for the job, breaking ties on
 //!   completion time, using exactly the calibrated device models the
-//!   single-device experiments validated.
+//!   single-device experiments validated. Jobs wait for the energy-best
+//!   node rather than burn more joules on a worse one.
+//!
+//! Cluster energy is the sum of the engine's per-device aggregated
+//! timelines: a device pays its idle floor once per busy period,
+//! however many jobs overlap on it, and nothing while asleep.
 
 pub mod placement;
 
-pub use placement::{Cluster, ClusterReport, NodeState, PlacementPolicy};
+pub use placement::{Cluster, ClusterReport, PlacementPolicy};

@@ -197,12 +197,30 @@ pub fn run_real(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
     barrier.wait(); // all containers started
     let started = std::time::Instant::now();
 
+    // Drain EVERY worker result before joining: returning early on the
+    // first error would skip the joins and leak running threads (and a
+    // panicked worker would deadlock nobody, but its sibling threads
+    // would keep burning CPU). Collect all outcomes, join all handles,
+    // then propagate the first failure.
     let mut seg_results: Vec<(Segment, Vec<Detection>, f64, f64)> = Vec::new();
+    let mut first_err: Option<anyhow::Error> = None;
     for r in rx {
-        seg_results.push(r?);
+        match r {
+            Ok(v) => seg_results.push(v),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
     }
     for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        if h.join().is_err() && first_err.is_none() {
+            first_err = Some(anyhow::anyhow!("worker panicked"));
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
     }
     seg_results.sort_by_key(|(s, ..)| s.index);
 

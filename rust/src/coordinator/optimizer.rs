@@ -60,10 +60,23 @@ impl OnlineOptimizer {
         }
     }
 
-    /// Probe, fit, decide.
+    /// Probe, fit, decide over the whole device.
     pub fn decide(&self, cfg: &ExperimentConfig) -> Result<OptimizerDecision> {
+        self.decide_capped(cfg, usize::MAX)
+    }
+
+    /// Probe, fit, decide under an availability cap: `k` never exceeds
+    /// `k_cap`. The serving engine calls this with the container count
+    /// supportable by the cores/memory *currently free* on the device,
+    /// so an online decision for a half-busy device only considers
+    /// splits that fit in the other half.
+    pub fn decide_capped(&self, cfg: &ExperimentConfig, k_cap: usize) -> Result<OptimizerDecision> {
         let device = cfg.effective_device();
-        let k_max = device.memory.max_containers(cfg.video.frame_count()).max(1);
+        let k_max = device
+            .memory
+            .max_containers(cfg.video.frame_count())
+            .min(k_cap.max(1))
+            .max(1);
         let default_ks = {
             let mut ks = vec![1usize, 2, (k_max / 2).max(3), k_max];
             ks.dedup();
@@ -72,8 +85,16 @@ impl OnlineOptimizer {
             ks.dedup();
             ks
         };
-        let ks = self.probe_ks.clone().unwrap_or(default_ks);
-        assert!(!ks.is_empty());
+        let ks = {
+            // Custom probe sets obey the cap too — the availability
+            // constraint must hold whatever the probe grid.
+            let mut ks = self.probe_ks.clone().unwrap_or(default_ks);
+            ks.retain(|&k| k >= 1 && k <= k_max);
+            if ks.is_empty() {
+                ks.push(k_max);
+            }
+            ks
+        };
 
         // Probe on a short prefix.
         let mut probe_cfg = cfg.clone();
@@ -88,6 +109,22 @@ impl OnlineOptimizer {
             c.containers = k;
             let r = run_sim(&c)?;
             probes.push((k, self.objective_value(&r, &bench)));
+        }
+
+        if probes.len() < 3 {
+            // Too few probe points for the convex family (tight
+            // availability cap): take the best probe directly, with a
+            // constant stand-in model for the record.
+            let &(best_k, best_v) = probes
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let model = FittedModel::Quadratic(crate::modelfit::PolyModel {
+                a2: 0.0,
+                a1: 0.0,
+                a0: best_v,
+            });
+            return Ok(OptimizerDecision { best_k, probes, model, objective: self.objective });
         }
 
         let xs: Vec<f64> = probes.iter().map(|(k, _)| *k as f64).collect();
@@ -163,6 +200,27 @@ mod tests {
         let cfg = ExperimentConfig::default(); // TX2: cap 6
         let d = OnlineOptimizer::default().decide(&cfg).unwrap();
         assert!(d.best_k <= 6);
+    }
+
+    #[test]
+    fn capped_decision_respects_the_cap() {
+        // Orin's unconstrained optimum is high k; with only a third of
+        // the device available the decision must stay within the cap.
+        let mut cfg = ExperimentConfig::default();
+        cfg.device = DeviceSpec::orin();
+        let opt = OnlineOptimizer::default();
+        let capped = opt.decide_capped(&cfg, 4).unwrap();
+        assert!(capped.best_k <= 4, "best_k={}", capped.best_k);
+        let free = opt.decide_capped(&cfg, usize::MAX).unwrap();
+        assert!(free.best_k >= capped.best_k);
+    }
+
+    #[test]
+    fn tiny_cap_degrades_to_best_probe() {
+        let cfg = ExperimentConfig::default();
+        let d = OnlineOptimizer::default().decide_capped(&cfg, 2).unwrap();
+        assert!(d.best_k <= 2 && d.best_k >= 1);
+        assert!(d.probes.len() <= 2);
     }
 
     #[test]

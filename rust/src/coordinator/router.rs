@@ -55,19 +55,58 @@ impl Coordinator {
         Coordinator { base, policy, metrics: Registry::new(), decisions: BTreeMap::new() }
     }
 
-    /// Decide the container count for a job (cached per device+task).
+    /// Decide the container count for a job on an idle device (cached
+    /// per device+task). Equivalent to [`Self::decide_k_constrained`]
+    /// with the whole device available.
     pub fn decide_k(&mut self, job: &InferenceJob) -> Result<usize> {
+        if let SplitPolicy::Fixed(k) = &self.policy {
+            return Ok(*k);
+        }
+        let device = self.base.effective_device();
+        let mem = device.memory.available_mib();
+        self.decide_k_constrained(job, device.cores, mem)
+    }
+
+    /// Decide k under an availability cap — the serving engine's
+    /// admission path. `avail_cores` is the core grant actually free on
+    /// the device, `avail_mem_mib` the unclaimed container memory.
+    ///
+    /// With the whole device free this is the paper's unconstrained
+    /// decision (oversubscribed k allowed, as in Fig. 3); with a
+    /// partial grant, k is sized to the cores granted and the memory
+    /// left, and the online optimizer probes a device model with only
+    /// that many cores. Decisions are cached per
+    /// (device, task, grant, cap).
+    pub fn decide_k_constrained(
+        &mut self,
+        job: &InferenceJob,
+        avail_cores: f64,
+        avail_mem_mib: f64,
+    ) -> Result<usize> {
+        let device = self.base.effective_device();
+        let frames = job.video.frame_count();
+        let core_cap = device.core_cap_for_grant(avail_cores).unwrap_or(usize::MAX);
+        let mem_cap = device.memory.max_containers_within(avail_mem_mib, frames).max(1);
         match &self.policy {
-            SplitPolicy::Fixed(k) => Ok(*k),
+            SplitPolicy::Fixed(k) => Ok((*k).min(core_cap).min(mem_cap).max(1)),
             SplitPolicy::Online(opt) => {
-                let key = format!("{}/{}", self.base.device.name, job.task.name);
+                let cap = core_cap.min(mem_cap).max(1);
+                if cap <= 2 {
+                    // A grant this small has no split decision worth
+                    // probing: saturate the grant.
+                    return Ok(cap);
+                }
+                let key =
+                    format!("{}/{}/c{:.1}/k{}", device.name, job.task.name, avail_cores, cap);
                 if let Some(d) = self.decisions.get(&key) {
                     return Ok(d.best_k);
                 }
                 let mut cfg = self.base.clone();
                 cfg.task = job.task.clone();
                 cfg.video = job.video.clone();
-                let d = opt.decide(&cfg)?;
+                cfg.device = device.clone();
+                cfg.device.cores = avail_cores.max(1.0);
+                let d = opt.decide_capped(&cfg, cap)?;
                 let k = d.best_k;
                 log::info!(
                     "router: optimized k={k} for {key} (model: {})",
@@ -158,6 +197,59 @@ mod tests {
             r_naive.result.energy_j
         );
         assert!(r_online.result.time_s < r_naive.result.time_s);
+    }
+
+    #[test]
+    fn constrained_fixed_k_is_sized_to_the_grant() {
+        let mut c = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let j = job(1, 96);
+        let mem = c.base.device.memory.available_mib();
+        // whole TX2 free: the paper's unconstrained k
+        assert_eq!(c.decide_k_constrained(&j, 4.0, mem).unwrap(), 4);
+        // half the device granted: k shrinks to the cores granted
+        assert_eq!(c.decide_k_constrained(&j, 2.0, mem).unwrap(), 2);
+        // memory nearly exhausted by co-resident jobs: k shrinks further
+        assert_eq!(c.decide_k_constrained(&j, 4.0, 1000.0).unwrap(), 1);
+    }
+
+    #[test]
+    fn full_device_allows_oversubscribed_fixed_k() {
+        // With the whole device free the paper's k > cores experiments
+        // must still be expressible (memory permitting).
+        let mut c = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(6));
+        let j = job(1, 96);
+        let mem = c.base.device.memory.available_mib();
+        assert_eq!(c.decide_k_constrained(&j, 4.0, mem).unwrap(), 6);
+    }
+
+    #[test]
+    fn constrained_online_decision_caps_and_caches() {
+        let mut base = ExperimentConfig::default();
+        base.device = crate::device::DeviceSpec::orin();
+        let mut c = Coordinator::new(base, SplitPolicy::Online(OnlineOptimizer::default()));
+        let j = job(1, 96);
+        let mem = c.base.device.memory.available_mib();
+        let k_capped = c.decide_k_constrained(&j, 4.0, mem).unwrap();
+        assert!(k_capped <= 4, "k={k_capped}");
+        let n_decisions = c.decisions().len();
+        let again = c.decide_k_constrained(&j, 4.0, mem).unwrap();
+        assert_eq!(again, k_capped);
+        assert_eq!(c.decisions().len(), n_decisions, "same grant must hit the cache");
+        let k_full = c.decide_k_constrained(&j, 12.0, mem).unwrap();
+        assert!(k_full >= k_capped, "full {k_full} vs capped {k_capped}");
+    }
+
+    #[test]
+    fn tiny_grant_skips_probing_and_saturates() {
+        let mut c = Coordinator::new(
+            ExperimentConfig::default(),
+            SplitPolicy::Online(OnlineOptimizer::default()),
+        );
+        let j = job(1, 96);
+        let mem = c.base.device.memory.available_mib();
+        assert_eq!(c.decide_k_constrained(&j, 2.0, mem).unwrap(), 2);
+        assert_eq!(c.decide_k_constrained(&j, 1.0, mem).unwrap(), 1);
+        assert!(c.decisions().is_empty(), "tiny grants must not probe");
     }
 
     #[test]

@@ -39,11 +39,19 @@ impl MemoryModel {
     /// Largest container count that fits (each container buffers a
     /// 1/k share of `total_frames`).
     pub fn max_containers(&self, total_frames: usize) -> usize {
+        self.max_containers_within(self.available_mib(), total_frames)
+    }
+
+    /// Largest container count that fits in `free_mib` of *remaining*
+    /// memory — the serving engine's capacity-aware admission check,
+    /// where concurrent jobs have already claimed part of the device.
+    /// Returns 0 when not even one container fits.
+    pub fn max_containers_within(&self, free_mib: f64, total_frames: usize) -> usize {
         let mut k = 0;
         loop {
             let next = k + 1;
             let per = total_frames.div_ceil(next);
-            if self.fits(next, per) {
+            if self.usage_mib(next, per) <= free_mib + 1e-9 {
                 k = next;
                 if k >= 1024 {
                     return k; // effectively unbounded
@@ -81,6 +89,18 @@ mod tests {
         let orin = DeviceSpec::orin();
         assert_eq!(tx2.memory.max_containers(720), 6, "TX2 cap");
         assert_eq!(orin.memory.max_containers(720), 12, "Orin cap");
+    }
+
+    #[test]
+    fn partial_availability_caps_tighter() {
+        // Half the TX2's container memory already claimed by running
+        // jobs: the admission cap must shrink accordingly.
+        let tx2 = DeviceSpec::tx2();
+        let full = tx2.memory.max_containers(720);
+        let half = tx2.memory.max_containers_within(tx2.memory.available_mib() / 2.0, 720);
+        assert!(half < full, "half={half} full={full}");
+        assert!(half >= 1);
+        assert_eq!(tx2.memory.max_containers_within(10.0, 720), 0);
     }
 
     #[test]

@@ -110,6 +110,19 @@ impl DeviceSpec {
         self.base_frame_s * self.curve.time_factor(cpus)
     }
 
+    /// Container-count cap implied by a partial core grant: `None` when
+    /// the whole device is granted (the paper's oversubscribed k > cores
+    /// experiments stay expressible), otherwise at least one container
+    /// per whole core granted. The single source of the serving
+    /// engine's availability-cap invariant.
+    pub fn core_cap_for_grant(&self, grant_cores: f64) -> Option<usize> {
+        if grant_cores + 1e-9 >= self.cores {
+            None
+        } else {
+            Some((grant_cores.floor() as usize).max(1))
+        }
+    }
+
     /// Interference multiplier when `k` containers share the CPUs.
     pub fn interference(&self, k: usize) -> f64 {
         let over = (k as f64 - self.cores).max(0.0);

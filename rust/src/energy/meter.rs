@@ -4,7 +4,7 @@
 //! subsequent power samples").
 
 use crate::device::{DeviceSpec, PowerSensor};
-use crate::sched::ScheduleResult;
+use crate::sched::{ScheduleResult, TraceSegment};
 
 /// The three metrics of the paper's evaluation, absolute.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -44,6 +44,31 @@ pub fn meter_schedule(
         energy_j: reading.energy_j,
         avg_power_w: reading.avg_power_w,
         samples: reading.samples.len(),
+    }
+}
+
+/// Integrate the power model exactly over a piecewise-constant busy
+/// trace — the serving engine's per-device utilization timeline.
+///
+/// Unlike [`meter_schedule`] there is no sampling grid: each span is
+/// integrated in closed form. Idle draw inside a span is paid exactly
+/// once for the device, however many concurrent jobs overlap it — this
+/// is what fixes the old per-job energy accounting, which billed the
+/// idle floor to every job separately. Time *between* spans contributes
+/// nothing (the device races to sleep between busy periods).
+pub fn meter_spans(device: &DeviceSpec, spans: &[TraceSegment]) -> EnergyReport {
+    let mut energy = 0.0;
+    let mut duration = 0.0;
+    for s in spans {
+        let len = (s.t1_s - s.t0_s).max(0.0);
+        energy += device.power.power(s.busy_cores) * len;
+        duration += len;
+    }
+    EnergyReport {
+        time_s: duration,
+        energy_j: energy,
+        avg_power_w: if duration > 0.0 { energy / duration } else { 0.0 },
+        samples: spans.len(),
     }
 }
 
@@ -104,6 +129,40 @@ mod tests {
             assert!(rep.avg_power_w >= prev - 1e-6, "k={k}");
             prev = rep.avg_power_w;
         }
+    }
+
+    #[test]
+    fn meter_spans_matches_sampled_meter_on_a_schedule() {
+        // Exact integration over the same trace must agree with the
+        // 10 ms sampled sensor to sampling accuracy.
+        let spec = DeviceSpec::tx2();
+        let res = CpuScheduler::new(&spec).run_equal_split(3, 240, 0.0);
+        let sampled = meter_schedule(&spec, &PowerSensor::default(), &res);
+        let exact = meter_spans(&spec, &res.trace);
+        let err = (sampled.energy_j - exact.energy_j).abs() / exact.energy_j;
+        assert!(err < 0.02, "sampled {} vs exact {}", sampled.energy_j, exact.energy_j);
+    }
+
+    #[test]
+    fn meter_spans_counts_idle_once_per_span() {
+        let spec = DeviceSpec::tx2();
+        // Two disjoint busy periods; the 5 s gap contributes nothing.
+        let spans = [
+            TraceSegment { t0_s: 0.0, t1_s: 10.0, busy_cores: 2.0 },
+            TraceSegment { t0_s: 15.0, t1_s: 25.0, busy_cores: 4.0 },
+        ];
+        let rep = meter_spans(&spec, &spans);
+        let want = spec.power.power(2.0) * 10.0 + spec.power.power(4.0) * 10.0;
+        assert!((rep.energy_j - want).abs() < 1e-9);
+        assert_eq!(rep.time_s, 20.0);
+    }
+
+    #[test]
+    fn meter_spans_empty_trace_is_zero() {
+        let spec = DeviceSpec::orin();
+        let rep = meter_spans(&spec, &[]);
+        assert_eq!(rep.energy_j, 0.0);
+        assert_eq!(rep.avg_power_w, 0.0);
     }
 
     #[test]

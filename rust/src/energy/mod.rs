@@ -1,9 +1,12 @@
 //! Energy metering: integrates the device power model over a busy-core
-//! trace through the sampled sensor — the full substitute for reading
-//! the Jetson INA rails during a run.
+//! trace — through the sampled sensor for single experiments (the full
+//! substitute for reading the Jetson INA rails during a run), or in
+//! closed form over a serving engine's aggregated device timeline
+//! ([`meter_spans`]), where idle draw is paid once per device rather
+//! than once per job.
 
 pub mod battery;
 pub mod meter;
 
 pub use battery::Battery;
-pub use meter::{meter_schedule, EnergyReport};
+pub use meter::{meter_schedule, meter_spans, EnergyReport};

@@ -20,7 +20,7 @@ use divide_and_save::energy::meter_schedule;
 use divide_and_save::modelfit::{fit_exponential, fit_quadratic, FittedModel};
 use divide_and_save::bench::Table;
 use divide_and_save::sched::CpuScheduler;
-use divide_and_save::server::{serve, ServeConfig};
+use divide_and_save::server::{serve, QueuePolicy, ServeConfig};
 use divide_and_save::util::cli::{CliError, Command, OptSpec};
 use divide_and_save::util::csv::CsvWriter;
 use divide_and_save::util::logging;
@@ -254,15 +254,39 @@ fn cmd_optimize(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let cmd = common_opts(Command::new("serve", "serving session"))
+    let cmd = common_opts(Command::new("serve", "serving session (event-driven engine)"))
         .opt(OptSpec::opt("jobs", "number of jobs").with_default("20"))
         .opt(OptSpec::opt("job-frames", "frames per job").with_default("96"))
-        .opt(OptSpec::opt("containers", "fixed k (omit for online policy)"));
+        .opt(OptSpec::opt("containers", "fixed k (omit for online policy)"))
+        .opt(OptSpec::opt("policy", "queue policy (fifo|sjf|edf|energy)").with_default("fifo"))
+        .opt(OptSpec::opt("concurrency", "concurrent jobs per device").with_default("1"))
+        .opt(OptSpec::opt(
+            "arrival",
+            "arrival spec: poisson:RATE | det:GAP | mmpp:CALM,BURST,MCALM,MBURST",
+        ))
+        .opt(OptSpec::opt("deadline", "relative deadline in seconds (for EDF)"))
+        .opt(OptSpec::opt("report-json", "write the serve report JSON to this path"));
     let p = parse_or_help(&cmd, args)?;
     let cfg = build_config(&p)?;
+    if cfg.mode == ExecMode::Real {
+        anyhow::bail!(
+            "serve runs on the calibrated device model (the event-driven engine is \
+             SIM-native); for REAL per-job PJRT inference use `run --mode real` or \
+             `cargo run --example e2e_serving`"
+        );
+    }
     let policy = match p.get_usize("containers")? {
         Some(k) => SplitPolicy::Fixed(k),
         None => SplitPolicy::Online(OnlineOptimizer::default()),
+    };
+    let queue_policy = QueuePolicy::parse(p.get_or("policy", "fifo"))
+        .ok_or_else(|| anyhow!("unknown queue policy {:?}", p.get_or("policy", "fifo")))?;
+    let arrival = match p.get("arrival") {
+        Some(spec) => Some(
+            divide_and_save::workload::ArrivalProcess::parse(spec)
+                .ok_or_else(|| anyhow!("bad arrival spec {spec:?}"))?,
+        ),
+        None => None,
     };
     let mut coordinator = Coordinator::new(cfg, policy);
     let report = serve(
@@ -270,6 +294,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         &ServeConfig {
             jobs: p.get_usize("jobs")?.unwrap_or(20),
             frames_per_job: p.get_usize("job-frames")?.unwrap_or(96),
+            arrival,
+            queue_policy,
+            max_concurrent_jobs: p.get_usize("concurrency")?.unwrap_or(1).max(1),
+            deadline_s: p.get_f64("deadline")?,
             ..Default::default()
         },
     )?;
@@ -278,9 +306,27 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         report.jobs, report.frames, report.wall_s, report.jobs_per_s, report.frames_per_s
     );
     println!(
-        "latency mean={:.2}s p95={:.2}s  service mean={:.2}s  energy={:.0} J",
-        report.latency.mean, report.latency.p95, report.service.mean, report.total_energy_j
+        "latency mean={:.2}s p95={:.2}s p99={:.2}s  service mean={:.2}s  energy={:.0} J",
+        report.latency.mean,
+        report.latency.p95,
+        report.latency.p99,
+        report.service.mean,
+        report.total_energy_j
     );
+    println!(
+        "queue depth max={} mean={:.2}  utilization={:?}",
+        report.max_queue_depth,
+        report.mean_queue_depth,
+        report
+            .node_utilization
+            .iter()
+            .map(|u| format!("{u:.2}"))
+            .collect::<Vec<_>>()
+    );
+    if let Some(path) = p.get("report-json") {
+        std::fs::write(path, report.to_json().pretty())?;
+        println!("wrote {path}");
+    }
     println!("{}", coordinator.metrics.to_json().pretty());
     Ok(())
 }

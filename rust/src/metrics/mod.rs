@@ -121,6 +121,16 @@ impl Registry {
         self.gauges.lock().unwrap().get(name).copied()
     }
 
+    /// Keep-maximum gauge update: the stored value only ever rises
+    /// (peak queue depth, peak concurrency, high-water marks).
+    pub fn set_gauge_max(&self, name: &str, v: f64) {
+        let mut gauges = self.gauges.lock().unwrap();
+        let entry = gauges.entry(name.to_string()).or_insert(f64::NEG_INFINITY);
+        if v > *entry {
+            *entry = v;
+        }
+    }
+
     /// Get or create a histogram handle (Arc so hot paths don't hold the
     /// registry lock while recording).
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
@@ -190,6 +200,15 @@ mod tests {
         assert_eq!(r.counter("missing"), 0);
         r.set_gauge("power_w", 2.9);
         assert_eq!(r.gauge("power_w"), Some(2.9));
+    }
+
+    #[test]
+    fn gauge_max_keeps_the_peak() {
+        let r = Registry::new();
+        r.set_gauge_max("depth", 3.0);
+        r.set_gauge_max("depth", 7.0);
+        r.set_gauge_max("depth", 5.0);
+        assert_eq!(r.gauge("depth"), Some(7.0));
     }
 
     #[test]

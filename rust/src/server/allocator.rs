@@ -1,0 +1,342 @@
+//! Per-device core/memory allocator for the serving engine.
+//!
+//! Each engine node owns one [`NodeAllocator`]: it tracks the cores and
+//! container memory still free, the jobs currently resident, and the
+//! device's aggregated busy-core timeline. Several jobs may be resident
+//! at once (capacity-aware admission); each brings its own `k`
+//! containers sized to the cores it was granted.
+//!
+//! Energy is metered from the aggregated timeline via
+//! [`crate::energy::meter_spans`]: while at least one job is resident
+//! the device is "on" and its idle draw is paid exactly once, however
+//! many jobs overlap; between busy periods the device races to sleep
+//! and draws nothing. This replaces the old per-job accounting that
+//! billed the idle floor to every job separately.
+
+use crate::device::DeviceSpec;
+use crate::energy::meter_spans;
+use crate::sched::interference;
+use crate::sched::TraceSegment;
+use crate::workload::TaskProfile;
+
+/// Resource + service plan for one admitted job: `k` containers sharing
+/// `grant_cores` cpus, finishing after `service_s` (startup included).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServicePlan {
+    pub k: usize,
+    pub grant_cores: f64,
+    pub cpus_each: f64,
+    /// Aggregate busy core-equivalents this job contributes while it
+    /// runs.
+    pub busy_cores: f64,
+    pub mem_mib: f64,
+    pub service_s: f64,
+}
+
+/// Plan a job's execution: `k` containers on `grant_cores` cpus of
+/// `device`, with `resident_containers` containers of other jobs
+/// already on the device (for the oversubscription penalty). Uses the
+/// same calibrated curve / interference / startup models as the SIM
+/// executor, so a solo job on a whole device reproduces `run_sim`'s
+/// makespan.
+pub fn plan_service(
+    device: &DeviceSpec,
+    task: &TaskProfile,
+    frames: usize,
+    k: usize,
+    grant_cores: f64,
+    resident_containers: usize,
+) -> ServicePlan {
+    assert!(k >= 1, "k must be >= 1");
+    assert!(grant_cores > 0.0, "grant must be positive");
+    assert!(frames > 0, "job with no frames");
+    let cpus_each = grant_cores / k as f64;
+    let penalty = interference::penalty(
+        resident_containers + k,
+        device.cores,
+        device.interference_alpha,
+    );
+    let per_frame =
+        task.base_frame_s(device.base_frame_s) * device.curve.time_factor(cpus_each) * penalty;
+    let frames_per_container = frames.div_ceil(k);
+    let service_s = device.container_startup_s + frames_per_container as f64 * per_frame;
+    let busy_cores = (k as f64 * device.curve.busy_cores(cpus_each)).min(grant_cores);
+    let mem_mib = device.memory.usage_mib(k, frames_per_container);
+    ServicePlan { k, grant_cores, cpus_each, busy_cores, mem_mib, service_s }
+}
+
+/// Predict (service_s, energy_j) for a job running alone on an idle
+/// device with its energy-optimal full-device split — the estimate the
+/// energy-aware queue/placement policies rank by.
+pub fn predict_full_device(device: &DeviceSpec, task: &TaskProfile, frames: usize) -> (f64, f64) {
+    let k = (device.cores as usize)
+        .min(device.memory.max_containers(frames))
+        .max(1);
+    let plan = plan_service(device, task, frames, k, device.cores, 0);
+    let energy = device.power.power(plan.busy_cores) * plan.service_s;
+    (plan.service_s, energy)
+}
+
+/// One job currently resident on a node.
+#[derive(Debug, Clone)]
+pub struct ActiveJob {
+    /// Index into the engine's job table.
+    pub job_idx: usize,
+    pub frames: usize,
+    pub plan: ServicePlan,
+    pub start_s: f64,
+    pub finish_s: f64,
+}
+
+/// Core/memory accounting + busy timeline for one engine node.
+#[derive(Debug, Clone)]
+pub struct NodeAllocator {
+    pub device: DeviceSpec,
+    pub free_cores: f64,
+    pub free_mem_mib: f64,
+    pub max_concurrent: usize,
+    pub active: Vec<ActiveJob>,
+    /// Backlog-aware earliest-free estimate (for least-loaded
+    /// placement): bumped by each admitted job's service time.
+    pub est_free_at_s: f64,
+    pub jobs_done: usize,
+    pub frames_done: usize,
+    spans: Vec<TraceSegment>,
+    busy_level: f64,
+    last_change_s: f64,
+}
+
+impl NodeAllocator {
+    pub fn new(device: DeviceSpec, max_concurrent: usize) -> Self {
+        let free_mem_mib = device.memory.available_mib();
+        NodeAllocator {
+            free_cores: device.cores,
+            free_mem_mib,
+            device,
+            max_concurrent: max_concurrent.max(1),
+            active: Vec::new(),
+            est_free_at_s: 0.0,
+            jobs_done: 0,
+            frames_done: 0,
+            spans: Vec::new(),
+            busy_level: 0.0,
+            last_change_s: 0.0,
+        }
+    }
+
+    /// A free concurrency slot exists.
+    pub fn has_slot(&self) -> bool {
+        self.active.len() < self.max_concurrent
+    }
+
+    /// Whether a job asking for at least `min_cores` could be admitted
+    /// now (memory is checked later against the chosen k).
+    pub fn can_admit(&self, min_cores: f64) -> bool {
+        self.has_slot() && self.free_cores + 1e-9 >= min_cores
+    }
+
+    /// Containers of all resident jobs (oversubscription accounting).
+    pub fn resident_containers(&self) -> usize {
+        self.active.iter().map(|a| a.plan.k).sum()
+    }
+
+    /// Close the open timeline span at `now` (no-op while asleep).
+    fn close_span(&mut self, now_s: f64) {
+        if !self.active.is_empty() && now_s > self.last_change_s + 1e-12 {
+            self.spans.push(TraceSegment {
+                t0_s: self.last_change_s,
+                t1_s: now_s,
+                busy_cores: self.busy_level.min(self.device.cores),
+            });
+        }
+        self.last_change_s = now_s;
+    }
+
+    /// Admit a planned job at `now`; returns its completion time.
+    pub fn admit(&mut self, now_s: f64, job_idx: usize, frames: usize, plan: ServicePlan) -> f64 {
+        debug_assert!(self.has_slot(), "admit without a free slot");
+        debug_assert!(
+            plan.grant_cores <= self.free_cores + 1e-6,
+            "grant {} exceeds free {}",
+            plan.grant_cores,
+            self.free_cores
+        );
+        self.close_span(now_s);
+        self.free_cores = (self.free_cores - plan.grant_cores).max(0.0);
+        self.free_mem_mib = (self.free_mem_mib - plan.mem_mib).max(0.0);
+        self.busy_level += plan.busy_cores;
+        self.est_free_at_s = self.est_free_at_s.max(now_s) + plan.service_s;
+        let finish_s = now_s + plan.service_s;
+        self.active.push(ActiveJob { job_idx, frames, plan, start_s: now_s, finish_s });
+        finish_s
+    }
+
+    /// Release a finished job's resources at `now`.
+    pub fn complete(&mut self, now_s: f64, job_idx: usize) -> ActiveJob {
+        self.close_span(now_s);
+        let pos = self
+            .active
+            .iter()
+            .position(|a| a.job_idx == job_idx)
+            .expect("completion for a job not resident on this node");
+        let job = self.active.swap_remove(pos);
+        self.busy_level = (self.busy_level - job.plan.busy_cores).max(0.0);
+        self.jobs_done += 1;
+        self.frames_done += job.frames;
+        if self.active.is_empty() {
+            // Snap to pristine: kills float drift across many jobs.
+            self.free_cores = self.device.cores;
+            self.free_mem_mib = self.device.memory.available_mib();
+            self.busy_level = 0.0;
+        } else {
+            self.free_cores = (self.free_cores + job.plan.grant_cores).min(self.device.cores);
+            self.free_mem_mib =
+                (self.free_mem_mib + job.plan.mem_mib).min(self.device.memory.available_mib());
+        }
+        job
+    }
+
+    /// The recorded busy timeline (closed spans only).
+    pub fn spans(&self) -> &[TraceSegment] {
+        &self.spans
+    }
+
+    /// Total time the device was on (at least one job resident).
+    pub fn busy_window_s(&self) -> f64 {
+        self.spans.iter().map(|s| s.t1_s - s.t0_s).sum()
+    }
+
+    /// Integral of busy cores over the timeline.
+    pub fn core_seconds(&self) -> f64 {
+        self.spans.iter().map(|s| (s.t1_s - s.t0_s) * s.busy_cores).sum()
+    }
+
+    /// Mean fraction of the device's cores busy while it was on.
+    pub fn utilization(&self) -> f64 {
+        let window = self.busy_window_s();
+        if window <= 0.0 {
+            0.0
+        } else {
+            self.core_seconds() / (self.device.cores * window)
+        }
+    }
+
+    /// Energy from the aggregated timeline (idle paid once per device).
+    pub fn energy_j(&self) -> f64 {
+        meter_spans(&self.device, &self.spans).energy_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::CpuScheduler;
+
+    fn tx2() -> DeviceSpec {
+        DeviceSpec::tx2()
+    }
+
+    #[test]
+    fn solo_plan_matches_run_sim_makespan() {
+        // A solo whole-device job must reproduce the validated SIM
+        // scheduler's makespan (even split, no startup).
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        for k in [1usize, 2, 4] {
+            let plan = plan_service(&dev, &task, 720, k, dev.cores, 0);
+            let sched = CpuScheduler::new(&dev).run_equal_split(k, 720, 0.0);
+            assert!(
+                (plan.service_s - sched.makespan_s).abs() < 1e-6,
+                "k={k}: plan {} vs sim {}",
+                plan.service_s,
+                sched.makespan_s
+            );
+        }
+    }
+
+    #[test]
+    fn plan_applies_oversubscription_penalty() {
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let alone = plan_service(&dev, &task, 96, 2, 2.0, 0);
+        let crowded = plan_service(&dev, &task, 96, 2, 2.0, 4);
+        assert!(crowded.service_s > alone.service_s, "penalty missing");
+    }
+
+    #[test]
+    fn admission_and_completion_conserve_resources() {
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let mut node = NodeAllocator::new(dev.clone(), 2);
+        let p1 = plan_service(&dev, &task, 48, 2, 2.0, 0);
+        let p2 = plan_service(&dev, &task, 48, 2, 2.0, 2);
+        let f1 = node.admit(0.0, 0, 48, p1);
+        assert!((node.free_cores - 2.0).abs() < 1e-9);
+        let f2 = node.admit(1.0, 1, 48, p2);
+        assert!(node.free_cores < 1e-9);
+        assert!(!node.has_slot());
+        node.complete(f1.min(f2), if f1 <= f2 { 0 } else { 1 });
+        node.complete(f1.max(f2), if f1 <= f2 { 1 } else { 0 });
+        assert_eq!(node.active.len(), 0);
+        assert_eq!(node.free_cores, dev.cores);
+        assert_eq!(node.free_mem_mib, dev.memory.available_mib());
+        assert_eq!(node.jobs_done, 2);
+        assert_eq!(node.frames_done, 96);
+    }
+
+    #[test]
+    fn overlapping_jobs_share_one_idle_floor() {
+        // Two identical jobs overlapping fully: energy must equal one
+        // window at the combined busy level, strictly less than two
+        // disjoint windows (where idle would be paid twice).
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let plan = plan_service(&dev, &task, 48, 1, 2.0, 0);
+        let mut overlap = NodeAllocator::new(dev.clone(), 2);
+        overlap.admit(0.0, 0, 48, plan);
+        overlap.admit(0.0, 1, 48, plan);
+        let t = plan.service_s;
+        overlap.complete(t, 0);
+        overlap.complete(t, 1);
+
+        let mut serial = NodeAllocator::new(dev.clone(), 2);
+        serial.admit(0.0, 0, 48, plan);
+        serial.complete(plan.service_s, 0);
+        // far-apart second job: separate busy period
+        serial.admit(1000.0, 1, 48, plan);
+        serial.complete(1000.0 + plan.service_s, 1);
+
+        assert!(
+            overlap.energy_j() < serial.energy_j() - 1e-6,
+            "overlap {} vs serial {}",
+            overlap.energy_j(),
+            serial.energy_j()
+        );
+        // And the idle saving is exactly one idle floor over the window.
+        let want = serial.energy_j() - dev.power.idle_w * plan.service_s;
+        assert!((overlap.energy_j() - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sleep_gaps_carry_no_energy() {
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let plan = plan_service(&dev, &task, 48, 4, 4.0, 0);
+        let mut node = NodeAllocator::new(dev.clone(), 1);
+        node.admit(0.0, 0, 48, plan);
+        node.complete(plan.service_s, 0);
+        node.admit(500.0, 1, 48, plan);
+        node.complete(500.0 + plan.service_s, 1);
+        assert!((node.busy_window_s() - 2.0 * plan.service_s).abs() < 1e-9);
+        assert!(node.utilization() > 0.9, "util={}", node.utilization());
+    }
+
+    #[test]
+    fn predict_full_device_prefers_the_orin() {
+        let task = TaskProfile::yolo_tiny();
+        let (t_tx2, e_tx2) = predict_full_device(&DeviceSpec::tx2(), &task, 120);
+        let (t_orin, e_orin) = predict_full_device(&DeviceSpec::orin(), &task, 120);
+        assert!(t_orin < t_tx2);
+        assert!(e_orin < e_tx2);
+    }
+}

@@ -1,0 +1,687 @@
+//! Event-driven concurrent serving engine.
+//!
+//! One engine serves both the single-device "MEC server" and the
+//! heterogeneous cluster: jobs arrive as events on the DES core
+//! ([`crate::sched::des::EventQueue`]), wait in an admission queue
+//! under a pluggable [`QueuePolicy`], and are dispatched by a
+//! capacity-aware allocator that admits **multiple concurrent jobs per
+//! device** — each split into its own `k` containers sized to the cores
+//! *currently free* (the router/optimizer is consulted with an
+//! availability cap, not the whole device).
+//!
+//! Core grants are fair-shared: when several jobs wait, the free cores
+//! are divided among them (up to the node's concurrency slots), so a
+//! lone job still gets the whole device (the paper's topology) while a
+//! backlog turns into genuine overlap. Energy comes from each device's
+//! aggregated utilization timeline — idle power is paid once per device
+//! busy period, not once per job (see [`super::allocator`]).
+
+use anyhow::Result;
+
+use super::allocator::{plan_service, predict_full_device, NodeAllocator};
+use super::policy::{PlacementPolicy, QueuePolicy};
+use super::queue::AdmissionQueue;
+use crate::coordinator::{Coordinator, InferenceJob};
+use crate::device::DeviceSpec;
+use crate::metrics::Registry;
+use crate::sched::des::EventQueue;
+use crate::workload::{TaskProfile, Video};
+
+/// One job offered to the engine.
+#[derive(Debug, Clone)]
+pub struct EngineJob {
+    pub id: u64,
+    /// Scheduled arrival, absolute seconds (closed-loop runs overwrite
+    /// this with the actual emission time).
+    pub arrival_s: f64,
+    pub frames: usize,
+    pub task: TaskProfile,
+    /// Pin the job to one node (cluster round-robin); `None` lets the
+    /// placement policy choose.
+    pub affinity: Option<usize>,
+    /// Absolute deadline, for EDF ordering.
+    pub deadline_s: Option<f64>,
+}
+
+impl EngineJob {
+    pub fn new(id: u64, arrival_s: f64, frames: usize, task: TaskProfile) -> Self {
+        EngineJob { id, arrival_s, frames, task, affinity: None, deadline_s: None }
+    }
+}
+
+/// A finished job.
+#[derive(Debug, Clone)]
+pub struct CompletedJob {
+    pub id: u64,
+    pub node: usize,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+    pub containers: usize,
+    pub grant_cores: f64,
+    pub frames: usize,
+}
+
+impl CompletedJob {
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+
+    pub fn service_s(&self) -> f64 {
+        self.finish_s - self.start_s
+    }
+
+    pub fn wait_s(&self) -> f64 {
+        self.start_s - self.arrival_s
+    }
+}
+
+/// How the engine picks `k` for an admitted job.
+#[derive(Debug)]
+pub enum SplitDecider<'a> {
+    /// Fixed k, clamped to the availability cap.
+    Fixed(usize),
+    /// Each node's energy-optimal full-device split (memory-capped core
+    /// count) — the cluster default.
+    PerNodeOptimal,
+    /// Route through a [`Coordinator`]'s split policy (fixed or
+    /// online-optimized), availability-constrained and cached.
+    Coordinator(&'a mut Coordinator),
+}
+
+/// Engine configuration: the node set plus admission knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// One entry per device node (a single entry = the MEC server).
+    pub nodes: Vec<DeviceSpec>,
+    pub queue_policy: QueuePolicy,
+    pub placement: PlacementPolicy,
+    /// Concurrent jobs allowed per node. 1 reproduces the legacy serial
+    /// loop (each job gets the whole device); larger values enable
+    /// overlap under backlog.
+    pub max_concurrent_jobs: usize,
+    /// Smallest core grant worth admitting a job for.
+    pub min_cores_per_job: f64,
+}
+
+impl EngineConfig {
+    pub fn single_node(device: DeviceSpec) -> Self {
+        EngineConfig {
+            nodes: vec![device],
+            queue_policy: QueuePolicy::Fifo,
+            placement: PlacementPolicy::LeastLoaded,
+            max_concurrent_jobs: 1,
+            min_cores_per_job: 1.0,
+        }
+    }
+}
+
+/// Outcome of an engine run.
+#[derive(Debug)]
+pub struct EngineOutcome {
+    /// All jobs, in completion order.
+    pub completed: Vec<CompletedJob>,
+    pub node_energy_j: Vec<f64>,
+    pub node_utilization: Vec<f64>,
+    pub node_jobs: Vec<usize>,
+    pub max_queue_depth: usize,
+    pub mean_queue_depth: f64,
+    /// Completion time of the last job.
+    pub wall_s: f64,
+    pub metrics: Registry,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival(usize),
+    Dispatch,
+    Completion { node: usize, job: usize },
+}
+
+/// The engine itself. Build with [`ServingEngine::new`], then
+/// [`ServingEngine::run`] to completion.
+pub struct ServingEngine<'a> {
+    cfg: EngineConfig,
+    jobs: Vec<EngineJob>,
+    decider: SplitDecider<'a>,
+    closed_loop: bool,
+    nodes: Vec<NodeAllocator>,
+    queue: AdmissionQueue,
+    events: EventQueue<Ev>,
+    completed: Vec<CompletedJob>,
+    dispatch_scheduled: bool,
+    next_arrival: usize,
+    rr_next: usize,
+    metrics: Registry,
+}
+
+impl<'a> ServingEngine<'a> {
+    pub fn new(cfg: EngineConfig, jobs: Vec<EngineJob>, decider: SplitDecider<'a>) -> Self {
+        assert!(!cfg.nodes.is_empty(), "engine needs at least one node");
+        assert!(cfg.max_concurrent_jobs >= 1, "need at least one concurrency slot");
+        assert!(cfg.min_cores_per_job > 0.0, "min core grant must be positive");
+        if let SplitDecider::Coordinator(c) = &decider {
+            // The coordinator decides k against ITS device model; a
+            // multi-node engine would get splits sized for the wrong
+            // hardware. Clusters use PerNodeOptimal (or per-node
+            // coordinators, when that lands).
+            assert!(
+                cfg.nodes.len() == 1 && cfg.nodes[0].name == c.base.device.name,
+                "SplitDecider::Coordinator requires a single node matching the \
+                 coordinator's device ({})",
+                c.base.device.name
+            );
+        }
+        let nodes = cfg
+            .nodes
+            .iter()
+            .cloned()
+            .map(|d| NodeAllocator::new(d, cfg.max_concurrent_jobs))
+            .collect();
+        ServingEngine {
+            nodes,
+            queue: AdmissionQueue::new(),
+            events: EventQueue::new(),
+            completed: Vec::new(),
+            dispatch_scheduled: false,
+            next_arrival: 0,
+            rr_next: 0,
+            metrics: Registry::new(),
+            closed_loop: false,
+            cfg,
+            jobs,
+            decider,
+        }
+    }
+
+    /// Closed-loop mode: each job arrives when the previous one
+    /// finishes (the paper's one-at-a-time experiments).
+    pub fn closed_loop(mut self) -> Self {
+        self.closed_loop = true;
+        self
+    }
+
+    /// Run the simulation to completion.
+    pub fn run(mut self) -> Result<EngineOutcome> {
+        if self.jobs.is_empty() {
+            return Ok(self.into_outcome(0.0));
+        }
+        if self.closed_loop {
+            self.emit_next_arrival(0.0);
+        } else {
+            for i in 0..self.jobs.len() {
+                self.events.push(self.jobs[i].arrival_s, Ev::Arrival(i));
+            }
+            self.next_arrival = self.jobs.len();
+        }
+
+        while let Some((t, ev)) = self.events.pop() {
+            match ev {
+                Ev::Arrival(i) => {
+                    self.jobs[i].arrival_s = t;
+                    self.queue.push(t, i);
+                    self.metrics.set_gauge("queue_depth", self.queue.len() as f64);
+                    self.metrics.set_gauge_max("queue_depth_peak", self.queue.len() as f64);
+                    self.schedule_dispatch(t);
+                }
+                Ev::Dispatch => {
+                    self.dispatch_scheduled = false;
+                    self.dispatch(t)?;
+                }
+                Ev::Completion { node, job } => {
+                    let done = self.nodes[node].complete(t, job);
+                    let j = &self.jobs[job];
+                    self.completed.push(CompletedJob {
+                        id: j.id,
+                        node,
+                        arrival_s: j.arrival_s,
+                        start_s: done.start_s,
+                        finish_s: t,
+                        containers: done.plan.k,
+                        grant_cores: done.plan.grant_cores,
+                        frames: done.frames,
+                    });
+                    self.metrics.inc("jobs_completed", 1);
+                    self.metrics.inc("frames_processed", done.frames as u64);
+                    self.metrics.histogram("job_latency_s").record_s(t - j.arrival_s);
+                    self.metrics.histogram("job_service_s").record_s(t - done.start_s);
+                    if self.closed_loop {
+                        self.emit_next_arrival(t);
+                    }
+                    self.schedule_dispatch(t);
+                }
+            }
+        }
+
+        anyhow::ensure!(
+            self.queue.is_empty(),
+            "engine drained with {} jobs still queued (jobs can never be admitted \
+             under this node/memory/min-cores configuration)",
+            self.queue.len()
+        );
+        anyhow::ensure!(
+            self.completed.len() == self.jobs.len(),
+            "engine lost jobs: {} completed of {}",
+            self.completed.len(),
+            self.jobs.len()
+        );
+        let wall = self.completed.iter().map(|c| c.finish_s).fold(0.0, f64::max);
+        Ok(self.into_outcome(wall))
+    }
+
+    fn into_outcome(self, wall_s: f64) -> EngineOutcome {
+        for (i, n) in self.nodes.iter().enumerate() {
+            self.metrics.set_gauge(&format!("node{i}_utilization"), n.utilization());
+            self.metrics.set_gauge(&format!("node{i}_energy_j"), n.energy_j());
+        }
+        EngineOutcome {
+            node_energy_j: self.nodes.iter().map(NodeAllocator::energy_j).collect(),
+            node_utilization: self.nodes.iter().map(NodeAllocator::utilization).collect(),
+            node_jobs: self.nodes.iter().map(|n| n.jobs_done).collect(),
+            max_queue_depth: self.queue.max_depth,
+            mean_queue_depth: self.queue.mean_depth(wall_s),
+            completed: self.completed,
+            wall_s,
+            metrics: self.metrics,
+        }
+    }
+
+    fn emit_next_arrival(&mut self, now_s: f64) {
+        if self.next_arrival < self.jobs.len() {
+            let i = self.next_arrival;
+            self.next_arrival += 1;
+            self.events.push(now_s, Ev::Arrival(i));
+        }
+    }
+
+    /// Coalesce dispatch work into one event per timestamp, scheduled
+    /// AFTER any same-time arrivals (FIFO event order) — so a burst of
+    /// simultaneous arrivals is admitted with full knowledge of the
+    /// backlog, which is what makes fair-share grants work.
+    fn schedule_dispatch(&mut self, now_s: f64) {
+        if !self.dispatch_scheduled {
+            self.dispatch_scheduled = true;
+            self.events.push(now_s, Ev::Dispatch);
+        }
+    }
+
+    /// Admit as many queued jobs as capacity allows, in policy order.
+    /// One pass suffices: ordering keys are immutable per job and an
+    /// admission only ever consumes capacity, so a job skipped earlier
+    /// in the pass cannot become admissible later in it.
+    fn dispatch(&mut self, now_s: f64) -> Result<()> {
+        let order = self.queue.ordered(self.cfg.queue_policy, &self.jobs, &self.cfg.nodes);
+        for j in order {
+            let Some(node_i) = self.choose_node(j, now_s) else { continue };
+            let frames = self.jobs[j].frames;
+            let (slots_free, free_cores, mem_cap) = {
+                let nd = &self.nodes[node_i];
+                (
+                    nd.max_concurrent.saturating_sub(nd.active.len()),
+                    nd.free_cores,
+                    nd.device.memory.max_containers_within(nd.free_mem_mib, frames),
+                )
+            };
+            if slots_free == 0 || free_cores + 1e-9 < self.cfg.min_cores_per_job {
+                continue;
+            }
+            if mem_cap == 0 {
+                continue; // not enough free memory for even one container
+            }
+            // Fair-share grant: split the free cores among the jobs
+            // plausibly headed for THIS node, up to the free
+            // concurrency slots. A lone job gets everything (the
+            // paper's whole-device split).
+            let share = self.waiting_share_for(node_i).min(slots_free).max(1);
+            let grant = (free_cores / share as f64)
+                .max(self.cfg.min_cores_per_job)
+                .min(free_cores);
+            let k_req = self.decide_k(j, node_i, grant)?;
+            let plan = {
+                let nd = &self.nodes[node_i];
+                plan_service(
+                    &nd.device,
+                    &self.jobs[j].task,
+                    frames,
+                    k_req.min(mem_cap).max(1),
+                    grant,
+                    nd.resident_containers(),
+                )
+            };
+            let finish = self.nodes[node_i].admit(now_s, j, frames, plan);
+            self.queue.remove(now_s, j);
+            self.events.push(finish, Ev::Completion { node: node_i, job: j });
+            self.metrics.set_gauge("queue_depth", self.queue.len() as f64);
+        }
+        Ok(())
+    }
+
+    /// How many queued jobs compete for `node_i`'s free cores: jobs
+    /// pinned to it, plus an even split of the unpinned backlog across
+    /// all nodes that currently have capacity. On a single node this is
+    /// exactly the queue depth; on a cluster it stops a job from being
+    /// squeezed onto half a node whose other half nobody will take.
+    fn waiting_share_for(&self, node_i: usize) -> usize {
+        let open_nodes = self
+            .nodes
+            .iter()
+            .filter(|nd| nd.can_admit(self.cfg.min_cores_per_job))
+            .count()
+            .max(1);
+        let mut pinned = 0usize;
+        let mut unpinned = 0usize;
+        for &j in self.queue.pending() {
+            match self.jobs[j].affinity {
+                Some(i) if i == node_i => pinned += 1,
+                Some(_) => {}
+                None => unpinned += 1,
+            }
+        }
+        (pinned + unpinned.div_ceil(open_nodes)).max(1)
+    }
+
+    /// Pick a node for queued job `j`, or `None` to leave it waiting.
+    fn choose_node(&mut self, j: usize, now_s: f64) -> Option<usize> {
+        let min_cores = self.cfg.min_cores_per_job;
+        if let Some(i) = self.jobs[j].affinity {
+            return self.nodes[i].can_admit(min_cores).then_some(i);
+        }
+        match self.cfg.placement {
+            PlacementPolicy::RoundRobin => {
+                let n = self.nodes.len();
+                for off in 0..n {
+                    let i = (self.rr_next + off) % n;
+                    if self.nodes[i].can_admit(min_cores) {
+                        self.rr_next = (i + 1) % n;
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            PlacementPolicy::LeastLoaded => self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, nd)| nd.can_admit(min_cores))
+                .min_by(|(ia, a), (ib, b)| {
+                    (a.est_free_at_s, *ia)
+                        .partial_cmp(&(b.est_free_at_s, *ib))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(i, _)| i),
+            PlacementPolicy::EnergyAware => {
+                // EASE-style: the globally energy-best node, even if the
+                // job has to wait for it.
+                let job = &self.jobs[j];
+                let mut best = 0usize;
+                let mut best_key = (f64::INFINITY, f64::INFINITY);
+                for (i, nd) in self.nodes.iter().enumerate() {
+                    let (service, energy) =
+                        predict_full_device(&nd.device, &job.task, job.frames);
+                    let finish = nd.est_free_at_s.max(now_s) + service;
+                    if energy < best_key.0 - 1e-9
+                        || ((energy - best_key.0).abs() <= 1e-9 && finish < best_key.1)
+                    {
+                        best = i;
+                        best_key = (energy, finish);
+                    }
+                }
+                self.nodes[best].can_admit(min_cores).then_some(best)
+            }
+        }
+    }
+
+    /// Decide the container count for job `j` on node `node_i` given a
+    /// core grant — the availability cap the tentpole adds: with the
+    /// whole device free this reduces to the paper's unconstrained
+    /// decision (oversubscription allowed); with a partial grant, k is
+    /// sized to the cores actually granted.
+    fn decide_k(&mut self, j: usize, node_i: usize, grant_cores: f64) -> Result<usize> {
+        let frames = self.jobs[j].frames;
+        let core_cap = self.nodes[node_i]
+            .device
+            .core_cap_for_grant(grant_cores)
+            .unwrap_or(usize::MAX);
+        match &mut self.decider {
+            SplitDecider::Fixed(k) => Ok((*k).min(core_cap).max(1)),
+            SplitDecider::PerNodeOptimal => {
+                let d = &self.nodes[node_i].device;
+                let mem_cap = d.memory.max_containers(frames).max(1);
+                Ok((d.cores as usize).min(mem_cap).min(core_cap).max(1))
+            }
+            SplitDecider::Coordinator(c) => {
+                let job = InferenceJob {
+                    id: self.jobs[j].id,
+                    video: Video::with_frames("engine", frames, 24.0),
+                    task: self.jobs[j].task.clone(),
+                };
+                c.decide_k_constrained(&job, grant_cores, self.nodes[node_i].free_mem_mib)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+    use crate::util::rng::Rng;
+
+    fn orin_engine(max_concurrent: usize) -> EngineConfig {
+        let mut cfg = EngineConfig::single_node(DeviceSpec::orin());
+        cfg.max_concurrent_jobs = max_concurrent;
+        cfg
+    }
+
+    fn yolo_job(id: u64, arrival_s: f64, frames: usize) -> EngineJob {
+        EngineJob::new(id, arrival_s, frames, TaskProfile::yolo_tiny())
+    }
+
+    #[test]
+    fn lone_job_gets_the_whole_device() {
+        let out = ServingEngine::new(
+            orin_engine(4),
+            vec![yolo_job(0, 0.0, 96)],
+            SplitDecider::PerNodeOptimal,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(out.completed.len(), 1);
+        let c = &out.completed[0];
+        assert!((c.grant_cores - 12.0).abs() < 1e-9, "grant={}", c.grant_cores);
+        assert_eq!(c.containers, 12);
+    }
+
+    #[test]
+    fn simultaneous_burst_is_admitted_concurrently_with_fair_shares() {
+        let jobs: Vec<EngineJob> = (0..3).map(|i| yolo_job(i, 0.0, 96)).collect();
+        let out = ServingEngine::new(orin_engine(3), jobs, SplitDecider::Fixed(1))
+            .run()
+            .unwrap();
+        assert_eq!(out.completed.len(), 3);
+        for c in &out.completed {
+            assert!((c.grant_cores - 4.0).abs() < 1e-9, "grant={}", c.grant_cores);
+            assert!(c.start_s.abs() < 1e-9, "all three must start at t=0");
+        }
+        assert_eq!(out.max_queue_depth, 3);
+    }
+
+    #[test]
+    fn overlapping_jobs_pay_idle_power_once() {
+        // Three jobs arrive together on one Orin with three concurrency
+        // slots: each gets 4 cores. Aggregated metering pays the idle
+        // floor once, so total energy is well below 3x the solo energy,
+        // and the makespan well below 3x the solo service time.
+        let burst: Vec<EngineJob> = (0..3).map(|i| yolo_job(i, 0.0, 96)).collect();
+        let out3 = ServingEngine::new(orin_engine(3), burst, SplitDecider::Fixed(1))
+            .run()
+            .unwrap();
+        let solo = ServingEngine::new(
+            orin_engine(3),
+            vec![yolo_job(0, 0.0, 96)],
+            SplitDecider::Fixed(1),
+        )
+        .run()
+        .unwrap();
+        let e3 = out3.node_energy_j[0];
+        let e1 = solo.node_energy_j[0];
+        assert!(
+            e3 < 3.0 * e1 * 0.75,
+            "concurrent energy {e3:.1} J should be well under 3x solo ({:.1} J)",
+            3.0 * e1
+        );
+        assert!(
+            out3.wall_s < 2.0 * solo.wall_s,
+            "concurrent makespan {} vs solo {}",
+            out3.wall_s,
+            solo.wall_s
+        );
+    }
+
+    #[test]
+    fn concurrency_removes_head_of_line_blocking() {
+        // A short job stuck behind a long one: the serial loop makes it
+        // wait out the long job's whole service; with two slots it gets
+        // half the device immediately.
+        let jobs = vec![yolo_job(0, 0.0, 720), yolo_job(1, 0.0, 48)];
+        let serial =
+            ServingEngine::new(orin_engine(1), jobs.clone(), SplitDecider::PerNodeOptimal)
+                .run()
+                .unwrap();
+        let conc = ServingEngine::new(orin_engine(2), jobs, SplitDecider::PerNodeOptimal)
+            .run()
+            .unwrap();
+        let latency = |out: &EngineOutcome, id: u64| {
+            out.completed.iter().find(|c| c.id == id).unwrap().latency_s()
+        };
+        assert!(
+            latency(&conc, 1) < latency(&serial, 1) / 3.0,
+            "short job latency: concurrent {} vs serial {}",
+            latency(&conc, 1),
+            latency(&serial, 1)
+        );
+    }
+
+    #[test]
+    fn sjf_reorders_the_backlog() {
+        // Device busy with job 0; jobs 1 (long) and 2 (short) queue.
+        let jobs = vec![
+            yolo_job(0, 0.0, 96),
+            yolo_job(1, 0.5, 480),
+            yolo_job(2, 1.0, 48),
+        ];
+        let fifo_cfg = orin_engine(1);
+        let mut sjf_cfg = orin_engine(1);
+        sjf_cfg.queue_policy = QueuePolicy::Sjf;
+        let fifo = ServingEngine::new(fifo_cfg, jobs.clone(), SplitDecider::Fixed(4))
+            .run()
+            .unwrap();
+        let sjf = ServingEngine::new(sjf_cfg, jobs, SplitDecider::Fixed(4)).run().unwrap();
+        let order = |out: &EngineOutcome| -> Vec<u64> {
+            out.completed.iter().map(|c| c.id).collect()
+        };
+        assert_eq!(order(&fifo), vec![0, 1, 2]);
+        assert_eq!(order(&sjf), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn edf_puts_urgent_jobs_first() {
+        let mut j1 = yolo_job(1, 0.5, 96);
+        j1.deadline_s = Some(1000.0);
+        let mut j2 = yolo_job(2, 1.0, 96);
+        j2.deadline_s = Some(10.0);
+        let jobs = vec![yolo_job(0, 0.0, 96), j1, j2];
+        let mut cfg = orin_engine(1);
+        cfg.queue_policy = QueuePolicy::Edf;
+        let out = ServingEngine::new(cfg, jobs, SplitDecider::Fixed(4)).run().unwrap();
+        let order: Vec<u64> = out.completed.iter().map(|c| c.id).collect();
+        assert_eq!(order, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn event_ordering_never_regresses_completion_before_arrival() {
+        // Property: whatever the arrival pattern, queue policy and
+        // concurrency, every job starts at or after its arrival,
+        // finishes after it starts, and nothing is lost.
+        forall(
+            29,
+            40,
+            |r: &mut Rng| {
+                let n = r.range_u64(1, 30) as usize;
+                let mut t = 0.0;
+                let jobs: Vec<(f64, usize)> = (0..n)
+                    .map(|_| {
+                        // bursty: half the arrivals land on the same instant
+                        if r.bool() {
+                            t += r.exponential(0.5);
+                        }
+                        (t, 8 + r.range_u64(0, 192) as usize)
+                    })
+                    .collect();
+                let policy = match r.below(4) {
+                    0 => QueuePolicy::Fifo,
+                    1 => QueuePolicy::Sjf,
+                    2 => QueuePolicy::Edf,
+                    _ => QueuePolicy::EnergyAware,
+                };
+                let concurrency = r.range_u64(1, 4) as usize;
+                let k = r.range_u64(1, 6) as usize;
+                (jobs, policy, concurrency, k)
+            },
+            |(jobs, policy, concurrency, k)| {
+                let engine_jobs: Vec<EngineJob> = jobs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(t, frames))| {
+                        let mut j = yolo_job(i as u64, t, frames);
+                        j.deadline_s = Some(t + 30.0);
+                        j
+                    })
+                    .collect();
+                let mut cfg = EngineConfig::single_node(DeviceSpec::tx2());
+                cfg.queue_policy = *policy;
+                cfg.max_concurrent_jobs = *concurrency;
+                let out = ServingEngine::new(cfg, engine_jobs, SplitDecider::Fixed(*k))
+                    .run()
+                    .map_err(|e| e.to_string())?;
+                ensure(out.completed.len() == jobs.len(), "lost jobs")?;
+                let mut frames_seen = 0usize;
+                for c in &out.completed {
+                    ensure(
+                        c.start_s >= c.arrival_s - 1e-9,
+                        format!("job {} started {} before arrival {}", c.id, c.start_s, c.arrival_s),
+                    )?;
+                    ensure(
+                        c.finish_s > c.start_s,
+                        format!("job {} finished {} at/before start {}", c.id, c.finish_s, c.start_s),
+                    )?;
+                    ensure(c.finish_s <= out.wall_s + 1e-9, "finish beyond wall")?;
+                    frames_seen += c.frames;
+                }
+                let want: usize = jobs.iter().map(|&(_, f)| f).sum();
+                ensure(frames_seen == want, "frames not conserved")?;
+                // completions are emitted in event-time order
+                for w in out.completed.windows(2) {
+                    ensure(w[0].finish_s <= w[1].finish_s + 1e-9, "completions out of order")?;
+                }
+                for u in &out.node_utilization {
+                    ensure((0.0..=1.0 + 1e-9).contains(u), format!("bad utilization {u}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn queue_depth_metrics_are_reported() {
+        let jobs: Vec<EngineJob> = (0..5).map(|i| yolo_job(i, 0.0, 96)).collect();
+        let out = ServingEngine::new(orin_engine(1), jobs, SplitDecider::Fixed(4))
+            .run()
+            .unwrap();
+        assert_eq!(out.max_queue_depth, 5);
+        assert!(out.mean_queue_depth > 0.0);
+        assert_eq!(out.metrics.gauge("queue_depth_peak"), Some(5.0));
+        assert_eq!(out.metrics.counter("jobs_completed"), 5);
+        assert!(out.metrics.gauge("node0_utilization").unwrap() > 0.5);
+    }
+}

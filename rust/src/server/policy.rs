@@ -1,0 +1,111 @@
+//! Pluggable scheduling policies for the serving engine.
+//!
+//! Two orthogonal decisions are made for every queued job:
+//!
+//! * [`QueuePolicy`] — **which** queued job is dispatched next: FIFO,
+//!   shortest-job-first, earliest-deadline-first, or energy-aware
+//!   (cheapest predicted energy first, ECORE-style).
+//! * [`PlacementPolicy`] — **where** it runs when the engine is
+//!   configured with several nodes: round-robin, least-loaded, or
+//!   energy-aware (EASE-style, [13] in the paper).
+//!
+//! Both are plain value enums so configs, CLIs and benches can name
+//! them; the selection logic lives in `server::queue` (job ordering)
+//! and `server::engine` (node choice).
+
+/// Order in which the admission queue releases jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueuePolicy {
+    /// Arrival order.
+    #[default]
+    Fifo,
+    /// Shortest predicted service first (frames × task cost).
+    Sjf,
+    /// Earliest absolute deadline first; jobs without a deadline sort
+    /// last, by arrival.
+    Edf,
+    /// Cheapest predicted energy first (on the job's best node).
+    EnergyAware,
+}
+
+impl QueuePolicy {
+    pub fn parse(s: &str) -> Option<QueuePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(QueuePolicy::Fifo),
+            "sjf" | "shortest" => Some(QueuePolicy::Sjf),
+            "edf" | "deadline" => Some(QueuePolicy::Edf),
+            "energy" | "energy_aware" | "energy-aware" => Some(QueuePolicy::EnergyAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueuePolicy::Fifo => "fifo",
+            QueuePolicy::Sjf => "sjf",
+            QueuePolicy::Edf => "edf",
+            QueuePolicy::EnergyAware => "energy-aware",
+        }
+    }
+}
+
+/// How to choose a node for each job in a multi-node engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Cycle through the nodes (jobs pre-pinned `i mod n` in cluster
+    /// runs, so fairness holds even when nodes differ in speed).
+    RoundRobin,
+    /// Earliest-available node (makespan-greedy).
+    LeastLoaded,
+    /// Node minimizing predicted job energy, breaking ties on
+    /// completion time — jobs wait for the energy-best node rather than
+    /// burn more joules on a worse one.
+    EnergyAware,
+}
+
+impl PlacementPolicy {
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "round_robin" => Some(PlacementPolicy::RoundRobin),
+            "least-loaded" | "least_loaded" | "ll" => Some(PlacementPolicy::LeastLoaded),
+            "energy" | "energy_aware" | "energy-aware" | "ea" => {
+                Some(PlacementPolicy::EnergyAware)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_policy_parse_roundtrip() {
+        for p in [
+            QueuePolicy::Fifo,
+            QueuePolicy::Sjf,
+            QueuePolicy::Edf,
+            QueuePolicy::EnergyAware,
+        ] {
+            assert_eq!(QueuePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(QueuePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn placement_policy_parse() {
+        assert_eq!(PlacementPolicy::parse("rr"), Some(PlacementPolicy::RoundRobin));
+        assert_eq!(
+            PlacementPolicy::parse("least-loaded"),
+            Some(PlacementPolicy::LeastLoaded)
+        );
+        assert_eq!(PlacementPolicy::parse("energy"), Some(PlacementPolicy::EnergyAware));
+        assert_eq!(PlacementPolicy::parse("x"), None);
+    }
+
+    #[test]
+    fn default_is_fifo() {
+        assert_eq!(QueuePolicy::default(), QueuePolicy::Fifo);
+    }
+}

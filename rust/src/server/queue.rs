@@ -1,0 +1,161 @@
+//! Admission queue: jobs that have arrived but not yet been granted
+//! device capacity, released in [`QueuePolicy`] order.
+//!
+//! The queue also integrates depth over time so the engine can report
+//! mean/max queue depth — the load signals a production front would
+//! export.
+
+use super::allocator::predict_full_device;
+use super::engine::EngineJob;
+use super::policy::QueuePolicy;
+use crate::device::DeviceSpec;
+
+/// Pending-job queue (indices into the engine's job table).
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    pending: Vec<usize>,
+    pub max_depth: usize,
+    depth_area: f64,
+    last_change_s: f64,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn tick(&mut self, now_s: f64) {
+        self.depth_area += self.pending.len() as f64 * (now_s - self.last_change_s).max(0.0);
+        self.last_change_s = now_s;
+    }
+
+    pub fn push(&mut self, now_s: f64, job_idx: usize) {
+        self.tick(now_s);
+        self.pending.push(job_idx);
+        self.max_depth = self.max_depth.max(self.pending.len());
+    }
+
+    pub fn remove(&mut self, now_s: f64, job_idx: usize) {
+        self.tick(now_s);
+        if let Some(pos) = self.pending.iter().position(|&j| j == job_idx) {
+            self.pending.remove(pos);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The queued job indices, in arrival order.
+    pub fn pending(&self) -> &[usize] {
+        &self.pending
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Time-weighted mean depth over `horizon_s`.
+    pub fn mean_depth(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            0.0
+        } else {
+            self.depth_area / horizon_s
+        }
+    }
+
+    /// Pending jobs in dispatch-priority order under `policy`. Stable:
+    /// equal keys keep arrival order, so every policy degrades to FIFO
+    /// on ties.
+    pub fn ordered(
+        &self,
+        policy: QueuePolicy,
+        jobs: &[EngineJob],
+        devices: &[DeviceSpec],
+    ) -> Vec<usize> {
+        // Keys depend only on the immutable job, so compute each once
+        // (the energy-aware key walks every device) and sort the keyed
+        // list — not O(n log n) key recomputations.
+        let mut keyed: Vec<(f64, f64, usize)> = self
+            .pending
+            .iter()
+            .map(|&idx| {
+                let job = &jobs[idx];
+                let key = match policy {
+                    QueuePolicy::Fifo => job.arrival_s,
+                    QueuePolicy::Sjf => job.frames as f64 * job.task.relative_cost,
+                    QueuePolicy::Edf => job.deadline_s.unwrap_or(f64::INFINITY),
+                    QueuePolicy::EnergyAware => devices
+                        .iter()
+                        .map(|d| predict_full_device(d, &job.task, job.frames).1)
+                        .fold(f64::INFINITY, f64::min),
+                };
+                (key, job.arrival_s, idx)
+            })
+            .collect();
+        keyed.sort_by(|a, b| {
+            (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        keyed.into_iter().map(|(_, _, idx)| idx).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskProfile;
+
+    fn job(id: u64, arrival: f64, frames: usize) -> EngineJob {
+        EngineJob::new(id, arrival, frames, TaskProfile::yolo_tiny())
+    }
+
+    #[test]
+    fn fifo_keeps_arrival_order() {
+        let jobs = vec![job(0, 0.0, 100), job(1, 1.0, 10), job(2, 2.0, 50)];
+        let mut q = AdmissionQueue::new();
+        for i in 0..3 {
+            q.push(i as f64, i);
+        }
+        let devices = [crate::device::DeviceSpec::tx2()];
+        assert_eq!(q.ordered(QueuePolicy::Fifo, &jobs, &devices), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sjf_prefers_short_jobs() {
+        let jobs = vec![job(0, 0.0, 100), job(1, 1.0, 10), job(2, 2.0, 50)];
+        let mut q = AdmissionQueue::new();
+        for i in 0..3 {
+            q.push(i as f64, i);
+        }
+        let devices = [crate::device::DeviceSpec::tx2()];
+        assert_eq!(q.ordered(QueuePolicy::Sjf, &jobs, &devices), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_with_deadlineless_last() {
+        let mut j0 = job(0, 0.0, 10);
+        j0.deadline_s = Some(20.0);
+        let mut j1 = job(1, 1.0, 10);
+        j1.deadline_s = Some(5.0);
+        let j2 = job(2, 2.0, 10); // no deadline
+        let jobs = vec![j0, j1, j2];
+        let mut q = AdmissionQueue::new();
+        for i in 0..3 {
+            q.push(i as f64, i);
+        }
+        let devices = [crate::device::DeviceSpec::tx2()];
+        assert_eq!(q.ordered(QueuePolicy::Edf, &jobs, &devices), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn depth_statistics() {
+        let mut q = AdmissionQueue::new();
+        q.push(0.0, 0);
+        q.push(0.0, 1);
+        q.remove(10.0, 0); // depth 2 for 10 s
+        q.remove(20.0, 1); // depth 1 for 10 s
+        assert_eq!(q.max_depth, 2);
+        assert!((q.mean_depth(20.0) - 1.5).abs() < 1e-9);
+        assert!(q.is_empty());
+    }
+}

@@ -68,6 +68,37 @@ impl ArrivalProcess {
         out
     }
 
+    /// Parse a CLI spec:
+    /// `poisson:RATE`, `det:GAP` (or `deterministic:GAP`), or
+    /// `mmpp:CALM_RATE,BURST_RATE,MEAN_CALM_S,MEAN_BURST_S`.
+    pub fn parse(spec: &str) -> Option<ArrivalProcess> {
+        let (kind, args) = spec.split_once(':')?;
+        match kind.to_ascii_lowercase().as_str() {
+            "poisson" => {
+                let rate: f64 = args.parse().ok()?;
+                (rate > 0.0).then_some(ArrivalProcess::Poisson { rate_per_s: rate })
+            }
+            "det" | "deterministic" => {
+                let gap: f64 = args.parse().ok()?;
+                (gap > 0.0).then_some(ArrivalProcess::Deterministic { gap_s: gap })
+            }
+            "mmpp" => {
+                let parts: Vec<f64> =
+                    args.split(',').map(|p| p.trim().parse().ok()).collect::<Option<_>>()?;
+                if parts.len() != 4 || parts.iter().any(|&p| p <= 0.0) {
+                    return None;
+                }
+                Some(ArrivalProcess::Mmpp {
+                    calm_rate_per_s: parts[0],
+                    burst_rate_per_s: parts[1],
+                    mean_calm_s: parts[2],
+                    mean_burst_s: parts[3],
+                })
+            }
+            _ => None,
+        }
+    }
+
     /// Long-run mean rate (arrivals per second).
     pub fn mean_rate(&self) -> f64 {
         match self {
@@ -144,6 +175,20 @@ mod tests {
         let cv2_m = cv2(&gaps(&a_m));
         assert!((cv2_p - 1.0).abs() < 0.12, "poisson cv2={cv2_p}");
         assert!(cv2_m > 1.5, "mmpp cv2={cv2_m} should be bursty");
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            ArrivalProcess::parse("poisson:0.5").map(|p| p.mean_rate()),
+            Some(0.5)
+        );
+        assert_eq!(ArrivalProcess::parse("det:2.0").map(|p| p.mean_rate()), Some(0.5));
+        let m = ArrivalProcess::parse("mmpp:0.1,1.0,60,20").unwrap();
+        assert!(matches!(m, ArrivalProcess::Mmpp { .. }));
+        for bad in ["poisson:-1", "poisson:x", "mmpp:1,2,3", "nope:1", "poisson"] {
+            assert!(ArrivalProcess::parse(bad).is_none(), "{bad} should not parse");
+        }
     }
 
     #[test]
