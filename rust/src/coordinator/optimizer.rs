@@ -65,6 +65,47 @@ impl OnlineOptimizer {
         self.decide_capped(cfg, usize::MAX)
     }
 
+    /// Probe, fit, decide under an availability cap, with a sticky
+    /// preference for `prefer` (a job's *current* container count): the
+    /// regrant path of the elastic serving engine. Changing `k` mid-job
+    /// means tearing containers down and restarting them, while changing
+    /// only the per-container cpu share is a free `docker update` (CFS
+    /// quota rewrite) — so the current k is kept whenever the fitted
+    /// model says it is within [`Self::REGRANT_STICKINESS`] of the
+    /// optimum under the new grant.
+    pub fn decide_capped_preferring(
+        &self,
+        cfg: &ExperimentConfig,
+        k_cap: usize,
+        prefer: Option<usize>,
+    ) -> Result<OptimizerDecision> {
+        let mut d = self.decide_capped(cfg, k_cap)?;
+        if let Some(p) = prefer {
+            if p >= 1 && p <= k_cap && p != d.best_k {
+                // Measured probe values beat the fitted model when both
+                // points were probed — in particular, the <3-probe
+                // fallback's constant stand-in model would otherwise
+                // make the stickiness test vacuously true even for a
+                // current k the probes just measured as strictly worse.
+                let probe_of = |k: usize| {
+                    d.probes.iter().find(|&&(pk, _)| pk == k).map(|&(_, v)| v)
+                };
+                let (at_p, at_best) = match (probe_of(p), probe_of(d.best_k)) {
+                    (Some(pv), Some(bv)) => (pv, bv),
+                    _ => (d.model.eval(p as f64), d.model.eval(d.best_k as f64)),
+                };
+                if at_p <= at_best * (1.0 + Self::REGRANT_STICKINESS) {
+                    d.best_k = p;
+                }
+            }
+        }
+        Ok(d)
+    }
+
+    /// Relative objective slack within which a regrant keeps the job's
+    /// current container count instead of restarting containers.
+    pub const REGRANT_STICKINESS: f64 = 0.02;
+
     /// Probe, fit, decide under an availability cap: `k` never exceeds
     /// `k_cap`. The serving engine calls this with the container count
     /// supportable by the cores/memory *currently free* on the device,
@@ -221,6 +262,26 @@ mod tests {
         let d = OnlineOptimizer::default().decide_capped(&cfg, 2).unwrap();
         assert!(d.best_k <= 2 && d.best_k >= 1);
         assert!(d.probes.len() <= 2);
+    }
+
+    #[test]
+    fn regrant_preference_keeps_near_optimal_current_k() {
+        // Orin energy flattens at high k: k=11 is within the stickiness
+        // band of k=12, so a regrant must keep the current containers
+        // rather than restart them for a sub-2% model delta.
+        let mut cfg = ExperimentConfig::default();
+        cfg.device = DeviceSpec::orin();
+        let opt = OnlineOptimizer::default();
+        let free = opt.decide_capped(&cfg, usize::MAX).unwrap();
+        let near = free.best_k.saturating_sub(1).max(1);
+        let sticky = opt.decide_capped_preferring(&cfg, usize::MAX, Some(near)).unwrap();
+        assert_eq!(sticky.best_k, near, "near-optimal current k must stick");
+        // A clearly bad current k (k=1 on the Orin) must NOT stick.
+        let moved = opt.decide_capped_preferring(&cfg, usize::MAX, Some(1)).unwrap();
+        assert!(moved.best_k > 1, "k=1 stuck despite large model delta");
+        // The preference never escapes the availability cap.
+        let capped = opt.decide_capped_preferring(&cfg, 4, Some(10)).unwrap();
+        assert!(capped.best_k <= 4);
     }
 
     #[test]

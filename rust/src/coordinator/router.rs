@@ -83,6 +83,35 @@ impl Coordinator {
         avail_cores: f64,
         avail_mem_mib: f64,
     ) -> Result<usize> {
+        self.decide_k_inner(job, avail_cores, avail_mem_mib, None)
+    }
+
+    /// Re-decide k for a job already running with `current_k` containers
+    /// whose core grant just changed — the elastic engine's regrant
+    /// path. Same availability-capped decision as
+    /// [`Self::decide_k_constrained`], except the online optimizer keeps
+    /// the current container count when it is near-optimal under the
+    /// new grant (changing the cpu share of live containers is a free
+    /// CFS-quota rewrite; changing k means restarting them — see
+    /// [`OnlineOptimizer::decide_capped_preferring`]).
+    pub fn decide_k_regrant(
+        &mut self,
+        job: &InferenceJob,
+        avail_cores: f64,
+        avail_mem_mib: f64,
+        current_k: usize,
+    ) -> Result<usize> {
+        self.metrics.inc("regrant_decisions", 1);
+        self.decide_k_inner(job, avail_cores, avail_mem_mib, Some(current_k))
+    }
+
+    fn decide_k_inner(
+        &mut self,
+        job: &InferenceJob,
+        avail_cores: f64,
+        avail_mem_mib: f64,
+        prefer_k: Option<usize>,
+    ) -> Result<usize> {
         let device = self.base.effective_device();
         let frames = job.video.frame_count();
         let core_cap = device.core_cap_for_grant(avail_cores).unwrap_or(usize::MAX);
@@ -93,11 +122,30 @@ impl Coordinator {
                 let cap = core_cap.min(mem_cap).max(1);
                 if cap <= 2 {
                     // A grant this small has no split decision worth
-                    // probing: saturate the grant.
-                    return Ok(cap);
+                    // probing: saturate the grant — except on a regrant,
+                    // where a current k that still fits is kept alive
+                    // (no restart for a probe-free decision).
+                    return Ok(prefer_k.filter(|&p| p >= 1 && p <= cap).unwrap_or(cap));
                 }
-                let key =
-                    format!("{}/{}/c{:.1}/k{}", device.name, job.task.name, avail_cores, cap);
+                // Quantize the grant DOWN to half-cores before probing
+                // and caching: elastic fair shares are near-continuous
+                // fractions, and keying on the raw value would make
+                // nearly every regrant a cache miss (a fresh probe run)
+                // while the cache grows without bound. Flooring (not
+                // rounding) keeps the probed device within the cores
+                // actually granted; half-core resolution is finer than
+                // any k decision boundary the convex models produce.
+                let grant_q = ((avail_cores * 2.0).floor() / 2.0).max(1.0);
+                let key = match prefer_k {
+                    None => format!(
+                        "{}/{}/c{:.1}/k{}",
+                        device.name, job.task.name, grant_q, cap
+                    ),
+                    Some(p) => format!(
+                        "{}/{}/c{:.1}/k{}/p{p}",
+                        device.name, job.task.name, grant_q, cap
+                    ),
+                };
                 if let Some(d) = self.decisions.get(&key) {
                     return Ok(d.best_k);
                 }
@@ -105,8 +153,8 @@ impl Coordinator {
                 cfg.task = job.task.clone();
                 cfg.video = job.video.clone();
                 cfg.device = device.clone();
-                cfg.device.cores = avail_cores.max(1.0);
-                let d = opt.decide_capped(&cfg, cap)?;
+                cfg.device.cores = grant_q;
+                let d = opt.decide_capped_preferring(&cfg, cap, prefer_k)?;
                 let k = d.best_k;
                 log::info!(
                     "router: optimized k={k} for {key} (model: {})",
@@ -250,6 +298,29 @@ mod tests {
         assert_eq!(c.decide_k_constrained(&j, 2.0, mem).unwrap(), 2);
         assert_eq!(c.decide_k_constrained(&j, 1.0, mem).unwrap(), 1);
         assert!(c.decisions().is_empty(), "tiny grants must not probe");
+    }
+
+    #[test]
+    fn regrant_decision_is_sticky_and_counted() {
+        let mut base = ExperimentConfig::default();
+        base.device = crate::device::DeviceSpec::orin();
+        let mut c = Coordinator::new(base, SplitPolicy::Online(OnlineOptimizer::default()));
+        let j = job(1, 96);
+        let mem = c.base.device.memory.available_mib();
+        // Admission decides k on a half-device grant; the device then
+        // drains and the job is regranted the whole thing. Whatever k
+        // it holds is kept when the model says it's near-optimal or
+        // the grant is too small to probe.
+        let k0 = c.decide_k_constrained(&j, 6.0, mem).unwrap();
+        let k_tiny = c.decide_k_regrant(&j, 2.0, mem, k0).unwrap();
+        assert!(k_tiny >= 1 && k_tiny <= 2.max(k0));
+        assert_eq!(c.metrics.counter("regrant_decisions"), 1);
+        // Fixed policy: regrant is just the constrained decision again.
+        let mut f = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        assert_eq!(
+            f.decide_k_regrant(&j, 2.0, f.base.device.memory.available_mib(), 4).unwrap(),
+            2
+        );
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub struct PowerMode {
 impl PowerMode {
     /// Modes for a device, default first. Shapes follow the published
     /// nvpmodel tables (values are representative, not vendor-exact).
+    /// Non-TX2 devices get Orin-shaped modes derived from their OWN
+    /// core count (the published 30 W / 15 W Orin modes keep 2/3 and
+    /// 1/3 of the cores), so custom or freshly-calibrated specs see
+    /// sane mode tables instead of a hardcoded 12-core assumption.
     pub fn modes_for(device: &DeviceSpec) -> Vec<PowerMode> {
         match device.name {
             "jetson-tx2" => vec![
@@ -38,9 +42,17 @@ impl PowerMode {
                 PowerMode { name: "MAXQ", freq_scale: 0.60, cores: 4.0 },
             ],
             _ => vec![
-                PowerMode { name: "MAXN (default)", freq_scale: 1.0, cores: 12.0 },
-                PowerMode { name: "30W", freq_scale: 0.80, cores: 8.0 },
-                PowerMode { name: "15W", freq_scale: 0.55, cores: 4.0 },
+                PowerMode { name: "MAXN (default)", freq_scale: 1.0, cores: device.cores },
+                PowerMode {
+                    name: "30W",
+                    freq_scale: 0.80,
+                    cores: (device.cores * 2.0 / 3.0).round().max(1.0),
+                },
+                PowerMode {
+                    name: "15W",
+                    freq_scale: 0.55,
+                    cores: (device.cores / 3.0).round().max(1.0),
+                },
             ],
         }
     }
@@ -59,13 +71,17 @@ impl PowerMode {
 }
 
 /// Energy for the paper's workload (frames, k containers) in a mode.
+/// `k` is clamped to the device's memory cap — the same bound the paper
+/// states for container counts — not an arbitrary multiple of the core
+/// count (a mode change never frees container memory).
 pub fn mode_energy(base: &DeviceSpec, mode: &PowerMode, frames: usize, k: usize) -> (f64, f64) {
     use crate::device::PowerSensor;
     use crate::energy::meter_schedule;
     use crate::sched::CpuScheduler;
     let dev = mode.apply(base);
     let sched = CpuScheduler::new(&dev);
-    let res = sched.run_equal_split(k.min(dev.cores as usize * 3), frames, 0.0);
+    let k = k.min(dev.memory.max_containers(frames)).max(1);
+    let res = sched.run_equal_split(k, frames, 0.0);
     let rep = meter_schedule(&dev, &PowerSensor::default(), &res);
     (rep.time_s, rep.energy_j)
 }
@@ -106,6 +122,36 @@ mod tests {
         let d = m15.apply(&orin);
         assert_eq!(d.cores, 4.0);
         assert_eq!(d.power.cores, 4.0);
+    }
+
+    #[test]
+    fn derived_modes_follow_the_spec_core_count() {
+        // A calibrated non-preset device (say a 6-core board) must get
+        // modes derived from ITS core count, not the Orin's 12.
+        let mut custom = DeviceSpec::orin();
+        custom.name = "custom-6core";
+        custom.cores = 6.0;
+        let modes = PowerMode::modes_for(&custom);
+        assert_eq!(modes[0].cores, 6.0, "MAXN keeps all cores");
+        assert_eq!(modes[1].cores, 4.0, "30W keeps 2/3 of the cores");
+        assert_eq!(modes[2].cores, 2.0, "15W keeps 1/3 of the cores");
+        for m in &modes {
+            let d = m.apply(&custom);
+            assert!(d.cores <= custom.cores && d.cores >= 1.0);
+        }
+    }
+
+    #[test]
+    fn mode_energy_respects_the_memory_cap() {
+        // Asking for an absurd k must clamp to the paper's memory cap
+        // (TX2: 6 containers at 720 frames), not cores*3.
+        let tx2 = DeviceSpec::tx2();
+        let mode = &PowerMode::modes_for(&tx2)[0];
+        let cap = tx2.memory.max_containers(720);
+        let (t_capped, e_capped) = mode_energy(&tx2, mode, 720, 1000);
+        let (t_at_cap, e_at_cap) = mode_energy(&tx2, mode, 720, cap);
+        assert_eq!(t_capped, t_at_cap);
+        assert_eq!(e_capped, e_at_cap);
     }
 
     #[test]

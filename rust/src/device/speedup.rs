@@ -68,6 +68,53 @@ impl SpeedupCurve {
     pub fn efficiency(&self, c: f64) -> f64 {
         self.speedup(c) / c
     }
+
+    /// Frame-processing rate (frames/s) of one container at share `c`,
+    /// given the device's one-core per-frame time.
+    pub fn frame_rate(&self, c: f64, base_frame_s: f64) -> f64 {
+        assert!(base_frame_s > 0.0, "base frame time must be positive");
+        1.0 / (base_frame_s * self.time_factor(c))
+    }
+
+    /// Frames (fractional) one container completes in `dt_s` seconds at
+    /// share `c` — the progress side of elastic regrants.
+    pub fn frames_done(&self, c: f64, base_frame_s: f64, dt_s: f64) -> f64 {
+        assert!(dt_s >= 0.0, "negative elapsed time");
+        self.frame_rate(c, base_frame_s) * dt_s
+    }
+
+    /// Completion time for `frames` of remaining work in one container
+    /// under a **piecewise-constant core share**: the container runs
+    /// through each `(share, duration_s)` segment in order, then holds
+    /// `tail_share` until done. Returns the time from the start of the
+    /// first segment until the last frame finishes.
+    ///
+    /// This is the model behind the serving engine's elastic grants: a
+    /// regrant splices a new constant-share segment onto a job's
+    /// schedule, and the engine's cancel-and-reschedule of the
+    /// completion event must land exactly where this closed form says
+    /// (see the allocator tests that pin the two together).
+    pub fn completion_time_piecewise(
+        &self,
+        base_frame_s: f64,
+        segments: &[(f64, f64)],
+        tail_share: f64,
+        frames: f64,
+    ) -> f64 {
+        assert!(frames >= 0.0, "negative remaining work");
+        let mut left = frames;
+        let mut t = 0.0;
+        for &(share, dur_s) in segments {
+            assert!(dur_s >= 0.0, "negative segment duration");
+            let rate = self.frame_rate(share, base_frame_s);
+            if rate * dur_s >= left {
+                return t + left / rate;
+            }
+            left -= rate * dur_s;
+            t += dur_s;
+        }
+        t + left / self.frame_rate(tail_share, base_frame_s)
+    }
 }
 
 #[cfg(test)]
@@ -153,6 +200,52 @@ mod tests {
             assert!(e <= prev + 1e-12, "efficiency must decrease");
             prev = e;
         }
+    }
+
+    #[test]
+    fn piecewise_constant_share_reduces_to_flat_share() {
+        // A single-segment schedule long enough to finish, and a flat
+        // tail with no segments, must both equal frames * per-frame time.
+        let c = SpeedupCurve::new(0.3, 1.5, 1.2);
+        let base = 0.5;
+        let want = 100.0 * base * c.time_factor(3.0);
+        let flat = c.completion_time_piecewise(base, &[], 3.0, 100.0);
+        let one_seg = c.completion_time_piecewise(base, &[(3.0, 1e6)], 1.0, 100.0);
+        assert!((flat - want).abs() < 1e-9, "flat {flat} vs {want}");
+        assert!((one_seg - want).abs() < 1e-9, "one_seg {one_seg} vs {want}");
+    }
+
+    #[test]
+    fn splitting_a_segment_does_not_change_completion() {
+        // Cutting a constant-share schedule into pieces is a no-op.
+        let c = SpeedupCurve::new(0.25, 0.81, 1.44);
+        let base = 1.0;
+        let whole = c.completion_time_piecewise(base, &[], 2.0, 50.0);
+        let cut = c.completion_time_piecewise(base, &[(2.0, 10.0), (2.0, 5.0)], 2.0, 50.0);
+        assert!((whole - cut).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regrant_to_more_cores_finishes_sooner() {
+        // 720 frames at 2 cores for 100 s, then either stay at 2 or
+        // expand to 4: the expansion must strictly win, and by exactly
+        // the remaining-work ratio of per-frame times.
+        let c = SpeedupCurve::new(0.2953, 1.4754, 1.1627); // TX2 curve
+        let base = 1.3556;
+        let stay = c.completion_time_piecewise(base, &[(2.0, 100.0)], 2.0, 720.0);
+        let grow = c.completion_time_piecewise(base, &[(2.0, 100.0)], 4.0, 720.0);
+        assert!(grow < stay - 1e-6, "grow {grow} vs stay {stay}");
+        let done = c.frames_done(2.0, base, 100.0);
+        let want = 100.0 + (720.0 - done) * base * c.time_factor(4.0);
+        assert!((grow - want).abs() < 1e-6, "grow {grow} vs closed form {want}");
+    }
+
+    #[test]
+    fn frames_done_inverts_completion_time() {
+        let c = SpeedupCurve::amdahl(0.9);
+        let base = 0.8;
+        let t = c.completion_time_piecewise(base, &[], 3.0, 42.0);
+        assert!((c.frames_done(3.0, base, t) - 42.0).abs() < 1e-9);
     }
 
     #[test]

@@ -46,9 +46,16 @@ impl Battery {
     /// How many identical jobs (each `energy_j` at `avg_power_w`) the
     /// battery can run.
     pub fn jobs_supported(&self, energy_j: f64, avg_power_w: f64) -> usize {
+        self.jobs_supported_f(energy_j, avg_power_w).floor() as usize
+    }
+
+    /// [`Self::jobs_supported`] without the floor — the fractional
+    /// jobs-per-charge figure serving reports carry, where rounding to
+    /// a whole video would hide small policy differences.
+    pub fn jobs_supported_f(&self, energy_j: f64, avg_power_w: f64) -> f64 {
         assert!(energy_j > 0.0);
         let eff = self.efficiency(avg_power_w);
-        (self.usable_j() * eff / energy_j).floor() as usize
+        self.usable_j() * eff / energy_j
     }
 
     /// Runtime in hours at constant draw.

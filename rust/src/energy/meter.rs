@@ -72,6 +72,29 @@ pub fn meter_spans(device: &DeviceSpec, spans: &[TraceSegment]) -> EnergyReport 
     }
 }
 
+/// Append `span` to a busy-core timeline, merging it into the previous
+/// span when the two are contiguous at the same busy level.
+///
+/// Elastic regrants close the open span at every rebalance even when
+/// the device's aggregate busy level did not change (e.g. cores moving
+/// between jobs); without merging, a regrant-heavy serving run produces
+/// a timeline with thousands of zero-information span boundaries. The
+/// merge never changes the [`meter_spans`] integral.
+pub fn push_span(spans: &mut Vec<TraceSegment>, span: TraceSegment) {
+    if span.t1_s - span.t0_s <= 0.0 {
+        return;
+    }
+    if let Some(last) = spans.last_mut() {
+        if (last.t1_s - span.t0_s).abs() <= 1e-9
+            && (last.busy_cores - span.busy_cores).abs() <= 1e-9
+        {
+            last.t1_s = span.t1_s;
+            return;
+        }
+    }
+    spans.push(span);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +178,29 @@ mod tests {
         let want = spec.power.power(2.0) * 10.0 + spec.power.power(4.0) * 10.0;
         assert!((rep.energy_j - want).abs() < 1e-9);
         assert_eq!(rep.time_s, 20.0);
+    }
+
+    #[test]
+    fn push_span_merges_contiguous_equal_levels() {
+        let spec = DeviceSpec::tx2();
+        let mut merged = Vec::new();
+        push_span(&mut merged, TraceSegment { t0_s: 0.0, t1_s: 5.0, busy_cores: 3.0 });
+        push_span(&mut merged, TraceSegment { t0_s: 5.0, t1_s: 9.0, busy_cores: 3.0 });
+        push_span(&mut merged, TraceSegment { t0_s: 9.0, t1_s: 12.0, busy_cores: 1.0 });
+        // zero-length and gap spans: dropped / kept separate
+        push_span(&mut merged, TraceSegment { t0_s: 12.0, t1_s: 12.0, busy_cores: 1.0 });
+        push_span(&mut merged, TraceSegment { t0_s: 20.0, t1_s: 21.0, busy_cores: 1.0 });
+        assert_eq!(merged.len(), 3, "{merged:?}");
+        let plain = [
+            TraceSegment { t0_s: 0.0, t1_s: 5.0, busy_cores: 3.0 },
+            TraceSegment { t0_s: 5.0, t1_s: 9.0, busy_cores: 3.0 },
+            TraceSegment { t0_s: 9.0, t1_s: 12.0, busy_cores: 1.0 },
+            TraceSegment { t0_s: 20.0, t1_s: 21.0, busy_cores: 1.0 },
+        ];
+        let a = meter_spans(&spec, &merged);
+        let b = meter_spans(&spec, &plain);
+        assert!((a.energy_j - b.energy_j).abs() < 1e-9);
+        assert!((a.time_s - b.time_s).abs() < 1e-9);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use divide_and_save::energy::meter_schedule;
 use divide_and_save::modelfit::{fit_exponential, fit_quadratic, FittedModel};
 use divide_and_save::bench::Table;
 use divide_and_save::sched::CpuScheduler;
-use divide_and_save::server::{serve, QueuePolicy, ServeConfig};
+use divide_and_save::server::{serve, GrantPolicy, QueuePolicy, ServeConfig};
 use divide_and_save::util::cli::{CliError, Command, OptSpec};
 use divide_and_save::util::csv::CsvWriter;
 use divide_and_save::util::logging;
@@ -259,6 +259,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt(OptSpec::opt("job-frames", "frames per job").with_default("96"))
         .opt(OptSpec::opt("containers", "fixed k (omit for online policy)"))
         .opt(OptSpec::opt("policy", "queue policy (fifo|sjf|edf|energy)").with_default("fifo"))
+        .opt(OptSpec::opt("grant", "core-grant policy (fixed|elastic)").with_default("fixed"))
         .opt(OptSpec::opt("concurrency", "concurrent jobs per device").with_default("1"))
         .opt(OptSpec::opt(
             "arrival",
@@ -281,6 +282,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     let queue_policy = QueuePolicy::parse(p.get_or("policy", "fifo"))
         .ok_or_else(|| anyhow!("unknown queue policy {:?}", p.get_or("policy", "fifo")))?;
+    let grant_policy = GrantPolicy::parse(p.get_or("grant", "fixed"))
+        .ok_or_else(|| anyhow!("unknown grant policy {:?}", p.get_or("grant", "fixed")))?;
     let arrival = match p.get("arrival") {
         Some(spec) => Some(
             divide_and_save::workload::ArrivalProcess::parse(spec)
@@ -298,6 +301,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             queue_policy,
             max_concurrent_jobs: p.get_usize("concurrency")?.unwrap_or(1).max(1),
             deadline_s: p.get_f64("deadline")?,
+            grant_policy,
             ..Default::default()
         },
     )?;
@@ -314,14 +318,22 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         report.total_energy_j
     );
     println!(
-        "queue depth max={} mean={:.2}  utilization={:?}",
+        "queue depth max={} mean={:.2}  utilization={:?}  grants={} regrants={}",
         report.max_queue_depth,
         report.mean_queue_depth,
         report
             .node_utilization
             .iter()
             .map(|u| format!("{u:.2}"))
-            .collect::<Vec<_>>()
+            .collect::<Vec<_>>(),
+        grant_policy.name(),
+        report.regrants
+    );
+    println!(
+        "battery (50 Wh pack): {:.0} jobs/charge, {:.1} h at the observed {:.1} W draw",
+        report.battery_jobs_per_charge,
+        report.battery_hours,
+        report.total_energy_j / report.wall_s
     );
     if let Some(path) = p.get("report-json") {
         std::fs::write(path, report.to_json().pretty())?;

@@ -121,6 +121,14 @@ impl Registry {
         self.gauges.lock().unwrap().get(name).copied()
     }
 
+    /// Accumulating gauge: add `delta` to the stored value (starting
+    /// from 0). For float totals a `u64` counter cannot hold — e.g. the
+    /// serving engine's grant-churn gauge, which sums |Δcores| over
+    /// every regrant.
+    pub fn add_gauge(&self, name: &str, delta: f64) {
+        *self.gauges.lock().unwrap().entry(name.to_string()).or_insert(0.0) += delta;
+    }
+
     /// Keep-maximum gauge update: the stored value only ever rises
     /// (peak queue depth, peak concurrency, high-water marks).
     pub fn set_gauge_max(&self, name: &str, v: f64) {
@@ -200,6 +208,14 @@ mod tests {
         assert_eq!(r.counter("missing"), 0);
         r.set_gauge("power_w", 2.9);
         assert_eq!(r.gauge("power_w"), Some(2.9));
+    }
+
+    #[test]
+    fn gauge_accumulates_deltas() {
+        let r = Registry::new();
+        r.add_gauge("churn_cores", 2.5);
+        r.add_gauge("churn_cores", 1.25);
+        assert_eq!(r.gauge("churn_cores"), Some(3.75));
     }
 
     #[test]

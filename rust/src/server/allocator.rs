@@ -14,10 +14,44 @@
 //! billed the idle floor to every job separately.
 
 use crate::device::DeviceSpec;
-use crate::energy::meter_spans;
+use crate::energy::{meter_spans, push_span};
 use crate::sched::interference;
 use crate::sched::TraceSegment;
 use crate::workload::TaskProfile;
+
+/// How a job's core grant evolves over its lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GrantPolicy {
+    /// A job keeps its admission grant until it completes — PR 1's
+    /// semantics, matching `docker update`-less deployments. A long job
+    /// admitted under load keeps its small share even after the device
+    /// drains.
+    #[default]
+    Fixed,
+    /// Grants are recomputed at every admission/completion event: the
+    /// device's cores are re-apportioned fair-share across **all**
+    /// resident jobs, not just the backlog. Work-conserving: no core
+    /// sits ungranted while any job is resident, and the idle-device
+    /// single-job case degenerates to the paper's whole-device split.
+    Elastic,
+}
+
+impl GrantPolicy {
+    pub fn parse(s: &str) -> Option<GrantPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" => Some(GrantPolicy::Fixed),
+            "elastic" | "work-conserving" | "work_conserving" => Some(GrantPolicy::Elastic),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GrantPolicy::Fixed => "fixed",
+            GrantPolicy::Elastic => "elastic",
+        }
+    }
+}
 
 /// Resource + service plan for one admitted job: `k` containers sharing
 /// `grant_cores` cpus, finishing after `service_s` (startup included).
@@ -65,6 +99,46 @@ pub fn plan_service(
     ServicePlan { k, grant_cores, cpus_each, busy_cores, mem_mib, service_s }
 }
 
+/// Re-plan a job's **remaining** work under a new core grant — the
+/// elastic regrant path. Work is fractional frames (a job halfway
+/// through a frame carries the fraction over); the per-frame model is
+/// the same calibrated curve/interference pipeline as [`plan_service`],
+/// so a regrant that changes nothing reproduces the original completion
+/// time exactly, and a k=1 job regranted mid-flight lands where
+/// [`crate::device::SpeedupCurve::completion_time_piecewise`] says (see
+/// tests).
+///
+/// `startup_s` models what the container layer charges for the change:
+/// resizing the cpu share of live containers is a free CFS-quota
+/// rewrite (`container::cfs`, `docker update --cpus`) — pass the still
+/// un-elapsed remainder of the original startup (usually 0) — while
+/// changing `k` tears containers down and restarts them, paying the
+/// full `container_startup_s` again.
+pub fn plan_remaining(
+    device: &DeviceSpec,
+    task: &TaskProfile,
+    work_frames: f64,
+    k: usize,
+    grant_cores: f64,
+    other_containers: usize,
+    startup_s: f64,
+) -> ServicePlan {
+    assert!(k >= 1, "k must be >= 1");
+    assert!(grant_cores > 0.0, "grant must be positive");
+    assert!(work_frames >= 0.0, "negative remaining work");
+    assert!(startup_s >= 0.0, "negative startup");
+    let cpus_each = grant_cores / k as f64;
+    let penalty =
+        interference::penalty(other_containers + k, device.cores, device.interference_alpha);
+    let per_frame =
+        task.base_frame_s(device.base_frame_s) * device.curve.time_factor(cpus_each) * penalty;
+    let frames_per_container = work_frames / k as f64;
+    let service_s = startup_s + frames_per_container * per_frame;
+    let busy_cores = (k as f64 * device.curve.busy_cores(cpus_each)).min(grant_cores);
+    let mem_mib = device.memory.usage_mib(k, frames_per_container.ceil() as usize);
+    ServicePlan { k, grant_cores, cpus_each, busy_cores, mem_mib, service_s }
+}
+
 /// Predict (service_s, energy_j) for a job running alone on an idle
 /// device with its energy-optimal full-device split — the estimate the
 /// energy-aware queue/placement policies rank by.
@@ -77,15 +151,49 @@ pub fn predict_full_device(device: &DeviceSpec, task: &TaskProfile, frames: usiz
     (plan.service_s, energy)
 }
 
-/// One job currently resident on a node.
+/// One job currently resident on a node, carrying explicit progress so
+/// its grant can change mid-flight.
 #[derive(Debug, Clone)]
 pub struct ActiveJob {
     /// Index into the engine's job table.
     pub job_idx: usize,
     pub frames: usize,
+    /// The plan currently in force (replaced on every regrant).
     pub plan: ServicePlan,
     pub start_s: f64,
     pub finish_s: f64,
+    /// **Effective** frames of work remaining when the current plan
+    /// took effect (fractional: a regrant mid-frame carries the
+    /// fraction over). At admission this is `ceil(frames/k) * k`, not
+    /// `frames`: the uneven split's straggler containers pad the
+    /// makespan, and a regrant must not silently erase that padding
+    /// (`plan_remaining(work/k)` then reproduces `plan_service`'s
+    /// div_ceil service exactly, whatever the frame count).
+    pub work_left: f64,
+    /// When the current plan took effect (admission or last regrant).
+    pub seg_start_s: f64,
+    /// Container startup included in the current plan's service time
+    /// (0 after a share-only regrant — no restart).
+    pub seg_startup_s: f64,
+    /// Completion-event generation: bumped on every regrant so the
+    /// engine can recognize superseded completion events as stale.
+    pub grant_gen: u64,
+    /// Regrants applied to this job so far.
+    pub regrants: usize,
+}
+
+impl ActiveJob {
+    /// Frames of work still unfinished at `now_s` under the current
+    /// plan, assuming linear progress through its compute phase (the
+    /// startup slice at the front of the segment does no frame work).
+    pub fn work_remaining(&self, now_s: f64) -> f64 {
+        let compute_s = (self.plan.service_s - self.seg_startup_s).max(0.0);
+        if compute_s <= 0.0 {
+            return 0.0;
+        }
+        let elapsed_s = (now_s - self.seg_start_s - self.seg_startup_s).clamp(0.0, compute_s);
+        self.work_left * (1.0 - elapsed_s / compute_s)
+    }
 }
 
 /// Core/memory accounting + busy timeline for one engine node.
@@ -135,19 +243,44 @@ impl NodeAllocator {
         self.has_slot() && self.free_cores + 1e-9 >= min_cores
     }
 
+    /// [`Self::can_admit`], but grant-policy aware: under elastic grants
+    /// the resident jobs hold *all* the cores between events, so "free
+    /// right now" is the wrong test — what matters is whether shrinking
+    /// everyone to a fair share leaves at least `min_cores` for the
+    /// newcomer.
+    pub fn can_admit_under(&self, min_cores: f64, policy: GrantPolicy) -> bool {
+        match policy {
+            GrantPolicy::Fixed => self.can_admit(min_cores),
+            GrantPolicy::Elastic => {
+                self.has_slot()
+                    && self.device.cores / (self.active.len() + 1) as f64 + 1e-9 >= min_cores
+            }
+        }
+    }
+
+    /// The resident job with engine index `job_idx`, if any.
+    pub fn find(&self, job_idx: usize) -> Option<&ActiveJob> {
+        self.active.iter().find(|a| a.job_idx == job_idx)
+    }
+
     /// Containers of all resident jobs (oversubscription accounting).
     pub fn resident_containers(&self) -> usize {
         self.active.iter().map(|a| a.plan.k).sum()
     }
 
     /// Close the open timeline span at `now` (no-op while asleep).
+    /// Contiguous spans at the same busy level merge, so regrant-heavy
+    /// elastic runs don't bloat the timeline with no-op boundaries.
     fn close_span(&mut self, now_s: f64) {
         if !self.active.is_empty() && now_s > self.last_change_s + 1e-12 {
-            self.spans.push(TraceSegment {
-                t0_s: self.last_change_s,
-                t1_s: now_s,
-                busy_cores: self.busy_level.min(self.device.cores),
-            });
+            push_span(
+                &mut self.spans,
+                TraceSegment {
+                    t0_s: self.last_change_s,
+                    t1_s: now_s,
+                    busy_cores: self.busy_level.min(self.device.cores),
+                },
+            );
         }
         self.last_change_s = now_s;
     }
@@ -167,8 +300,77 @@ impl NodeAllocator {
         self.busy_level += plan.busy_cores;
         self.est_free_at_s = self.est_free_at_s.max(now_s) + plan.service_s;
         let finish_s = now_s + plan.service_s;
-        self.active.push(ActiveJob { job_idx, frames, plan, start_s: now_s, finish_s });
+        self.active.push(ActiveJob {
+            job_idx,
+            frames,
+            plan,
+            start_s: now_s,
+            finish_s,
+            // effective work: straggler padding of the uneven split is
+            // real makespan and survives regrants (see field docs)
+            work_left: (frames.div_ceil(plan.k) * plan.k) as f64,
+            seg_start_s: now_s,
+            seg_startup_s: self.device.container_startup_s,
+            grant_gen: 0,
+            regrants: 0,
+        });
         finish_s
+    }
+
+    /// Replace a resident job's plan at `now`: account the core/memory
+    /// delta, splice the busy timeline, restart the job's progress
+    /// segment from `work_left` frames, and bump its completion-event
+    /// generation (the engine reschedules the completion from the
+    /// returned finish time; the superseded event becomes stale).
+    /// `startup_s` is the startup slice at the front of the new plan's
+    /// service time (the remaining un-elapsed startup on a share-only
+    /// resize, the full `container_startup_s` on a k-changing restart).
+    pub fn regrant(
+        &mut self,
+        now_s: f64,
+        job_idx: usize,
+        work_left: f64,
+        plan: ServicePlan,
+        startup_s: f64,
+    ) -> (u64, f64) {
+        self.close_span(now_s);
+        let cores = self.device.cores;
+        let mem_avail = self.device.memory.available_mib();
+        let pos = self
+            .active
+            .iter()
+            .position(|a| a.job_idx == job_idx)
+            .expect("regrant for a job not resident on this node");
+        let a = &mut self.active[pos];
+        debug_assert!(
+            plan.grant_cores <= self.free_cores + a.plan.grant_cores + 1e-6,
+            "regrant to {} exceeds free {} + held {}",
+            plan.grant_cores,
+            self.free_cores,
+            a.plan.grant_cores
+        );
+        self.free_cores = (self.free_cores + a.plan.grant_cores - plan.grant_cores)
+            .clamp(0.0, cores);
+        self.free_mem_mib =
+            (self.free_mem_mib + a.plan.mem_mib - plan.mem_mib).clamp(0.0, mem_avail);
+        self.busy_level = (self.busy_level - a.plan.busy_cores + plan.busy_cores).max(0.0);
+        let finish_s = now_s + plan.service_s;
+        a.plan = plan;
+        a.work_left = work_left.max(0.0);
+        a.seg_start_s = now_s;
+        a.seg_startup_s = startup_s.max(0.0);
+        a.finish_s = finish_s;
+        a.grant_gen += 1;
+        a.regrants += 1;
+        let gen = a.grant_gen;
+        // Re-derive the earliest-free estimate from the residents'
+        // actual finish times: ratcheting it with `max(old, finish)`
+        // would let a transient shrink (whose far-future finish the
+        // absorb phase immediately supersedes) permanently bias
+        // least-loaded/energy-aware placement away from this node.
+        self.est_free_at_s =
+            self.active.iter().map(|x| x.finish_s).fold(now_s, f64::max);
+        (gen, finish_s)
     }
 
     /// Release a finished job's resources at `now`.
@@ -183,6 +385,13 @@ impl NodeAllocator {
         self.busy_level = (self.busy_level - job.plan.busy_cores).max(0.0);
         self.jobs_done += 1;
         self.frames_done += job.frames;
+        // Re-derive the earliest-free estimate from the survivors, as
+        // regrant() does: the admit-time ratchet sums the service times
+        // of concurrent jobs, and without a rewind here a node that ran
+        // two overlapping jobs looks busy long after it drained,
+        // misrouting least-loaded/energy-aware placement.
+        self.est_free_at_s =
+            self.active.iter().map(|x| x.finish_s).fold(now_s, f64::max);
         if self.active.is_empty() {
             // Snap to pristine: kills float drift across many jobs.
             self.free_cores = self.device.cores;
@@ -329,6 +538,102 @@ mod tests {
         node.complete(500.0 + plan.service_s, 1);
         assert!((node.busy_window_s() - 2.0 * plan.service_s).abs() < 1e-9);
         assert!(node.utilization() > 0.9, "util={}", node.utilization());
+    }
+
+    #[test]
+    fn regrant_finish_matches_piecewise_closed_form() {
+        // A k=1 job granted 2 cores, expanded to 4 cores at t=100: the
+        // allocator's cancel-and-reschedule must land exactly where the
+        // curve's piecewise-constant completion time says.
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let base = task.base_frame_s(dev.base_frame_s);
+        let mut node = NodeAllocator::new(dev.clone(), 2);
+        let p0 = plan_service(&dev, &task, 720, 1, 2.0, 0);
+        node.admit(0.0, 0, 720, p0);
+        let work_left = node.find(0).unwrap().work_remaining(100.0);
+        let p1 = plan_remaining(&dev, &task, work_left, 1, 4.0, 0, 0.0);
+        let (gen, finish) = node.regrant(100.0, 0, work_left, p1, 0.0);
+        assert_eq!(gen, 1);
+        let want =
+            dev.curve.completion_time_piecewise(base, &[(2.0, 100.0)], 4.0, 720.0);
+        assert!(
+            (finish - want).abs() < 1e-6,
+            "regrant finish {finish} vs closed form {want}"
+        );
+        assert!((node.free_cores - (dev.cores - 4.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_op_regrant_preserves_the_completion_time() {
+        // Rescheduling from remaining work under the SAME share must not
+        // move the finish line (no drift from repeated replanning) —
+        // including for frame counts that do NOT divide evenly by k,
+        // where the div_ceil straggler padding must survive the regrant
+        // (719 frames over 4 containers pads to 180 per container, the
+        // same makespan as 720).
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        for frames in [720usize, 719, 100] {
+            let mut node = NodeAllocator::new(dev.clone(), 1);
+            let p0 = plan_service(&dev, &task, frames, 4, 4.0, 0);
+            let f0 = node.admit(0.0, 0, frames, p0);
+            for &t in &[10.0, 50.0, 123.456] {
+                let wl = node.find(0).unwrap().work_remaining(t);
+                let p = plan_remaining(&dev, &task, wl, 4, 4.0, 0, 0.0);
+                let (_, finish) = node.regrant(t, 0, wl, p, 0.0);
+                assert!(
+                    (finish - f0).abs() < 1e-6,
+                    "frames={frames}: finish drifted {f0} -> {finish}"
+                );
+            }
+            assert_eq!(node.find(0).unwrap().regrants, 3);
+        }
+    }
+
+    #[test]
+    fn regrant_conserves_resources_through_completion() {
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let mut node = NodeAllocator::new(dev.clone(), 2);
+        let p0 = plan_service(&dev, &task, 96, 2, 2.0, 0);
+        let p1 = plan_service(&dev, &task, 96, 2, 2.0, 2);
+        node.admit(0.0, 0, 96, p0);
+        node.admit(0.0, 1, 96, p1);
+        // Job 1 completes early in this scenario; job 0 absorbs its share.
+        let t = 5.0;
+        node.complete(t, 1);
+        let wl = node.find(0).unwrap().work_remaining(t);
+        let p = plan_remaining(&dev, &task, wl, 2, dev.cores, 0, 0.0);
+        let (_, finish) = node.regrant(t, 0, wl, p, 0.0);
+        assert!(node.free_cores < 1e-9, "cores idle after absorb: {}", node.free_cores);
+        node.complete(finish, 0);
+        assert_eq!(node.active.len(), 0);
+        assert_eq!(node.free_cores, dev.cores);
+        assert_eq!(node.free_mem_mib, dev.memory.available_mib());
+    }
+
+    #[test]
+    fn grant_policy_parse_roundtrip() {
+        for p in [GrantPolicy::Fixed, GrantPolicy::Elastic] {
+            assert_eq!(GrantPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(GrantPolicy::parse("nope"), None);
+        assert_eq!(GrantPolicy::default(), GrantPolicy::Fixed);
+    }
+
+    #[test]
+    fn elastic_admissibility_ignores_held_cores() {
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let mut node = NodeAllocator::new(dev.clone(), 2);
+        let p = plan_service(&dev, &task, 96, 4, dev.cores, 0);
+        node.admit(0.0, 0, 96, p);
+        // All cores held: fixed grants cannot admit, elastic can (the
+        // fair share after a shrink would be 2 cores each).
+        assert!(!node.can_admit_under(1.0, GrantPolicy::Fixed));
+        assert!(node.can_admit_under(1.0, GrantPolicy::Elastic));
+        assert!(!node.can_admit_under(3.0, GrantPolicy::Elastic), "fair share is only 2");
     }
 
     #[test]

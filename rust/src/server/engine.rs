@@ -18,7 +18,9 @@
 
 use anyhow::Result;
 
-use super::allocator::{plan_service, predict_full_device, NodeAllocator};
+use super::allocator::{
+    plan_remaining, plan_service, predict_full_device, GrantPolicy, NodeAllocator,
+};
 use super::policy::{PlacementPolicy, QueuePolicy};
 use super::queue::AdmissionQueue;
 use crate::coordinator::{Coordinator, InferenceJob};
@@ -57,9 +59,15 @@ pub struct CompletedJob {
     pub arrival_s: f64,
     pub start_s: f64,
     pub finish_s: f64,
+    /// Container count of the job's FINAL plan (elastic grants may have
+    /// resized the split mid-job).
     pub containers: usize,
+    /// Core grant of the job's final plan.
     pub grant_cores: f64,
     pub frames: usize,
+    /// Times this job's grant was recomputed mid-flight (0 under the
+    /// fixed policy).
+    pub regrants: usize,
 }
 
 impl CompletedJob {
@@ -102,6 +110,9 @@ pub struct EngineConfig {
     pub max_concurrent_jobs: usize,
     /// Smallest core grant worth admitting a job for.
     pub min_cores_per_job: f64,
+    /// Whether core grants are frozen at admission or re-apportioned at
+    /// every arrival/completion event (work-conserving).
+    pub grant_policy: GrantPolicy,
 }
 
 impl EngineConfig {
@@ -112,6 +123,7 @@ impl EngineConfig {
             placement: PlacementPolicy::LeastLoaded,
             max_concurrent_jobs: 1,
             min_cores_per_job: 1.0,
+            grant_policy: GrantPolicy::Fixed,
         }
     }
 }
@@ -128,6 +140,9 @@ pub struct EngineOutcome {
     pub mean_queue_depth: f64,
     /// Completion time of the last job.
     pub wall_s: f64,
+    /// Mid-flight grant recomputations across all jobs (0 under the
+    /// fixed grant policy).
+    pub regrants: u64,
     pub metrics: Registry,
 }
 
@@ -135,7 +150,12 @@ pub struct EngineOutcome {
 enum Ev {
     Arrival(usize),
     Dispatch,
-    Completion { node: usize, job: usize },
+    /// `gen` is the job's grant generation at scheduling time: a
+    /// regrant bumps the resident job's generation and schedules a
+    /// fresh completion, turning any in-flight completion event for an
+    /// older generation into a stale no-op (the DES queue has no
+    /// random-access delete; generation-tagging is the cancel).
+    Completion { node: usize, job: usize, gen: u64 },
 }
 
 /// The engine itself. Build with [`ServingEngine::new`], then
@@ -227,8 +247,17 @@ impl<'a> ServingEngine<'a> {
                 Ev::Dispatch => {
                     self.dispatch_scheduled = false;
                     self.dispatch(t)?;
+                    self.audit_work_conservation();
                 }
-                Ev::Completion { node, job } => {
+                Ev::Completion { node, job, gen } => {
+                    // A regrant superseded this event: the job either
+                    // finishes at its rescheduled time or already did.
+                    let live = self.nodes[node]
+                        .find(job)
+                        .is_some_and(|a| a.grant_gen == gen);
+                    if !live {
+                        continue;
+                    }
                     let done = self.nodes[node].complete(t, job);
                     let j = &self.jobs[job];
                     self.completed.push(CompletedJob {
@@ -240,6 +269,7 @@ impl<'a> ServingEngine<'a> {
                         containers: done.plan.k,
                         grant_cores: done.plan.grant_cores,
                         frames: done.frames,
+                        regrants: done.regrants,
                     });
                     self.metrics.inc("jobs_completed", 1);
                     self.metrics.inc("frames_processed", done.frames as u64);
@@ -282,6 +312,7 @@ impl<'a> ServingEngine<'a> {
             mean_queue_depth: self.queue.mean_depth(wall_s),
             completed: self.completed,
             wall_s,
+            regrants: self.metrics.counter("regrants"),
             metrics: self.metrics,
         }
     }
@@ -309,16 +340,32 @@ impl<'a> ServingEngine<'a> {
     /// One pass suffices: ordering keys are immutable per job and an
     /// admission only ever consumes capacity, so a job skipped earlier
     /// in the pass cannot become admissible later in it.
+    ///
+    /// Under the elastic grant policy the pass is bracketed by two
+    /// regrant phases: a shrink phase reclaims cores from resident jobs
+    /// down to the fair share implied by the incoming backlog (so
+    /// admission sees genuinely free cores), and an absorb phase hands
+    /// whatever is still free back to the residents (so no core sits
+    /// ungranted while work is resident — work conservation).
     fn dispatch(&mut self, now_s: f64) -> Result<()> {
         let order = self.queue.ordered(self.cfg.queue_policy, &self.jobs, &self.cfg.nodes);
         for j in order {
             let Some(node_i) = self.choose_node(j, now_s) else { continue };
+            if self.nodes[node_i].has_slot() && self.cfg.grant_policy == GrantPolicy::Elastic
+            {
+                // Reclaim cores on the node this job is actually headed
+                // for (on demand, not speculatively across all nodes —
+                // a node no admission targets must not pay regrant
+                // churn for someone else's backlog).
+                self.shrink_node_for_backlog(now_s, node_i)?;
+            }
             let frames = self.jobs[j].frames;
-            let (slots_free, free_cores, mem_cap) = {
+            let (slots_free, free_cores, free_mem, mem_cap) = {
                 let nd = &self.nodes[node_i];
                 (
                     nd.max_concurrent.saturating_sub(nd.active.len()),
                     nd.free_cores,
+                    nd.free_mem_mib,
                     nd.device.memory.max_containers_within(nd.free_mem_mib, frames),
                 )
             };
@@ -336,7 +383,7 @@ impl<'a> ServingEngine<'a> {
             let grant = (free_cores / share as f64)
                 .max(self.cfg.min_cores_per_job)
                 .min(free_cores);
-            let k_req = self.decide_k(j, node_i, grant)?;
+            let k_req = self.decide_k(j, node_i, grant, free_mem, None)?;
             let plan = {
                 let nd = &self.nodes[node_i];
                 plan_service(
@@ -350,48 +397,230 @@ impl<'a> ServingEngine<'a> {
             };
             let finish = self.nodes[node_i].admit(now_s, j, frames, plan);
             self.queue.remove(now_s, j);
-            self.events.push(finish, Ev::Completion { node: node_i, job: j });
+            self.events.push(finish, Ev::Completion { node: node_i, job: j, gen: 0 });
             self.metrics.set_gauge("queue_depth", self.queue.len() as f64);
+        }
+        if self.cfg.grant_policy == GrantPolicy::Elastic {
+            self.absorb_free_cores(now_s)?;
         }
         Ok(())
     }
 
-    /// How many queued jobs compete for `node_i`'s free cores: jobs
-    /// pinned to it, plus an even split of the unpinned backlog across
-    /// all nodes that currently have capacity. On a single node this is
-    /// exactly the queue depth; on a cluster it stops a job from being
-    /// squeezed onto half a node whose other half nobody will take.
-    fn waiting_share_for(&self, node_i: usize) -> usize {
+    /// Elastic pre-admission regrant for one node: shrink each resident
+    /// job to the fair share `cores / (residents + incoming)`, releasing
+    /// the difference for the admission about to happen. Idempotent
+    /// within a dispatch pass (a second call with the same backlog finds
+    /// everyone at or below the target already).
+    fn shrink_node_for_backlog(&mut self, now_s: f64, node_i: usize) -> Result<()> {
+        let (residents, target) = {
+            let nd = &self.nodes[node_i];
+            if nd.active.is_empty() {
+                return Ok(());
+            }
+            let slots_free = nd.max_concurrent.saturating_sub(nd.active.len());
+            // How many newcomers this node can actually take: the
+            // backlog headed here, capped by slots and by the floor a
+            // fair share may not cross.
+            let by_min_grant =
+                (nd.device.cores / self.cfg.min_cores_per_job).floor() as usize;
+            let incoming = self
+                .incoming_for(node_i)
+                .min(slots_free)
+                .min(by_min_grant.saturating_sub(nd.active.len()));
+            if incoming == 0 {
+                return Ok(());
+            }
+            let target = nd.device.cores / (nd.active.len() + incoming) as f64;
+            let residents: Vec<usize> = nd.active.iter().map(|a| a.job_idx).collect();
+            (residents, target)
+        };
+        for job in residents {
+            let grant = self.nodes[node_i].find(job).unwrap().plan.grant_cores;
+            if grant > target + 1e-9 {
+                self.regrant_job(now_s, node_i, job, target)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Elastic post-admission phase: re-apportion each node's still-free
+    /// cores equally across ALL its resident jobs. After this pass a
+    /// node with any work resident has no ungranted core.
+    fn absorb_free_cores(&mut self, now_s: f64) -> Result<()> {
+        for node_i in 0..self.nodes.len() {
+            let free = self.nodes[node_i].free_cores;
+            let n = self.nodes[node_i].active.len();
+            if n == 0 || free <= 1e-9 {
+                continue;
+            }
+            let bonus = free / n as f64;
+            let residents: Vec<(usize, f64)> = self.nodes[node_i]
+                .active
+                .iter()
+                .map(|a| (a.job_idx, a.plan.grant_cores))
+                .collect();
+            for (job, grant) in residents {
+                self.regrant_job(now_s, node_i, job, grant + bonus)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Change one resident job's core grant at `now_s`: measure its
+    /// remaining work, re-decide `k` under the new grant (the
+    /// router/optimizer path — `k` itself may change, modeling a
+    /// container resize), re-plan the remainder, and reschedule its
+    /// completion event (the superseded one goes stale via the
+    /// generation tag).
+    fn regrant_job(&mut self, now_s: f64, node_i: usize, job: usize, new_grant: f64) -> Result<()> {
+        let (old_grant, old_k, old_mem, work_left, startup_left) = {
+            let a = self.nodes[node_i].find(job).expect("regrant of a non-resident job");
+            (
+                a.plan.grant_cores,
+                a.plan.k,
+                a.plan.mem_mib,
+                a.work_remaining(now_s),
+                // un-elapsed startup carries over on a share-only resize
+                (a.seg_start_s + a.seg_startup_s - now_s).max(0.0),
+            )
+        };
+        if (new_grant - old_grant).abs() <= 1e-9 {
+            return Ok(());
+        }
+        let frames = self.jobs[job].frames;
+        // The job's own held memory is reusable by its replacement plan.
+        let avail_mem = self.nodes[node_i].free_mem_mib + old_mem;
+        let k_req = self.decide_k(job, node_i, new_grant, avail_mem, Some(old_k))?;
+        let (plan, restart, startup) = {
+            let nd = &self.nodes[node_i];
+            let mem_cap = nd.device.memory.max_containers_within(avail_mem, frames).max(1);
+            let k = k_req.min(mem_cap).max(1);
+            let restart = k != old_k;
+            let startup =
+                if restart { nd.device.container_startup_s } else { startup_left };
+            let other = nd.resident_containers() - old_k;
+            (
+                plan_remaining(
+                    &nd.device,
+                    &self.jobs[job].task,
+                    work_left,
+                    k,
+                    new_grant,
+                    other,
+                    startup,
+                ),
+                restart,
+                startup,
+            )
+        };
+        let (gen, finish) = self.nodes[node_i].regrant(now_s, job, work_left, plan, startup);
+        self.events.push(finish, Ev::Completion { node: node_i, job, gen });
+        self.metrics.inc("regrants", 1);
+        if restart {
+            self.metrics.inc("regrant_restarts", 1);
+        }
+        self.metrics.add_gauge("grant_churn_cores", (new_grant - old_grant).abs());
+        Ok(())
+    }
+
+    /// Elastic invariant audit, run after every dispatch: a node with
+    /// work resident must have no ungranted cores (the definition of
+    /// work conservation this engine promises). Violations are counted
+    /// rather than panicked on so property tests can assert zero.
+    fn audit_work_conservation(&mut self) {
+        if self.cfg.grant_policy != GrantPolicy::Elastic {
+            return;
+        }
+        for nd in &self.nodes {
+            if !nd.active.is_empty() && nd.free_cores > 1e-6 {
+                self.metrics.inc("work_conservation_violations", 1);
+            }
+        }
+    }
+
+    /// How many queued jobs are headed for `node_i` (pinned there, plus
+    /// an even split of the unpinned backlog over nodes with capacity) —
+    /// 0 when the queue holds nothing for it. Jobs whose frames cannot
+    /// fit even one container in the node's memory don't count: they
+    /// are inadmissible, and shrinking residents or diluting grants for
+    /// them would be pure churn / stranded cores. The memory basis is
+    /// policy-aware, like [`Self::node_can_take`]: fixed grants can
+    /// never reclaim resident memory, so the test is against the memory
+    /// free right now; the elastic shrink reduces resident container
+    /// counts, so only the node's whole container memory is a hard bar.
+    fn incoming_for(&self, node_i: usize) -> usize {
         let open_nodes = self
             .nodes
             .iter()
-            .filter(|nd| nd.can_admit(self.cfg.min_cores_per_job))
+            .filter(|nd| nd.can_admit_under(self.cfg.min_cores_per_job, self.cfg.grant_policy))
             .count()
             .max(1);
+        let nd = &self.nodes[node_i];
+        let node_mem = match self.cfg.grant_policy {
+            GrantPolicy::Fixed => nd.free_mem_mib,
+            GrantPolicy::Elastic => nd.device.memory.available_mib(),
+        };
         let mut pinned = 0usize;
         let mut unpinned = 0usize;
         for &j in self.queue.pending() {
+            if nd.device.memory.max_containers_within(node_mem, self.jobs[j].frames) == 0 {
+                continue;
+            }
             match self.jobs[j].affinity {
                 Some(i) if i == node_i => pinned += 1,
                 Some(_) => {}
                 None => unpinned += 1,
             }
         }
-        (pinned + unpinned.div_ceil(open_nodes)).max(1)
+        pinned + unpinned.div_ceil(open_nodes)
+    }
+
+    /// How many queued jobs compete for `node_i`'s free cores — at
+    /// least 1 (the job being granted itself). On a single node this is
+    /// exactly the queue depth; on a cluster it stops a job from being
+    /// squeezed onto half a node whose other half nobody will take.
+    fn waiting_share_for(&self, node_i: usize) -> usize {
+        self.incoming_for(node_i).max(1)
+    }
+
+    /// Whether `node_i` could take a `frames`-sized job right now: a
+    /// concurrency slot, the grant-policy-aware core check, and memory
+    /// for at least one container — so placement never routes a job to
+    /// a memory-starved node while another admissible node idles. Under
+    /// fixed grants the memory free right now is the test; under
+    /// elastic grants the pre-admission shrink reduces resident
+    /// container counts (freeing memory), so only the node's whole
+    /// container memory is a hard bar.
+    fn node_can_take(&self, node_i: usize, frames: usize) -> bool {
+        let nd = &self.nodes[node_i];
+        if !nd.can_admit_under(self.cfg.min_cores_per_job, self.cfg.grant_policy) {
+            return false;
+        }
+        let mem = match self.cfg.grant_policy {
+            GrantPolicy::Fixed => nd.free_mem_mib,
+            GrantPolicy::Elastic => nd.device.memory.available_mib(),
+        };
+        nd.device.memory.max_containers_within(mem, frames) > 0
     }
 
     /// Pick a node for queued job `j`, or `None` to leave it waiting.
+    /// Admissibility is grant-policy aware: elastic nodes can reclaim
+    /// cores from residents, so "all cores granted" does not bar entry.
     fn choose_node(&mut self, j: usize, now_s: f64) -> Option<usize> {
         let min_cores = self.cfg.min_cores_per_job;
+        let policy = self.cfg.grant_policy;
+        let frames = self.jobs[j].frames;
         if let Some(i) = self.jobs[j].affinity {
-            return self.nodes[i].can_admit(min_cores).then_some(i);
+            // Pinned jobs have no alternative node: only the core/slot
+            // check gates them (memory is re-checked at admission).
+            return self.nodes[i].can_admit_under(min_cores, policy).then_some(i);
         }
         match self.cfg.placement {
             PlacementPolicy::RoundRobin => {
                 let n = self.nodes.len();
                 for off in 0..n {
                     let i = (self.rr_next + off) % n;
-                    if self.nodes[i].can_admit(min_cores) {
+                    if self.node_can_take(i, frames) {
                         self.rr_next = (i + 1) % n;
                         return Some(i);
                     }
@@ -402,7 +631,7 @@ impl<'a> ServingEngine<'a> {
                 .nodes
                 .iter()
                 .enumerate()
-                .filter(|(_, nd)| nd.can_admit(min_cores))
+                .filter(|(i, _)| self.node_can_take(*i, frames))
                 .min_by(|(ia, a), (ib, b)| {
                     (a.est_free_at_s, *ia)
                         .partial_cmp(&(b.est_free_at_s, *ib))
@@ -426,17 +655,26 @@ impl<'a> ServingEngine<'a> {
                         best_key = (energy, finish);
                     }
                 }
-                self.nodes[best].can_admit(min_cores).then_some(best)
+                self.node_can_take(best, frames).then_some(best)
             }
         }
     }
 
     /// Decide the container count for job `j` on node `node_i` given a
-    /// core grant — the availability cap the tentpole adds: with the
-    /// whole device free this reduces to the paper's unconstrained
-    /// decision (oversubscription allowed); with a partial grant, k is
-    /// sized to the cores actually granted.
-    fn decide_k(&mut self, j: usize, node_i: usize, grant_cores: f64) -> Result<usize> {
+    /// core grant — the availability cap: with the whole device free
+    /// this reduces to the paper's unconstrained decision
+    /// (oversubscription allowed); with a partial grant, k is sized to
+    /// the cores actually granted. `current_k` is `Some` on the regrant
+    /// path, where the coordinator prefers keeping the job's live
+    /// containers (share-only resize) over restarting them.
+    fn decide_k(
+        &mut self,
+        j: usize,
+        node_i: usize,
+        grant_cores: f64,
+        avail_mem_mib: f64,
+        current_k: Option<usize>,
+    ) -> Result<usize> {
         let frames = self.jobs[j].frames;
         let core_cap = self.nodes[node_i]
             .device
@@ -455,7 +693,12 @@ impl<'a> ServingEngine<'a> {
                     video: Video::with_frames("engine", frames, 24.0),
                     task: self.jobs[j].task.clone(),
                 };
-                c.decide_k_constrained(&job, grant_cores, self.nodes[node_i].free_mem_mib)
+                match current_k {
+                    None => c.decide_k_constrained(&job, grant_cores, avail_mem_mib),
+                    Some(cur) => {
+                        c.decide_k_regrant(&job, grant_cores, avail_mem_mib, cur)
+                    }
+                }
             }
         }
     }
@@ -670,6 +913,102 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn elastic_equals_fixed_for_a_lone_job_on_an_idle_device() {
+        // Paper parity: with one job and an idle device there is no
+        // event to regrant on, so the elastic policy must reproduce the
+        // fixed policy's time AND energy bit-for-bit.
+        for decider in [1usize, 4, 12] {
+            let run = |policy: GrantPolicy| {
+                let mut cfg = orin_engine(3);
+                cfg.grant_policy = policy;
+                ServingEngine::new(
+                    cfg,
+                    vec![yolo_job(0, 0.0, 240)],
+                    SplitDecider::Fixed(decider),
+                )
+                .run()
+                .unwrap()
+            };
+            let fixed = run(GrantPolicy::Fixed);
+            let elastic = run(GrantPolicy::Elastic);
+            assert_eq!(fixed.completed[0].finish_s, elastic.completed[0].finish_s);
+            assert_eq!(fixed.node_energy_j[0], elastic.node_energy_j[0]);
+            assert_eq!(elastic.regrants, 0, "no event, no regrant");
+        }
+    }
+
+    #[test]
+    fn elastic_expands_the_survivor_when_neighbors_finish() {
+        // One long job + two short ones arrive together: under fixed
+        // grants the long job keeps its 4-core admission share after the
+        // device drains; elastic grants hand it the whole Orin, cutting
+        // both its latency and the device-on window (energy).
+        let jobs = || {
+            vec![yolo_job(0, 0.0, 720), yolo_job(1, 0.0, 48), yolo_job(2, 0.0, 48)]
+        };
+        let run = |policy: GrantPolicy| {
+            let mut cfg = orin_engine(3);
+            cfg.grant_policy = policy;
+            ServingEngine::new(cfg, jobs(), SplitDecider::PerNodeOptimal).run().unwrap()
+        };
+        let fixed = run(GrantPolicy::Fixed);
+        let elastic = run(GrantPolicy::Elastic);
+        let long_latency = |out: &EngineOutcome| {
+            out.completed.iter().find(|c| c.id == 0).unwrap().latency_s()
+        };
+        assert!(
+            long_latency(&elastic) < long_latency(&fixed) * 0.6,
+            "elastic long-job latency {:.1}s vs fixed {:.1}s",
+            long_latency(&elastic),
+            long_latency(&fixed)
+        );
+        assert!(
+            elastic.node_energy_j[0] < fixed.node_energy_j[0],
+            "elastic energy {:.0}J vs fixed {:.0}J",
+            elastic.node_energy_j[0],
+            fixed.node_energy_j[0]
+        );
+        assert!(elastic.regrants > 0, "survivor was never expanded");
+        assert_eq!(elastic.metrics.counter("work_conservation_violations"), 0);
+        // the per-job regrant counts add up to the engine total
+        let per_job: usize = elastic.completed.iter().map(|c| c.regrants).sum();
+        assert_eq!(per_job as u64, elastic.regrants);
+        assert_eq!(fixed.regrants, 0);
+    }
+
+    #[test]
+    fn elastic_admits_into_a_fully_granted_device_by_shrinking() {
+        // Job 0 (long) is alone and holds all 12 cores; job 1 arrives
+        // mid-flight. Fixed grants have no free cores => head-of-line
+        // wait; elastic shrinks job 0 and starts job 1 immediately.
+        let jobs = vec![yolo_job(0, 0.0, 720), yolo_job(1, 2.0, 48)];
+        let run = |policy: GrantPolicy| {
+            let mut cfg = orin_engine(2);
+            cfg.grant_policy = policy;
+            ServingEngine::new(cfg, jobs.clone(), SplitDecider::PerNodeOptimal)
+                .run()
+                .unwrap()
+        };
+        let fixed = run(GrantPolicy::Fixed);
+        let elastic = run(GrantPolicy::Elastic);
+        let start = |out: &EngineOutcome, id: u64| {
+            out.completed.iter().find(|c| c.id == id).unwrap().start_s
+        };
+        assert!(
+            start(&fixed, 1) > 10.0,
+            "fixed should make job 1 wait for the drain, started at {}",
+            start(&fixed, 1)
+        );
+        assert!(
+            (start(&elastic, 1) - 2.0).abs() < 1e-9,
+            "elastic should admit job 1 on arrival, started at {}",
+            start(&elastic, 1)
+        );
+        assert_eq!(elastic.metrics.counter("work_conservation_violations"), 0);
+        assert!(elastic.metrics.gauge("grant_churn_cores").unwrap_or(0.0) > 0.0);
     }
 
     #[test]

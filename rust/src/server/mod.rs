@@ -24,6 +24,7 @@ pub mod engine;
 pub mod policy;
 pub mod queue;
 
+pub use allocator::GrantPolicy;
 pub use engine::{
     CompletedJob, EngineConfig, EngineJob, EngineOutcome, ServingEngine, SplitDecider,
 };
@@ -32,6 +33,7 @@ pub use policy::{PlacementPolicy, QueuePolicy};
 use anyhow::Result;
 
 use crate::coordinator::Coordinator;
+use crate::energy::Battery;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::{summarize, Summary};
@@ -61,6 +63,9 @@ pub struct ServeConfig {
     /// Relative deadline (s after arrival) stamped on every job, for
     /// EDF ordering.
     pub deadline_s: Option<f64>,
+    /// Core grants frozen at admission (fixed) or re-apportioned at
+    /// every arrival/completion event (elastic, work-conserving).
+    pub grant_policy: GrantPolicy,
 }
 
 impl Default for ServeConfig {
@@ -75,6 +80,7 @@ impl Default for ServeConfig {
             max_concurrent_jobs: 1,
             min_cores_per_job: 1.0,
             deadline_s: None,
+            grant_policy: GrantPolicy::Fixed,
         }
     }
 }
@@ -99,6 +105,15 @@ pub struct ServeReport {
     /// Mean busy-core fraction per device while it was on.
     pub node_utilization: Vec<f64>,
     pub node_energy_j: Vec<f64>,
+    /// Mid-flight grant recomputations (0 under fixed grants).
+    pub regrants: u64,
+    /// Battery-lifetime extrapolation on the reference pack
+    /// ([`Battery::pack_50wh`]; recompute with
+    /// [`ServeReport::apply_battery`] for other packs): jobs one charge
+    /// sustains at this run's energy-per-job and observed average draw.
+    pub battery_jobs_per_charge: f64,
+    /// Hours one charge sustains at the observed average draw.
+    pub battery_hours: f64,
 }
 
 impl ServeReport {
@@ -109,7 +124,7 @@ impl ServeReport {
         let services: Vec<f64> = outcome.completed.iter().map(CompletedJob::service_s).collect();
         let frames: usize = outcome.completed.iter().map(|c| c.frames).sum();
         let wall = outcome.wall_s;
-        ServeReport {
+        let mut report = ServeReport {
             jobs: outcome.completed.len(),
             frames,
             latency: summarize(&latencies),
@@ -122,7 +137,28 @@ impl ServeReport {
             mean_queue_depth: outcome.mean_queue_depth,
             node_utilization: outcome.node_utilization.clone(),
             node_energy_j: outcome.node_energy_j.clone(),
-        }
+            regrants: outcome.regrants,
+            battery_jobs_per_charge: 0.0,
+            battery_hours: 0.0,
+        };
+        report.apply_battery(&Battery::pack_50wh());
+        report
+    }
+
+    /// Fill the battery-lifetime fields for `battery`: how many jobs
+    /// like this run's (at its energy-per-job) and how many hours one
+    /// charge sustains, at the observed average draw over the serving
+    /// wall clock. The paper's pitch — splitting cuts energy per video —
+    /// lands here as videos-per-charge.
+    pub fn apply_battery(&mut self, battery: &Battery) {
+        let avg_draw_w = self.total_energy_j / self.wall_s;
+        let energy_per_job = self.total_energy_j / self.jobs as f64;
+        self.battery_jobs_per_charge = battery.jobs_supported_f(energy_per_job, avg_draw_w);
+        self.battery_hours = if avg_draw_w > 0.0 {
+            battery.runtime_h(avg_draw_w)
+        } else {
+            f64::INFINITY
+        };
     }
 
     /// JSON export, so bench runs can be diffed across PRs.
@@ -155,6 +191,9 @@ impl ServeReport {
                 "node_energy_j",
                 Json::Array(self.node_energy_j.iter().map(|&e| Json::num(e)).collect()),
             ),
+            ("regrants", Json::num(self.regrants as f64)),
+            ("battery_jobs_per_charge", Json::num(self.battery_jobs_per_charge)),
+            ("battery_hours", Json::num(self.battery_hours)),
         ])
     }
 }
@@ -200,6 +239,7 @@ pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeRe
     engine_cfg.queue_policy = cfg.queue_policy;
     engine_cfg.max_concurrent_jobs = cfg.max_concurrent_jobs;
     engine_cfg.min_cores_per_job = cfg.min_cores_per_job;
+    engine_cfg.grant_policy = cfg.grant_policy;
 
     let mut engine =
         ServingEngine::new(engine_cfg, jobs, SplitDecider::Coordinator(&mut *coordinator));
@@ -368,6 +408,80 @@ mod tests {
         assert_eq!(
             j.get("node_utilization").unwrap().as_array().map(|a| a.len()),
             Some(1)
+        );
+        assert_eq!(j.get("regrants").unwrap().as_usize(), Some(0));
+        assert!(j.get("battery_jobs_per_charge").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("battery_hours").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn battery_fields_match_the_battery_model() {
+        let mut c = coordinator(4);
+        let report = serve(
+            &mut c,
+            &ServeConfig { jobs: 4, frames_per_job: 96, seed: 1, ..Default::default() },
+        )
+        .unwrap();
+        let battery = crate::energy::Battery::pack_50wh();
+        let per_job = report.total_energy_j / report.jobs as f64;
+        let draw = report.total_energy_j / report.wall_s;
+        let want = battery.jobs_supported_f(per_job, draw);
+        assert!((report.battery_jobs_per_charge - want).abs() < 1e-9);
+        assert!((report.battery_hours - battery.runtime_h(draw)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn splitting_extends_reported_battery_life() {
+        // The paper's pitch surfaced in the serving report: k=4 serves
+        // more videos per charge than k=1 on the TX2.
+        let cfgs = ServeConfig { jobs: 4, frames_per_job: 96, seed: 3, ..Default::default() };
+        let r1 = serve(&mut coordinator(1), &cfgs).unwrap();
+        let r4 = serve(&mut coordinator(4), &cfgs).unwrap();
+        assert!(
+            r4.battery_jobs_per_charge > r1.battery_jobs_per_charge,
+            "k=4 {:.0} jobs/charge vs k=1 {:.0}",
+            r4.battery_jobs_per_charge,
+            r1.battery_jobs_per_charge
+        );
+    }
+
+    #[test]
+    fn elastic_serving_regrants_and_stays_work_conserving() {
+        let run = |grant_policy: GrantPolicy| {
+            let mut c = orin_coordinator(SplitPolicy::Fixed(4));
+            serve(
+                &mut c,
+                &ServeConfig {
+                    jobs: 30,
+                    arrival: Some(ArrivalProcess::Poisson { rate_per_s: 0.4 }),
+                    frames_per_job: 96,
+                    seed: 21,
+                    max_concurrent_jobs: 3,
+                    grant_policy,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let fixed = run(GrantPolicy::Fixed);
+        let elastic = run(GrantPolicy::Elastic);
+        assert_eq!(fixed.regrants, 0);
+        assert!(elastic.regrants > 0, "overlapping Poisson load must regrant");
+        // Work conservation drains every busy period no later than the
+        // fixed policy (aggregate frame rate is monotone in granted
+        // cores), so the session ends no later and the device-on window
+        // — hence the energy bill — can only shrink.
+        assert!(
+            elastic.wall_s <= fixed.wall_s + 1e-6,
+            "elastic wall {} vs fixed {}",
+            elastic.wall_s,
+            fixed.wall_s
+        );
+        assert!(
+            elastic.total_energy_j <= fixed.total_energy_j + 1e-6,
+            "elastic energy {} vs fixed {}",
+            elastic.total_energy_j,
+            fixed.total_energy_j
         );
     }
 }

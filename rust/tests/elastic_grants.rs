@@ -1,0 +1,189 @@
+//! Elastic-grant properties (tier-1): work conservation — no core sits
+//! ungranted while work is resident / the admission queue is non-empty —
+//! and deterministic regrant event ordering.
+//!
+//! The engine self-audits the invariant after every dispatch (see
+//! `ServingEngine::audit_work_conservation`) and counts violations in
+//! its metrics registry; these tests drive randomized workloads through
+//! the elastic policy and assert the count stays zero while the usual
+//! event-ordering guarantees keep holding.
+
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::server::{
+    EngineConfig, EngineJob, EngineOutcome, GrantPolicy, PlacementPolicy, QueuePolicy,
+    ServingEngine, SplitDecider,
+};
+use divide_and_save::util::proptest::{ensure, forall};
+use divide_and_save::util::rng::Rng;
+use divide_and_save::workload::TaskProfile;
+
+#[derive(Debug, Clone)]
+struct Scenario {
+    device_orin: bool,
+    jobs: Vec<(f64, usize)>,
+    queue_policy: QueuePolicy,
+    concurrency: usize,
+    fixed_k: Option<usize>,
+}
+
+fn engine_jobs(scenario: &Scenario) -> Vec<EngineJob> {
+    scenario
+        .jobs
+        .iter()
+        .enumerate()
+        .map(|(i, &(t, frames))| {
+            let mut j = EngineJob::new(i as u64, t, frames, TaskProfile::yolo_tiny());
+            j.deadline_s = Some(t + 60.0);
+            j
+        })
+        .collect()
+}
+
+fn run_scenario(scenario: &Scenario, grant_policy: GrantPolicy) -> Result<EngineOutcome, String> {
+    let device = if scenario.device_orin { DeviceSpec::orin() } else { DeviceSpec::tx2() };
+    let mut cfg = EngineConfig::single_node(device);
+    cfg.queue_policy = scenario.queue_policy;
+    cfg.placement = PlacementPolicy::LeastLoaded;
+    cfg.max_concurrent_jobs = scenario.concurrency;
+    cfg.grant_policy = grant_policy;
+    let decider = match scenario.fixed_k {
+        Some(k) => SplitDecider::Fixed(k),
+        None => SplitDecider::PerNodeOptimal,
+    };
+    ServingEngine::new(cfg, engine_jobs(scenario), decider)
+        .run()
+        .map_err(|e| e.to_string())
+}
+
+fn random_scenario(r: &mut Rng) -> Scenario {
+    let n = r.range_u64(1, 25) as usize;
+    let mut t = 0.0;
+    let jobs: Vec<(f64, usize)> = (0..n)
+        .map(|_| {
+            // bursty: half the arrivals land on the same instant
+            if r.bool() {
+                t += r.exponential(0.4);
+            }
+            (t, 8 + r.range_u64(0, 424) as usize)
+        })
+        .collect();
+    let queue_policy = match r.below(4) {
+        0 => QueuePolicy::Fifo,
+        1 => QueuePolicy::Sjf,
+        2 => QueuePolicy::Edf,
+        _ => QueuePolicy::EnergyAware,
+    };
+    Scenario {
+        device_orin: r.bool(),
+        jobs,
+        queue_policy,
+        concurrency: r.range_u64(1, 4) as usize,
+        fixed_k: if r.bool() { Some(r.range_u64(1, 6) as usize) } else { None },
+    }
+}
+
+#[test]
+fn elastic_grants_are_work_conserving() {
+    // Property: under the elastic policy, whatever the arrival pattern,
+    // job mix, queue policy, concurrency and split decider, the engine
+    // never leaves a core ungranted while work is resident — in
+    // particular while the admission queue is non-empty (queued jobs
+    // imply residents holding the slots/memory they wait for). The
+    // engine audits the invariant after every dispatch event.
+    forall(31, 40, random_scenario, |scenario| {
+        let out = run_scenario(scenario, GrantPolicy::Elastic)?;
+        ensure(out.completed.len() == scenario.jobs.len(), "lost jobs")?;
+        ensure(
+            out.metrics.counter("work_conservation_violations") == 0,
+            format!(
+                "{} work-conservation violations",
+                out.metrics.counter("work_conservation_violations")
+            ),
+        )?;
+        let mut frames_seen = 0usize;
+        for c in &out.completed {
+            ensure(
+                c.start_s >= c.arrival_s - 1e-9,
+                format!("job {} started before arrival", c.id),
+            )?;
+            ensure(c.finish_s > c.start_s, format!("job {} finished at/before start", c.id))?;
+            frames_seen += c.frames;
+        }
+        let want: usize = scenario.jobs.iter().map(|&(_, f)| f).sum();
+        ensure(frames_seen == want, "frames not conserved")?;
+        // completions pop in event-time order, regrants or not
+        for w in out.completed.windows(2) {
+            ensure(w[0].finish_s <= w[1].finish_s + 1e-9, "completions out of order")?;
+        }
+        // per-job regrant counts reconcile with the engine total
+        let per_job: usize = out.completed.iter().map(|c| c.regrants).sum();
+        ensure(per_job as u64 == out.regrants, "regrant accounting mismatch")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn fixed_grants_never_regrant() {
+    forall(37, 15, random_scenario, |scenario| {
+        let out = run_scenario(scenario, GrantPolicy::Fixed)?;
+        ensure(out.regrants == 0, "fixed policy regranted")?;
+        ensure(
+            out.metrics.gauge("grant_churn_cores").unwrap_or(0.0) == 0.0,
+            "fixed policy churned grants",
+        )
+    });
+}
+
+#[test]
+fn regrant_event_ordering_is_deterministic() {
+    // Two runs of the same scenario must produce bit-identical
+    // completion sequences (ids, times, grants, regrant counts): the
+    // cancel-and-reschedule machinery may not depend on any
+    // iteration-order accident.
+    forall(41, 15, random_scenario, |scenario| {
+        let a = run_scenario(scenario, GrantPolicy::Elastic)?;
+        let b = run_scenario(scenario, GrantPolicy::Elastic)?;
+        ensure(a.completed.len() == b.completed.len(), "job counts differ")?;
+        for (x, y) in a.completed.iter().zip(&b.completed) {
+            ensure(x.id == y.id, format!("order differs: {} vs {}", x.id, y.id))?;
+            ensure(x.start_s == y.start_s, "start times differ")?;
+            ensure(x.finish_s == y.finish_s, "finish times differ")?;
+            ensure(x.grant_cores == y.grant_cores, "grants differ")?;
+            ensure(x.containers == y.containers, "container counts differ")?;
+            ensure(x.regrants == y.regrants, "regrant counts differ")?;
+        }
+        ensure(a.regrants == b.regrants, "total regrants differ")?;
+        ensure(a.node_energy_j[0] == b.node_energy_j[0], "energy differs")
+    });
+}
+
+#[test]
+fn elastic_never_finishes_later_than_fixed_on_a_single_node() {
+    // Work-conservation dominance on the session horizon, in the regime
+    // where it is actually a theorem: with the energy-optimal split
+    // (k tracks the grant, so per-container shares stay at or below one
+    // core, where CFS scaling is exactly linear) the aggregate frame
+    // rate equals the granted cores — elastic keeps every core granted
+    // whenever work is resident, so each busy period drains no later
+    // than under fixed grants and the last completion cannot regress.
+    //
+    // Deliberately NOT asserted for arbitrary deciders/queue policies:
+    // a k=1 decider saturates the gain from expansion (s(12) is barely
+    // above s(6) on the Orin) and SJF's admission order shifts with the
+    // perturbed completion times, which can cost more than the
+    // saturated expansion wins back — dominance there is typical, not
+    // guaranteed. Likewise this relies on the presets' zero
+    // container_startup_s: a calibrated restart cost would be
+    // re-charged on k-changing regrants.
+    forall(43, 25, random_scenario, |scenario| {
+        let mut s = scenario.clone();
+        s.queue_policy = QueuePolicy::Fifo;
+        s.fixed_k = None; // PerNodeOptimal: k sized to the grant
+        let fixed = run_scenario(&s, GrantPolicy::Fixed)?;
+        let elastic = run_scenario(&s, GrantPolicy::Elastic)?;
+        ensure(
+            elastic.wall_s <= fixed.wall_s + 1e-6,
+            format!("elastic wall {} vs fixed {}", elastic.wall_s, fixed.wall_s),
+        )
+    });
+}
