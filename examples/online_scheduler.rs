@@ -5,10 +5,10 @@
 //! and serves the rest of the workload with it.
 //!
 //! The serving engine consults the same optimizer under an
-//! *availability cap* (`decide_k_constrained`): when other jobs already
-//! hold part of the device, the split is sized to the cores and memory
-//! actually free — the last section shows the decision shrinking with
-//! the grant.
+//! *availability cap* (a `PlanRequest` with a partial grant): when
+//! other jobs already hold part of the device, the split is sized to
+//! the cores and memory actually free — the last section shows the
+//! decision shrinking with the grant.
 //!
 //! Run: `cargo run --release --example online_scheduler`
 
@@ -75,8 +75,9 @@ fn main() -> anyhow::Result<()> {
                 video: Video::paper_default(),
                 task: TaskProfile::yolo_tiny(),
             };
-            let k = coordinator.decide_k_constrained(&job, avail, mem * frac)?;
-            println!("    {avail:4.1} cores free -> k={k}");
+            let req = coordinator.request_for(&job).with_grant(avail, mem * frac);
+            let plan = coordinator.plan(&req)?;
+            println!("    {avail:4.1} cores free -> k={}", plan.k);
         }
     }
     Ok(())

@@ -23,14 +23,13 @@
 //!     property test `elastic_grants_are_work_conserving` covers the
 //!     randomized version.
 
-use divide_and_save::bench::{banner, Table};
+use divide_and_save::bench::{a5_bursty_mixed_jobs, banner, Table};
 use divide_and_save::device::DeviceSpec;
 use divide_and_save::server::{
     EngineConfig, EngineJob, EngineOutcome, GrantPolicy, ServingEngine, SplitDecider,
 };
-use divide_and_save::util::rng::Rng;
 use divide_and_save::util::stats::summarize;
-use divide_and_save::workload::{ArrivalProcess, TaskProfile};
+use divide_and_save::workload::TaskProfile;
 
 fn run_single(device: DeviceSpec, grant_policy: GrantPolicy) -> EngineOutcome {
     let mut cfg = EngineConfig::single_node(device);
@@ -40,33 +39,13 @@ fn run_single(device: DeviceSpec, grant_policy: GrantPolicy) -> EngineOutcome {
     ServingEngine::new(cfg, jobs, SplitDecider::PerNodeOptimal).run().unwrap()
 }
 
-/// The A5 bursty traffic (same MMPP parameters), with every 4th job a
-/// long clip — motion-triggered cameras upload both snippets and full
-/// sequences.
-fn bursty_mixed_jobs(n: usize) -> Vec<EngineJob> {
-    let mmpp = ArrivalProcess::Mmpp {
-        calm_rate_per_s: 0.05,
-        burst_rate_per_s: 0.35,
-        mean_calm_s: 130.0,
-        mean_burst_s: 20.0,
-    };
-    let mut rng = Rng::new(11); // A5's seed
-    mmpp.arrivals(n, &mut rng)
-        .into_iter()
-        .enumerate()
-        .map(|(i, t)| {
-            let frames = if i % 4 == 3 { 384 } else { 96 };
-            EngineJob::new(i as u64, t, frames, TaskProfile::yolo_tiny())
-        })
-        .collect()
-}
-
 fn run_overload(grant_policy: GrantPolicy) -> EngineOutcome {
     let mut cfg = EngineConfig::single_node(DeviceSpec::orin());
     cfg.max_concurrent_jobs = 3;
     cfg.grant_policy = grant_policy;
-    // A5's k=4 row: the paper's fixed split, availability-capped.
-    ServingEngine::new(cfg, bursty_mixed_jobs(80), SplitDecider::Fixed(4)).run().unwrap()
+    // A5's k=4 row: the paper's fixed split, availability-capped, over
+    // the shared A5 bursty mixed-clip trace (`bench::a5_bursty_mixed_jobs`).
+    ServingEngine::new(cfg, a5_bursty_mixed_jobs(80), SplitDecider::Fixed(4)).run().unwrap()
 }
 
 fn main() {

@@ -9,7 +9,7 @@
 //! its latency budget, and the engine's aggregated metering (idle paid
 //! once per device) is what makes the energy numbers honest.
 
-use divide_and_save::bench::{banner, Table};
+use divide_and_save::bench::{a5_bursty_arrivals, banner, Table};
 use divide_and_save::config::ExperimentConfig;
 use divide_and_save::coordinator::router::SplitPolicy;
 use divide_and_save::coordinator::{Coordinator, OnlineOptimizer};
@@ -25,14 +25,11 @@ fn main() {
         c.device = DeviceSpec::orin();
         c
     };
-    // Mean arrival: one 96-frame job every 12 s; bursts at 6x.
+    // Mean arrival: one 96-frame job every 12 s; bursts at 6x. The
+    // MMPP operating point is the shared A5 definition the A7/A8
+    // ablations reuse (`bench::a5_bursty_arrivals`).
     let poisson = ArrivalProcess::Poisson { rate_per_s: 1.0 / 12.0 };
-    let mmpp = ArrivalProcess::Mmpp {
-        calm_rate_per_s: 0.05,
-        burst_rate_per_s: 0.35,
-        mean_calm_s: 130.0,
-        mean_burst_s: 20.0,
-    };
+    let mmpp = a5_bursty_arrivals();
     assert!((mmpp.mean_rate() - poisson.mean_rate()).abs() / poisson.mean_rate() < 0.35);
 
     let mut table = Table::new([

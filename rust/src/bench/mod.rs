@@ -98,6 +98,42 @@ pub fn banner(id: &str, what: &str) {
     println!("\n=== {id}: {what} ===");
 }
 
+/// The A5 bursty operating point (motion-triggered-camera MMPP): the
+/// single definition the A5/A7/A8 benches share, so the ablations that
+/// claim to reuse "the A5 trace" cannot silently drift from it.
+pub fn a5_bursty_arrivals() -> crate::workload::ArrivalProcess {
+    crate::workload::ArrivalProcess::Mmpp {
+        calm_rate_per_s: 0.05,
+        burst_rate_per_s: 0.35,
+        mean_calm_s: 130.0,
+        mean_burst_s: 20.0,
+    }
+}
+
+/// The A5 trace's RNG seed.
+pub const A5_SEED: u64 = 11;
+
+/// The A7/A8 mixed-clip job stream over the A5 trace: every 4th job a
+/// long clip — motion-triggered cameras upload both snippets and full
+/// sequences.
+pub fn a5_bursty_mixed_jobs(n: usize) -> Vec<crate::server::EngineJob> {
+    let mut rng = crate::util::rng::Rng::new(A5_SEED);
+    a5_bursty_arrivals()
+        .arrivals(n, &mut rng)
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let frames = if i % 4 == 3 { 384 } else { 96 };
+            crate::server::EngineJob::new(
+                i as u64,
+                t,
+                frames,
+                crate::workload::TaskProfile::yolo_tiny(),
+            )
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -103,6 +103,7 @@ impl Cluster {
             max_concurrent_jobs: self.max_concurrent_jobs,
             min_cores_per_job: 1.0,
             grant_policy: self.grant_policy,
+            deadline_weighted_shares: false,
         };
         let outcome =
             ServingEngine::new(cfg, engine_jobs, SplitDecider::PerNodeOptimal).run()?;

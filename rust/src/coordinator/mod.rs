@@ -12,18 +12,29 @@
 //!
 //! On top of them:
 //! * [`combiner`] — order-preserving merge of per-segment detections.
-//! * [`optimizer`] — the paper's future-work online scheduler: probes a
-//!   few k, fits the Table II convex models, picks the optimal k.
-//! * [`router`]/[`batcher`] — a serving front: jobs in, optimal split
-//!   chosen, batches through the engine, detections out.
+//! * [`planner`] — the decision layer: callers build a
+//!   [`planner::PlanRequest`] and receive a [`planner::Plan`] — a joint
+//!   (power mode, k) choice with per-container shares, predicted
+//!   time/energy and a restart-vs-resize verdict. Two implementations:
+//!   [`planner::FixedModePlanner`] (the paper's k-only decision) and
+//!   [`planner::JointPlanner`] (mode×k grid search).
+//! * [`optimizer`] — the probe-fit engine underneath the fixed-mode
+//!   planner: probes a few k, fits the Table II convex models, returns
+//!   the argmin.
+//! * [`router`]/[`batcher`] — a serving front: jobs in, plan chosen,
+//!   batches through the engine, detections out.
 
 pub mod batcher;
 pub mod combiner;
 pub mod executor;
 pub mod optimizer;
+pub mod planner;
 pub mod router;
 
 pub use combiner::combine_segments;
 pub use executor::{run_sim, ExperimentResult, SegmentResult};
 pub use optimizer::{OnlineOptimizer, OptimizeObjective};
+pub use planner::{
+    FixedModePlanner, JointPlanner, Plan, PlanAction, PlanRequest, Planner, PlannerKind,
+};
 pub use router::{Coordinator, InferenceJob, JobResult};

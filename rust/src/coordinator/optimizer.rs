@@ -61,25 +61,50 @@ impl OnlineOptimizer {
     }
 
     /// Probe, fit, decide over the whole device.
+    #[deprecated(note = "build a coordinator::planner::PlanRequest and call Planner::plan")]
     pub fn decide(&self, cfg: &ExperimentConfig) -> Result<OptimizerDecision> {
-        self.decide_capped(cfg, usize::MAX)
+        self.fit_decision(cfg, usize::MAX, None)
     }
 
     /// Probe, fit, decide under an availability cap, with a sticky
-    /// preference for `prefer` (a job's *current* container count): the
-    /// regrant path of the elastic serving engine. Changing `k` mid-job
-    /// means tearing containers down and restarting them, while changing
-    /// only the per-container cpu share is a free `docker update` (CFS
-    /// quota rewrite) — so the current k is kept whenever the fitted
-    /// model says it is within [`Self::REGRANT_STICKINESS`] of the
-    /// optimum under the new grant.
+    /// preference for `prefer`.
+    #[deprecated(note = "build a coordinator::planner::PlanRequest and call Planner::plan")]
     pub fn decide_capped_preferring(
         &self,
         cfg: &ExperimentConfig,
         k_cap: usize,
         prefer: Option<usize>,
     ) -> Result<OptimizerDecision> {
-        let mut d = self.decide_capped(cfg, k_cap)?;
+        self.fit_decision(cfg, k_cap, prefer)
+    }
+
+    /// Probe, fit, decide under an availability cap.
+    #[deprecated(note = "build a coordinator::planner::PlanRequest and call Planner::plan")]
+    pub fn decide_capped(&self, cfg: &ExperimentConfig, k_cap: usize) -> Result<OptimizerDecision> {
+        self.fit_decision(cfg, k_cap, None)
+    }
+
+    /// Probe, fit, decide — the engine behind the planner surface
+    /// (`coordinator::planner::FixedModePlanner`; the retired `decide_*`
+    /// wrappers delegate here too).
+    ///
+    /// `k_cap` is the availability cap: `k` never exceeds it, so an
+    /// online decision for a half-busy device only considers splits
+    /// that fit in the other half. `prefer` is a sticky preference for
+    /// a job's *current* container count — the regrant path of the
+    /// elastic serving engine. Changing `k` mid-job means tearing
+    /// containers down and restarting them, while changing only the
+    /// per-container cpu share is a free `docker update` (CFS quota
+    /// rewrite) — so the current k is kept whenever the fitted model
+    /// says it is within [`Self::REGRANT_STICKINESS`] of the optimum
+    /// under the new grant.
+    pub fn fit_decision(
+        &self,
+        cfg: &ExperimentConfig,
+        k_cap: usize,
+        prefer: Option<usize>,
+    ) -> Result<OptimizerDecision> {
+        let mut d = self.probe_and_fit(cfg, k_cap)?;
         if let Some(p) = prefer {
             if p >= 1 && p <= k_cap && p != d.best_k {
                 // Measured probe values beat the fitted model when both
@@ -106,12 +131,9 @@ impl OnlineOptimizer {
     /// current container count instead of restarting containers.
     pub const REGRANT_STICKINESS: f64 = 0.02;
 
-    /// Probe, fit, decide under an availability cap: `k` never exceeds
-    /// `k_cap`. The serving engine calls this with the container count
-    /// supportable by the cores/memory *currently free* on the device,
-    /// so an online decision for a half-busy device only considers
-    /// splits that fit in the other half.
-    pub fn decide_capped(&self, cfg: &ExperimentConfig, k_cap: usize) -> Result<OptimizerDecision> {
+    /// Probe a k grid under the availability cap and fit the Table II
+    /// convex family (the preference-free half of [`Self::fit_decision`]).
+    fn probe_and_fit(&self, cfg: &ExperimentConfig, k_cap: usize) -> Result<OptimizerDecision> {
         let device = cfg.effective_device();
         let k_max = device
             .memory
@@ -192,6 +214,7 @@ impl OnlineOptimizer {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the deprecated wrappers are themselves under test
 mod tests {
     use super::*;
     use crate::device::DeviceSpec;

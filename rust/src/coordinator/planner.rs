@@ -1,0 +1,700 @@
+//! The decision layer behind one typed surface: build a [`PlanRequest`]
+//! (device, task, frames, free cores/memory, sticky current-k, optional
+//! deadline), receive a [`Plan`] (k, per-container shares, chosen
+//! [`PowerMode`], predicted time/energy, restart-vs-resize verdict).
+//!
+//! The paper's optimum is a *joint* property of how the device is
+//! configured and how the workload is split; the six `decide_*` entry
+//! points this trait replaces could only ever choose k. Two
+//! implementations ship:
+//!
+//! * [`FixedModePlanner`] — the pre-redesign behavior, bit-for-bit: the
+//!   same clamps, probe grid, grant quantization and decision cache the
+//!   router's `decide_k_*` family used, always in the device's default
+//!   (or pinned) power mode.
+//! * [`JointPlanner`] — searches the (mode, k) grid on top of the
+//!   fixed-mode baseline: minimum predicted energy subject to a
+//!   completion-time budget (the job's deadline when it has one, the
+//!   fixed-mode plan's time otherwise). With deadline slack this makes
+//!   race-to-idle vs slow-and-steady a measurable policy choice — a
+//!   draining device downclocks instead of sprinting into idle.
+//!
+//! Predictions use the same calibrated closed forms the serving engine
+//! plans with (`SpeedupCurve::completion_time_piecewise` for time, the
+//! linear utilization power model for energy), so a plan's predicted
+//! service agrees with what `server::allocator::plan_service` will
+//! schedule.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::optimizer::{OnlineOptimizer, OptimizerDecision};
+use crate::coordinator::router::SplitPolicy;
+use crate::device::dvfs::PowerMode;
+use crate::device::DeviceSpec;
+use crate::sched::interference;
+use crate::workload::TaskProfile;
+
+/// Everything a planner needs to decide (mode, k) for one job.
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    /// Calibrated base device (default power mode). Planners derive
+    /// per-mode specs from this via [`PowerMode::apply`].
+    pub device: DeviceSpec,
+    pub task: TaskProfile,
+    /// Total frames of the job (memory caps and decision caching key on
+    /// this, exactly as the `decide_*` surface did).
+    pub frames: usize,
+    /// Frames of work actually remaining (fractional mid-frame carry),
+    /// when the caller knows it — the regrant path. Predictions use
+    /// this; caps and caching keep using `frames`.
+    pub work_remaining: Option<f64>,
+    /// Core grant available to this job.
+    pub avail_cores: f64,
+    /// Unclaimed container memory available to this job.
+    pub avail_mem_mib: f64,
+    /// Extra cap on k (availability caps compose; `usize::MAX` = none).
+    pub k_cap: usize,
+    /// The job's *current* container count — `Some` on the regrant
+    /// path, where keeping k is a free CFS-quota rewrite and changing
+    /// it restarts containers.
+    pub current_k: Option<usize>,
+    /// Seconds until the job's deadline (relative), if it has one.
+    pub deadline_s: Option<f64>,
+    /// Pin the power mode (e.g. the node already runs co-resident jobs
+    /// under this mode, so a per-job switch is off the table). `None`
+    /// lets a joint planner search modes.
+    pub pinned_mode: Option<PowerMode>,
+}
+
+impl PlanRequest {
+    /// Request for `frames` of `task` with the whole `device` free.
+    pub fn new(device: DeviceSpec, task: TaskProfile, frames: usize) -> Self {
+        let avail_cores = device.cores;
+        let avail_mem_mib = device.memory.available_mib();
+        PlanRequest {
+            device,
+            task,
+            frames,
+            work_remaining: None,
+            avail_cores,
+            avail_mem_mib,
+            k_cap: usize::MAX,
+            current_k: None,
+            deadline_s: None,
+            pinned_mode: None,
+        }
+    }
+
+    /// Constrain the request to a partial core/memory grant.
+    pub fn with_grant(mut self, avail_cores: f64, avail_mem_mib: f64) -> Self {
+        self.avail_cores = avail_cores;
+        self.avail_mem_mib = avail_mem_mib;
+        self
+    }
+
+    /// Mark this as a regrant of a job currently split `current_k` ways.
+    pub fn preferring(mut self, current_k: usize) -> Self {
+        self.current_k = Some(current_k);
+        self
+    }
+
+    /// Attach a relative completion deadline.
+    pub fn with_deadline(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Pin the power mode (no per-job mode switching allowed).
+    pub fn with_pinned_mode(mut self, mode: PowerMode) -> Self {
+        self.pinned_mode = Some(mode);
+        self
+    }
+}
+
+/// What acting on a plan costs at the container layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanAction {
+    /// Fresh admission: start `k` containers (full startup).
+    Admit,
+    /// Same k as the job currently runs: a free CFS-quota rewrite
+    /// (`docker update --cpus`), no restart.
+    Resize,
+    /// k changed mid-job: containers are torn down and restarted,
+    /// paying `container_startup_s` again.
+    Restart,
+}
+
+/// A joint (mode, k) decision with its predicted cost.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub k: usize,
+    /// Cores actually granted under the chosen mode (never exceeds the
+    /// mode's core count or the requested grant).
+    pub grant_cores: f64,
+    /// Per-container cpu share (`grant_cores / k`).
+    pub cpus_each: f64,
+    /// Power mode the plan assumes. Callers apply it via
+    /// [`PowerMode::apply`] when the device is theirs to reconfigure.
+    pub mode: PowerMode,
+    /// Predicted completion time of the (remaining) work, seconds.
+    pub predicted_time_s: f64,
+    /// Predicted energy over that window, joules.
+    pub predicted_energy_j: f64,
+    /// Restart-vs-resize verdict relative to `PlanRequest::current_k`.
+    pub action: PlanAction,
+}
+
+/// The one decision surface: request in, plan out.
+///
+/// Implementations must be deterministic for a given request + internal
+/// cache state (the serving engine's determinism property tests rerun
+/// whole sessions and require bit-identical decisions).
+pub trait Planner: std::fmt::Debug {
+    fn plan(&mut self, req: &PlanRequest) -> Result<Plan>;
+
+    /// Short name for logs / CLI summaries.
+    fn name(&self) -> &'static str;
+
+    /// Cached optimizer decisions, for inspection and tests. Planners
+    /// without a cache return an empty list.
+    fn cached_decisions(&self) -> Vec<(&String, &OptimizerDecision)> {
+        Vec::new()
+    }
+
+    /// The raw k of a wrapped `SplitPolicy::Fixed`, when this planner
+    /// has one AND applies it without planning. Only the fixed-mode
+    /// planner returns `Some`: the deprecated whole-device `decide_k`
+    /// preserved an uncapped fast path for that policy, and
+    /// `Coordinator::submit` keeps it for parity. Joint planners always
+    /// plan (the mode search needs the full request).
+    fn fixed_policy_k(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Which planner implementation to construct (CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlannerKind {
+    #[default]
+    Fixed,
+    Joint,
+}
+
+impl PlannerKind {
+    pub fn parse(s: &str) -> Option<PlannerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" | "fixed-mode" | "fixed_mode" => Some(PlannerKind::Fixed),
+            "joint" | "mode-k" | "mode_k" => Some(PlannerKind::Joint),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlannerKind::Fixed => "fixed",
+            PlannerKind::Joint => "joint",
+        }
+    }
+
+    /// Build the planner for this kind.
+    pub fn build(&self, base: ExperimentConfig, policy: SplitPolicy) -> Box<dyn Planner> {
+        match self {
+            PlannerKind::Fixed => Box::new(FixedModePlanner::new(base, policy)),
+            PlannerKind::Joint => Box::new(JointPlanner::new(base, policy)),
+        }
+    }
+}
+
+/// Predicted (time_s, energy_j) for running the request's (remaining)
+/// work as `k` containers on `grant_cores` of `device` (already the
+/// mode-derived spec), with `startup_s` of container startup up front.
+///
+/// Time comes from [`crate::device::SpeedupCurve::completion_time_piecewise`]
+/// with an empty segment list (the plan holds one constant share), so
+/// it is by construction the same closed form the elastic engine pins
+/// its regrant scheduling to; energy is the linear utilization power
+/// model over that window. The oversubscription penalty counts only the
+/// plan's own containers (a planner does not know its future
+/// neighbors).
+pub fn predict_on(
+    device: &DeviceSpec,
+    task: &TaskProfile,
+    frames: usize,
+    work_remaining: Option<f64>,
+    k: usize,
+    grant_cores: f64,
+    startup_s: f64,
+) -> (f64, f64) {
+    assert!(k >= 1 && grant_cores > 0.0);
+    let cpus_each = grant_cores / k as f64;
+    let penalty = interference::penalty(k, device.cores, device.interference_alpha);
+    let base = task.base_frame_s(device.base_frame_s) * penalty;
+    let frames_per_container = match work_remaining {
+        Some(w) => w / k as f64,
+        None => frames.div_ceil(k) as f64,
+    };
+    let time_s = startup_s
+        + device
+            .curve
+            .completion_time_piecewise(base, &[], cpus_each, frames_per_container);
+    let busy = (k as f64 * device.curve.busy_cores(cpus_each)).min(grant_cores);
+    let energy_j = device.power.power(busy) * time_s;
+    (time_s, energy_j)
+}
+
+impl Plan {
+    /// Assemble the plan for an explicitly chosen (mode, k) — for
+    /// callers that pick k themselves (fixed k, per-node optimal) but
+    /// still speak the planner surface, and for grid searches.
+    pub fn for_choice(req: &PlanRequest, mode: &PowerMode, k: usize) -> Plan {
+        plan_candidate(req, mode, k)
+    }
+}
+
+/// Assemble a [`Plan`] for a concrete (mode, k) choice on a request.
+fn plan_candidate(req: &PlanRequest, mode: &PowerMode, k: usize) -> Plan {
+    let eff = mode.apply(&req.device);
+    let grant_cores = req.avail_cores.min(eff.cores).max(f64::MIN_POSITIVE);
+    let action = match req.current_k {
+        None => PlanAction::Admit,
+        Some(c) if c == k => PlanAction::Resize,
+        Some(_) => PlanAction::Restart,
+    };
+    // A share-only resize keeps the live containers: no startup charge.
+    // Fresh admissions and restarts pay the device's startup cost.
+    // (A resize during a still-elapsing startup window actually carries
+    // the un-elapsed remainder — the engine re-plans with it — so a
+    // same-k prediction is optimistic by at most that remainder when a
+    // startup override is calibrated in.)
+    let startup = match action {
+        PlanAction::Resize => 0.0,
+        PlanAction::Admit | PlanAction::Restart => eff.container_startup_s,
+    };
+    let (predicted_time_s, predicted_energy_j) = predict_on(
+        &eff,
+        &req.task,
+        req.frames,
+        req.work_remaining,
+        k,
+        grant_cores,
+        startup,
+    );
+    Plan {
+        k,
+        grant_cores,
+        cpus_each: grant_cores / k as f64,
+        mode: mode.clone(),
+        predicted_time_s,
+        predicted_energy_j,
+        action,
+    }
+}
+
+/// Max container count expressible for a request under `mode`: the
+/// memory cap on the grant, the per-whole-core cap for partial grants
+/// (full grants keep the paper's oversubscribed k > cores expressible),
+/// and the request's own `k_cap`.
+fn k_max_for(req: &PlanRequest, mode: &PowerMode) -> usize {
+    let eff = mode.apply(&req.device);
+    let grant = req.avail_cores.min(eff.cores);
+    let core_cap = eff.core_cap_for_grant(grant).unwrap_or(usize::MAX);
+    let mem_cap = req
+        .device
+        .memory
+        .max_containers_within(req.avail_mem_mib, req.frames);
+    core_cap.min(mem_cap).min(req.k_cap).max(1)
+}
+
+/// The pre-redesign decision logic behind the [`Planner`] surface:
+/// chooses k exactly as the retired `Coordinator::decide_k_*` family
+/// did (same clamps, same tiny-grant shortcut, same half-core grant
+/// quantization, same cache keys, same sticky regrant preference), in
+/// the request's pinned mode or the device default.
+#[derive(Debug)]
+pub struct FixedModePlanner {
+    /// Base experiment config: probe runs clone this (sensor period,
+    /// seed, startup override — the knobs the old router inherited).
+    pub base: ExperimentConfig,
+    pub policy: SplitPolicy,
+    decisions: BTreeMap<String, OptimizerDecision>,
+}
+
+impl FixedModePlanner {
+    pub fn new(base: ExperimentConfig, policy: SplitPolicy) -> Self {
+        FixedModePlanner { base, policy, decisions: BTreeMap::new() }
+    }
+
+    /// Decide k for the request — verbatim the old `decide_k_inner`.
+    /// `mode_tag` disambiguates the decision cache when `device` is a
+    /// non-default mode derivation (same `name`, different clocks);
+    /// empty for the default mode, so pre-redesign cache keys are
+    /// preserved byte-for-byte.
+    fn decide_k(
+        &mut self,
+        req: &PlanRequest,
+        device: &DeviceSpec,
+        mode_tag: &str,
+    ) -> Result<usize> {
+        let frames = req.frames;
+        let core_cap = device
+            .core_cap_for_grant(req.avail_cores.min(device.cores))
+            .unwrap_or(usize::MAX)
+            .min(req.k_cap);
+        let mem_cap = device
+            .memory
+            .max_containers_within(req.avail_mem_mib, frames)
+            .max(1);
+        match &self.policy {
+            SplitPolicy::Fixed(k) => Ok((*k).min(core_cap).min(mem_cap).max(1)),
+            SplitPolicy::Online(opt) => {
+                let cap = core_cap.min(mem_cap).max(1);
+                if cap <= 2 {
+                    // A grant this small has no split decision worth
+                    // probing: saturate the grant — except on a regrant,
+                    // where a current k that still fits is kept alive
+                    // (no restart for a probe-free decision).
+                    return Ok(req
+                        .current_k
+                        .filter(|&p| p >= 1 && p <= cap)
+                        .unwrap_or(cap));
+                }
+                // Quantize the grant DOWN to half-cores before probing
+                // and caching: elastic fair shares are near-continuous
+                // fractions, and keying on the raw value would make
+                // nearly every regrant a cache miss (a fresh probe run)
+                // while the cache grows without bound. Flooring (not
+                // rounding) keeps the probed device within the cores
+                // actually granted; half-core resolution is finer than
+                // any k decision boundary the convex models produce.
+                let grant_q = ((req.avail_cores * 2.0).floor() / 2.0).max(1.0);
+                let key = match req.current_k {
+                    None => format!(
+                        "{}{mode_tag}/{}/c{:.1}/k{}",
+                        device.name, req.task.name, grant_q, cap
+                    ),
+                    Some(p) => format!(
+                        "{}{mode_tag}/{}/c{:.1}/k{}/p{p}",
+                        device.name, req.task.name, grant_q, cap
+                    ),
+                };
+                if let Some(d) = self.decisions.get(&key) {
+                    return Ok(d.best_k);
+                }
+                let mut cfg = self.base.clone();
+                cfg.task = req.task.clone();
+                cfg.video = crate::workload::Video::with_frames("plan", frames, cfg.video.fps);
+                cfg.device = device.clone();
+                // Default mode: the raw quantized grant, verbatim —
+                // including the legacy quirk that a grant larger than
+                // the device probes an enlarged device model. Derived
+                // modes clamp to the mode's core count (probing cores
+                // the mode disabled would be meaningless).
+                cfg.device.cores = if mode_tag.is_empty() {
+                    grant_q
+                } else {
+                    grant_q.min(device.cores)
+                };
+                let d = opt.fit_decision(&cfg, cap, req.current_k)?;
+                let k = d.best_k;
+                log::info!(
+                    "planner: optimized k={k} for {key} (model: {})",
+                    d.model.describe()
+                );
+                self.decisions.insert(key, d);
+                Ok(k)
+            }
+        }
+    }
+}
+
+impl Planner for FixedModePlanner {
+    fn plan(&mut self, req: &PlanRequest) -> Result<Plan> {
+        let mode = req
+            .pinned_mode
+            .clone()
+            .unwrap_or_else(|| PowerMode::default_for(&req.device));
+        // The default mode's `apply` is the identity on the calibrated
+        // spec, so the probe/cache path below sees exactly the device
+        // the old decide_k surface saw.
+        let eff = mode.apply(&req.device);
+        let mode_tag = if mode.is_default_for(&req.device) {
+            String::new()
+        } else {
+            format!("/m:{}", mode.name)
+        };
+        let k = self.decide_k(req, &eff, &mode_tag)?;
+        Ok(plan_candidate(req, &mode, k))
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn cached_decisions(&self) -> Vec<(&String, &OptimizerDecision)> {
+        self.decisions.iter().collect()
+    }
+
+    fn fixed_policy_k(&self) -> Option<usize> {
+        match &self.policy {
+            SplitPolicy::Fixed(k) => Some(*k),
+            SplitPolicy::Online(_) => None,
+        }
+    }
+}
+
+/// Joint (mode, k) planner: the fixed-mode plan is the baseline, and
+/// the full mode×k grid competes against it on predicted energy under a
+/// completion-time budget — the job's deadline when it has one, the
+/// baseline's own predicted time otherwise. The selected plan is
+/// therefore **never worse than the baseline on predicted energy at an
+/// equal-or-better completion time** (no deadline), and never worse on
+/// energy while still meeting a feasible deadline (slack turns into
+/// slow-and-steady savings: a draining device downclocks).
+#[derive(Debug)]
+pub struct JointPlanner {
+    inner: FixedModePlanner,
+}
+
+impl JointPlanner {
+    pub fn new(base: ExperimentConfig, policy: SplitPolicy) -> Self {
+        JointPlanner { inner: FixedModePlanner::new(base, policy) }
+    }
+}
+
+impl Planner for JointPlanner {
+    fn plan(&mut self, req: &PlanRequest) -> Result<Plan> {
+        let baseline = self.inner.plan(req)?;
+        if req.pinned_mode.is_some() {
+            // The caller cannot reconfigure the device (co-resident
+            // jobs): the k decision is all there is.
+            return Ok(baseline);
+        }
+        // Feasibility budget: the deadline when the job has one (slack
+        // is spendable), the baseline's predicted time otherwise (a
+        // deadline-less job must not slow down).
+        let budget = req.deadline_s.unwrap_or(baseline.predicted_time_s);
+
+        let mut candidates = Vec::new();
+        for mode in PowerMode::modes_for(&req.device) {
+            for k in 1..=k_max_for(req, &mode) {
+                candidates.push(plan_candidate(req, &mode, k));
+            }
+        }
+        candidates.push(baseline.clone());
+
+        let feasible: Vec<&Plan> = candidates
+            .iter()
+            .filter(|p| p.predicted_time_s <= budget + 1e-9)
+            .collect();
+        if feasible.is_empty() {
+            // Deadline tighter than anything achievable: race. The
+            // baseline competes too, so this never regresses its time.
+            let fastest = candidates
+                .iter()
+                .min_by(|a, b| {
+                    (a.predicted_time_s, a.predicted_energy_j)
+                        .partial_cmp(&(b.predicted_time_s, b.predicted_energy_j))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .expect("candidate grid is never empty");
+            return Ok(fastest.clone());
+        }
+        let best = feasible
+            .iter()
+            .min_by(|a, b| {
+                (a.predicted_energy_j, a.predicted_time_s)
+                    .partial_cmp(&(b.predicted_energy_j, b.predicted_time_s))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("feasible set checked non-empty");
+        // Sticky regrants: keeping the current k avoids a container
+        // restart; accept it when a same-k feasible candidate is within
+        // the optimizer's stickiness band of the optimum — but never
+        // above the fixed-mode baseline's energy, so the dominance
+        // guarantee (joint ≤ fixed on predicted energy) survives the
+        // stickiness.
+        if let Some(cur) = req.current_k {
+            if best.k != cur {
+                let sticky = feasible
+                    .iter()
+                    .filter(|p| p.k == cur)
+                    .min_by(|a, b| {
+                        a.predicted_energy_j
+                            .partial_cmp(&b.predicted_energy_j)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                if let Some(sticky) = sticky {
+                    let band =
+                        best.predicted_energy_j * (1.0 + OnlineOptimizer::REGRANT_STICKINESS);
+                    if sticky.predicted_energy_j <= band
+                        && sticky.predicted_energy_j <= baseline.predicted_energy_j + 1e-9
+                    {
+                        return Ok((*sticky).clone());
+                    }
+                }
+            }
+        }
+        Ok((*best).clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "joint"
+    }
+
+    fn cached_decisions(&self) -> Vec<(&String, &OptimizerDecision)> {
+        self.inner.cached_decisions()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+    use crate::workload::TaskProfile;
+
+    fn req(device: DeviceSpec) -> PlanRequest {
+        PlanRequest::new(device, TaskProfile::yolo_tiny(), 720)
+    }
+
+    #[test]
+    fn fixed_mode_plan_stays_in_the_default_mode() {
+        let mut p =
+            FixedModePlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let plan = p.plan(&req(DeviceSpec::tx2())).unwrap();
+        assert_eq!(plan.k, 4);
+        assert!(plan.mode.is_default_for(&DeviceSpec::tx2()));
+        assert_eq!(plan.action, PlanAction::Admit);
+        assert!((plan.cpus_each - 1.0).abs() < 1e-12);
+        assert!(plan.predicted_time_s > 0.0 && plan.predicted_energy_j > 0.0);
+    }
+
+    #[test]
+    fn plan_predictions_match_the_mode_energy_closed_form() {
+        // Full-device plans must agree with device::dvfs::mode_energy
+        // (the DES-scheduled reference) to within the sampled-vs-exact
+        // metering tolerance.
+        let tx2 = DeviceSpec::tx2();
+        for mode in PowerMode::modes_for(&tx2) {
+            for k in [1usize, 2, 4] {
+                let plan = plan_candidate(&req(tx2.clone()), &mode, k);
+                let (t_ref, e_ref) = crate::device::dvfs::mode_energy(&tx2, &mode, 720, k);
+                assert!(
+                    (plan.predicted_time_s - t_ref).abs() / t_ref < 0.02,
+                    "{} k={k}: t {} vs {}",
+                    mode.name,
+                    plan.predicted_time_s,
+                    t_ref
+                );
+                assert!(
+                    (plan.predicted_energy_j - e_ref).abs() / e_ref < 0.02,
+                    "{} k={k}: e {} vs {}",
+                    mode.name,
+                    plan.predicted_energy_j,
+                    e_ref
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn joint_without_deadline_never_trades_time_for_energy() {
+        for device in DeviceSpec::all() {
+            let mut fixed =
+                FixedModePlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+            let mut joint =
+                JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+            let r = req(device.clone());
+            let f = fixed.plan(&r).unwrap();
+            let j = joint.plan(&r).unwrap();
+            assert!(j.predicted_time_s <= f.predicted_time_s + 1e-9);
+            assert!(j.predicted_energy_j <= f.predicted_energy_j + 1e-9);
+        }
+    }
+
+    #[test]
+    fn joint_spends_deadline_slack_on_energy() {
+        // TX2, 720 frames, deadline 600 s: the default-mode k=4 run
+        // takes ~244 s; MAXQ at 0.6x clock still fits the deadline and
+        // its cubic dynamic-power saving must be taken.
+        let mut joint =
+            JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let mut fixed =
+            FixedModePlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let r = req(DeviceSpec::tx2()).with_deadline(600.0);
+        let f = fixed.plan(&r).unwrap();
+        let j = joint.plan(&r).unwrap();
+        assert!(
+            j.predicted_energy_j < f.predicted_energy_j * 0.9,
+            "joint {:.0} J should clearly beat fixed {:.0} J",
+            j.predicted_energy_j,
+            f.predicted_energy_j
+        );
+        assert!(j.predicted_time_s <= 600.0 + 1e-9, "deadline violated");
+        assert!(
+            j.mode.freq_scale < 1.0,
+            "slack should buy a downclock, got {}",
+            j.mode.name
+        );
+    }
+
+    #[test]
+    fn joint_races_when_the_deadline_is_impossible() {
+        // A deadline nothing can meet: pick the fastest plan (MAXN),
+        // never something slower than the baseline.
+        let mut joint =
+            JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let mut fixed =
+            FixedModePlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let r = req(DeviceSpec::tx2()).with_deadline(1.0);
+        let f = fixed.plan(&r).unwrap();
+        let j = joint.plan(&r).unwrap();
+        assert!(j.predicted_time_s <= f.predicted_time_s + 1e-9);
+        assert!(j.mode.freq_scale >= 1.0, "impossible deadline must not downclock");
+    }
+
+    #[test]
+    fn pinned_mode_disables_the_mode_search() {
+        let tx2 = DeviceSpec::tx2();
+        let maxq = PowerMode::modes_for(&tx2)
+            .into_iter()
+            .find(|m| m.name.starts_with("MAXQ"))
+            .unwrap();
+        let mut joint =
+            JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let r = req(tx2).with_deadline(10_000.0).with_pinned_mode(maxq.clone());
+        let j = joint.plan(&r).unwrap();
+        assert_eq!(j.mode, maxq, "pinned mode must be honored");
+    }
+
+    #[test]
+    fn regrant_verdicts_and_stickiness() {
+        let mut joint =
+            JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        // Same k as current: a free resize, no startup in the plan.
+        let r = req(DeviceSpec::tx2()).preferring(4);
+        let j = joint.plan(&r).unwrap();
+        assert_eq!(j.k, 4);
+        assert_eq!(j.action, PlanAction::Resize);
+        // Different k: a restart verdict.
+        let mut p2 =
+            FixedModePlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let r2 = req(DeviceSpec::tx2()).preferring(2);
+        let j2 = p2.plan(&r2).unwrap();
+        assert_eq!(j2.k, 4);
+        assert_eq!(j2.action, PlanAction::Restart);
+    }
+
+    #[test]
+    fn k_cap_and_grant_caps_hold_in_every_mode() {
+        let mut joint =
+            JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(12));
+        let mut r = req(DeviceSpec::orin()).with_grant(3.0, 6000.0);
+        r.k_cap = 2;
+        let j = joint.plan(&r).unwrap();
+        assert!(j.k <= 2, "k_cap violated: {}", j.k);
+        assert!(j.grant_cores <= 3.0 + 1e-9);
+    }
+}

@@ -1,22 +1,22 @@
 //! Request router: the serving front of the coordinator.
 //!
-//! Jobs (videos to analyze) arrive; the router picks the container
-//! count — fixed, or online-optimized per device/task via the
-//! [`OnlineOptimizer`] with decision caching — dispatches to the
-//! configured executor, and returns the combined result. Metrics are
-//! recorded per job.
-
-use std::collections::BTreeMap;
+//! Jobs (videos to analyze) arrive; the router consults its
+//! [`Planner`] for a joint (mode, k) [`Plan`] — fixed-mode (the
+//! paper's k-only decision, with optional online optimization and
+//! decision caching) or joint mode×k — dispatches to the configured
+//! executor, and returns the combined result. Metrics are recorded per
+//! job.
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::executor::{self, ExperimentResult};
 use crate::coordinator::optimizer::{OnlineOptimizer, OptimizerDecision};
+use crate::coordinator::planner::{FixedModePlanner, Plan, PlanRequest, Planner};
 use crate::metrics::Registry;
 use crate::workload::{TaskProfile, Video};
 
-/// How the router chooses k.
+/// How the fixed-mode planner chooses k.
 #[derive(Debug, Clone)]
 pub enum SplitPolicy {
     /// Always use this many containers.
@@ -41,59 +41,82 @@ pub struct JobResult {
     pub result: ExperimentResult,
 }
 
-/// The coordinator: configuration + split policy + metrics.
+/// The coordinator: configuration + planner + metrics.
 #[derive(Debug)]
 pub struct Coordinator {
     pub base: ExperimentConfig,
-    pub policy: SplitPolicy,
     pub metrics: Registry,
-    decisions: BTreeMap<String, OptimizerDecision>,
+    planner: Box<dyn Planner>,
 }
 
 impl Coordinator {
+    /// Coordinator with the default fixed-mode planner wrapping
+    /// `policy` — the pre-redesign behavior.
     pub fn new(base: ExperimentConfig, policy: SplitPolicy) -> Self {
-        Coordinator { base, policy, metrics: Registry::new(), decisions: BTreeMap::new() }
+        let planner = Box::new(FixedModePlanner::new(base.clone(), policy));
+        Self::with_planner(base, planner)
     }
 
-    /// Decide the container count for a job on an idle device (cached
-    /// per device+task). Equivalent to [`Self::decide_k_constrained`]
-    /// with the whole device available.
-    pub fn decide_k(&mut self, job: &InferenceJob) -> Result<usize> {
-        if let SplitPolicy::Fixed(k) = &self.policy {
-            return Ok(*k);
+    /// Coordinator with an explicit planner (e.g.
+    /// [`crate::coordinator::planner::JointPlanner`]).
+    pub fn with_planner(base: ExperimentConfig, planner: Box<dyn Planner>) -> Self {
+        Coordinator { base, metrics: Registry::new(), planner }
+    }
+
+    /// The one decision entry point: plan a job described by `req`.
+    /// Requests carrying a `current_k` are regrant decisions and
+    /// counted as such.
+    pub fn plan(&mut self, req: &PlanRequest) -> Result<Plan> {
+        if req.current_k.is_some() {
+            self.metrics.inc("regrant_decisions", 1);
         }
-        let device = self.base.effective_device();
-        let mem = device.memory.available_mib();
-        self.decide_k_constrained(job, device.cores, mem)
+        self.planner.plan(req)
     }
 
-    /// Decide k under an availability cap — the serving engine's
-    /// admission path. `avail_cores` is the core grant actually free on
-    /// the device, `avail_mem_mib` the unclaimed container memory.
-    ///
-    /// With the whole device free this is the paper's unconstrained
-    /// decision (oversubscribed k allowed, as in Fig. 3); with a
-    /// partial grant, k is sized to the cores granted and the memory
-    /// left, and the online optimizer probes a device model with only
-    /// that many cores. Decisions are cached per
-    /// (device, task, grant, cap).
+    /// Build the [`PlanRequest`] for `job` against this coordinator's
+    /// device (startup override applied), with the whole device free.
+    pub fn request_for(&self, job: &InferenceJob) -> PlanRequest {
+        PlanRequest::new(
+            self.base.effective_device(),
+            job.task.clone(),
+            job.video.frame_count(),
+        )
+    }
+
+    /// The planner's short name (CLI summaries).
+    pub fn planner_name(&self) -> &'static str {
+        self.planner.name()
+    }
+
+    /// Decide the container count for a job on an idle device.
+    #[deprecated(note = "build a PlanRequest and call Coordinator::plan")]
+    pub fn decide_k(&mut self, job: &InferenceJob) -> Result<usize> {
+        // Historical quirk, preserved: the whole-device fixed-k path
+        // returned the policy's k uncapped (run-time memory checks
+        // reject overcommitted runs instead).
+        if let Some(k) = self.fixed_policy_k() {
+            return Ok(k);
+        }
+        let req = self.request_for(job);
+        Ok(self.plan(&req)?.k)
+    }
+
+    /// Decide k under an availability cap — the serving engine's old
+    /// admission surface.
+    #[deprecated(note = "build a PlanRequest and call Coordinator::plan")]
     pub fn decide_k_constrained(
         &mut self,
         job: &InferenceJob,
         avail_cores: f64,
         avail_mem_mib: f64,
     ) -> Result<usize> {
-        self.decide_k_inner(job, avail_cores, avail_mem_mib, None)
+        let req = self.request_for(job).with_grant(avail_cores, avail_mem_mib);
+        Ok(self.plan(&req)?.k)
     }
 
-    /// Re-decide k for a job already running with `current_k` containers
-    /// whose core grant just changed — the elastic engine's regrant
-    /// path. Same availability-capped decision as
-    /// [`Self::decide_k_constrained`], except the online optimizer keeps
-    /// the current container count when it is near-optimal under the
-    /// new grant (changing the cpu share of live containers is a free
-    /// CFS-quota rewrite; changing k means restarting them — see
-    /// [`OnlineOptimizer::decide_capped_preferring`]).
+    /// Re-decide k for a job already running with `current_k`
+    /// containers — the old elastic regrant surface.
+    #[deprecated(note = "build a PlanRequest and call Coordinator::plan")]
     pub fn decide_k_regrant(
         &mut self,
         job: &InferenceJob,
@@ -101,74 +124,29 @@ impl Coordinator {
         avail_mem_mib: f64,
         current_k: usize,
     ) -> Result<usize> {
-        self.metrics.inc("regrant_decisions", 1);
-        self.decide_k_inner(job, avail_cores, avail_mem_mib, Some(current_k))
+        let req = self
+            .request_for(job)
+            .with_grant(avail_cores, avail_mem_mib)
+            .preferring(current_k);
+        Ok(self.plan(&req)?.k)
     }
 
-    fn decide_k_inner(
-        &mut self,
-        job: &InferenceJob,
-        avail_cores: f64,
-        avail_mem_mib: f64,
-        prefer_k: Option<usize>,
-    ) -> Result<usize> {
-        let device = self.base.effective_device();
-        let frames = job.video.frame_count();
-        let core_cap = device.core_cap_for_grant(avail_cores).unwrap_or(usize::MAX);
-        let mem_cap = device.memory.max_containers_within(avail_mem_mib, frames).max(1);
-        match &self.policy {
-            SplitPolicy::Fixed(k) => Ok((*k).min(core_cap).min(mem_cap).max(1)),
-            SplitPolicy::Online(opt) => {
-                let cap = core_cap.min(mem_cap).max(1);
-                if cap <= 2 {
-                    // A grant this small has no split decision worth
-                    // probing: saturate the grant — except on a regrant,
-                    // where a current k that still fits is kept alive
-                    // (no restart for a probe-free decision).
-                    return Ok(prefer_k.filter(|&p| p >= 1 && p <= cap).unwrap_or(cap));
-                }
-                // Quantize the grant DOWN to half-cores before probing
-                // and caching: elastic fair shares are near-continuous
-                // fractions, and keying on the raw value would make
-                // nearly every regrant a cache miss (a fresh probe run)
-                // while the cache grows without bound. Flooring (not
-                // rounding) keeps the probed device within the cores
-                // actually granted; half-core resolution is finer than
-                // any k decision boundary the convex models produce.
-                let grant_q = ((avail_cores * 2.0).floor() / 2.0).max(1.0);
-                let key = match prefer_k {
-                    None => format!(
-                        "{}/{}/c{:.1}/k{}",
-                        device.name, job.task.name, grant_q, cap
-                    ),
-                    Some(p) => format!(
-                        "{}/{}/c{:.1}/k{}/p{p}",
-                        device.name, job.task.name, grant_q, cap
-                    ),
-                };
-                if let Some(d) = self.decisions.get(&key) {
-                    return Ok(d.best_k);
-                }
-                let mut cfg = self.base.clone();
-                cfg.task = job.task.clone();
-                cfg.video = job.video.clone();
-                cfg.device = device.clone();
-                cfg.device.cores = grant_q;
-                let d = opt.decide_capped_preferring(&cfg, cap, prefer_k)?;
-                let k = d.best_k;
-                log::info!(
-                    "router: optimized k={k} for {key} (model: {})",
-                    d.model.describe()
-                );
-                self.decisions.insert(key, d);
-                Ok(k)
-            }
-        }
+    /// The wrapped policy's fixed k, when the planner is the fixed-mode
+    /// planner over `SplitPolicy::Fixed` (legacy `decide_k` fast path;
+    /// a joint planner always plans).
+    fn fixed_policy_k(&self) -> Option<usize> {
+        self.planner.fixed_policy_k()
     }
 
     /// Process one job end to end.
     pub fn submit(&mut self, job: InferenceJob) -> Result<JobResult> {
-        let k = self.decide_k(&job)?;
+        let k = match self.fixed_policy_k() {
+            Some(k) => k,
+            None => {
+                let req = self.request_for(&job);
+                self.plan(&req)?.k
+            }
+        };
         let mut cfg = self.base.clone();
         cfg.task = job.task.clone();
         cfg.video = job.video.clone();
@@ -188,8 +166,8 @@ impl Coordinator {
     }
 
     /// Cached optimizer decisions (for inspection / tests).
-    pub fn decisions(&self) -> &BTreeMap<String, OptimizerDecision> {
-        &self.decisions
+    pub fn decisions(&self) -> Vec<(&String, &OptimizerDecision)> {
+        self.planner.cached_decisions()
     }
 }
 
@@ -203,6 +181,13 @@ mod tests {
             video: Video::with_frames("job", frames, 24.0),
             task: TaskProfile::yolo_tiny(),
         }
+    }
+
+    /// Plan a job under a grant and return k — the migrated form of the
+    /// old `decide_k_constrained` call sites.
+    fn plan_k(c: &mut Coordinator, j: &InferenceJob, cores: f64, mem: f64) -> usize {
+        let req = c.request_for(j).with_grant(cores, mem);
+        c.plan(&req).unwrap().k
     }
 
     #[test]
@@ -253,11 +238,11 @@ mod tests {
         let j = job(1, 96);
         let mem = c.base.device.memory.available_mib();
         // whole TX2 free: the paper's unconstrained k
-        assert_eq!(c.decide_k_constrained(&j, 4.0, mem).unwrap(), 4);
+        assert_eq!(plan_k(&mut c, &j, 4.0, mem), 4);
         // half the device granted: k shrinks to the cores granted
-        assert_eq!(c.decide_k_constrained(&j, 2.0, mem).unwrap(), 2);
+        assert_eq!(plan_k(&mut c, &j, 2.0, mem), 2);
         // memory nearly exhausted by co-resident jobs: k shrinks further
-        assert_eq!(c.decide_k_constrained(&j, 4.0, 1000.0).unwrap(), 1);
+        assert_eq!(plan_k(&mut c, &j, 4.0, 1000.0), 1);
     }
 
     #[test]
@@ -267,7 +252,7 @@ mod tests {
         let mut c = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(6));
         let j = job(1, 96);
         let mem = c.base.device.memory.available_mib();
-        assert_eq!(c.decide_k_constrained(&j, 4.0, mem).unwrap(), 6);
+        assert_eq!(plan_k(&mut c, &j, 4.0, mem), 6);
     }
 
     #[test]
@@ -277,13 +262,13 @@ mod tests {
         let mut c = Coordinator::new(base, SplitPolicy::Online(OnlineOptimizer::default()));
         let j = job(1, 96);
         let mem = c.base.device.memory.available_mib();
-        let k_capped = c.decide_k_constrained(&j, 4.0, mem).unwrap();
+        let k_capped = plan_k(&mut c, &j, 4.0, mem);
         assert!(k_capped <= 4, "k={k_capped}");
         let n_decisions = c.decisions().len();
-        let again = c.decide_k_constrained(&j, 4.0, mem).unwrap();
+        let again = plan_k(&mut c, &j, 4.0, mem);
         assert_eq!(again, k_capped);
         assert_eq!(c.decisions().len(), n_decisions, "same grant must hit the cache");
-        let k_full = c.decide_k_constrained(&j, 12.0, mem).unwrap();
+        let k_full = plan_k(&mut c, &j, 12.0, mem);
         assert!(k_full >= k_capped, "full {k_full} vs capped {k_capped}");
     }
 
@@ -295,8 +280,8 @@ mod tests {
         );
         let j = job(1, 96);
         let mem = c.base.device.memory.available_mib();
-        assert_eq!(c.decide_k_constrained(&j, 2.0, mem).unwrap(), 2);
-        assert_eq!(c.decide_k_constrained(&j, 1.0, mem).unwrap(), 1);
+        assert_eq!(plan_k(&mut c, &j, 2.0, mem), 2);
+        assert_eq!(plan_k(&mut c, &j, 1.0, mem), 1);
         assert!(c.decisions().is_empty(), "tiny grants must not probe");
     }
 
@@ -311,16 +296,18 @@ mod tests {
         // drains and the job is regranted the whole thing. Whatever k
         // it holds is kept when the model says it's near-optimal or
         // the grant is too small to probe.
-        let k0 = c.decide_k_constrained(&j, 6.0, mem).unwrap();
-        let k_tiny = c.decide_k_regrant(&j, 2.0, mem, k0).unwrap();
+        let k0 = plan_k(&mut c, &j, 6.0, mem);
+        let req = c.request_for(&j).with_grant(2.0, mem).preferring(k0);
+        let k_tiny = c.plan(&req).unwrap().k;
         assert!(k_tiny >= 1 && k_tiny <= 2.max(k0));
         assert_eq!(c.metrics.counter("regrant_decisions"), 1);
         // Fixed policy: regrant is just the constrained decision again.
         let mut f = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
-        assert_eq!(
-            f.decide_k_regrant(&j, 2.0, f.base.device.memory.available_mib(), 4).unwrap(),
-            2
-        );
+        let req = f
+            .request_for(&j)
+            .with_grant(2.0, f.base.device.memory.available_mib())
+            .preferring(4);
+        assert_eq!(f.plan(&req).unwrap().k, 2);
     }
 
     #[test]
@@ -337,5 +324,32 @@ mod tests {
         })
         .unwrap();
         assert_eq!(c.decisions().len(), 2);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_agree_with_the_plan_surface() {
+        // The one-release compatibility shims must return exactly what
+        // a PlanRequest-built plan returns — and decide_k must keep its
+        // historical uncapped fixed-k fast path.
+        let mut c = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let j = job(1, 96);
+        let mem = c.base.device.memory.available_mib();
+        assert_eq!(c.decide_k(&j).unwrap(), 4);
+        assert_eq!(c.decide_k_constrained(&j, 2.0, mem).unwrap(), 2);
+        assert_eq!(c.decide_k_regrant(&j, 2.0, mem, 4).unwrap(), 2);
+        // The uncapped fast path: a fixed k beyond the memory cap is
+        // returned as-is by decide_k (run-time checks reject it later).
+        let mut over = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(9));
+        assert_eq!(over.decide_k(&job(2, 720)).unwrap(), 9);
+        // Online policy: wrapper == plan surface, cache shared.
+        let mut o = Coordinator::new(
+            ExperimentConfig::default(),
+            SplitPolicy::Online(OnlineOptimizer::default()),
+        );
+        let via_wrapper = o.decide_k_constrained(&j, 4.0, mem).unwrap();
+        let via_plan = plan_k(&mut o, &j, 4.0, mem);
+        assert_eq!(via_wrapper, via_plan);
+        assert_eq!(o.decisions().len(), 1, "wrapper and plan share one cache entry");
     }
 }

@@ -28,6 +28,19 @@ pub struct PowerMode {
 }
 
 impl PowerMode {
+    /// The device's default mode (first entry of [`Self::modes_for`]):
+    /// identity frequency scale, all cores — `apply` of this mode
+    /// reproduces the calibrated spec bit-for-bit.
+    pub fn default_for(device: &DeviceSpec) -> PowerMode {
+        Self::modes_for(device).swap_remove(0)
+    }
+
+    /// Whether this is the identity mode for `device` (no frequency or
+    /// core-count change).
+    pub fn is_default_for(&self, device: &DeviceSpec) -> bool {
+        self.freq_scale == 1.0 && self.cores >= device.cores
+    }
+
     /// Modes for a device, default first. Shapes follow the published
     /// nvpmodel tables (values are representative, not vendor-exact).
     /// Non-TX2 devices get Orin-shaped modes derived from their OWN

@@ -14,7 +14,9 @@ use anyhow::{anyhow, Result};
 use divide_and_save::config::{ExecMode, ExperimentConfig};
 use divide_and_save::coordinator::executor::{run, run_sim};
 use divide_and_save::coordinator::router::SplitPolicy;
-use divide_and_save::coordinator::{Coordinator, OnlineOptimizer};
+use divide_and_save::coordinator::{
+    Coordinator, OnlineOptimizer, PlanRequest, Planner, PlannerKind,
+};
 use divide_and_save::device::PowerSensor;
 use divide_and_save::energy::meter_schedule;
 use divide_and_save::modelfit::{fit_exponential, fit_quadratic, FittedModel};
@@ -237,19 +239,60 @@ pub fn pick_model(xs: &[f64], ys: &[f64]) -> Option<(FittedModel, &'static str)>
 }
 
 fn cmd_optimize(args: &[String]) -> Result<()> {
-    let cmd = common_opts(Command::new("optimize", "online optimal-k decision"))
-        .opt(OptSpec::opt("objective", "time|energy").with_default("energy"));
+    let cmd = common_opts(Command::new("optimize", "online optimal plan decision"))
+        .opt(OptSpec::opt("objective", "time|energy").with_default("energy"))
+        .opt(OptSpec::opt("planner", "planner (fixed|joint)").with_default("fixed"))
+        .opt(OptSpec::opt("deadline", "completion deadline in seconds (joint planner)"));
     let p = parse_or_help(&cmd, args)?;
     let cfg = build_config(&p)?;
     let objective = match p.get_or("objective", "energy") {
         "time" => divide_and_save::coordinator::OptimizeObjective::Time,
         _ => divide_and_save::coordinator::OptimizeObjective::Energy,
     };
+    let kind = PlannerKind::parse(p.get_or("planner", "fixed"))
+        .ok_or_else(|| anyhow!("unknown planner {:?}", p.get_or("planner", "fixed")))?;
     let opt = OnlineOptimizer { objective, ..Default::default() };
-    let d = opt.decide(&cfg)?;
-    println!("probes: {:?}", d.probes);
-    println!("model:  {}", d.model.describe());
-    println!("best k: {}", d.best_k);
+    match kind {
+        PlannerKind::Fixed => {
+            let d = opt.fit_decision(&cfg, usize::MAX, None)?;
+            println!("probes: {:?}", d.probes);
+            println!("model:  {}", d.model.describe());
+            println!("best k: {}", d.best_k);
+        }
+        PlannerKind::Joint => {
+            if objective == divide_and_save::coordinator::OptimizeObjective::Time {
+                anyhow::bail!(
+                    "--objective time is not meaningful for --planner joint: the joint \
+                     planner minimizes predicted energy under a completion-time budget \
+                     (pass --deadline to set the budget)"
+                );
+            }
+            // One probe pass only: the joint planner's fixed-mode
+            // baseline runs (and caches) the probe-fit internally.
+            let mut planner = kind.build(cfg.clone(), SplitPolicy::Online(opt));
+            let mut req = PlanRequest::new(
+                cfg.effective_device(),
+                cfg.task.clone(),
+                cfg.video.frame_count(),
+            );
+            if let Some(deadline) = p.get_f64("deadline")? {
+                req = req.with_deadline(deadline);
+            }
+            let plan = planner.plan(&req)?;
+            for (key, d) in planner.cached_decisions() {
+                println!("probes[{key}]: {:?}", d.probes);
+                println!("model:  {}  best k: {}", d.model.describe(), d.best_k);
+            }
+            println!(
+                "joint plan: mode={} k={} cpus/container={:.2} predicted {:.1}s / {:.1}J",
+                plan.mode.name,
+                plan.k,
+                plan.cpus_each,
+                plan.predicted_time_s,
+                plan.predicted_energy_j
+            );
+        }
+    }
     Ok(())
 }
 
@@ -260,6 +303,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt(OptSpec::opt("containers", "fixed k (omit for online policy)"))
         .opt(OptSpec::opt("policy", "queue policy (fifo|sjf|edf|energy)").with_default("fifo"))
         .opt(OptSpec::opt("grant", "core-grant policy (fixed|elastic)").with_default("fixed"))
+        .opt(OptSpec::opt("planner", "decision planner (fixed|joint)").with_default("fixed"))
+        .opt(OptSpec::flag("edf-weighted", "skew elastic regrants toward tight deadlines"))
         .opt(OptSpec::opt("concurrency", "concurrent jobs per device").with_default("1"))
         .opt(OptSpec::opt(
             "arrival",
@@ -284,6 +329,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown queue policy {:?}", p.get_or("policy", "fifo")))?;
     let grant_policy = GrantPolicy::parse(p.get_or("grant", "fixed"))
         .ok_or_else(|| anyhow!("unknown grant policy {:?}", p.get_or("grant", "fixed")))?;
+    let planner_kind = PlannerKind::parse(p.get_or("planner", "fixed"))
+        .ok_or_else(|| anyhow!("unknown planner {:?}", p.get_or("planner", "fixed")))?;
     let arrival = match p.get("arrival") {
         Some(spec) => Some(
             divide_and_save::workload::ArrivalProcess::parse(spec)
@@ -291,7 +338,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         ),
         None => None,
     };
-    let mut coordinator = Coordinator::new(cfg, policy);
+    let planner = planner_kind.build(cfg.clone(), policy);
+    let mut coordinator = Coordinator::with_planner(cfg, planner);
     let report = serve(
         &mut coordinator,
         &ServeConfig {
@@ -302,6 +350,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             max_concurrent_jobs: p.get_usize("concurrency")?.unwrap_or(1).max(1),
             deadline_s: p.get_f64("deadline")?,
             grant_policy,
+            deadline_weighted_shares: p.flag("edf-weighted"),
             ..Default::default()
         },
     )?;
@@ -328,6 +377,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .collect::<Vec<_>>(),
         grant_policy.name(),
         report.regrants
+    );
+    println!(
+        "planner={}  mode switches={}",
+        coordinator.planner_name(),
+        report.mode_switches
     );
     println!(
         "battery (50 Wh pack): {:.0} jobs/charge, {:.1} h at the observed {:.1} W draw",

@@ -13,8 +13,9 @@
 //! and draws nothing. This replaces the old per-job accounting that
 //! billed the idle floor to every job separately.
 
+use crate::device::dvfs::PowerMode;
 use crate::device::DeviceSpec;
-use crate::energy::{meter_spans, push_span};
+use crate::energy::push_span;
 use crate::sched::interference;
 use crate::sched::TraceSegment;
 use crate::workload::TaskProfile;
@@ -199,7 +200,15 @@ impl ActiveJob {
 /// Core/memory accounting + busy timeline for one engine node.
 #[derive(Debug, Clone)]
 pub struct NodeAllocator {
+    /// The device spec **in force** — the current power mode applied to
+    /// `base_device`. All core accounting and service planning use this.
     pub device: DeviceSpec,
+    /// The calibrated spec in its default mode; mode switches always
+    /// derive from here (never compound on an already-derived spec).
+    pub base_device: DeviceSpec,
+    /// Power mode currently applied (default when the node is idle: a
+    /// drained device races back to its default nvpmodel).
+    pub mode: PowerMode,
     pub free_cores: f64,
     pub free_mem_mib: f64,
     pub max_concurrent: usize,
@@ -209,9 +218,16 @@ pub struct NodeAllocator {
     pub est_free_at_s: f64,
     pub jobs_done: usize,
     pub frames_done: usize,
+    /// Mode switches applied over the node's lifetime.
+    pub mode_switches: usize,
     spans: Vec<TraceSegment>,
     busy_level: f64,
     last_change_s: f64,
+    /// Exact energy integral over the closed spans, accumulated at
+    /// span-close time with the power model **then in force** — a
+    /// single end-of-run `meter_spans` pass cannot price a timeline
+    /// whose power mode changed mid-way.
+    energy_acc_j: f64,
 }
 
 impl NodeAllocator {
@@ -220,15 +236,19 @@ impl NodeAllocator {
         NodeAllocator {
             free_cores: device.cores,
             free_mem_mib,
+            base_device: device.clone(),
+            mode: PowerMode::default_for(&device),
             device,
             max_concurrent: max_concurrent.max(1),
             active: Vec::new(),
             est_free_at_s: 0.0,
             jobs_done: 0,
             frames_done: 0,
+            mode_switches: 0,
             spans: Vec::new(),
             busy_level: 0.0,
             last_change_s: 0.0,
+            energy_acc_j: 0.0,
         }
     }
 
@@ -271,18 +291,38 @@ impl NodeAllocator {
     /// Close the open timeline span at `now` (no-op while asleep).
     /// Contiguous spans at the same busy level merge, so regrant-heavy
     /// elastic runs don't bloat the timeline with no-op boundaries.
+    /// Energy for the span is integrated here, with the power model of
+    /// the mode in force over it (mode switches close the span first).
     fn close_span(&mut self, now_s: f64) {
         if !self.active.is_empty() && now_s > self.last_change_s + 1e-12 {
+            let busy = self.busy_level.min(self.device.cores);
+            self.energy_acc_j += self.device.power.power(busy) * (now_s - self.last_change_s);
             push_span(
                 &mut self.spans,
-                TraceSegment {
-                    t0_s: self.last_change_s,
-                    t1_s: now_s,
-                    busy_cores: self.busy_level.min(self.device.cores),
-                },
+                TraceSegment { t0_s: self.last_change_s, t1_s: now_s, busy_cores: busy },
             );
         }
         self.last_change_s = now_s;
+    }
+
+    /// Switch the node to `mode` at `now`: bill the elapsed span at the
+    /// old mode's power, derive the new effective spec from the base
+    /// device, and re-express the free-core pool against the new core
+    /// count (held grants are preserved; the caller re-plans them).
+    ///
+    /// The engine only calls this while the node is *private* — no
+    /// resident jobs, or exactly the one being re-planned — so no other
+    /// job's grant can be silently invalidated by a core-count change.
+    pub fn set_mode(&mut self, now_s: f64, mode: &PowerMode) {
+        if *mode == self.mode {
+            return;
+        }
+        self.close_span(now_s);
+        self.device = mode.apply(&self.base_device);
+        self.mode = mode.clone();
+        self.mode_switches += 1;
+        let held: f64 = self.active.iter().map(|a| a.plan.grant_cores).sum();
+        self.free_cores = (self.device.cores - held).max(0.0);
     }
 
     /// Admit a planned job at `now`; returns its completion time.
@@ -349,8 +389,6 @@ impl NodeAllocator {
             self.free_cores,
             a.plan.grant_cores
         );
-        self.free_cores = (self.free_cores + a.plan.grant_cores - plan.grant_cores)
-            .clamp(0.0, cores);
         self.free_mem_mib =
             (self.free_mem_mib + a.plan.mem_mib - plan.mem_mib).clamp(0.0, mem_avail);
         self.busy_level = (self.busy_level - a.plan.busy_cores + plan.busy_cores).max(0.0);
@@ -363,6 +401,12 @@ impl NodeAllocator {
         a.grant_gen += 1;
         a.regrants += 1;
         let gen = a.grant_gen;
+        // Re-derive free cores from the grants actually held rather
+        // than incrementally (free + old - new): the incremental form
+        // mis-counts when a mode switch changed the device's core
+        // total mid-flight and the old grant exceeded the new total.
+        let held: f64 = self.active.iter().map(|x| x.plan.grant_cores).sum();
+        self.free_cores = (cores - held).clamp(0.0, cores);
         // Re-derive the earliest-free estimate from the residents'
         // actual finish times: ratcheting it with `max(old, finish)`
         // would let a transient shrink (whose far-future finish the
@@ -393,7 +437,14 @@ impl NodeAllocator {
         self.est_free_at_s =
             self.active.iter().map(|x| x.finish_s).fold(now_s, f64::max);
         if self.active.is_empty() {
-            // Snap to pristine: kills float drift across many jobs.
+            // Snap to pristine: kills float drift across many jobs —
+            // and a drained device races back to its default power mode
+            // (it draws nothing between busy periods, so the switch is
+            // free; the next admission re-plans the mode anyway).
+            if !self.mode.is_default_for(&self.base_device) {
+                self.device = self.base_device.clone();
+                self.mode = PowerMode::default_for(&self.base_device);
+            }
             self.free_cores = self.device.cores;
             self.free_mem_mib = self.device.memory.available_mib();
             self.busy_level = 0.0;
@@ -430,9 +481,12 @@ impl NodeAllocator {
         }
     }
 
-    /// Energy from the aggregated timeline (idle paid once per device).
+    /// Energy from the aggregated timeline (idle paid once per device),
+    /// integrated span-by-span with the power mode in force — identical
+    /// to `energy::meter_spans` over the recorded spans when the mode
+    /// never changed.
     pub fn energy_j(&self) -> f64 {
-        meter_spans(&self.device, &self.spans).energy_j
+        self.energy_acc_j
     }
 }
 
@@ -611,6 +665,67 @@ mod tests {
         assert_eq!(node.active.len(), 0);
         assert_eq!(node.free_cores, dev.cores);
         assert_eq!(node.free_mem_mib, dev.memory.available_mib());
+    }
+
+    #[test]
+    fn mode_switch_bills_each_span_at_its_modes_power() {
+        // A sole resident downclocks mid-job (the drain scenario): the
+        // elapsed span is billed at default-mode power, the remainder
+        // at MAXQ power, and the drained node snaps back to default.
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let mut node = NodeAllocator::new(dev.clone(), 1);
+        let p0 = plan_service(&dev, &task, 720, 4, 4.0, 0);
+        node.admit(0.0, 0, 720, p0);
+        let t_switch = 100.0;
+        let wl = node.find(0).unwrap().work_remaining(t_switch);
+        let maxq = PowerMode::modes_for(&dev)
+            .into_iter()
+            .find(|m| m.name.starts_with("MAXQ"))
+            .unwrap();
+        node.set_mode(t_switch, &maxq);
+        assert_eq!(node.mode_switches, 1);
+        assert_eq!(node.device.cores, dev.cores, "TX2 modes keep all cores");
+        let eff = node.device.clone();
+        assert!(eff.base_frame_s > dev.base_frame_s, "MAXQ must be slower");
+        let p1 = plan_remaining(&eff, &task, wl, 4, 4.0, 0, 0.0);
+        let (_, finish) = node.regrant(t_switch, 0, wl, p1, 0.0);
+        assert!(
+            finish - t_switch > (wl / 4.0) * task.base_frame_s(dev.base_frame_s),
+            "the MAXQ remainder must run slower than default would"
+        );
+        node.complete(finish, 0);
+        let want = dev.power.power(p0.busy_cores) * t_switch
+            + eff.power.power(p1.busy_cores) * (finish - t_switch);
+        assert!(
+            (node.energy_j() - want).abs() < 1e-6,
+            "energy {} vs per-mode integral {}",
+            node.energy_j(),
+            want
+        );
+        assert!(
+            node.mode.is_default_for(&node.base_device),
+            "a drained node races back to the default mode"
+        );
+        assert_eq!(node.device, dev);
+        assert_eq!(node.free_cores, dev.cores);
+    }
+
+    #[test]
+    fn energy_accumulator_matches_meter_spans_without_mode_switches() {
+        // With no mode switch the incremental integral must equal
+        // energy::meter_spans over the recorded spans exactly.
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let mut node = NodeAllocator::new(dev.clone(), 2);
+        let p1 = plan_service(&dev, &task, 96, 2, 2.0, 0);
+        let p2 = plan_service(&dev, &task, 48, 2, 2.0, 2);
+        let f1 = node.admit(0.0, 0, 96, p1);
+        let f2 = node.admit(3.0, 1, 48, p2);
+        node.complete(f1.min(f2), if f1 <= f2 { 0 } else { 1 });
+        node.complete(f1.max(f2), if f1 <= f2 { 1 } else { 0 });
+        let reference = crate::energy::meter_spans(&dev, node.spans()).energy_j;
+        assert!((node.energy_j() - reference).abs() < 1e-9);
     }
 
     #[test]

@@ -23,11 +23,12 @@ use super::allocator::{
 };
 use super::policy::{PlacementPolicy, QueuePolicy};
 use super::queue::AdmissionQueue;
-use crate::coordinator::{Coordinator, InferenceJob};
+use crate::coordinator::planner::{Plan, PlanRequest};
+use crate::coordinator::Coordinator;
 use crate::device::DeviceSpec;
 use crate::metrics::Registry;
 use crate::sched::des::EventQueue;
-use crate::workload::{TaskProfile, Video};
+use crate::workload::TaskProfile;
 
 /// One job offered to the engine.
 #[derive(Debug, Clone)]
@@ -84,16 +85,22 @@ impl CompletedJob {
     }
 }
 
-/// How the engine picks `k` for an admitted job.
+/// How the engine plans an admitted job.
 #[derive(Debug)]
 pub enum SplitDecider<'a> {
-    /// Fixed k, clamped to the availability cap.
+    /// Fixed k, clamped to the availability cap (always the node's
+    /// current power mode).
     Fixed(usize),
     /// Each node's energy-optimal full-device split (memory-capped core
-    /// count) — the cluster default.
+    /// count) — the cluster default. Current power mode.
     PerNodeOptimal,
-    /// Route through a [`Coordinator`]'s split policy (fixed or
-    /// online-optimized), availability-constrained and cached.
+    /// Route through a [`Coordinator`]'s planner ([`Coordinator::plan`]
+    /// on a [`PlanRequest`]): fixed-mode or joint (mode, k) plans,
+    /// availability-constrained and cached. A joint planner's
+    /// `Plan.mode` is applied to the node (via `PowerMode::apply`) when
+    /// the node is private — empty at admission, or the job being
+    /// regranted is its sole resident — so a draining device can
+    /// downclock.
     Coordinator(&'a mut Coordinator),
 }
 
@@ -113,6 +120,11 @@ pub struct EngineConfig {
     /// Whether core grants are frozen at admission or re-apportioned at
     /// every arrival/completion event (work-conserving).
     pub grant_policy: GrantPolicy,
+    /// Skew elastic regrant shares toward jobs with tight deadlines
+    /// (weighted fair share) instead of equalizing them. Only active
+    /// under [`QueuePolicy::Edf`] + [`GrantPolicy::Elastic`]; off by
+    /// default.
+    pub deadline_weighted_shares: bool,
 }
 
 impl EngineConfig {
@@ -124,6 +136,7 @@ impl EngineConfig {
             max_concurrent_jobs: 1,
             min_cores_per_job: 1.0,
             grant_policy: GrantPolicy::Fixed,
+            deadline_weighted_shares: false,
         }
     }
 }
@@ -143,6 +156,9 @@ pub struct EngineOutcome {
     /// Mid-flight grant recomputations across all jobs (0 under the
     /// fixed grant policy).
     pub regrants: u64,
+    /// Power-mode switches applied across all nodes (0 unless a joint
+    /// planner chose a non-default mode on a private node).
+    pub mode_switches: u64,
     pub metrics: Registry,
 }
 
@@ -313,6 +329,7 @@ impl<'a> ServingEngine<'a> {
             completed: self.completed,
             wall_s,
             regrants: self.metrics.counter("regrants"),
+            mode_switches: self.metrics.counter("mode_switches"),
             metrics: self.metrics,
         }
     }
@@ -383,14 +400,28 @@ impl<'a> ServingEngine<'a> {
             let grant = (free_cores / share as f64)
                 .max(self.cfg.min_cores_per_job)
                 .min(free_cores);
-            let k_req = self.decide_k(j, node_i, grant, free_mem, None)?;
+            // The node is "private" when this job would have it to
+            // itself: only then may a joint plan reconfigure its power
+            // mode (a shared device's mode is pinned — no job may slow
+            // its neighbors down).
+            let mode_free = self.nodes[node_i].active.is_empty() && share <= 1;
+            let decision = self.plan_for(j, node_i, grant, free_mem, None, mode_free, now_s)?;
+            if mode_free && decision.mode != self.nodes[node_i].mode {
+                self.nodes[node_i].set_mode(now_s, &decision.mode);
+                self.metrics.inc("mode_switches", 1);
+            }
+            // A mode with fewer cores shrinks the grant with it.
+            let grant = decision
+                .grant_cores
+                .min(self.nodes[node_i].free_cores)
+                .max(f64::MIN_POSITIVE);
             let plan = {
                 let nd = &self.nodes[node_i];
                 plan_service(
                     &nd.device,
                     &self.jobs[j].task,
                     frames,
-                    k_req.min(mem_cap).max(1),
+                    decision.k.min(mem_cap).max(1),
                     grant,
                     nd.resident_containers(),
                 )
@@ -437,15 +468,19 @@ impl<'a> ServingEngine<'a> {
         for job in residents {
             let grant = self.nodes[node_i].find(job).unwrap().plan.grant_cores;
             if grant > target + 1e-9 {
-                self.regrant_job(now_s, node_i, job, target)?;
+                // Never a mode decision: the shrink exists to make room
+                // for newcomers, who share the device next.
+                self.regrant_job(now_s, node_i, job, target, false)?;
             }
         }
         Ok(())
     }
 
     /// Elastic post-admission phase: re-apportion each node's still-free
-    /// cores equally across ALL its resident jobs. After this pass a
-    /// node with any work resident has no ungranted core.
+    /// cores across ALL its resident jobs — equally, or skewed toward
+    /// tight deadlines when [`EngineConfig::deadline_weighted_shares`]
+    /// is on under the EDF queue policy. After this pass a node with
+    /// any work resident has no ungranted core.
     fn absorb_free_cores(&mut self, now_s: f64) -> Result<()> {
         for node_i in 0..self.nodes.len() {
             let free = self.nodes[node_i].free_cores;
@@ -453,26 +488,79 @@ impl<'a> ServingEngine<'a> {
             if n == 0 || free <= 1e-9 {
                 continue;
             }
-            let bonus = free / n as f64;
             let residents: Vec<(usize, f64)> = self.nodes[node_i]
                 .active
                 .iter()
                 .map(|a| (a.job_idx, a.plan.grant_cores))
                 .collect();
-            for (job, grant) in residents {
-                self.regrant_job(now_s, node_i, job, grant + bonus)?;
+            let weights = self.absorb_weights(now_s, node_i, &residents);
+            // A sole survivor absorbing the whole device is the drain
+            // moment — the one regrant where a joint plan may switch
+            // the power mode (race-to-idle vs slow-and-steady).
+            let mode_free = n == 1;
+            for ((job, grant), w) in residents.into_iter().zip(weights) {
+                self.regrant_job(now_s, node_i, job, grant + free * w, mode_free)?;
             }
         }
         Ok(())
     }
 
+    /// Per-resident fractions (summing to 1) of a node's free cores in
+    /// the absorb phase. Equal shares unless deadline-weighted shares
+    /// are active, in which case each job's weight is its *required
+    /// frame rate* — remaining work over remaining slack — so a job
+    /// 2x closer to its deadline absorbs 2x the bonus cores. Jobs
+    /// without a deadline (weight 0) keep their base grant; if no job
+    /// carries urgency the split falls back to equal.
+    fn absorb_weights(
+        &self,
+        now_s: f64,
+        node_i: usize,
+        residents: &[(usize, f64)],
+    ) -> Vec<f64> {
+        let n = residents.len().max(1);
+        let equal = vec![1.0 / n as f64; n];
+        if !(self.cfg.deadline_weighted_shares
+            && self.cfg.queue_policy == QueuePolicy::Edf
+            && n > 1)
+        {
+            return equal;
+        }
+        let nd = &self.nodes[node_i];
+        let urgency: Vec<f64> = residents
+            .iter()
+            .map(|&(job, _)| {
+                let work = nd.find(job).map(|a| a.work_remaining(now_s)).unwrap_or(0.0);
+                match self.jobs[job].deadline_s {
+                    // Past-due slack clamps to a hair above zero: the
+                    // overdue job gets (nearly) everything.
+                    Some(d) => work / (d - now_s).max(1e-6),
+                    None => 0.0,
+                }
+            })
+            .collect();
+        let total: f64 = urgency.iter().sum();
+        if total <= 1e-12 {
+            return equal;
+        }
+        urgency.into_iter().map(|u| u / total).collect()
+    }
+
     /// Change one resident job's core grant at `now_s`: measure its
-    /// remaining work, re-decide `k` under the new grant (the
-    /// router/optimizer path — `k` itself may change, modeling a
-    /// container resize), re-plan the remainder, and reschedule its
-    /// completion event (the superseded one goes stale via the
-    /// generation tag).
-    fn regrant_job(&mut self, now_s: f64, node_i: usize, job: usize, new_grant: f64) -> Result<()> {
+    /// remaining work, re-plan under the new grant through the planner
+    /// surface (`k` itself may change, modeling a container resize; a
+    /// joint plan may also switch the power mode when `mode_free` and
+    /// the job is the node's sole resident), re-plan the remainder, and
+    /// reschedule its completion event (the superseded one goes stale
+    /// via the generation tag).
+    fn regrant_job(
+        &mut self,
+        now_s: f64,
+        node_i: usize,
+        job: usize,
+        new_grant: f64,
+        mode_free: bool,
+    ) -> Result<()> {
         let (old_grant, old_k, old_mem, work_left, startup_left) = {
             let a = self.nodes[node_i].find(job).expect("regrant of a non-resident job");
             (
@@ -490,11 +578,24 @@ impl<'a> ServingEngine<'a> {
         let frames = self.jobs[job].frames;
         // The job's own held memory is reusable by its replacement plan.
         let avail_mem = self.nodes[node_i].free_mem_mib + old_mem;
-        let k_req = self.decide_k(job, node_i, new_grant, avail_mem, Some(old_k))?;
-        let (plan, restart, startup) = {
+        let mode_free = mode_free && self.nodes[node_i].active.len() == 1;
+        let decision =
+            self.plan_for(job, node_i, new_grant, avail_mem, Some(old_k), mode_free, now_s)?;
+        if mode_free && decision.mode != self.nodes[node_i].mode {
+            // The drain downclock (or a deadline-rescue upclock): the
+            // sole resident's plan reconfigures the whole device.
+            self.nodes[node_i].set_mode(now_s, &decision.mode);
+            self.metrics.inc("mode_switches", 1);
+        }
+        let (plan, restart, startup, new_grant) = {
             let nd = &self.nodes[node_i];
+            // A mode with fewer cores shrinks the grant with it.
+            let new_grant = decision
+                .grant_cores
+                .min(nd.free_cores + old_grant)
+                .max(f64::MIN_POSITIVE);
             let mem_cap = nd.device.memory.max_containers_within(avail_mem, frames).max(1);
-            let k = k_req.min(mem_cap).max(1);
+            let k = decision.k.min(mem_cap).max(1);
             let restart = k != old_k;
             let startup =
                 if restart { nd.device.container_startup_s } else { startup_left };
@@ -511,6 +612,7 @@ impl<'a> ServingEngine<'a> {
                 ),
                 restart,
                 startup,
+                new_grant,
             )
         };
         let (gen, finish) = self.nodes[node_i].regrant(now_s, job, work_left, plan, startup);
@@ -627,17 +729,33 @@ impl<'a> ServingEngine<'a> {
                 }
                 None
             }
-            PlacementPolicy::LeastLoaded => self
-                .nodes
-                .iter()
-                .enumerate()
-                .filter(|(i, _)| self.node_can_take(*i, frames))
-                .min_by(|(ia, a), (ib, b)| {
-                    (a.est_free_at_s, *ia)
-                        .partial_cmp(&(b.est_free_at_s, *ib))
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                })
-                .map(|(i, _)| i),
+            PlacementPolicy::LeastLoaded => {
+                let keyed: Vec<(f64, usize)> = (0..self.nodes.len())
+                    .filter(|&i| self.node_can_take(i, frames))
+                    .map(|i| {
+                        let key = match self.cfg.grant_policy {
+                            // Fixed grants never move after admission,
+                            // so the admission-time earliest-free
+                            // estimate stays honest.
+                            GrantPolicy::Fixed => self.nodes[i].est_free_at_s,
+                            // Under elastic grants that estimate goes
+                            // stale the moment a regrant reshapes the
+                            // residents: rank by the job's predicted
+                            // finish at the node's post-regrant fair
+                            // share instead (the job is admitted
+                            // immediately after the shrink phase).
+                            GrantPolicy::Elastic => {
+                                now_s + self.post_regrant_service_estimate(i, j)
+                            }
+                        };
+                        (key, i)
+                    })
+                    .collect();
+                keyed
+                    .into_iter()
+                    .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(_, i)| i)
+            }
             PlacementPolicy::EnergyAware => {
                 // EASE-style: the globally energy-best node, even if the
                 // job has to wait for it.
@@ -660,45 +778,78 @@ impl<'a> ServingEngine<'a> {
         }
     }
 
-    /// Decide the container count for job `j` on node `node_i` given a
-    /// core grant — the availability cap: with the whole device free
-    /// this reduces to the paper's unconstrained decision
-    /// (oversubscription allowed); with a partial grant, k is sized to
-    /// the cores actually granted. `current_k` is `Some` on the regrant
-    /// path, where the coordinator prefers keeping the job's live
-    /// containers (share-only resize) over restarting them.
-    fn decide_k(
+    /// Predicted service of job `j` on node `node_i` if admitted right
+    /// now at the node's post-regrant fair share — `cores /
+    /// (residents + 1)` — with k sized to that share. Under elastic
+    /// grants this is what the node will actually give the job after
+    /// the pre-admission shrink phase, which the admission-time
+    /// `est_free_at_s` estimate knows nothing about (ROADMAP:
+    /// regrant-aware placement).
+    fn post_regrant_service_estimate(&self, node_i: usize, j: usize) -> f64 {
+        let nd = &self.nodes[node_i];
+        let frames = self.jobs[j].frames;
+        let share = (nd.device.cores / (nd.active.len() + 1) as f64).max(f64::MIN_POSITIVE);
+        let k = (share.floor() as usize)
+            .clamp(1, nd.device.memory.max_containers(frames).max(1));
+        plan_service(&nd.device, &self.jobs[j].task, frames, k, share, nd.resident_containers())
+            .service_s
+    }
+
+    /// Plan job `j` on node `node_i` given a core grant — the
+    /// availability cap: with the whole device free this reduces to the
+    /// paper's unconstrained decision (oversubscription allowed); with
+    /// a partial grant, k is sized to the cores actually granted.
+    /// `current_k` is `Some` on the regrant path, where the planner
+    /// prefers keeping the job's live containers (share-only resize)
+    /// over restarting them. Unless `mode_free`, the plan is pinned to
+    /// the node's current power mode (the device is shared; only a
+    /// private node may be reconfigured).
+    fn plan_for(
         &mut self,
         j: usize,
         node_i: usize,
         grant_cores: f64,
         avail_mem_mib: f64,
         current_k: Option<usize>,
-    ) -> Result<usize> {
+        mode_free: bool,
+        now_s: f64,
+    ) -> Result<Plan> {
         let frames = self.jobs[j].frames;
-        let core_cap = self.nodes[node_i]
-            .device
-            .core_cap_for_grant(grant_cores)
-            .unwrap_or(usize::MAX);
+        let nd = &self.nodes[node_i];
+        let mut req = PlanRequest::new(
+            nd.base_device.clone(),
+            self.jobs[j].task.clone(),
+            frames,
+        )
+        .with_grant(grant_cores, avail_mem_mib);
+        req.current_k = current_k;
+        req.deadline_s = self.jobs[j].deadline_s.map(|d| (d - now_s).max(0.0));
+        if !mode_free {
+            req.pinned_mode = Some(nd.mode.clone());
+        }
+        if current_k.is_some() {
+            // Regrants know the job's actual remaining work; deadline
+            // feasibility should be judged on it, not the full video.
+            req.work_remaining = nd.find(j).map(|a| a.work_remaining(now_s));
+        }
+        let core_cap = nd.device.core_cap_for_grant(grant_cores).unwrap_or(usize::MAX);
         match &mut self.decider {
-            SplitDecider::Fixed(k) => Ok((*k).min(core_cap).max(1)),
+            SplitDecider::Fixed(k) => {
+                let k = (*k).min(core_cap).max(1);
+                Ok(Plan::for_choice(&req, &nd.mode, k))
+            }
             SplitDecider::PerNodeOptimal => {
-                let d = &self.nodes[node_i].device;
+                let d = &nd.device;
                 let mem_cap = d.memory.max_containers(frames).max(1);
-                Ok((d.cores as usize).min(mem_cap).min(core_cap).max(1))
+                let k = (d.cores as usize).min(mem_cap).min(core_cap).max(1);
+                Ok(Plan::for_choice(&req, &nd.mode, k))
             }
             SplitDecider::Coordinator(c) => {
-                let job = InferenceJob {
-                    id: self.jobs[j].id,
-                    video: Video::with_frames("engine", frames, 24.0),
-                    task: self.jobs[j].task.clone(),
-                };
-                match current_k {
-                    None => c.decide_k_constrained(&job, grant_cores, avail_mem_mib),
-                    Some(cur) => {
-                        c.decide_k_regrant(&job, grant_cores, avail_mem_mib, cur)
-                    }
-                }
+                // The coordinator plans against ITS calibrated device
+                // (asserted to match this node at engine construction),
+                // so startup overrides and probe settings apply.
+                req.device = c.base.effective_device();
+                c.plan(&req)
             }
         }
     }
@@ -1009,6 +1160,96 @@ mod tests {
         );
         assert_eq!(elastic.metrics.counter("work_conservation_violations"), 0);
         assert!(elastic.metrics.gauge("grant_churn_cores").unwrap_or(0.0) > 0.0);
+    }
+
+    #[test]
+    fn elastic_placement_ranks_by_post_regrant_share() {
+        // Regression for the stale-estimate bug: an Orin running one
+        // long whole-device job has est_free_at_s far in the future,
+        // while an idle TX2 reports "free now" — but under elastic
+        // grants the Orin would shrink the resident and hand the
+        // newcomer 6 fast cores immediately, finishing ~6x sooner than
+        // the whole idle TX2 can. Ranking by est_free_at_s sends the
+        // job to the TX2 (latency ~32s); ranking by the post-regrant
+        // fair share keeps it on the Orin.
+        let jobs = vec![
+            yolo_job(0, 0.0, 720), // pins the Orin
+            yolo_job(1, 2.0, 96),  // the misplaced victim
+        ];
+        let mut cfg = EngineConfig {
+            nodes: vec![DeviceSpec::orin(), DeviceSpec::tx2()],
+            ..EngineConfig::single_node(DeviceSpec::orin())
+        };
+        cfg.max_concurrent_jobs = 2;
+        cfg.grant_policy = GrantPolicy::Elastic;
+        let out = ServingEngine::new(cfg, jobs, SplitDecider::PerNodeOptimal)
+            .run()
+            .unwrap();
+        let short = out.completed.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(short.node, 0, "short job must share the Orin, not camp on the TX2");
+        assert!(
+            short.latency_s() < 15.0,
+            "post-regrant placement should finish the short job fast, took {:.1}s",
+            short.latency_s()
+        );
+        assert_eq!(out.metrics.counter("work_conservation_violations"), 0);
+    }
+
+    #[test]
+    fn deadline_weighted_shares_favor_urgent_jobs() {
+        // Three EDF jobs land together on an Orin; the short one drains
+        // first, freeing 4 cores. Equal absorb shares leave the
+        // tight-deadline job too slow to make its deadline; weighting
+        // the absorb by required frame rate (work / slack) gives it
+        // most of the freed cores and it makes the deadline, at the
+        // loose job's expense.
+        let jobs = || {
+            let mut a = yolo_job(0, 0.0, 720);
+            a.deadline_s = Some(1000.0);
+            let mut b = yolo_job(1, 0.0, 720);
+            b.deadline_s = Some(32.0);
+            let mut c = yolo_job(2, 0.0, 48);
+            c.deadline_s = Some(10.0);
+            vec![a, b, c]
+        };
+        let run = |weighted: bool| {
+            let mut cfg = orin_engine(3);
+            cfg.queue_policy = QueuePolicy::Edf;
+            cfg.grant_policy = GrantPolicy::Elastic;
+            cfg.deadline_weighted_shares = weighted;
+            ServingEngine::new(cfg, jobs(), SplitDecider::PerNodeOptimal).run().unwrap()
+        };
+        let equal = run(false);
+        let weighted = run(true);
+        let finish = |out: &EngineOutcome, id: u64| {
+            out.completed.iter().find(|c| c.id == id).unwrap().finish_s
+        };
+        assert!(
+            finish(&weighted, 1) < finish(&equal, 1),
+            "the urgent job must finish sooner under weighted shares: {:.1} vs {:.1}",
+            finish(&weighted, 1),
+            finish(&equal, 1)
+        );
+        assert!(
+            finish(&weighted, 1) <= 32.0 && finish(&equal, 1) > 32.0,
+            "weighted shares should rescue the 32s deadline (weighted {:.1}, equal {:.1})",
+            finish(&weighted, 1),
+            finish(&equal, 1)
+        );
+        // The loose-deadline job pays at most marginally: work
+        // conservation hands it the whole device once the urgent job
+        // drains, so its finish moves by the (tiny) efficiency loss of
+        // running k=4 on 4.1 cores instead of 6 — not by the 4 cores it
+        // ceded. It must still make its own (loose) deadline.
+        assert!(
+            finish(&weighted, 0) >= finish(&equal, 0) - 1e-6,
+            "weighting must not speed up the loose job"
+        );
+        assert!(finish(&weighted, 0) <= 1000.0);
+        for out in [&equal, &weighted] {
+            assert_eq!(out.completed.len(), 3);
+            assert_eq!(out.metrics.counter("work_conservation_violations"), 0);
+        }
     }
 
     #[test]

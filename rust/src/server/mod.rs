@@ -66,6 +66,9 @@ pub struct ServeConfig {
     /// Core grants frozen at admission (fixed) or re-apportioned at
     /// every arrival/completion event (elastic, work-conserving).
     pub grant_policy: GrantPolicy,
+    /// Skew elastic regrant shares toward tight-deadline jobs (weighted
+    /// fair share; needs the EDF queue policy). Off by default.
+    pub deadline_weighted_shares: bool,
 }
 
 impl Default for ServeConfig {
@@ -81,6 +84,7 @@ impl Default for ServeConfig {
             min_cores_per_job: 1.0,
             deadline_s: None,
             grant_policy: GrantPolicy::Fixed,
+            deadline_weighted_shares: false,
         }
     }
 }
@@ -107,6 +111,9 @@ pub struct ServeReport {
     pub node_energy_j: Vec<f64>,
     /// Mid-flight grant recomputations (0 under fixed grants).
     pub regrants: u64,
+    /// Power-mode switches applied by the planner (0 under the
+    /// fixed-mode planner).
+    pub mode_switches: u64,
     /// Battery-lifetime extrapolation on the reference pack
     /// ([`Battery::pack_50wh`]; recompute with
     /// [`ServeReport::apply_battery`] for other packs): jobs one charge
@@ -138,6 +145,7 @@ impl ServeReport {
             node_utilization: outcome.node_utilization.clone(),
             node_energy_j: outcome.node_energy_j.clone(),
             regrants: outcome.regrants,
+            mode_switches: outcome.mode_switches,
             battery_jobs_per_charge: 0.0,
             battery_hours: 0.0,
         };
@@ -192,6 +200,7 @@ impl ServeReport {
                 Json::Array(self.node_energy_j.iter().map(|&e| Json::num(e)).collect()),
             ),
             ("regrants", Json::num(self.regrants as f64)),
+            ("mode_switches", Json::num(self.mode_switches as f64)),
             ("battery_jobs_per_charge", Json::num(self.battery_jobs_per_charge)),
             ("battery_hours", Json::num(self.battery_hours)),
         ])
@@ -199,8 +208,10 @@ impl ServeReport {
 }
 
 /// Run a serving session over the event-driven engine: one node (the
-/// coordinator's device), k per job decided by the coordinator's split
-/// policy under the availability cap. Time is simulated device time on
+/// coordinator's device), each job planned by the coordinator's
+/// planner under the availability cap — a joint planner may also
+/// reconfigure the device's power mode when the node is private (see
+/// `coordinator::planner`). Time is simulated device time on
 /// the calibrated model (the SIM executor's semantics; REAL-mode
 /// serving drives `coordinator::executor::run_real` per job instead —
 /// see `examples/e2e_serving.rs`).
@@ -240,6 +251,7 @@ pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeRe
     engine_cfg.max_concurrent_jobs = cfg.max_concurrent_jobs;
     engine_cfg.min_cores_per_job = cfg.min_cores_per_job;
     engine_cfg.grant_policy = cfg.grant_policy;
+    engine_cfg.deadline_weighted_shares = cfg.deadline_weighted_shares;
 
     let mut engine =
         ServingEngine::new(engine_cfg, jobs, SplitDecider::Coordinator(&mut *coordinator));

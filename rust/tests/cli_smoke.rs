@@ -71,6 +71,18 @@ fn optimize_reports_best_k() {
 }
 
 #[test]
+fn optimize_joint_planner_reports_a_mode_aware_plan() {
+    // With ~2.4x deadline slack over the default-mode run, the joint
+    // planner must spend it on a downclock (TX2 MAXQ).
+    let (ok, text) = dsplit(&[
+        "optimize", "--device", "tx2", "--planner", "joint", "--deadline", "600",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("joint plan:"), "{text}");
+    assert!(text.contains("MAXQ"), "slack should buy a downclock:\n{text}");
+}
+
+#[test]
 fn trace_record_and_replay_roundtrip() {
     let path = std::env::temp_dir().join("dsplit_cli_trace.json");
     let path = path.to_str().unwrap();

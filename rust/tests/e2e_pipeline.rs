@@ -128,7 +128,8 @@ fn real_mode_respects_memory_cap() {
         video: Video::with_frames("j", 720, 24.0),
         task: TaskProfile::yolo_tiny(),
     };
-    let k = coordinator.decide_k(&job).unwrap();
+    let req = coordinator.request_for(&job);
+    let k = coordinator.plan(&req).unwrap().k;
     assert!(k <= 6, "optimizer must respect the TX2 cap, got {k}");
     drop(cfg);
 }

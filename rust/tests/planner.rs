@@ -1,0 +1,300 @@
+//! Planner-surface properties (tier-1).
+//!
+//! * **Fixed-mode parity** — `FixedModePlanner` reproduces the
+//!   pre-redesign `decide_k_*` decisions exactly: the same clamp
+//!   arithmetic for fixed policies and the same quantize-probe-fit
+//!   pipeline for online policies, pinned here by a differential
+//!   oracle that replays the retired formulas verbatim.
+//! * **Joint dominance** — `JointPlanner` is never worse than
+//!   `FixedModePlanner` on predicted energy at an equal-or-better
+//!   predicted completion time (no deadline), and never worse on
+//!   energy while meeting any deadline the fixed plan could meet.
+//! * **Drain downclock** — through the serving engine, a draining TX2
+//!   under the joint planner switches to a low-power mode and strictly
+//!   saves energy while every deadline is still met.
+
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::planner::{
+    FixedModePlanner, JointPlanner, PlanRequest, Planner, PlannerKind,
+};
+use divide_and_save::coordinator::router::SplitPolicy;
+use divide_and_save::coordinator::{Coordinator, OnlineOptimizer};
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::server::{
+    EngineConfig, EngineJob, GrantPolicy, ServingEngine, SplitDecider,
+};
+use divide_and_save::util::proptest::{ensure, forall};
+use divide_and_save::workload::TaskProfile;
+
+fn request(device: &DeviceSpec, frames: usize, cores: f64, mem: f64) -> PlanRequest {
+    PlanRequest::new(device.clone(), TaskProfile::yolo_tiny(), frames).with_grant(cores, mem)
+}
+
+/// The retired `decide_k_constrained` arithmetic for a fixed policy,
+/// verbatim.
+fn legacy_fixed_k(device: &DeviceSpec, k: usize, cores: f64, mem: f64, frames: usize) -> usize {
+    let core_cap = device.core_cap_for_grant(cores).unwrap_or(usize::MAX);
+    let mem_cap = device.memory.max_containers_within(mem, frames).max(1);
+    k.min(core_cap).min(mem_cap).max(1)
+}
+
+/// The retired online `decide_k_inner` pipeline, verbatim: caps, the
+/// tiny-grant shortcut, half-core grant quantization, probe-fit with
+/// the sticky preference.
+fn legacy_online_k(
+    base: &ExperimentConfig,
+    opt: &OnlineOptimizer,
+    device: &DeviceSpec,
+    frames: usize,
+    cores: f64,
+    mem: f64,
+    prefer: Option<usize>,
+) -> usize {
+    let core_cap = device.core_cap_for_grant(cores).unwrap_or(usize::MAX);
+    let mem_cap = device.memory.max_containers_within(mem, frames).max(1);
+    let cap = core_cap.min(mem_cap).max(1);
+    if cap <= 2 {
+        return prefer.filter(|&p| p >= 1 && p <= cap).unwrap_or(cap);
+    }
+    let grant_q = ((cores * 2.0).floor() / 2.0).max(1.0);
+    let mut cfg = base.clone();
+    cfg.task = TaskProfile::yolo_tiny();
+    cfg.video = divide_and_save::workload::Video::with_frames("legacy", frames, 24.0);
+    cfg.device = device.clone();
+    cfg.device.cores = grant_q;
+    opt.fit_decision(&cfg, cap, prefer).unwrap().best_k
+}
+
+#[test]
+fn fixed_mode_planner_matches_the_legacy_fixed_clamps() {
+    forall(
+        53,
+        60,
+        |r| {
+            let device = if r.bool() { DeviceSpec::tx2() } else { DeviceSpec::orin() };
+            let frames = 24 + r.range_u64(0, 696) as usize;
+            let cores = r.range_f64(0.5, device.cores);
+            let mem_frac = r.range_f64(0.05, 1.0);
+            let k = 1 + r.range_u64(0, 11) as usize;
+            (device, frames, cores, mem_frac, k)
+        },
+        |(device, frames, cores, mem_frac, k)| {
+            let mem = device.memory.available_mib() * mem_frac;
+            let mut planner =
+                FixedModePlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(*k));
+            let plan = planner
+                .plan(&request(device, *frames, *cores, mem))
+                .map_err(|e| e.to_string())?;
+            let want = legacy_fixed_k(device, *k, *cores, mem, *frames);
+            ensure(
+                plan.k == want,
+                format!("k diverged: plan {} vs legacy {want}", plan.k),
+            )?;
+            ensure(
+                plan.mode.is_default_for(device),
+                "fixed-mode planner left the default mode",
+            )
+        },
+    );
+}
+
+#[test]
+fn fixed_mode_planner_matches_the_legacy_online_pipeline() {
+    // The probe-fit path is expensive (each case runs SIM probes), so
+    // pin a deliberate grid instead of a wide random sweep: whole
+    // device, half device, tiny grant, and a sticky regrant, on both
+    // paper devices.
+    let opt = OnlineOptimizer::default();
+    for device in DeviceSpec::all() {
+        let base = {
+            let mut b = ExperimentConfig::default();
+            b.device = device.clone();
+            b
+        };
+        let mem = device.memory.available_mib();
+        let cases: Vec<(f64, f64, Option<usize>)> = vec![
+            (device.cores, mem, None),        // the paper's unconstrained decision
+            (device.cores / 2.0, mem, None),  // availability-capped
+            (1.7, mem, None),                 // tiny grant: no probing
+            (device.cores, mem, Some(2)),     // sticky regrant preference
+            (1.7, mem, Some(1)),              // tiny grant keeps current k
+        ];
+        for (cores, mem, prefer) in cases {
+            let mut planner =
+                FixedModePlanner::new(base.clone(), SplitPolicy::Online(opt.clone()));
+            let mut req = request(&device, 720, cores, mem);
+            req.current_k = prefer;
+            let plan = planner.plan(&req).unwrap();
+            let want = legacy_online_k(&base, &opt, &device, 720, cores, mem, prefer);
+            assert_eq!(
+                plan.k, want,
+                "{}: cores={cores} prefer={prefer:?}: plan {} vs legacy {want}",
+                device.name, plan.k
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_mode_planner_pins_the_paper_optima() {
+    // Today's decisions on the paper configs (the same ranges the
+    // pre-redesign optimizer tests asserted): TX2 energy optimum near
+    // 4, Orin best at high k.
+    let mut tx2 = FixedModePlanner::new(
+        ExperimentConfig::default(),
+        SplitPolicy::Online(OnlineOptimizer::default()),
+    );
+    let d = DeviceSpec::tx2();
+    let plan = tx2.plan(&request(&d, 720, d.cores, d.memory.available_mib())).unwrap();
+    assert!((3..=5).contains(&plan.k), "TX2 k={}", plan.k);
+
+    let mut base = ExperimentConfig::default();
+    base.device = DeviceSpec::orin();
+    let mut orin =
+        FixedModePlanner::new(base, SplitPolicy::Online(OnlineOptimizer::default()));
+    let d = DeviceSpec::orin();
+    let plan = orin.plan(&request(&d, 720, d.cores, d.memory.available_mib())).unwrap();
+    assert!(plan.k >= 8, "Orin k={}", plan.k);
+}
+
+#[test]
+fn joint_planner_dominates_fixed_on_predicted_energy() {
+    // Property: at an equal-or-better predicted completion time (no
+    // deadline) the joint plan's predicted energy never exceeds the
+    // fixed plan's; with a deadline the fixed plan could meet, the
+    // joint plan meets it too at no more energy.
+    forall(
+        59,
+        50,
+        |r| {
+            let device = if r.bool() { DeviceSpec::tx2() } else { DeviceSpec::orin() };
+            let frames = 48 + r.range_u64(0, 672) as usize;
+            let cores = r.range_f64(1.0, device.cores);
+            let mem_frac = r.range_f64(0.2, 1.0);
+            let k = 1 + r.range_u64(0, 7) as usize;
+            let slack = r.range_f64(1.0, 3.0);
+            let current = if r.bool() { Some(1 + r.range_u64(0, 5) as usize) } else { None };
+            (device, frames, cores, mem_frac, k, slack, current)
+        },
+        |(device, frames, cores, mem_frac, k, slack, current)| {
+            let mem = device.memory.available_mib() * mem_frac;
+            let mut fixed =
+                FixedModePlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(*k));
+            let mut joint =
+                JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(*k));
+            let mut req = request(device, *frames, *cores, mem);
+            req.current_k = *current;
+            let f = fixed.plan(&req).map_err(|e| e.to_string())?;
+            let j = joint.plan(&req).map_err(|e| e.to_string())?;
+            ensure(
+                j.predicted_time_s <= f.predicted_time_s + 1e-9,
+                format!("time regressed: {} vs {}", j.predicted_time_s, f.predicted_time_s),
+            )?;
+            ensure(
+                j.predicted_energy_j <= f.predicted_energy_j + 1e-9,
+                format!(
+                    "energy regressed: {} vs {}",
+                    j.predicted_energy_j, f.predicted_energy_j
+                ),
+            )?;
+            // With a deadline the fixed plan meets, joint must meet it
+            // too, still at no more energy (slack only ever helps).
+            let deadline = f.predicted_time_s * slack;
+            let dreq = req.clone().with_deadline(deadline);
+            let jd = joint.plan(&dreq).map_err(|e| e.to_string())?;
+            ensure(
+                jd.predicted_time_s <= deadline + 1e-9,
+                format!("deadline {deadline} violated: {}", jd.predicted_time_s),
+            )?;
+            ensure(
+                jd.predicted_energy_j <= f.predicted_energy_j + 1e-9,
+                format!(
+                    "deadline energy regressed: {} vs {}",
+                    jd.predicted_energy_j, f.predicted_energy_j
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn joint_planner_downclocks_a_draining_tx2_and_saves_energy() {
+    // The single-job drain: two short clips and one long job with a
+    // loose deadline arrive together on a TX2. The shorts drain at
+    // ~25 s; the survivor is regranted the whole device. The fixed
+    // planner races to idle in the default mode; the joint planner
+    // downclocks (slow-and-steady) — strictly less energy, every
+    // deadline still met.
+    let base = ExperimentConfig::default(); // TX2
+    let jobs = || {
+        let mut long = EngineJob::new(0, 0.0, 720, TaskProfile::yolo_tiny());
+        long.deadline_s = Some(600.0);
+        let mut s1 = EngineJob::new(1, 0.0, 24, TaskProfile::yolo_tiny());
+        s1.deadline_s = Some(60.0);
+        let mut s2 = EngineJob::new(2, 0.0, 24, TaskProfile::yolo_tiny());
+        s2.deadline_s = Some(60.0);
+        vec![long, s1, s2]
+    };
+    let run = |kind: PlannerKind| {
+        let planner = kind.build(base.clone(), SplitPolicy::Fixed(4));
+        let mut c = Coordinator::with_planner(base.clone(), planner);
+        let mut cfg = EngineConfig::single_node(DeviceSpec::tx2());
+        cfg.max_concurrent_jobs = 3;
+        cfg.grant_policy = GrantPolicy::Elastic;
+        ServingEngine::new(cfg, jobs(), SplitDecider::Coordinator(&mut c))
+            .run()
+            .unwrap()
+    };
+    let fixed = run(PlannerKind::Fixed);
+    let joint = run(PlannerKind::Joint);
+
+    assert_eq!(fixed.mode_switches, 0, "fixed-mode planner must never switch modes");
+    assert!(joint.mode_switches >= 1, "the drain must downclock");
+    assert!(
+        joint.node_energy_j[0] < fixed.node_energy_j[0] * 0.9,
+        "joint {:.0} J should clearly undercut fixed {:.0} J",
+        joint.node_energy_j[0],
+        fixed.node_energy_j[0]
+    );
+    for out in [&fixed, &joint] {
+        assert_eq!(out.completed.len(), 3);
+        for c in &out.completed {
+            let deadline = if c.id == 0 { 600.0 } else { 60.0 };
+            assert!(
+                c.finish_s <= deadline + 1e-6,
+                "job {} missed its deadline: {:.1} > {deadline}",
+                c.id,
+                c.finish_s
+            );
+        }
+        assert_eq!(out.metrics.counter("work_conservation_violations"), 0);
+    }
+    // The engine's per-node allocator snapped back to the default mode
+    // after the drain — visible as identical *final* spec behavior on
+    // the next session; here we just confirm the switch was counted
+    // once (down to MAXQ, reset on drain is free).
+    assert_eq!(joint.mode_switches, 1);
+}
+
+#[test]
+fn coordinator_plan_surface_supports_joint_planning_end_to_end() {
+    // serve()-style wiring: a Coordinator built over the joint planner
+    // keeps the whole fixed-policy contract (k, caps, caching) while
+    // exposing mode-aware plans.
+    let base = ExperimentConfig::default();
+    let planner = PlannerKind::Joint.build(base.clone(), SplitPolicy::Fixed(4));
+    let mut c = Coordinator::with_planner(base, planner);
+    assert_eq!(c.planner_name(), "joint");
+    let job = divide_and_save::coordinator::InferenceJob {
+        id: 1,
+        video: divide_and_save::workload::Video::with_frames("j", 240, 24.0),
+        task: TaskProfile::yolo_tiny(),
+    };
+    let req = c.request_for(&job);
+    let plan = c.plan(&req).unwrap();
+    assert_eq!(plan.k, 4);
+    // No deadline: the joint plan must not be slower than default.
+    assert!(plan.mode.freq_scale >= 1.0);
+    let r = c.submit(job).unwrap();
+    assert_eq!(r.containers_used, 4);
+}
