@@ -48,6 +48,10 @@ pub struct ExperimentConfig {
     pub artifacts_dir: String,
     /// Model variant for REAL mode (e.g. "yolo_tiny_b4").
     pub variant: String,
+    /// REAL mode: run the deterministic stub engine instead of PJRT —
+    /// the full worker/throttle/metering path with no artifacts needed
+    /// (CI smoke, hosts without `make artifacts`).
+    pub stub_engine: bool,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -81,6 +85,7 @@ impl Default for ExperimentConfig {
             seed: 0,
             artifacts_dir: "artifacts".to_string(),
             variant: "yolo_tiny_b4".to_string(),
+            stub_engine: false,
         }
     }
 }
@@ -151,6 +156,9 @@ impl ExperimentConfig {
         if let Some(d) = v.get("variant").and_then(Json::as_str) {
             cfg.variant = d.to_string();
         }
+        if let Some(b) = v.get("stub_engine").and_then(Json::as_bool) {
+            cfg.stub_engine = b;
+        }
         Ok(cfg)
     }
 
@@ -199,6 +207,9 @@ impl ExperimentConfig {
         if let Some(v) = p.get("variant") {
             self.variant = v.to_string();
         }
+        if p.flag("stub-engine") {
+            self.stub_engine = true;
+        }
         Ok(())
     }
 
@@ -219,6 +230,7 @@ impl ExperimentConfig {
             ("sensor_period_s", Json::num(self.sensor_period_s)),
             ("seed", Json::num(self.seed as f64)),
             ("variant", Json::str(&self.variant)),
+            ("stub_engine", Json::Bool(self.stub_engine)),
         ])
     }
 }

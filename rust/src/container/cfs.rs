@@ -96,8 +96,32 @@ impl ThrottleClock {
         }
     }
 
+    /// CPU-seconds recorded since construction or the last
+    /// [`Self::set_cpus`] rebase.
     pub fn consumed_s(&self) -> f64 {
         self.consumed_s
+    }
+
+    /// The `--cpus` budget currently enforced.
+    pub fn cpus(&self) -> f64 {
+        self.bw.cpus
+    }
+
+    /// Rewrite the `--cpus` budget in place — `docker update --cpus` on
+    /// a live container. The accounting window rebases at the call
+    /// instant: consumption so far is settled against the old rate, and
+    /// any wall-clock debt still outstanding carries over unchanged
+    /// into the new budget (the container stays throttled for exactly
+    /// the sleep it already owed; nothing is forgiven or double-billed).
+    pub fn set_cpus(&mut self, cpus: f64) {
+        assert!(cpus > 0.0, "--cpus must be positive");
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let debt_s = (self.consumed_s / self.bw.cpus - elapsed).max(0.0);
+        self.bw.cpus = cpus;
+        self.started = std::time::Instant::now();
+        // Outstanding debt re-expressed at the new rate keeps the same
+        // wall-clock sleep: earliest_ok = consumed / cpus = debt_s.
+        self.consumed_s = debt_s * cpus;
     }
 }
 
@@ -179,6 +203,33 @@ mod tests {
         clk.acquire(0.05);
         let elapsed = start.elapsed().as_secs_f64();
         assert!(elapsed >= 0.004, "elapsed={elapsed}");
+    }
+
+    #[test]
+    fn set_cpus_rebases_and_enforces_the_new_rate() {
+        // Consume well past a tiny budget, then resize the live bucket:
+        // the outstanding wall-clock debt must survive the rewrite.
+        let mut clk = ThrottleClock::new(CfsBandwidth::new(0.01));
+        let debt = clk.debt_before(0.0005); // ~50 ms owed at 0.01 cpus
+        assert!(debt.as_secs_f64() > 0.04, "debt={debt:?}");
+        clk.set_cpus(1000.0);
+        assert_eq!(clk.cpus(), 1000.0);
+        let carried = clk.debt_before(0.0);
+        assert!(
+            (carried.as_secs_f64() - debt.as_secs_f64()).abs() < 0.01,
+            "debt {debt:?} not carried: {carried:?}"
+        );
+    }
+
+    #[test]
+    fn set_cpus_tightening_throttles_future_work() {
+        // A generous budget never throttles; after a live shrink the
+        // same work owes real sleep at the new rate.
+        let mut clk = ThrottleClock::new(CfsBandwidth::new(1000.0));
+        assert!(clk.debt_before(0.01).as_secs_f64() < 0.001);
+        clk.set_cpus(10.0);
+        let debt = clk.debt_before(0.05);
+        assert!(debt.as_secs_f64() >= 0.004, "debt={debt:?}");
     }
 
     #[test]

@@ -1,20 +1,25 @@
-//! Parallel executors: SIM (calibrated discrete-event model — the
-//! paper-figure path) and REAL (actual PJRT inference on throttled
-//! threads — the end-to-end proof that all layers compose).
+//! One-shot executors over the session-oriented execution backends:
+//! SIM (calibrated discrete-event model — the paper-figure path) and
+//! REAL (actual PJRT inference on throttled threads — the end-to-end
+//! proof that all layers compose).
+//!
+//! The machinery lives in [`crate::exec`]: `run_sim` / `run_real` /
+//! `run` are thin wrappers that open a one-job session, start it at
+//! t=0 and drain it — the pristine-session path, which for SIM
+//! reproduces the retired inline executor bit-for-bit (the tests below
+//! pin the paper figures through it). Anything richer — mid-job
+//! `--cpus` resizes, frame shedding, power-mode switches — goes through
+//! the session API directly (see `exec::Session`), which is also what
+//! the serving engine drives.
 
-use std::sync::mpsc;
-
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::{ExecMode, ExperimentConfig};
-use crate::container::cfs::{CfsBandwidth, ThrottleClock};
-use crate::container::{ContainerPool, ImageSpec};
-use crate::detect::{decode_output, nms, Detection, NmsParams};
-use crate::device::PowerSensor;
-use crate::energy::meter_schedule;
-use crate::runtime::{Engine, Manifest};
-use crate::sched::{CpuScheduler, JobSpec};
-use crate::workload::{split_even, FrameGenerator, Segment};
+use crate::detect::Detection;
+use crate::exec::{
+    run_session, RealBackend, SessionReport, SessionSpec, SimBackend, StubEngineSpec,
+};
+use crate::workload::Segment;
 
 /// Per-container outcome.
 #[derive(Debug, Clone)]
@@ -55,208 +60,58 @@ impl ExperimentResult {
     }
 }
 
-/// SIM executor: create + start k containers (memory check, startup
-/// cost), simulate the fair-share schedule, meter energy through the
-/// sampled sensor.
-pub fn run_sim(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
-    let device = cfg.effective_device();
-    let total_frames = cfg.video.frame_count();
-    let k = cfg.containers;
-
-    let mut image = ImageSpec::yolo(&cfg.variant);
-    image.startup_s = device.container_startup_s;
-    image.memory_mib = device.memory.per_container_mib;
-
-    let mut pool = ContainerPool::create(&device, &image, k, total_frames, 0.0)
-        .context("container pool")?;
-    let ready_at = pool.start_all(0.0).context("start containers")?;
-
-    let segments = split_even(total_frames, k);
-    let base = cfg.task.base_frame_s(device.base_frame_s);
-    let sched = CpuScheduler::new(&device).with_base_frame(base);
-    let jobs: Vec<JobSpec> = segments
-        .iter()
-        .map(|s| JobSpec {
-            container_id: s.index as u64,
-            frames: s.len,
-            cpus: pool.cpus_each,
-            ready_at_s: ready_at,
-        })
-        .collect();
-    let schedule = sched.run(&jobs);
-    let sensor = PowerSensor::new(cfg.sensor_period_s);
-    let report = meter_schedule(&device, &sensor, &schedule);
-
-    pool.stop_all(schedule.makespan_s).ok();
-
-    let segments = segments
-        .into_iter()
-        .zip(&schedule.finish_s)
-        .map(|(segment, &(_, finish))| SegmentResult {
-            segment,
-            finish_s: finish,
-            detections: Vec::new(),
-        })
-        .collect();
-
-    Ok(ExperimentResult {
-        device: device.name.to_string(),
+/// Fold a drained session report into the executor's experiment shape.
+fn to_experiment(
+    cfg: &ExperimentConfig,
+    mode: ExecMode,
+    report: SessionReport,
+) -> ExperimentResult {
+    ExperimentResult {
+        device: report.device.clone(),
         task: cfg.task.name.clone(),
-        containers: k,
-        frames: total_frames,
-        mode: ExecMode::Sim,
+        containers: report.workers,
+        frames: cfg.video.frame_count(),
+        mode,
         time_s: report.time_s,
         energy_j: report.energy_j,
         avg_power_w: report.avg_power_w,
-        segments,
-        total_detections: 0,
-    })
+        total_detections: report.total_detections,
+        segments: report
+            .worker_outcomes
+            .into_iter()
+            .map(|w| SegmentResult {
+                segment: w.segment,
+                finish_s: w.finish_s,
+                detections: w.detections,
+            })
+            .collect(),
+    }
 }
 
-/// REAL executor: k worker threads, each with its OWN PJRT client +
-/// compiled executable (mirroring container process isolation), each
-/// throttled to its `--cpus` share by a CFS token bucket, each running
-/// its segment through the engine batch by batch and NMS-ing the decoded
-/// boxes. Wall-clock time is measured; energy/power are modeled from the
-/// device power model driven by the measured per-container busy windows.
+/// SIM executor: one pristine `SimBackend` session — create + start k
+/// containers (memory check, startup cost), simulate the fair-share
+/// schedule, meter energy through the sampled sensor.
+pub fn run_sim(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
+    let report = run_session(&mut SimBackend, &SessionSpec::from_config(cfg))?;
+    Ok(to_experiment(cfg, ExecMode::Sim, report))
+}
+
+/// REAL executor: one `RealBackend` session — k worker threads, each
+/// with its OWN engine (mirroring container process isolation), each
+/// throttled to its `--cpus` share by a live CFS token bucket, each
+/// running its segment batch by batch. Wall-clock time is measured;
+/// energy is billed from the overlaid per-worker busy windows (idle
+/// paid once per device busy period, mode-aware) through
+/// `energy::meter_spans`. With `cfg.stub_engine` the workers run the
+/// deterministic stub instead of PJRT — no artifacts needed.
 pub fn run_real(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
-    let device = cfg.effective_device();
-    let total_frames = cfg.video.frame_count();
-    let k = cfg.containers;
-    let segments = split_even(total_frames, k);
-    let cpus_each = device.cores / k as f64;
-
-    // Validate the variant exists before spawning workers.
-    let manifest = Manifest::load(&cfg.artifacts_dir).context("load manifest")?;
-    let variant_info = manifest.variant(&cfg.variant)?.clone();
-
-    // Barrier semantics match the paper's metering: container startup
-    // (here: per-worker PJRT compile = model load) happens BEFORE the
-    // measured window; the paper's timer covers steady-state inference.
-    let barrier = std::sync::Arc::new(std::sync::Barrier::new(k + 1));
-    let (tx, rx) = mpsc::channel::<Result<(Segment, Vec<Detection>, f64, f64)>>();
-
-    let mut handles = Vec::new();
-    for seg in &segments {
-        let tx = tx.clone();
-        let seg = *seg;
-        let artifacts_dir = cfg.artifacts_dir.clone();
-        let variant = cfg.variant.clone();
-        let seed = cfg.seed;
-        let barrier = barrier.clone();
-        let input_hw = (variant_info.input_shape[1], variant_info.input_shape[2], variant_info.input_shape[3]);
-        let nattr = variant_info.nattr.max(6);
-        let is_yolo = variant_info.model == "yolo_tiny";
-        handles.push(std::thread::spawn(move || {
-            // Container-isolated runtime: own client + executable. Load
-            // BEFORE the barrier so compile time counts as container
-            // startup, not inference — but always reach the barrier,
-            // even on failure, or the main thread would deadlock.
-            let loaded: Result<Engine> = (|| {
-                let manifest = Manifest::load(&artifacts_dir)?;
-                Ok(Engine::load(&manifest, &variant)?)
-            })();
-            barrier.wait(); // "container started" — clock starts here
-            let run = |engine: Engine| -> Result<(Segment, Vec<Detection>, f64, f64)> {
-                let gen = FrameGenerator::new(input_hw.0, input_hw.1, input_hw.2, seed);
-                let mut throttle = ThrottleClock::new(CfsBandwidth::new(cpus_each));
-                let params = NmsParams::default();
-                let mut dets: Vec<Detection> = Vec::new();
-                let mut busy_s = 0.0;
-                let batch = engine.batch();
-                let mut frame = seg.start_frame;
-                let work_t0 = std::time::Instant::now();
-                while frame < seg.end_frame() {
-                    let n = batch.min(seg.end_frame() - frame);
-                    let buf = gen.batch(frame, n);
-                    let (padded, real) = engine.pad_batch(&buf);
-                    let out = engine.run(&padded)?;
-                    busy_s += out.latency_s;
-                    // Emulate --cpus: one engine call is ~1 core-busy for
-                    // latency_s; pay the CFS debt after each call.
-                    throttle.acquire(out.latency_s);
-                    if is_yolo {
-                        for (oi, buffer) in out.buffers.iter().enumerate() {
-                            let per_frame_len = engine.output_frame_elems(oi);
-                            for b in 0..real {
-                                let sl = &buffer[b * per_frame_len..(b + 1) * per_frame_len];
-                                let cands = decode_output(sl, nattr, frame + b, params.score_threshold);
-                                dets.extend(nms(cands, &params));
-                            }
-                        }
-                    }
-                    frame += n;
-                }
-                let wall = work_t0.elapsed().as_secs_f64();
-                Ok((seg, dets, wall, busy_s))
-            };
-            tx.send(loaded.and_then(run)).ok();
-        }));
-    }
-    drop(tx);
-    barrier.wait(); // all containers started
-    let started = std::time::Instant::now();
-
-    // Drain EVERY worker result before joining: returning early on the
-    // first error would skip the joins and leak running threads (and a
-    // panicked worker would deadlock nobody, but its sibling threads
-    // would keep burning CPU). Collect all outcomes, join all handles,
-    // then propagate the first failure.
-    let mut seg_results: Vec<(Segment, Vec<Detection>, f64, f64)> = Vec::new();
-    let mut first_err: Option<anyhow::Error> = None;
-    for r in rx {
-        match r {
-            Ok(v) => seg_results.push(v),
-            Err(e) => {
-                if first_err.is_none() {
-                    first_err = Some(e);
-                }
-            }
-        }
-    }
-    for h in handles {
-        if h.join().is_err() && first_err.is_none() {
-            first_err = Some(anyhow::anyhow!("worker panicked"));
-        }
-    }
-    if let Some(e) = first_err {
-        return Err(e);
-    }
-    seg_results.sort_by_key(|(s, ..)| s.index);
-
-    let time_s = started.elapsed().as_secs_f64();
-    // Model power from the measured utilization: each container kept
-    // ~min(1, cpus_each) core busy for busy_s of the makespan.
-    // One engine call keeps ~one core busy; a container throttled below
-    // one core is busy for only its duty-cycle fraction.
-    let busy_core_seconds: f64 =
-        seg_results.iter().map(|(_, _, _, busy)| busy * cpus_each.min(1.0)).sum();
-    let avg_busy = (busy_core_seconds / time_s).min(device.cores);
-    let avg_power_w = device.power.power(avg_busy);
-    let energy_j = avg_power_w * time_s;
-
-    let total_detections = seg_results.iter().map(|(_, d, _, _)| d.len()).sum();
-    let segments = seg_results
-        .into_iter()
-        .map(|(segment, detections, wall, _)| SegmentResult {
-            segment,
-            finish_s: wall,
-            detections,
-        })
-        .collect();
-
-    Ok(ExperimentResult {
-        device: device.name.to_string(),
-        task: cfg.task.name.clone(),
-        containers: k,
-        frames: total_frames,
-        mode: ExecMode::Real,
-        time_s,
-        energy_j,
-        avg_power_w,
-        segments,
-        total_detections,
-    })
+    let mut backend = if cfg.stub_engine {
+        RealBackend::stub(StubEngineSpec::default())
+    } else {
+        RealBackend::pjrt(&cfg.artifacts_dir, &cfg.variant)
+    };
+    let report = run_session(&mut backend, &SessionSpec::from_config(cfg))?;
+    Ok(to_experiment(cfg, ExecMode::Real, report))
 }
 
 /// Dispatch on the configured mode.
@@ -347,5 +202,37 @@ mod tests {
         let (t, e, _) = split.normalized(&bench);
         assert!(t < 0.85, "cnn split time ratio {t}");
         assert!(e < 0.95, "cnn split energy ratio {e}");
+    }
+
+    #[test]
+    fn real_stub_engine_runs_without_artifacts() {
+        // The stub-engine REAL path: real threads, real token buckets,
+        // no PJRT — k=2 processes every frame and reports positive,
+        // internally consistent metrics.
+        let mut c = cfg(2);
+        c.mode = ExecMode::Real;
+        c.stub_engine = true;
+        c.video = crate::workload::Video::with_frames("stub", 16, 24.0);
+        let r = run_real(&c).unwrap();
+        assert_eq!(r.mode, ExecMode::Real);
+        assert_eq!(r.frames, 16);
+        assert_eq!(r.segments.len(), 2);
+        assert!(r.time_s > 0.0 && r.energy_j > 0.0);
+        // The overlaid-span metering pays at least the idle floor over
+        // the whole busy period and never exceeds the device peak —
+        // bounds a halved/doubled energy bill would violate.
+        let dev = c.effective_device();
+        assert!(
+            r.energy_j >= dev.power.idle_w * r.time_s * 0.99,
+            "energy {} below the idle floor over {}s",
+            r.energy_j,
+            r.time_s
+        );
+        assert!(
+            r.energy_j <= dev.power.peak() * r.time_s * 1.01,
+            "energy {} above peak power over {}s",
+            r.energy_j,
+            r.time_s
+        );
     }
 }

@@ -3,12 +3,15 @@
 //! run inference in parallel, merge the results, and meter time /
 //! energy / power (§V steps 1–4).
 //!
-//! Two interchangeable executors:
+//! Two interchangeable executors, both thin wrappers over one-job
+//! [`crate::exec`] sessions (the session API also supports mid-job
+//! `--cpus` resizes, frame shedding and power-mode switches):
 //! * [`executor::run_sim`] — discrete-event simulation on the calibrated
 //!   device model; regenerates the paper's figures.
 //! * [`executor::run_real`] — real PJRT inference on throttled worker
 //!   threads (one per container, each with its own isolated runtime);
-//!   wall-clock is measured, power is modeled from the executed trace.
+//!   wall-clock is measured, energy is billed from the overlaid
+//!   per-worker busy windows.
 //!
 //! On top of them:
 //! * [`combiner`] — order-preserving merge of per-segment detections.

@@ -60,33 +60,12 @@ impl OnlineOptimizer {
         }
     }
 
-    /// Probe, fit, decide over the whole device.
-    #[deprecated(note = "build a coordinator::planner::PlanRequest and call Planner::plan")]
-    pub fn decide(&self, cfg: &ExperimentConfig) -> Result<OptimizerDecision> {
-        self.fit_decision(cfg, usize::MAX, None)
-    }
-
-    /// Probe, fit, decide under an availability cap, with a sticky
-    /// preference for `prefer`.
-    #[deprecated(note = "build a coordinator::planner::PlanRequest and call Planner::plan")]
-    pub fn decide_capped_preferring(
-        &self,
-        cfg: &ExperimentConfig,
-        k_cap: usize,
-        prefer: Option<usize>,
-    ) -> Result<OptimizerDecision> {
-        self.fit_decision(cfg, k_cap, prefer)
-    }
-
-    /// Probe, fit, decide under an availability cap.
-    #[deprecated(note = "build a coordinator::planner::PlanRequest and call Planner::plan")]
-    pub fn decide_capped(&self, cfg: &ExperimentConfig, k_cap: usize) -> Result<OptimizerDecision> {
-        self.fit_decision(cfg, k_cap, None)
-    }
-
     /// Probe, fit, decide — the engine behind the planner surface
-    /// (`coordinator::planner::FixedModePlanner`; the retired `decide_*`
-    /// wrappers delegate here too).
+    /// (`coordinator::planner::FixedModePlanner`). This is the whole
+    /// public surface now: the one-release `decide_*` compatibility
+    /// wrappers are gone; callers build a
+    /// `coordinator::planner::PlanRequest` and go through
+    /// `Planner::plan` (or call this directly for a raw probe-fit).
     ///
     /// `k_cap` is the availability cap: `k` never exceeds it, so an
     /// online decision for a half-busy device only considers splits
@@ -214,7 +193,6 @@ impl OnlineOptimizer {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the deprecated wrappers are themselves under test
 mod tests {
     use super::*;
     use crate::device::DeviceSpec;
@@ -224,7 +202,7 @@ mod tests {
         // Paper: TX2 best energy at 4 containers, degrading beyond.
         let cfg = ExperimentConfig::default();
         let opt = OnlineOptimizer { objective: OptimizeObjective::Energy, ..Default::default() };
-        let d = opt.decide(&cfg).unwrap();
+        let d = opt.fit_decision(&cfg, usize::MAX, None).unwrap();
         assert!(
             (3..=5).contains(&d.best_k),
             "best_k={} probes={:?} model={}",
@@ -240,7 +218,7 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.device = DeviceSpec::orin();
         let opt = OnlineOptimizer { objective: OptimizeObjective::Time, ..Default::default() };
-        let d = opt.decide(&cfg).unwrap();
+        let d = opt.fit_decision(&cfg, usize::MAX, None).unwrap();
         assert!(d.best_k >= 8, "best_k={} model={}", d.best_k, d.model.describe());
     }
 
@@ -248,10 +226,10 @@ mod tests {
     fn weighted_objective_between_extremes() {
         let cfg = ExperimentConfig::default();
         let t = OnlineOptimizer { objective: OptimizeObjective::Weighted(1.0), ..Default::default() }
-            .decide(&cfg)
+            .fit_decision(&cfg, usize::MAX, None)
             .unwrap();
         let e = OnlineOptimizer { objective: OptimizeObjective::Weighted(0.0), ..Default::default() }
-            .decide(&cfg)
+            .fit_decision(&cfg, usize::MAX, None)
             .unwrap();
         // both must be feasible and within the TX2 cap
         for d in [&t, &e] {
@@ -262,7 +240,7 @@ mod tests {
     #[test]
     fn respects_memory_cap() {
         let cfg = ExperimentConfig::default(); // TX2: cap 6
-        let d = OnlineOptimizer::default().decide(&cfg).unwrap();
+        let d = OnlineOptimizer::default().fit_decision(&cfg, usize::MAX, None).unwrap();
         assert!(d.best_k <= 6);
     }
 
@@ -273,16 +251,16 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.device = DeviceSpec::orin();
         let opt = OnlineOptimizer::default();
-        let capped = opt.decide_capped(&cfg, 4).unwrap();
+        let capped = opt.fit_decision(&cfg, 4, None).unwrap();
         assert!(capped.best_k <= 4, "best_k={}", capped.best_k);
-        let free = opt.decide_capped(&cfg, usize::MAX).unwrap();
+        let free = opt.fit_decision(&cfg, usize::MAX, None).unwrap();
         assert!(free.best_k >= capped.best_k);
     }
 
     #[test]
     fn tiny_cap_degrades_to_best_probe() {
         let cfg = ExperimentConfig::default();
-        let d = OnlineOptimizer::default().decide_capped(&cfg, 2).unwrap();
+        let d = OnlineOptimizer::default().fit_decision(&cfg, 2, None).unwrap();
         assert!(d.best_k <= 2 && d.best_k >= 1);
         assert!(d.probes.len() <= 2);
     }
@@ -295,15 +273,15 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.device = DeviceSpec::orin();
         let opt = OnlineOptimizer::default();
-        let free = opt.decide_capped(&cfg, usize::MAX).unwrap();
+        let free = opt.fit_decision(&cfg, usize::MAX, None).unwrap();
         let near = free.best_k.saturating_sub(1).max(1);
-        let sticky = opt.decide_capped_preferring(&cfg, usize::MAX, Some(near)).unwrap();
+        let sticky = opt.fit_decision(&cfg, usize::MAX, Some(near)).unwrap();
         assert_eq!(sticky.best_k, near, "near-optimal current k must stick");
         // A clearly bad current k (k=1 on the Orin) must NOT stick.
-        let moved = opt.decide_capped_preferring(&cfg, usize::MAX, Some(1)).unwrap();
+        let moved = opt.fit_decision(&cfg, usize::MAX, Some(1)).unwrap();
         assert!(moved.best_k > 1, "k=1 stuck despite large model delta");
         // The preference never escapes the availability cap.
-        let capped = opt.decide_capped_preferring(&cfg, 4, Some(10)).unwrap();
+        let capped = opt.fit_decision(&cfg, 4, Some(10)).unwrap();
         assert!(capped.best_k <= 4);
     }
 
@@ -314,7 +292,7 @@ mod tests {
             probe_ks: Some(vec![1, 2, 3, 4, 5, 6]),
             ..Default::default()
         };
-        let d = opt.decide(&cfg).unwrap();
+        let d = opt.fit_decision(&cfg, usize::MAX, None).unwrap();
         assert_eq!(d.probes.len(), 6);
         assert!((1..=6).contains(&d.best_k));
     }

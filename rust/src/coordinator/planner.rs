@@ -166,7 +166,7 @@ pub trait Planner: std::fmt::Debug {
 
     /// The raw k of a wrapped `SplitPolicy::Fixed`, when this planner
     /// has one AND applies it without planning. Only the fixed-mode
-    /// planner returns `Some`: the deprecated whole-device `decide_k`
+    /// planner returns `Some`: the retired whole-device `decide_k`
     /// preserved an uncapped fast path for that policy, and
     /// `Coordinator::submit` keeps it for parity. Joint planners always
     /// plan (the mode search needs the full request).

@@ -88,52 +88,10 @@ impl Coordinator {
         self.planner.name()
     }
 
-    /// Decide the container count for a job on an idle device.
-    #[deprecated(note = "build a PlanRequest and call Coordinator::plan")]
-    pub fn decide_k(&mut self, job: &InferenceJob) -> Result<usize> {
-        // Historical quirk, preserved: the whole-device fixed-k path
-        // returned the policy's k uncapped (run-time memory checks
-        // reject overcommitted runs instead).
-        if let Some(k) = self.fixed_policy_k() {
-            return Ok(k);
-        }
-        let req = self.request_for(job);
-        Ok(self.plan(&req)?.k)
-    }
-
-    /// Decide k under an availability cap — the serving engine's old
-    /// admission surface.
-    #[deprecated(note = "build a PlanRequest and call Coordinator::plan")]
-    pub fn decide_k_constrained(
-        &mut self,
-        job: &InferenceJob,
-        avail_cores: f64,
-        avail_mem_mib: f64,
-    ) -> Result<usize> {
-        let req = self.request_for(job).with_grant(avail_cores, avail_mem_mib);
-        Ok(self.plan(&req)?.k)
-    }
-
-    /// Re-decide k for a job already running with `current_k`
-    /// containers — the old elastic regrant surface.
-    #[deprecated(note = "build a PlanRequest and call Coordinator::plan")]
-    pub fn decide_k_regrant(
-        &mut self,
-        job: &InferenceJob,
-        avail_cores: f64,
-        avail_mem_mib: f64,
-        current_k: usize,
-    ) -> Result<usize> {
-        let req = self
-            .request_for(job)
-            .with_grant(avail_cores, avail_mem_mib)
-            .preferring(current_k);
-        Ok(self.plan(&req)?.k)
-    }
-
     /// The wrapped policy's fixed k, when the planner is the fixed-mode
-    /// planner over `SplitPolicy::Fixed` (legacy `decide_k` fast path;
-    /// a joint planner always plans).
+    /// planner over `SplitPolicy::Fixed` (the retired `decide_k`'s
+    /// uncapped fast path, kept by [`Self::submit`]; a joint planner
+    /// always plans).
     fn fixed_policy_k(&self) -> Option<usize> {
         self.planner.fixed_policy_k()
     }
@@ -327,29 +285,18 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_agree_with_the_plan_surface() {
-        // The one-release compatibility shims must return exactly what
-        // a PlanRequest-built plan returns — and decide_k must keep its
-        // historical uncapped fixed-k fast path.
-        let mut c = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
-        let j = job(1, 96);
-        let mem = c.base.device.memory.available_mib();
-        assert_eq!(c.decide_k(&j).unwrap(), 4);
-        assert_eq!(c.decide_k_constrained(&j, 2.0, mem).unwrap(), 2);
-        assert_eq!(c.decide_k_regrant(&j, 2.0, mem, 4).unwrap(), 2);
-        // The uncapped fast path: a fixed k beyond the memory cap is
-        // returned as-is by decide_k (run-time checks reject it later).
+    fn submit_keeps_the_uncapped_fixed_k_fast_path() {
+        // The retired `decide_k` wrapper returned a fixed policy's k
+        // uncapped, leaving run-time memory checks to reject
+        // overcommitted runs — submit() preserves that quirk: a k=9 TX2
+        // job launches 9 containers and fails in the container layer,
+        // not in the planner.
         let mut over = Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(9));
-        assert_eq!(over.decide_k(&job(2, 720)).unwrap(), 9);
-        // Online policy: wrapper == plan surface, cache shared.
-        let mut o = Coordinator::new(
-            ExperimentConfig::default(),
-            SplitPolicy::Online(OnlineOptimizer::default()),
-        );
-        let via_wrapper = o.decide_k_constrained(&j, 4.0, mem).unwrap();
-        let via_plan = plan_k(&mut o, &j, 4.0, mem);
-        assert_eq!(via_wrapper, via_plan);
-        assert_eq!(o.decisions().len(), 1, "wrapper and plan share one cache entry");
+        let err = over.submit(job(2, 720)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceed"), "{err:#}");
+        // The plan surface, by contrast, caps to the memory grant.
+        let j = job(3, 720);
+        let req = over.request_for(&j);
+        assert!(over.plan(&req).unwrap().k <= 6);
     }
 }

@@ -95,6 +95,46 @@ pub fn push_span(spans: &mut Vec<TraceSegment>, span: TraceSegment) {
     spans.push(span);
 }
 
+/// Aggregate possibly-overlapping per-worker busy windows (each ~one
+/// busy core: a REAL worker's engine call) into a complete
+/// piecewise-constant device timeline over `[0, horizon_s]`.
+///
+/// Unlike a bare span list, the result includes explicit zero-busy
+/// spans for the gaps — the throttle sleeps between a worker's batches
+/// — so [`meter_spans`] over it pays the device's idle draw once across
+/// the whole busy period (the window the device is actually on),
+/// instead of once per worker or not at all. Windows are clamped to the
+/// horizon; empty and inverted windows are dropped.
+pub fn overlay_windows(windows: &[(f64, f64)], horizon_s: f64) -> Vec<TraceSegment> {
+    let mut events: Vec<(f64, f64)> = Vec::new();
+    for &(a, b) in windows {
+        let a = a.clamp(0.0, horizon_s);
+        let b = b.clamp(0.0, horizon_s);
+        if b > a {
+            events.push((a, 1.0));
+            events.push((b, -1.0));
+        }
+    }
+    events.sort_by(|x, y| x.partial_cmp(y).unwrap_or(std::cmp::Ordering::Equal));
+    let mut spans = Vec::new();
+    let mut level = 0.0f64;
+    let mut t = 0.0;
+    for (te, delta) in events {
+        if te > t {
+            push_span(&mut spans, TraceSegment { t0_s: t, t1_s: te, busy_cores: level.max(0.0) });
+            t = te;
+        }
+        level += delta;
+    }
+    if horizon_s > t {
+        push_span(
+            &mut spans,
+            TraceSegment { t0_s: t, t1_s: horizon_s, busy_cores: level.max(0.0) },
+        );
+    }
+    spans
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +241,42 @@ mod tests {
         let b = meter_spans(&spec, &plain);
         assert!((a.energy_j - b.energy_j).abs() < 1e-9);
         assert!((a.time_s - b.time_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlay_windows_counts_overlap_and_gaps() {
+        let spec = DeviceSpec::tx2();
+        // Two workers: [0,2] and [1,3]; gap [3,4]; horizon 4.
+        let spans = overlay_windows(&[(0.0, 2.0), (1.0, 3.0)], 4.0);
+        let at = |t: f64| -> f64 {
+            spans
+                .iter()
+                .find(|s| s.t0_s <= t && t < s.t1_s)
+                .map(|s| s.busy_cores)
+                .unwrap_or(-1.0)
+        };
+        assert_eq!(at(0.5), 1.0);
+        assert_eq!(at(1.5), 2.0);
+        assert_eq!(at(2.5), 1.0);
+        assert_eq!(at(3.5), 0.0, "gap must be an explicit idle span");
+        // Complete cover: total span time equals the horizon, so
+        // metering pays idle across the whole busy period once.
+        let total: f64 = spans.iter().map(|s| s.t1_s - s.t0_s).sum();
+        assert!((total - 4.0).abs() < 1e-12);
+        let rep = meter_spans(&spec, &spans);
+        let want = spec.power.power(1.0) * 2.0
+            + spec.power.power(2.0)
+            + spec.power.power(0.0);
+        assert!((rep.energy_j - want).abs() < 1e-9, "{} vs {want}", rep.energy_j);
+    }
+
+    #[test]
+    fn overlay_windows_clamps_and_drops_degenerates() {
+        let spans = overlay_windows(&[(-1.0, 0.5), (2.0, 2.0), (3.0, 1.0)], 2.0);
+        let total: f64 = spans.iter().map(|s| s.t1_s - s.t0_s).sum();
+        assert!((total - 2.0).abs() < 1e-12);
+        assert!(spans.iter().all(|s| s.busy_cores >= 0.0));
+        assert!(overlay_windows(&[], 0.0).is_empty());
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod battery;
 pub mod meter;
 
 pub use battery::Battery;
-pub use meter::{meter_schedule, meter_spans, push_span, EnergyReport};
+pub use meter::{meter_schedule, meter_spans, overlay_windows, push_span, EnergyReport};

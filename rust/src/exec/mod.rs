@@ -1,0 +1,255 @@
+//! Execution backends: one session API for SIM and REAL.
+//!
+//! The paper's method runs a job as `k` long-lived containers sharing a
+//! device. Before this module, the two ways of executing that topology
+//! — the calibrated discrete-event model (SIM, the paper-figure path)
+//! and actual PJRT inference on CFS-throttled threads (REAL) — were two
+//! parallel monoliths (`coordinator::executor::{run_sim, run_real}`),
+//! each a one-shot function with no way to touch a job once launched.
+//!
+//! This module redesigns that layer around **sessions**: an
+//! [`ExecutionBackend`] opens a [`Session`] that owns the `k` workers
+//! for a job's whole lifetime and accepts the operations a live
+//! deployment actually performs —
+//!
+//! * [`Session::resize`] — rewrite one worker's `--cpus` share. REAL
+//!   rewrites the live [`crate::container::cfs::ThrottleClock`] token
+//!   bucket in place (modeling `docker update --cpus`); SIM rewrites
+//!   the worker's CFS share in the calibrated model.
+//! * [`Session::reassign`] / [`Session::shed`] — move frames between
+//!   workers mid-job, so stragglers hand work to siblings instead of
+//!   forcing a container restart (uneven re-split via
+//!   [`crate::workload::split_weighted`]).
+//! * [`Session::set_mode`] — switch the device power mode; energy is
+//!   billed per mode interval.
+//! * [`Session::drain`] — finish the remaining work and report the
+//!   paper's three metrics plus per-worker outcomes.
+//!
+//! The old `run_sim` / `run_real` / `run` entry points survive as thin
+//! wrappers over a one-job session ([`run_session`]), and the serving
+//! engine ([`crate::server::engine::ServingEngine::with_backend`])
+//! drives the same session surface from its admission / shrink / absorb
+//! / planner path — which is what lets `serve --mode real` run
+//! concurrent jobs with mid-job regrants through the exact machinery
+//! the SIM experiments validate.
+//!
+//! **Parity contract.** A SIM session that is started and drained with
+//! no intervening perturbation reproduces the retired `run_sim`
+//! bit-for-bit (same container pool, same DES schedule, same sampled
+//! sensor). A perturbed SIM session switches to the exact
+//! piecewise-constant integrator (the closed forms the elastic serving
+//! engine schedules by), so a no-op resize preserves the completion
+//! time to floating-point accuracy. REAL sessions measure wall clock
+//! and bill energy from per-worker busy windows overlaid into one
+//! device timeline ([`crate::energy::overlay_windows`] +
+//! [`crate::energy::meter_spans`]): idle is paid once per device busy
+//! period, mode-aware — not `avg_power x makespan` per worker.
+
+pub mod real;
+pub mod sim;
+
+pub use real::{EngineKind, RealBackend, StubEngineSpec};
+pub use sim::SimBackend;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::detect::Detection;
+use crate::device::dvfs::PowerMode;
+use crate::device::DeviceSpec;
+use crate::workload::{split_even, Segment, TaskProfile};
+
+/// Everything a backend needs to open one session: the effective device
+/// model, the task, the per-worker frame segments and the initial
+/// `--cpus` share each worker starts with.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    /// Effective device spec (startup override applied, current power
+    /// mode). Backends derive further mode switches from this base.
+    pub device: DeviceSpec,
+    pub task: TaskProfile,
+    /// One segment per worker (`k = segments.len()`).
+    pub segments: Vec<Segment>,
+    /// Initial `--cpus` share of every worker.
+    pub cpus_each: f64,
+    /// RNG seed for synthetic frames (REAL mode).
+    pub seed: u64,
+    /// Power-sensor sampling period for pristine SIM metering.
+    pub sensor_period_s: f64,
+    /// Model variant label (REAL: the artifact to execute; SIM: the
+    /// container image label).
+    pub variant: String,
+}
+
+impl SessionSpec {
+    /// The spec for one whole-device experiment run — the topology
+    /// `run_sim` / `run_real` always used: `cfg.containers` workers,
+    /// `cores / k` cpus each, frames split evenly.
+    pub fn from_config(cfg: &ExperimentConfig) -> SessionSpec {
+        let device = cfg.effective_device();
+        let frames = cfg.video.frame_count();
+        let k = cfg.containers;
+        // k == 0 is rejected by the backend (empty segment list -> the
+        // container layer's ZeroContainers error), matching the old
+        // executors' behavior instead of panicking here.
+        let segments = if k == 0 { Vec::new() } else { split_even(frames, k) };
+        let cpus_each = if k == 0 { device.cores } else { device.cores / k as f64 };
+        SessionSpec {
+            segments,
+            cpus_each,
+            task: cfg.task.clone(),
+            seed: cfg.seed,
+            sensor_period_s: cfg.sensor_period_s,
+            variant: cfg.variant.clone(),
+            device,
+        }
+    }
+
+    /// Worker count (`k`).
+    pub fn workers(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Total frames across all segments.
+    pub fn frames(&self) -> usize {
+        self.segments.iter().map(|s| s.len).sum()
+    }
+}
+
+/// One worker's end-of-session record.
+#[derive(Debug, Clone)]
+pub struct WorkerOutcome {
+    /// The worker's *initial* segment assignment (sheds and reassigns
+    /// move frames between workers afterwards; `frames_done` is the
+    /// count actually processed).
+    pub segment: Segment,
+    /// Frames this worker actually processed.
+    pub frames_done: usize,
+    /// Session-relative finish time, seconds.
+    pub finish_s: f64,
+    /// The `--cpus` budget in force at drain (the CFS quota after any
+    /// resizes).
+    pub cpus: f64,
+    /// Busy core-seconds this worker consumed (REAL: measured engine
+    /// time; SIM: modeled).
+    pub busy_s: f64,
+    pub detections: Vec<Detection>,
+}
+
+/// What a drained session reports: the paper's three metrics plus the
+/// per-worker outcomes and the session's perturbation history.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    pub device: String,
+    pub workers: usize,
+    /// Frames actually processed across all workers.
+    pub frames: usize,
+    /// Session duration: SIM counts modeled container startup, REAL
+    /// counts wall clock from `start()` (engine loading happens before
+    /// the session clock starts, as container startup did in the paper's
+    /// metering).
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    pub worker_outcomes: Vec<WorkerOutcome>,
+    pub total_detections: usize,
+    /// `resize` calls applied over the session's lifetime.
+    pub resizes: usize,
+    /// `reassign` + `shed` calls applied.
+    pub reassigns: usize,
+    /// `set_mode` calls applied.
+    pub mode_switches: usize,
+}
+
+/// One job's live execution: `k` long-lived workers under a shared
+/// device, mutable mid-flight. Timestamps (`now_s`) are the caller's
+/// clock — virtual seconds for SIM sessions driven by a discrete-event
+/// engine, ignored by REAL sessions (which live on the wall clock).
+pub trait Session {
+    /// Worker count (`k`).
+    fn workers(&self) -> usize;
+
+    /// Worker `worker`'s current `--cpus` budget.
+    fn worker_cpus(&self, worker: usize) -> f64;
+
+    /// Observed per-worker throughput, frames/s — the shed weights.
+    /// SIM workers are deterministic, so the observed rate IS the
+    /// modeled rate at the current share; REAL rates are measured.
+    fn worker_rates(&self, now_s: f64) -> Vec<f64>;
+
+    /// Begin the measured window (workers start processing). Idempotent
+    /// setup errors aside, must be called at most once; `drain` starts
+    /// the session implicitly if the caller never did.
+    fn start(&mut self, now_s: f64) -> Result<()>;
+
+    /// Rewrite worker `worker`'s `--cpus` share at `now_s` — a live
+    /// CFS-quota rewrite (`docker update --cpus`), never a restart.
+    fn resize(&mut self, worker: usize, cpus: f64, now_s: f64) -> Result<()>;
+
+    /// Replace the workers' remaining frame assignments. With
+    /// `segments.len() == workers()` this is a pure re-assignment of
+    /// pending frames (no restart); SIM sessions additionally accept a
+    /// different worker count, modeling a container restart (the full
+    /// startup cost is charged again).
+    fn reassign(&mut self, segments: Vec<Segment>, now_s: f64) -> Result<()>;
+
+    /// Re-split the remaining frames across the live workers weighted
+    /// by their observed throughput ([`crate::workload::split_weighted`])
+    /// — stragglers shed frames to siblings instead of forcing a
+    /// restart. Returns the number of frames that moved.
+    fn shed(&mut self, now_s: f64) -> Result<usize>;
+
+    /// Switch the device's power mode at `now_s`. Affects worker speed
+    /// (SIM) and the power model the elapsed/remaining spans are billed
+    /// with (both). The caller owns the policy of when a device is
+    /// private enough to reconfigure.
+    fn set_mode(&mut self, mode: &PowerMode, now_s: f64) -> Result<()>;
+
+    /// Run the remaining work to completion and report. REAL sessions
+    /// block until the workers actually finish.
+    fn drain(&mut self) -> Result<SessionReport>;
+}
+
+/// A factory of sessions — the one surface `run_sim`-style one-shot
+/// wrappers and the serving engine both execute through.
+pub trait ExecutionBackend {
+    fn open_session(&mut self, spec: &SessionSpec) -> Result<Box<dyn Session>>;
+
+    /// Short name for logs / CLI summaries.
+    fn name(&self) -> &'static str;
+}
+
+/// One-shot convenience: open, start at t=0, drain — the session form
+/// of the retired `run_sim` / `run_real` monoliths.
+pub fn run_session(
+    backend: &mut dyn ExecutionBackend,
+    spec: &SessionSpec,
+) -> Result<SessionReport> {
+    let mut session = backend.open_session(spec)?;
+    session.start(0.0)?;
+    session.drain()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_from_config_matches_the_paper_topology() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.containers = 4;
+        let spec = SessionSpec::from_config(&cfg);
+        assert_eq!(spec.workers(), 4);
+        assert_eq!(spec.frames(), 720);
+        assert!((spec.cpus_each - 1.0).abs() < 1e-12, "TX2: 4 cores / 4");
+        assert_eq!(spec.segments[1].start_frame, 180);
+    }
+
+    #[test]
+    fn spec_zero_containers_is_expressible_not_a_panic() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.containers = 0;
+        let spec = SessionSpec::from_config(&cfg);
+        assert_eq!(spec.workers(), 0);
+    }
+}

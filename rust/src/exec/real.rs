@@ -1,0 +1,752 @@
+//! REAL execution backend: long-lived, CFS-throttled worker threads
+//! behind the session API.
+//!
+//! Each worker mirrors one container: its own engine (an isolated PJRT
+//! runtime, or a deterministic stub for CI), its own
+//! [`ThrottleClock`] token bucket enforcing its `--cpus` share, and a
+//! work queue of frame ranges it claims batch by batch. Because the
+//! throttle and the queue live in shared state, the session can rewrite
+//! a live worker's CFS budget ([`Session::resize`] — `docker update
+//! --cpus`, applied synchronously) and move pending frames between
+//! workers ([`Session::shed`], [`Session::reassign`]) while inference
+//! is running.
+//!
+//! Energy: every engine call is recorded as a busy window (~one core);
+//! at drain the per-worker windows are overlaid into one device
+//! timeline ([`crate::energy::overlay_windows`]) and billed through
+//! [`crate::energy::meter_spans`] with the power mode in force over
+//! each interval — idle is paid once per device busy period (throttle
+//! sleeps included), not `avg_power x makespan` per worker, which is
+//! what the retired `run_real` approximated.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::{ExecutionBackend, Session, SessionReport, SessionSpec, WorkerOutcome};
+use crate::container::cfs::{CfsBandwidth, ThrottleClock};
+use crate::detect::{decode_output, nms, Detection, NmsParams};
+use crate::device::dvfs::PowerMode;
+use crate::device::DeviceSpec;
+use crate::energy::{meter_spans, overlay_windows};
+use crate::runtime::{Engine, Manifest};
+use crate::sched::TraceSegment;
+use crate::workload::{split_weighted, FrameGenerator, Segment};
+
+/// What a REAL worker executes per batch.
+#[derive(Debug, Clone)]
+pub enum EngineKind {
+    /// Real PJRT engines compiled from the AOT artifacts.
+    Pjrt,
+    /// Deterministic stub: no artifacts, fixed per-batch cost — lets
+    /// the full REAL path (threads, token buckets, resizes, metering)
+    /// run in CI.
+    Stub(StubEngineSpec),
+}
+
+/// Stub engine shape: `batch` frames per call, each call costing
+/// `latency_s` of busy wall time (the worker sleeps it off, then pays
+/// the CFS debt like a real call would).
+#[derive(Debug, Clone, Copy)]
+pub struct StubEngineSpec {
+    pub batch: usize,
+    pub latency_s: f64,
+}
+
+impl Default for StubEngineSpec {
+    fn default() -> Self {
+        StubEngineSpec { batch: 4, latency_s: 0.002 }
+    }
+}
+
+/// Factory for REAL sessions. Carries the artifact location and engine
+/// kind so `SessionSpec` stays mode-agnostic.
+#[derive(Debug, Clone)]
+pub struct RealBackend {
+    pub artifacts_dir: String,
+    pub variant: String,
+    pub kind: EngineKind,
+}
+
+impl RealBackend {
+    pub fn pjrt(artifacts_dir: &str, variant: &str) -> RealBackend {
+        RealBackend {
+            artifacts_dir: artifacts_dir.to_string(),
+            variant: variant.to_string(),
+            kind: EngineKind::Pjrt,
+        }
+    }
+
+    pub fn stub(spec: StubEngineSpec) -> RealBackend {
+        RealBackend {
+            artifacts_dir: String::new(),
+            variant: "stub".to_string(),
+            kind: EngineKind::Stub(spec),
+        }
+    }
+}
+
+impl ExecutionBackend for RealBackend {
+    fn open_session(&mut self, spec: &SessionSpec) -> Result<Box<dyn Session>> {
+        Ok(Box::new(RealSession::open(self, spec)?))
+    }
+
+    fn name(&self) -> &'static str {
+        "real"
+    }
+}
+
+/// Everything the session and one worker thread both touch. One mutex
+/// per worker: the worker holds it only for claim/accounting instants,
+/// the session holds it to rewrite budgets and queues.
+#[derive(Debug)]
+struct WorkerShared {
+    /// `--cpus` budget in force (mirrors `throttle.cpus()`).
+    cpus: f64,
+    throttle: ThrottleClock,
+    /// Pending frame ranges, claimed batch by batch.
+    queue: VecDeque<Segment>,
+    frames_done: usize,
+    /// Measured busy seconds (engine-call time).
+    busy_s: f64,
+    /// Engine-call windows, seconds since the session epoch.
+    spans: Vec<(f64, f64)>,
+    detections: Vec<Detection>,
+    done: bool,
+    finished_at_s: f64,
+    error: Option<String>,
+}
+
+fn lock(shared: &Mutex<WorkerShared>) -> MutexGuard<'_, WorkerShared> {
+    shared.lock().unwrap_or_else(|poison| poison.into_inner())
+}
+
+/// Start gate: workers load their engines (container startup, outside
+/// the measured window), then block here until the session starts.
+#[derive(Debug)]
+struct StartGate {
+    state: Mutex<Option<Instant>>,
+    cv: Condvar,
+}
+
+impl StartGate {
+    fn arc() -> Arc<StartGate> {
+        Arc::new(StartGate { state: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    /// Open the gate (idempotent); returns the epoch.
+    fn release(&self) -> Instant {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let epoch = st.get_or_insert_with(Instant::now);
+        let epoch = *epoch;
+        self.cv.notify_all();
+        epoch
+    }
+
+    fn wait(&self) -> Instant {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(epoch) = *st {
+                return epoch;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// A worker's real PJRT runtime: isolated client + executable, plus
+/// the decode pipeline state.
+struct PjrtWorker {
+    engine: Engine,
+    gen: FrameGenerator,
+    nattr: usize,
+    is_yolo: bool,
+    params: NmsParams,
+}
+
+/// One worker's executable: a real PJRT engine or the stub.
+enum WorkerEngine {
+    Pjrt(Box<PjrtWorker>),
+    Stub(StubEngineSpec),
+}
+
+impl WorkerEngine {
+    fn batch(&self) -> usize {
+        match self {
+            WorkerEngine::Pjrt(p) => p.engine.batch(),
+            WorkerEngine::Stub(s) => s.batch.max(1),
+        }
+    }
+
+    /// Run frames `[start, start + n)`; returns (busy seconds,
+    /// detections).
+    fn run_batch(&self, start: usize, n: usize) -> Result<(f64, Vec<Detection>)> {
+        match self {
+            WorkerEngine::Stub(s) => {
+                if s.latency_s > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(s.latency_s));
+                }
+                Ok((s.latency_s, Vec::new()))
+            }
+            WorkerEngine::Pjrt(p) => {
+                let buf = p.gen.batch(start, n);
+                let (padded, real) = p.engine.pad_batch(&buf);
+                let out = p.engine.run(&padded)?;
+                let mut dets = Vec::new();
+                if p.is_yolo {
+                    for (oi, buffer) in out.buffers.iter().enumerate() {
+                        let per_frame_len = p.engine.output_frame_elems(oi);
+                        for b in 0..real {
+                            let sl = &buffer[b * per_frame_len..(b + 1) * per_frame_len];
+                            let cands =
+                                decode_output(sl, p.nattr, start + b, p.params.score_threshold);
+                            dets.extend(nms(cands, &p.params));
+                        }
+                    }
+                }
+                Ok((out.latency_s, dets))
+            }
+        }
+    }
+}
+
+fn worker_main(
+    shared: Arc<Mutex<WorkerShared>>,
+    gate: Arc<StartGate>,
+    barrier: Arc<Barrier>,
+    kind: EngineKind,
+    artifacts_dir: String,
+    variant: String,
+    seed: u64,
+) {
+    // Container-isolated runtime: own client + executable, loaded
+    // BEFORE the barrier so compile time counts as container startup,
+    // not inference — but always reach the barrier, even on failure, or
+    // open_session would deadlock.
+    let engine: Result<WorkerEngine> = match kind {
+        EngineKind::Stub(s) => Ok(WorkerEngine::Stub(s)),
+        EngineKind::Pjrt => (|| {
+            let manifest = Manifest::load(&artifacts_dir)?;
+            let engine = Engine::load(&manifest, &variant)?;
+            let info = engine.info.clone();
+            let gen = FrameGenerator::new(
+                info.input_shape[1],
+                info.input_shape[2],
+                info.input_shape[3],
+                seed,
+            );
+            Ok(WorkerEngine::Pjrt(Box::new(PjrtWorker {
+                gen,
+                nattr: info.nattr.max(6),
+                is_yolo: info.model == "yolo_tiny",
+                params: NmsParams::default(),
+                engine,
+            })))
+        })(),
+    };
+    barrier.wait(); // "container started"
+    let engine = match engine {
+        Ok(e) => e,
+        Err(e) => {
+            let mut s = lock(&shared);
+            s.error = Some(format!("{e:#}"));
+            s.done = true;
+            return;
+        }
+    };
+    let epoch = gate.wait(); // measured window opens here
+    {
+        // The budget window opens when work begins, not when the
+        // session was created: rebase the token bucket so idle time
+        // before start() earns no headroom.
+        let mut s = lock(&shared);
+        let cpus = s.cpus;
+        s.throttle.set_cpus(cpus);
+    }
+    let batch = engine.batch();
+    loop {
+        // Claim the next chunk (and, atomically with an empty claim,
+        // retire the worker — a shed can never strand frames on a
+        // worker that just decided to exit).
+        let claim = {
+            let mut s = lock(&shared);
+            let mut got: Option<(usize, usize)> = None;
+            while got.is_none() {
+                let Some(head) = s.queue.front().copied() else { break };
+                if head.len == 0 {
+                    s.queue.pop_front();
+                    continue;
+                }
+                let n = batch.min(head.len);
+                got = Some((head.start_frame, n));
+                let h = s.queue.front_mut().expect("head vanished under the lock");
+                h.start_frame += n;
+                h.len -= n;
+            }
+            if got.is_none() {
+                s.done = true;
+                s.finished_at_s = epoch.elapsed().as_secs_f64();
+            }
+            got
+        };
+        let Some((start, n)) = claim else { break };
+        let t0 = epoch.elapsed().as_secs_f64();
+        match engine.run_batch(start, n) {
+            Ok((busy_s, dets)) => {
+                let t1 = epoch.elapsed().as_secs_f64();
+                let debt = {
+                    let mut s = lock(&shared);
+                    s.spans.push((t0, t1));
+                    s.busy_s += busy_s;
+                    s.frames_done += n;
+                    s.detections.extend(dets);
+                    // Emulate --cpus: one engine call is ~1 core-busy
+                    // for busy_s; pay the CFS debt after each call.
+                    s.throttle.debt_before(busy_s)
+                };
+                if !debt.is_zero() {
+                    std::thread::sleep(debt);
+                }
+            }
+            Err(e) => {
+                let mut s = lock(&shared);
+                s.error = Some(format!("{e:#}"));
+                s.done = true;
+                s.finished_at_s = epoch.elapsed().as_secs_f64();
+                break;
+            }
+        }
+    }
+}
+
+/// One REAL job's live workers. `now_s` parameters are ignored — a REAL
+/// session lives on the wall clock.
+pub struct RealSession {
+    device: DeviceSpec,
+    segments: Vec<Segment>,
+    workers: Vec<Arc<Mutex<WorkerShared>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    gate: Arc<StartGate>,
+    started: bool,
+    epoch: Option<Instant>,
+    /// (epoch-relative time, mode) — applied to the energy model.
+    mode_history: Vec<(f64, PowerMode)>,
+    resizes: usize,
+    reassigns: usize,
+    drained: bool,
+}
+
+impl std::fmt::Debug for RealSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RealSession")
+            .field("workers", &self.workers.len())
+            .field("started", &self.started)
+            .finish()
+    }
+}
+
+impl RealSession {
+    fn open(backend: &RealBackend, spec: &SessionSpec) -> Result<RealSession> {
+        anyhow::ensure!(!spec.segments.is_empty(), "session with no workers");
+        anyhow::ensure!(spec.cpus_each > 0.0, "--cpus must be positive");
+        // Validate the variant exists before spawning workers.
+        if let EngineKind::Pjrt = backend.kind {
+            let manifest = Manifest::load(&backend.artifacts_dir).context("load manifest")?;
+            manifest.variant(&backend.variant)?;
+        }
+        let k = spec.segments.len();
+        let gate = StartGate::arc();
+        let barrier = Arc::new(Barrier::new(k + 1));
+        let mut workers = Vec::with_capacity(k);
+        let mut handles = Vec::with_capacity(k);
+        for seg in &spec.segments {
+            let shared = Arc::new(Mutex::new(WorkerShared {
+                cpus: spec.cpus_each,
+                throttle: ThrottleClock::new(CfsBandwidth::new(spec.cpus_each)),
+                queue: VecDeque::from([*seg]),
+                frames_done: 0,
+                busy_s: 0.0,
+                spans: Vec::new(),
+                detections: Vec::new(),
+                done: false,
+                finished_at_s: 0.0,
+                error: None,
+            }));
+            workers.push(shared.clone());
+            let gate = gate.clone();
+            let barrier = barrier.clone();
+            let kind = backend.kind.clone();
+            let artifacts_dir = backend.artifacts_dir.clone();
+            let variant = backend.variant.clone();
+            let seed = spec.seed;
+            handles.push(std::thread::spawn(move || {
+                worker_main(shared, gate, barrier, kind, artifacts_dir, variant, seed)
+            }));
+        }
+        barrier.wait(); // all engines loaded ("containers started")
+        Ok(RealSession {
+            device: spec.device.clone(),
+            segments: spec.segments.clone(),
+            workers,
+            handles,
+            gate,
+            started: false,
+            epoch: None,
+            mode_history: Vec::new(),
+            resizes: 0,
+            reassigns: 0,
+            drained: false,
+        })
+    }
+
+    /// Bill a device timeline with the power mode in force over each
+    /// interval (default mode until the first switch), through
+    /// `energy::meter_spans` per mode slice.
+    fn energy_by_mode(&self, timeline: &[TraceSegment]) -> f64 {
+        let mut specs: Vec<(f64, DeviceSpec)> = vec![(0.0, self.device.clone())];
+        for (t, m) in &self.mode_history {
+            specs.push((*t, m.apply(&self.device)));
+        }
+        let mut energy = 0.0;
+        for seg in timeline {
+            for (i, (t_from, dev)) in specs.iter().enumerate() {
+                let t_to = specs.get(i + 1).map(|x| x.0).unwrap_or(f64::INFINITY);
+                let a = seg.t0_s.max(*t_from);
+                let b = seg.t1_s.min(t_to);
+                if b > a {
+                    energy += meter_spans(
+                        dev,
+                        &[TraceSegment { t0_s: a, t1_s: b, busy_cores: seg.busy_cores }],
+                    )
+                    .energy_j;
+                }
+            }
+        }
+        energy
+    }
+}
+
+impl Session for RealSession {
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn worker_cpus(&self, worker: usize) -> f64 {
+        lock(&self.workers[worker]).cpus
+    }
+
+    fn worker_rates(&self, _now_s: f64) -> Vec<f64> {
+        let mut rates = Vec::with_capacity(self.workers.len());
+        let mut shares = Vec::with_capacity(self.workers.len());
+        let mut all_observed = true;
+        for w in &self.workers {
+            let g = lock(w);
+            shares.push(g.cpus.max(1e-6));
+            if g.frames_done == 0 || g.busy_s <= 1e-9 {
+                all_observed = false;
+                rates.push(0.0);
+            } else {
+                // The rate the worker can sustain from NOW on: its
+                // measured per-busy-second speed scaled by the duty
+                // cycle the current budget allows (one engine call
+                // keeps ~one core busy) — not the since-epoch average,
+                // which would keep ranking a freshly-throttled worker
+                // as fast and invert a shed's intent.
+                rates.push((g.frames_done as f64 / g.busy_s) * g.cpus.min(1.0));
+            }
+        }
+        // Measured frames/s and --cpus shares are different units:
+        // mixing them would let one observed sibling dwarf an
+        // unobserved one in a weighted split. Until EVERY worker has
+        // been observed, the shares are the (consistent) prior.
+        if all_observed {
+            rates
+        } else {
+            shares
+        }
+    }
+
+    fn start(&mut self, _now_s: f64) -> Result<()> {
+        anyhow::ensure!(!self.started, "session already started");
+        self.started = true;
+        self.epoch = Some(self.gate.release());
+        Ok(())
+    }
+
+    fn resize(&mut self, worker: usize, cpus: f64, _now_s: f64) -> Result<()> {
+        anyhow::ensure!(worker < self.workers.len(), "resize of unknown worker {worker}");
+        anyhow::ensure!(cpus > 0.0, "--cpus must be positive");
+        {
+            // Synchronous `docker update --cpus`: the live token bucket
+            // is rewritten in place; outstanding debt carries over.
+            let mut g = lock(&self.workers[worker]);
+            g.cpus = cpus;
+            g.throttle.set_cpus(cpus);
+        }
+        self.resizes += 1;
+        Ok(())
+    }
+
+    fn reassign(&mut self, segments: Vec<Segment>, _now_s: f64) -> Result<()> {
+        anyhow::ensure!(
+            segments.len() == self.workers.len(),
+            "REAL sessions keep k sticky: cannot go from {} to {} live containers \
+             (shed frames instead of restarting)",
+            self.workers.len(),
+            segments.len()
+        );
+        let mut guards: Vec<MutexGuard<'_, WorkerShared>> =
+            self.workers.iter().map(|w| lock(w)).collect();
+        for (i, (g, seg)) in guards.iter().zip(&segments).enumerate() {
+            anyhow::ensure!(
+                !(g.done && seg.len > 0),
+                "worker {i} already drained; its frames would be stranded"
+            );
+        }
+        for (g, seg) in guards.iter_mut().zip(&segments) {
+            g.queue.clear();
+            if seg.len > 0 {
+                g.queue.push_back(*seg);
+            }
+        }
+        drop(guards);
+        self.reassigns += 1;
+        Ok(())
+    }
+
+    fn shed(&mut self, _now_s: f64) -> Result<usize> {
+        if self.epoch.is_none() {
+            return Ok(0); // nothing observed yet: the initial split stands
+        }
+        let rates = self.worker_rates(0.0);
+        let mut guards: Vec<MutexGuard<'_, WorkerShared>> =
+            self.workers.iter().map(|w| lock(w)).collect();
+        let old_totals: Vec<usize> = guards
+            .iter()
+            .map(|g| g.queue.iter().map(|s| s.len).sum())
+            .collect();
+        let mut pending: Vec<Segment> = Vec::new();
+        for g in guards.iter() {
+            pending.extend(g.queue.iter().copied().filter(|s| s.len > 0));
+        }
+        let total: usize = pending.iter().map(|s| s.len).sum();
+        if total == 0 {
+            return Ok(0);
+        }
+        // Only live workers can take frames; a drained worker's thread
+        // has exited. (A worker holding pending frames is always live:
+        // retiring and claiming share one lock.)
+        let live: Vec<usize> = guards
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| !g.done)
+            .map(|(i, _)| i)
+            .collect();
+        if live.is_empty() {
+            return Ok(0);
+        }
+        let weights: Vec<f64> = live.iter().map(|&i| rates[i].max(1e-9)).collect();
+        let split = split_weighted(total, &weights);
+        for g in guards.iter_mut() {
+            g.queue.clear();
+        }
+        // Carve the pending ranges, in order, into one weighted chunk
+        // per live worker.
+        let mut ranges = pending.into_iter();
+        let mut current = ranges.next();
+        for (slot, want_seg) in live.iter().zip(&split) {
+            let mut want = want_seg.len;
+            while want > 0 {
+                let Some(mut r) = current.take() else { break };
+                if r.len == 0 {
+                    current = ranges.next();
+                    continue;
+                }
+                let take = want.min(r.len);
+                guards[*slot].queue.push_back(Segment {
+                    index: r.index,
+                    start_frame: r.start_frame,
+                    len: take,
+                });
+                r.start_frame += take;
+                r.len -= take;
+                want -= take;
+                current = if r.len > 0 { Some(r) } else { ranges.next() };
+            }
+        }
+        let mut moved = 0i64;
+        for (g, old) in guards.iter().zip(&old_totals) {
+            let new_total: usize = g.queue.iter().map(|s| s.len).sum();
+            moved += (new_total as i64 - *old as i64).abs();
+        }
+        drop(guards);
+        self.reassigns += 1;
+        Ok((moved / 2) as usize)
+    }
+
+    fn set_mode(&mut self, mode: &PowerMode, _now_s: f64) -> Result<()> {
+        // The host has no nvpmodel to flip; the switch applies to the
+        // power model the session bills with (run_real always modeled
+        // power) and is stamped on the timeline for per-mode billing.
+        let t = self.epoch.map(|e| e.elapsed().as_secs_f64()).unwrap_or(0.0);
+        self.mode_history.push((t, mode.clone()));
+        Ok(())
+    }
+
+    fn drain(&mut self) -> Result<SessionReport> {
+        anyhow::ensure!(!self.drained, "session already drained");
+        self.drained = true;
+        if !self.started {
+            self.start(0.0)?;
+        }
+        // Join EVERY worker before inspecting outcomes, then propagate
+        // the first failure — never leak running threads on error.
+        let mut first_err: Option<anyhow::Error> = None;
+        for h in self.handles.drain(..) {
+            if h.join().is_err() && first_err.is_none() {
+                first_err = Some(anyhow::anyhow!("worker panicked"));
+            }
+        }
+        let mut windows: Vec<(f64, f64)> = Vec::new();
+        let mut worker_outcomes = Vec::with_capacity(self.workers.len());
+        let mut frames = 0usize;
+        for (i, (shared, seg)) in self.workers.iter().zip(&self.segments).enumerate() {
+            let mut g = lock(shared);
+            if let Some(e) = &g.error {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("worker {i}: {e}"));
+                }
+            }
+            windows.extend(g.spans.iter().copied());
+            frames += g.frames_done;
+            worker_outcomes.push(WorkerOutcome {
+                segment: *seg,
+                frames_done: g.frames_done,
+                finish_s: g.finished_at_s,
+                cpus: g.cpus,
+                busy_s: g.busy_s,
+                detections: std::mem::take(&mut g.detections),
+            });
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let time_s = worker_outcomes.iter().map(|w| w.finish_s).fold(0.0, f64::max);
+        let timeline = overlay_windows(&windows, time_s);
+        let energy_j = self.energy_by_mode(&timeline);
+        let total_detections = worker_outcomes.iter().map(|w| w.detections.len()).sum();
+        Ok(SessionReport {
+            device: self.device.name.to_string(),
+            workers: self.workers.len(),
+            frames,
+            time_s,
+            energy_j,
+            avg_power_w: if time_s > 0.0 { energy_j / time_s } else { 0.0 },
+            worker_outcomes,
+            total_detections,
+            resizes: self.resizes,
+            reassigns: self.reassigns,
+            mode_switches: self.mode_history.len(),
+        })
+    }
+}
+
+impl Drop for RealSession {
+    fn drop(&mut self) {
+        if self.handles.is_empty() {
+            return; // drained (or never spawned): nothing to reap
+        }
+        // Abandoned session: cancel pending work, release the gate so
+        // waiting workers can exit, and join them.
+        for w in &self.workers {
+            lock(w).queue.clear();
+        }
+        self.gate.release();
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::exec::run_session;
+
+    fn stub_spec(k: usize, frames: usize) -> SessionSpec {
+        let mut cfg = ExperimentConfig::default();
+        cfg.containers = k;
+        cfg.video = crate::workload::Video::with_frames("stub", frames, 24.0);
+        SessionSpec::from_config(&cfg)
+    }
+
+    fn stub_backend() -> RealBackend {
+        RealBackend::stub(StubEngineSpec { batch: 4, latency_s: 0.002 })
+    }
+
+    #[test]
+    fn stub_session_processes_all_frames() {
+        let r = run_session(&mut stub_backend(), &stub_spec(2, 24)).unwrap();
+        assert_eq!(r.frames, 24);
+        assert_eq!(r.workers, 2);
+        assert!(r.time_s > 0.0);
+        assert!(r.energy_j > 0.0);
+        assert!(r.avg_power_w > 0.0);
+        assert_eq!(r.worker_outcomes.len(), 2);
+        assert_eq!(r.total_detections, 0);
+    }
+
+    #[test]
+    fn resize_rewrites_the_live_cfs_budget() {
+        let mut s = stub_backend().open_session(&stub_spec(2, 16)).unwrap();
+        assert!((s.worker_cpus(0) - 2.0).abs() < 1e-12, "TX2: 4 cores / 2");
+        s.resize(0, 0.25, 0.0).unwrap();
+        assert!((s.worker_cpus(0) - 0.25).abs() < 1e-12);
+        assert!((s.worker_cpus(1) - 2.0).abs() < 1e-12);
+        let r = s.drain().unwrap();
+        assert_eq!(r.resizes, 1);
+        assert!((r.worker_outcomes[0].cpus - 0.25).abs() < 1e-12);
+        assert_eq!(r.frames, 16);
+    }
+
+    #[test]
+    fn shed_moves_pending_frames_to_the_faster_sibling() {
+        let spec = stub_spec(2, 80);
+        let mut s = stub_backend().open_session(&spec).unwrap();
+        // Worker 0 throttled hard, worker 1 moderately: 0 becomes the
+        // straggler.
+        s.resize(0, 0.05, 0.0).unwrap();
+        s.resize(1, 0.5, 0.0).unwrap();
+        s.start(0.0).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        let moved = s.shed(0.0).unwrap();
+        let r = s.drain().unwrap();
+        assert!(moved > 0, "straggler shed nothing");
+        assert_eq!(r.frames, 80, "frames must be conserved through the shed");
+        assert!(
+            r.worker_outcomes[1].frames_done > r.worker_outcomes[0].frames_done,
+            "sibling should end up with more frames: {} vs {}",
+            r.worker_outcomes[1].frames_done,
+            r.worker_outcomes[0].frames_done
+        );
+        assert_eq!(r.reassigns, 1);
+    }
+
+    #[test]
+    fn abandoned_session_reaps_its_workers() {
+        // Dropping an undrained session must cancel pending work and
+        // join the threads (no leak, no hang).
+        let s = stub_backend().open_session(&stub_spec(2, 10_000)).unwrap();
+        drop(s);
+    }
+
+    #[test]
+    fn missing_artifacts_is_a_clean_early_error() {
+        let mut b = RealBackend::pjrt("/nonexistent/artifacts", "yolo_tiny_b4");
+        let err = b.open_session(&stub_spec(1, 8)).unwrap_err();
+        assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+    }
+}

@@ -1,0 +1,630 @@
+//! SIM execution backend: the calibrated discrete-event model behind
+//! the session API.
+//!
+//! A pristine session (started, never perturbed, drained) reproduces
+//! the retired `run_sim` bit-for-bit: same container pool (memory check,
+//! startup cost), same DES fair-share schedule, same sampled power
+//! sensor. The moment a session is perturbed mid-work — a `resize`,
+//! `reassign`, `shed` or `set_mode` after work began — it switches to
+//! an exact piecewise-constant integrator: per-worker progress advances
+//! linearly at the calibrated frame rate of the share in force, and
+//! energy is the closed-form integral of the power model over the
+//! aggregate busy level, billed with the power mode in force over each
+//! interval (the same math `server::allocator` schedules elastic
+//! regrants by).
+
+use anyhow::{Context, Result};
+
+use super::{ExecutionBackend, Session, SessionReport, SessionSpec, WorkerOutcome};
+use crate::container::{ContainerPool, ImageSpec};
+use crate::device::dvfs::PowerMode;
+use crate::device::{DeviceSpec, PowerSensor};
+use crate::energy::meter_schedule;
+use crate::sched::interference;
+use crate::sched::{CpuScheduler, JobSpec};
+use crate::workload::{split_weighted, Segment, TaskProfile};
+
+/// The SIM backend is stateless: every session carries its own model.
+#[derive(Debug, Default)]
+pub struct SimBackend;
+
+impl ExecutionBackend for SimBackend {
+    fn open_session(&mut self, spec: &SessionSpec) -> Result<Box<dyn Session>> {
+        Ok(Box::new(SimSession::open(spec)?))
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SimWorker {
+    /// Initial assignment (outcome label; sheds move frames afterwards).
+    segment: Segment,
+    /// `--cpus` share in force.
+    cpus: f64,
+    /// Remaining frames (fractional mid-frame carry).
+    left_frames: f64,
+    /// Frames processed so far (fractional).
+    done_frames: f64,
+    /// Modeled busy core-seconds consumed so far.
+    busy_s: f64,
+    /// Session-relative finish time, once done.
+    finish_rel_s: Option<f64>,
+}
+
+/// One SIM job's live workers. All internal times are session-relative
+/// (0 = the `start` call); callers pass their own clock and the session
+/// subtracts its start offset.
+#[derive(Debug)]
+pub struct SimSession {
+    base_device: DeviceSpec,
+    /// Effective device (current power mode applied to `base_device`).
+    device: DeviceSpec,
+    task: TaskProfile,
+    image: ImageSpec,
+    sensor_period_s: f64,
+    pool: ContainerPool,
+    workers: Vec<SimWorker>,
+    spec_frames: usize,
+    /// Frames completed by workers retired in a k-changing reassign.
+    frames_done_retired: f64,
+    started: bool,
+    start_s: f64,
+    /// Startup completes this long after start (container readiness).
+    ready_rel_s: f64,
+    /// Integrator position (only advances once the session is
+    /// perturbed; pristine sessions never sweep).
+    cursor_rel_s: f64,
+    pristine: bool,
+    energy_acc_j: f64,
+    resizes: usize,
+    reassigns: usize,
+    mode_switches: usize,
+    drained: bool,
+}
+
+impl SimSession {
+    pub fn open(spec: &SessionSpec) -> Result<SimSession> {
+        let device = spec.device.clone();
+        let total_frames = spec.frames();
+        let mut image = ImageSpec::yolo(&spec.variant);
+        image.startup_s = device.container_startup_s;
+        image.memory_mib = device.memory.per_container_mib;
+        let pool = ContainerPool::create(&device, &image, spec.workers(), total_frames, 0.0)
+            .context("container pool")?;
+        anyhow::ensure!(spec.cpus_each > 0.0, "--cpus must be positive");
+        let workers = spec
+            .segments
+            .iter()
+            .map(|s| SimWorker {
+                segment: *s,
+                cpus: spec.cpus_each,
+                left_frames: s.len as f64,
+                done_frames: 0.0,
+                busy_s: 0.0,
+                finish_rel_s: None,
+            })
+            .collect();
+        Ok(SimSession {
+            base_device: device.clone(),
+            device,
+            task: spec.task.clone(),
+            image,
+            sensor_period_s: spec.sensor_period_s,
+            pool,
+            workers,
+            spec_frames: total_frames,
+            frames_done_retired: 0.0,
+            started: false,
+            start_s: 0.0,
+            ready_rel_s: 0.0,
+            cursor_rel_s: 0.0,
+            pristine: true,
+            energy_acc_j: 0.0,
+            resizes: 0,
+            reassigns: 0,
+            mode_switches: 0,
+            drained: false,
+        })
+    }
+
+    /// Per-frame wall time at share `cpus` under the effective device —
+    /// the calibrated curve with the interference penalty for this
+    /// session's own container count (a session does not know its
+    /// neighbors; the serving engine's node-level model adds those).
+    fn per_frame(&self, cpus: f64) -> f64 {
+        let penalty = interference::penalty(
+            self.workers.len(),
+            self.device.cores,
+            self.device.interference_alpha,
+        );
+        self.task.base_frame_s(self.device.base_frame_s)
+            * self.device.curve.time_factor(cpus)
+            * penalty
+    }
+
+    /// Mark the session perturbed (when work already began) and bring
+    /// the exact integrator up to the caller's clock.
+    fn perturb(&mut self, now_s: f64) {
+        if !self.started {
+            return;
+        }
+        let now_rel = (now_s - self.start_s).max(0.0);
+        if now_rel > 0.0 {
+            self.pristine = false;
+        }
+        self.sweep_to(now_rel);
+    }
+
+    /// Advance energy and per-worker progress to `to_rel`, processing
+    /// worker-finish events in order. Idle draw is billed whenever any
+    /// worker is still unfinished (startup included); once everything
+    /// finished the device races to sleep and later time costs nothing.
+    fn sweep_to(&mut self, to_rel: f64) {
+        if !self.started {
+            return;
+        }
+        let mut guard = 0usize;
+        while self.cursor_rel_s < to_rel - 1e-15 {
+            guard += 1;
+            assert!(guard < 1_000_000, "sim session integrator stuck");
+            // Startup: containers not ready yet, device idles.
+            if self.cursor_rel_s < self.ready_rel_s {
+                let t = to_rel.min(self.ready_rel_s);
+                self.integrate_to(t, 0.0);
+                continue;
+            }
+            // Zero-work workers finish on the spot.
+            for w in &mut self.workers {
+                if w.finish_rel_s.is_none() && w.left_frames <= 1e-12 {
+                    w.left_frames = 0.0;
+                    w.finish_rel_s = Some(self.cursor_rel_s);
+                }
+            }
+            let pf: Vec<f64> =
+                self.workers.iter().map(|w| self.per_frame(w.cpus)).collect();
+            let busy_each: Vec<f64> = self
+                .workers
+                .iter()
+                .map(|w| self.device.curve.busy_cores(w.cpus))
+                .collect();
+            let mut t_fin = f64::INFINITY;
+            let mut busy = 0.0;
+            for ((w, pf_w), b) in self.workers.iter().zip(&pf).zip(&busy_each) {
+                if w.finish_rel_s.is_none() {
+                    t_fin = t_fin.min(self.cursor_rel_s + w.left_frames * pf_w);
+                    busy += b;
+                }
+            }
+            if t_fin.is_infinite() {
+                // Everything finished: the device sleeps, the cursor
+                // just moves (nothing billed). An unfinished worker
+                // here would mean a non-finite per-frame time
+                // (degenerate share) silently stranding its frames.
+                debug_assert!(
+                    self.workers.iter().all(|w| w.finish_rel_s.is_some()),
+                    "integrator abandoned an unfinished worker"
+                );
+                if to_rel.is_finite() {
+                    self.cursor_rel_s = to_rel;
+                }
+                return;
+            }
+            let t = to_rel.min(t_fin);
+            let dt = t - self.cursor_rel_s;
+            for ((w, pf_w), b) in self.workers.iter_mut().zip(&pf).zip(&busy_each) {
+                if w.finish_rel_s.is_none() {
+                    let done = (dt / pf_w).min(w.left_frames);
+                    w.left_frames -= done;
+                    w.done_frames += done;
+                    w.busy_s += dt * b;
+                }
+            }
+            self.integrate_to(t, busy);
+            if (t - t_fin).abs() <= 1e-12 {
+                for w in &mut self.workers {
+                    if w.finish_rel_s.is_none() && w.left_frames <= 1e-9 {
+                        w.left_frames = 0.0;
+                        w.finish_rel_s = Some(t);
+                    }
+                }
+            }
+        }
+    }
+
+    fn integrate_to(&mut self, t_rel: f64, busy: f64) {
+        let dt = t_rel - self.cursor_rel_s;
+        if dt > 0.0 {
+            self.energy_acc_j += self.device.power.power(busy) * dt;
+            self.cursor_rel_s = t_rel;
+        }
+    }
+
+    /// The retired `run_sim` body, verbatim: DES schedule + sampled
+    /// sensor. Only reachable while the session is unperturbed.
+    fn drain_pristine(&mut self) -> Result<SessionReport> {
+        debug_assert_eq!(self.cursor_rel_s, 0.0, "pristine session must never sweep");
+        let base = self.task.base_frame_s(self.device.base_frame_s);
+        let sched = CpuScheduler::new(&self.device).with_base_frame(base);
+        let jobs: Vec<JobSpec> = self
+            .workers
+            .iter()
+            .map(|w| JobSpec {
+                container_id: w.segment.index as u64,
+                frames: w.segment.len,
+                cpus: w.cpus,
+                ready_at_s: self.ready_rel_s,
+            })
+            .collect();
+        let schedule = sched.run(&jobs);
+        let sensor = PowerSensor::new(self.sensor_period_s);
+        let report = meter_schedule(&self.device, &sensor, &schedule);
+        self.pool.stop_all(self.start_s + schedule.makespan_s).ok();
+        let worker_outcomes = self
+            .workers
+            .iter()
+            .zip(&schedule.finish_s)
+            .map(|(w, &(_, finish))| WorkerOutcome {
+                segment: w.segment,
+                frames_done: w.segment.len,
+                finish_s: finish,
+                cpus: w.cpus,
+                busy_s: w.segment.len as f64
+                    * self.per_frame(w.cpus)
+                    * self.device.curve.busy_cores(w.cpus),
+                detections: Vec::new(),
+            })
+            .collect();
+        Ok(SessionReport {
+            device: self.device.name.to_string(),
+            workers: self.workers.len(),
+            frames: self.spec_frames,
+            time_s: report.time_s,
+            energy_j: report.energy_j,
+            avg_power_w: report.avg_power_w,
+            worker_outcomes,
+            total_detections: 0,
+            resizes: self.resizes,
+            reassigns: self.reassigns,
+            mode_switches: self.mode_switches,
+        })
+    }
+}
+
+impl Session for SimSession {
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn worker_cpus(&self, worker: usize) -> f64 {
+        self.workers[worker].cpus
+    }
+
+    fn worker_rates(&self, _now_s: f64) -> Vec<f64> {
+        self.workers.iter().map(|w| 1.0 / self.per_frame(w.cpus)).collect()
+    }
+
+    fn start(&mut self, now_s: f64) -> Result<()> {
+        anyhow::ensure!(!self.started, "session already started");
+        self.started = true;
+        self.start_s = now_s;
+        let ready_abs = self.pool.start_all(now_s).context("start containers")?;
+        self.ready_rel_s = ready_abs - now_s;
+        Ok(())
+    }
+
+    fn resize(&mut self, worker: usize, cpus: f64, now_s: f64) -> Result<()> {
+        anyhow::ensure!(worker < self.workers.len(), "resize of unknown worker {worker}");
+        anyhow::ensure!(cpus > 0.0, "--cpus must be positive");
+        self.perturb(now_s);
+        self.workers[worker].cpus = cpus;
+        self.resizes += 1;
+        Ok(())
+    }
+
+    fn reassign(&mut self, segments: Vec<Segment>, now_s: f64) -> Result<()> {
+        anyhow::ensure!(!segments.is_empty(), "reassign with no segments");
+        self.perturb(now_s);
+        if segments.len() == self.workers.len() {
+            // Same k: pure shed of pending frames, no restart.
+            if self.started {
+                self.pristine = false;
+            }
+            let cursor = self.cursor_rel_s;
+            for (w, seg) in self.workers.iter_mut().zip(&segments) {
+                w.segment = if w.done_frames > 0.0 { w.segment } else { *seg };
+                w.left_frames = seg.len as f64;
+                w.finish_rel_s = if seg.len == 0 {
+                    Some(w.finish_rel_s.unwrap_or(cursor))
+                } else {
+                    None
+                };
+            }
+        } else {
+            // k changed: containers are torn down and restarted, paying
+            // the startup cost again (the memory cap is re-checked for
+            // the new count).
+            if self.started {
+                self.pristine = false;
+            }
+            let remaining: usize = segments.iter().map(|s| s.len).sum();
+            let total_cpus: f64 = self.workers.iter().map(|w| w.cpus).sum();
+            let k = segments.len();
+            let now_abs = self.start_s + self.cursor_rel_s;
+            let mut pool = ContainerPool::create(&self.device, &self.image, k, remaining, now_abs)
+                .context("container pool (reassign)")?;
+            self.pool.stop_all(now_abs).ok();
+            if self.started {
+                pool.start_all(now_abs).context("start containers (reassign)")?;
+                self.ready_rel_s = self.cursor_rel_s + self.device.container_startup_s;
+            }
+            self.pool = pool;
+            self.frames_done_retired +=
+                self.workers.iter().map(|w| w.done_frames).sum::<f64>();
+            let cpus = total_cpus / k as f64;
+            let cursor = self.cursor_rel_s;
+            self.workers = segments
+                .iter()
+                .map(|s| SimWorker {
+                    segment: *s,
+                    cpus,
+                    left_frames: s.len as f64,
+                    done_frames: 0.0,
+                    busy_s: 0.0,
+                    finish_rel_s: if s.len == 0 { Some(cursor) } else { None },
+                })
+                .collect();
+        }
+        self.reassigns += 1;
+        Ok(())
+    }
+
+    fn shed(&mut self, now_s: f64) -> Result<usize> {
+        if !self.started {
+            return Ok(0);
+        }
+        self.pristine = false;
+        self.sweep_to((now_s - self.start_s).max(0.0));
+        let total: f64 = self.workers.iter().map(|w| w.left_frames).sum();
+        let whole = total.round();
+        if whole < 1.0 {
+            return Ok(0);
+        }
+        // Weights = observed throughput. SIM workers are deterministic,
+        // so that is exactly the modeled frame rate at the current
+        // share; split_weighted's integer apportionment is rescaled to
+        // conserve the fractional total.
+        let rates: Vec<f64> =
+            self.workers.iter().map(|w| 1.0 / self.per_frame(w.cpus)).collect();
+        let split = split_weighted(whole as usize, &rates);
+        let scale = total / whole;
+        let cursor = self.cursor_rel_s;
+        let mut moved = 0.0;
+        for (w, seg) in self.workers.iter_mut().zip(&split) {
+            let target = seg.len as f64 * scale;
+            moved += (target - w.left_frames).abs();
+            w.left_frames = target;
+            w.finish_rel_s = if target <= 1e-12 {
+                Some(w.finish_rel_s.unwrap_or(cursor))
+            } else {
+                None
+            };
+        }
+        self.reassigns += 1;
+        Ok((moved / 2.0).round() as usize)
+    }
+
+    fn set_mode(&mut self, mode: &PowerMode, now_s: f64) -> Result<()> {
+        self.perturb(now_s);
+        // Elapsed time was already billed with the old mode's power
+        // model by the sweep; from here on the derived spec rules both
+        // frame times and the power integrand.
+        self.device = mode.apply(&self.base_device);
+        self.mode_switches += 1;
+        Ok(())
+    }
+
+    fn drain(&mut self) -> Result<SessionReport> {
+        anyhow::ensure!(!self.drained, "session already drained");
+        if !self.started {
+            self.start(0.0)?;
+        }
+        self.drained = true;
+        if self.pristine {
+            return self.drain_pristine();
+        }
+        self.sweep_to(f64::INFINITY);
+        let time_s = self
+            .workers
+            .iter()
+            .filter_map(|w| w.finish_rel_s)
+            .fold(0.0, f64::max);
+        self.pool.stop_all(self.start_s + time_s).ok();
+        let worker_outcomes: Vec<WorkerOutcome> = self
+            .workers
+            .iter()
+            .map(|w| WorkerOutcome {
+                segment: w.segment,
+                frames_done: w.done_frames.round() as usize,
+                finish_s: w.finish_rel_s.unwrap_or(time_s),
+                cpus: w.cpus,
+                busy_s: w.busy_s,
+                detections: Vec::new(),
+            })
+            .collect();
+        let frames = (self.frames_done_retired
+            + self.workers.iter().map(|w| w.done_frames).sum::<f64>())
+        .round() as usize;
+        Ok(SessionReport {
+            device: self.device.name.to_string(),
+            workers: self.workers.len(),
+            frames,
+            time_s,
+            energy_j: self.energy_acc_j,
+            avg_power_w: if time_s > 0.0 { self.energy_acc_j / time_s } else { 0.0 },
+            worker_outcomes,
+            total_detections: 0,
+            resizes: self.resizes,
+            reassigns: self.reassigns,
+            mode_switches: self.mode_switches,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::exec::run_session;
+
+    fn spec(k: usize) -> SessionSpec {
+        let mut cfg = ExperimentConfig::default();
+        cfg.containers = k;
+        SessionSpec::from_config(&cfg)
+    }
+
+    #[test]
+    fn pristine_session_matches_paper_benchmark() {
+        let r = run_session(&mut SimBackend, &spec(1)).unwrap();
+        assert!((r.time_s - 325.0).abs() < 4.0, "time={}", r.time_s);
+        assert!((r.energy_j - 942.0).abs() < 15.0, "energy={}", r.energy_j);
+        assert_eq!(r.frames, 720);
+        assert_eq!(r.workers, 1);
+        assert_eq!(r.resizes, 0);
+    }
+
+    #[test]
+    fn noop_resize_preserves_completion_time() {
+        // Perturbing with the same share must not move the finish line:
+        // the exact integrator and the DES agree to fp accuracy, and the
+        // closed-form energy agrees with the sampled sensor to sampling
+        // accuracy.
+        let pristine = run_session(&mut SimBackend, &spec(4)).unwrap();
+        let mut s = SimBackend.open_session(&spec(4)).unwrap();
+        s.start(0.0).unwrap();
+        for w in 0..4 {
+            s.resize(w, 1.0, 50.0).unwrap();
+        }
+        let r = s.drain().unwrap();
+        assert!(
+            (r.time_s - pristine.time_s).abs() < 1e-6,
+            "perturbed {} vs pristine {}",
+            r.time_s,
+            pristine.time_s
+        );
+        assert!(
+            (r.energy_j - pristine.energy_j).abs() / pristine.energy_j < 0.02,
+            "perturbed {} vs pristine {}",
+            r.energy_j,
+            pristine.energy_j
+        );
+        assert_eq!(r.resizes, 4);
+    }
+
+    #[test]
+    fn resize_matches_the_piecewise_closed_form() {
+        // k=1 at 2 cores, expanded to 4 cores at t=100: the session must
+        // land exactly where completion_time_piecewise says.
+        let mut one = spec(1);
+        one.cpus_each = 2.0;
+        let mut s = SimBackend.open_session(&one).unwrap();
+        s.start(0.0).unwrap();
+        s.resize(0, 4.0, 100.0).unwrap();
+        let r = s.drain().unwrap();
+        let dev = one.device.clone();
+        let base = one.task.base_frame_s(dev.base_frame_s)
+            * interference::penalty(1, dev.cores, dev.interference_alpha);
+        let want = dev.curve.completion_time_piecewise(base, &[(2.0, 100.0)], 4.0, 720.0);
+        assert!((r.time_s - want).abs() < 1e-6, "session {} vs closed form {}", r.time_s, want);
+        assert!((r.worker_outcomes[0].cpus - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_rebalances_a_straggler_onto_its_siblings() {
+        // Worker 0 throttled to a quarter share becomes the straggler;
+        // shedding by observed throughput moves most of its remaining
+        // frames to the fast siblings and the makespan drops.
+        let run = |do_shed: bool| {
+            let mut s = SimBackend.open_session(&spec(4)).unwrap();
+            s.start(0.0).unwrap();
+            s.resize(0, 0.25, 10.0).unwrap();
+            let mut moved = 0;
+            if do_shed {
+                moved = s.shed(20.0).unwrap();
+            }
+            (s.drain().unwrap(), moved)
+        };
+        let (slow, _) = run(false);
+        let (shed, moved) = run(true);
+        assert!(moved > 0, "nothing shed");
+        assert!(
+            shed.time_s < slow.time_s * 0.75,
+            "shed {} should clearly beat straggler {}",
+            shed.time_s,
+            slow.time_s
+        );
+        assert_eq!(shed.reassigns, 1);
+        // Frames conserved through the shed (to rounding).
+        assert!((shed.frames as i64 - 720).abs() <= 1, "frames={}", shed.frames);
+    }
+
+    #[test]
+    fn set_mode_bills_each_span_at_its_modes_power() {
+        // Downclocking mid-run stretches time; the energy integral uses
+        // the old model before the switch and the derived one after.
+        let tx2 = DeviceSpec::tx2();
+        let maxq = PowerMode::modes_for(&tx2)
+            .into_iter()
+            .find(|m| m.name.starts_with("MAXQ"))
+            .unwrap();
+        let pristine = run_session(&mut SimBackend, &spec(4)).unwrap();
+        let mut s = SimBackend.open_session(&spec(4)).unwrap();
+        s.start(0.0).unwrap();
+        s.set_mode(&maxq, 100.0).unwrap();
+        let r = s.drain().unwrap();
+        assert_eq!(r.mode_switches, 1);
+        assert!(r.time_s > pristine.time_s, "MAXQ remainder must run slower");
+        // Power after the switch is strictly lower, so the average over
+        // the whole session sits between the two modes' levels.
+        assert!(r.avg_power_w < pristine.avg_power_w);
+        assert!(r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn reassign_with_new_k_restarts_and_pays_startup() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.containers = 2;
+        cfg.startup_s = Some(5.0);
+        let spec2 = SessionSpec::from_config(&cfg);
+        let pristine = run_session(&mut SimBackend, &spec2).unwrap();
+        let mut s = SimBackend.open_session(&spec2).unwrap();
+        s.start(0.0).unwrap();
+        // Restart as 4 containers at t=50: remaining frames re-split,
+        // startup paid again.
+        let remaining = 600usize;
+        s.reassign(crate::workload::split_even(remaining, 4), 50.0).unwrap();
+        let r = s.drain().unwrap();
+        assert_eq!(r.workers, 4);
+        assert_eq!(r.reassigns, 1);
+        // The restarted run must include the second 5 s startup: it can
+        // never beat a hypothetical free resize by more than it saves.
+        assert!(r.time_s > 55.0, "restart startup missing: {}", r.time_s);
+        assert!(r.time_s < pristine.time_s * 2.0);
+    }
+
+    #[test]
+    fn zero_containers_is_a_clean_error() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.containers = 0;
+        let err = SimBackend.open_session(&SessionSpec::from_config(&cfg)).unwrap_err();
+        assert!(format!("{err:#}").contains("k must be >= 1"), "{err:#}");
+    }
+
+    #[test]
+    fn over_memory_is_a_clean_error() {
+        let err = SimBackend.open_session(&spec(7)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceed"), "{err:#}");
+    }
+}

@@ -32,6 +32,7 @@ pub mod coordinator;
 pub mod detect;
 pub mod device;
 pub mod energy;
+pub mod exec;
 pub mod metrics;
 pub mod modelfit;
 pub mod runtime;

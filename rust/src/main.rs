@@ -34,6 +34,10 @@ fn common_opts(cmd: Command) -> Command {
         .opt(OptSpec::opt("mode", "executor (sim|real)").with_default("sim"))
         .opt(OptSpec::opt("artifacts", "artifacts dir").with_default("artifacts"))
         .opt(OptSpec::opt("variant", "model variant for real mode").with_default("yolo_tiny_b4"))
+        .opt(OptSpec::flag(
+            "stub-engine",
+            "real mode: deterministic stub workers (no PJRT artifacts needed)",
+        ))
         .opt(OptSpec::opt("csv", "write results CSV to this path"))
 }
 
@@ -314,13 +318,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt(OptSpec::opt("report-json", "write the serve report JSON to this path"));
     let p = parse_or_help(&cmd, args)?;
     let cfg = build_config(&p)?;
-    if cfg.mode == ExecMode::Real {
-        anyhow::bail!(
-            "serve runs on the calibrated device model (the event-driven engine is \
-             SIM-native); for REAL per-job PJRT inference use `run --mode real` or \
-             `cargo run --example e2e_serving`"
-        );
-    }
     let policy = match p.get_usize("containers")? {
         Some(k) => SplitPolicy::Fixed(k),
         None => SplitPolicy::Online(OnlineOptimizer::default()),
@@ -383,6 +380,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         coordinator.planner_name(),
         report.mode_switches
     );
+    if report.sessions > 0 {
+        println!(
+            "sessions={}  live resizes={}  measured energy={:.1} J",
+            report.sessions, report.session_resizes, report.session_energy_j
+        );
+    }
     println!(
         "battery (50 Wh pack): {:.0} jobs/charge, {:.1} h at the observed {:.1} W draw",
         report.battery_jobs_per_charge,

@@ -16,19 +16,23 @@
 //! aggregated utilization timeline — idle power is paid once per device
 //! busy period, not once per job (see [`super::allocator`]).
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use super::allocator::{
     plan_remaining, plan_service, predict_full_device, GrantPolicy, NodeAllocator,
+    ServicePlan,
 };
 use super::policy::{PlacementPolicy, QueuePolicy};
 use super::queue::AdmissionQueue;
 use crate::coordinator::planner::{Plan, PlanRequest};
 use crate::coordinator::Coordinator;
 use crate::device::DeviceSpec;
+use crate::exec::{ExecutionBackend, Session, SessionReport, SessionSpec};
 use crate::metrics::Registry;
 use crate::sched::des::EventQueue;
-use crate::workload::TaskProfile;
+use crate::workload::{split_even, TaskProfile};
 
 /// One job offered to the engine.
 #[derive(Debug, Clone)]
@@ -125,10 +129,21 @@ pub struct EngineConfig {
     /// under [`QueuePolicy::Edf`] + [`GrantPolicy::Elastic`]; off by
     /// default.
     pub deadline_weighted_shares: bool,
+    /// Model-variant label stamped on backend sessions (cosmetic for
+    /// SIM container images; `serve()` copies the experiment config's
+    /// variant so REAL-session labels match the artifact in use).
+    pub session_variant: String,
+    /// Power-sensor sampling period for backend sessions' pristine SIM
+    /// metering (`serve()` copies the experiment config's value).
+    pub session_sensor_period_s: f64,
 }
 
 impl EngineConfig {
     pub fn single_node(device: DeviceSpec) -> Self {
+        // Session defaults come from the one place that owns them —
+        // the experiment config — so a changed default variant or
+        // sensor period can't silently drift apart here.
+        let defaults = crate::config::ExperimentConfig::default();
         EngineConfig {
             nodes: vec![device],
             queue_policy: QueuePolicy::Fifo,
@@ -137,6 +152,8 @@ impl EngineConfig {
             min_cores_per_job: 1.0,
             grant_policy: GrantPolicy::Fixed,
             deadline_weighted_shares: false,
+            session_variant: defaults.variant,
+            session_sensor_period_s: defaults.sensor_period_s,
         }
     }
 }
@@ -159,6 +176,10 @@ pub struct EngineOutcome {
     /// Power-mode switches applied across all nodes (0 unless a joint
     /// planner chose a non-default mode on a private node).
     pub mode_switches: u64,
+    /// Drained execution-backend session reports, one per job, in
+    /// completion order (empty when the engine ran without a backend —
+    /// the pure-model SIM path).
+    pub session_reports: Vec<SessionReport>,
     pub metrics: Registry,
 }
 
@@ -189,6 +210,12 @@ pub struct ServingEngine<'a> {
     next_arrival: usize,
     rr_next: usize,
     metrics: Registry,
+    /// Execution backend the engine dispatches jobs through (None = the
+    /// engine's own DES math only, with no live data plane).
+    backend: Option<&'a mut dyn ExecutionBackend>,
+    /// Live sessions, keyed by job index.
+    sessions: BTreeMap<usize, Box<dyn Session>>,
+    session_reports: Vec<SessionReport>,
 }
 
 impl<'a> ServingEngine<'a> {
@@ -227,7 +254,29 @@ impl<'a> ServingEngine<'a> {
             cfg,
             jobs,
             decider,
+            backend: None,
+            sessions: BTreeMap::new(),
+            session_reports: Vec::new(),
         }
+    }
+
+    /// Dispatch admitted jobs through an execution backend: every
+    /// admission opens a session (k long-lived workers), every elastic
+    /// regrant becomes a live `--cpus` resize on those workers (REAL: a
+    /// token-bucket rewrite, `docker update --cpus`), a k-changing
+    /// regrant verdict becomes a shed (stragglers hand frames to
+    /// siblings — no restart), and every completion drains the session
+    /// into [`EngineOutcome::session_reports`].
+    ///
+    /// The engine's own calibrated model keeps driving the event clock
+    /// and the admission/shrink/absorb decisions; the backend is the
+    /// data plane executing them. `serve --mode real` attaches a
+    /// `RealBackend` here, which is what runs concurrent PJRT (or stub)
+    /// jobs with mid-job regrants through the same planner path SIM
+    /// validates.
+    pub fn with_backend(mut self, backend: &'a mut dyn ExecutionBackend) -> Self {
+        self.backend = Some(backend);
+        self
     }
 
     /// Closed-loop mode: each job arrives when the previous one
@@ -273,6 +322,14 @@ impl<'a> ServingEngine<'a> {
                         .is_some_and(|a| a.grant_gen == gen);
                     if !live {
                         continue;
+                    }
+                    if let Some(mut session) = self.sessions.remove(&job) {
+                        // The data plane finishes the job for real (a
+                        // REAL session blocks until its workers drain).
+                        let rep = session.drain()?;
+                        self.metrics.inc("session_resizes", rep.resizes as u64);
+                        self.metrics.inc("session_frames", rep.frames as u64);
+                        self.session_reports.push(rep);
                     }
                     let done = self.nodes[node].complete(t, job);
                     let j = &self.jobs[job];
@@ -330,6 +387,7 @@ impl<'a> ServingEngine<'a> {
             wall_s,
             regrants: self.metrics.counter("regrants"),
             mode_switches: self.metrics.counter("mode_switches"),
+            session_reports: self.session_reports,
             metrics: self.metrics,
         }
     }
@@ -351,6 +409,42 @@ impl<'a> ServingEngine<'a> {
             self.dispatch_scheduled = true;
             self.events.push(now_s, Ev::Dispatch);
         }
+    }
+
+    /// Open a backend session for job `j` just admitted on `node_i`
+    /// under `plan` (k workers at `plan.cpus_each`), and start its
+    /// measured window at `now_s`. No-op without a backend.
+    fn open_session_for(
+        &mut self,
+        j: usize,
+        node_i: usize,
+        now_s: f64,
+        plan: &ServicePlan,
+    ) -> Result<()> {
+        let Some(backend) = self.backend.as_mut() else { return Ok(()) };
+        let job = &self.jobs[j];
+        let nd = &self.nodes[node_i];
+        // Sessions derive power modes from the device THEY are given:
+        // hand them the calibrated base spec and re-apply the node's
+        // current mode explicitly, so a later set_mode never compounds
+        // one mode's frequency/power scaling on top of another's.
+        let spec = SessionSpec {
+            device: nd.base_device.clone(),
+            task: job.task.clone(),
+            segments: split_even(job.frames, plan.k.max(1)),
+            cpus_each: plan.cpus_each.max(f64::MIN_POSITIVE),
+            seed: job.id,
+            sensor_period_s: self.cfg.session_sensor_period_s,
+            variant: self.cfg.session_variant.clone(),
+        };
+        let mut session = backend.open_session(&spec)?;
+        if !nd.mode.is_default_for(&nd.base_device) {
+            session.set_mode(&nd.mode, now_s)?;
+        }
+        session.start(now_s)?;
+        self.metrics.inc("sessions_opened", 1);
+        self.sessions.insert(j, session);
+        Ok(())
     }
 
     /// Admit as many queued jobs as capacity allows, in policy order.
@@ -427,6 +521,7 @@ impl<'a> ServingEngine<'a> {
                 )
             };
             let finish = self.nodes[node_i].admit(now_s, j, frames, plan);
+            self.open_session_for(j, node_i, now_s, &plan)?;
             self.queue.remove(now_s, j);
             self.events.push(finish, Ev::Completion { node: node_i, job: j, gen: 0 });
             self.metrics.set_gauge("queue_depth", self.queue.len() as f64);
@@ -576,6 +671,7 @@ impl<'a> ServingEngine<'a> {
             return Ok(());
         }
         let frames = self.jobs[job].frames;
+        let has_session = self.sessions.contains_key(&job);
         // The job's own held memory is reusable by its replacement plan.
         let avail_mem = self.nodes[node_i].free_mem_mib + old_mem;
         let mode_free = mode_free && self.nodes[node_i].active.len() == 1;
@@ -586,8 +682,11 @@ impl<'a> ServingEngine<'a> {
             // sole resident's plan reconfigures the whole device.
             self.nodes[node_i].set_mode(now_s, &decision.mode);
             self.metrics.inc("mode_switches", 1);
+            if let Some(session) = self.sessions.get_mut(&job) {
+                session.set_mode(&decision.mode, now_s)?;
+            }
         }
-        let (plan, restart, startup, new_grant) = {
+        let (plan, restart, shed, startup, new_grant) = {
             let nd = &self.nodes[node_i];
             // A mode with fewer cores shrinks the grant with it.
             let new_grant = decision
@@ -596,6 +695,13 @@ impl<'a> ServingEngine<'a> {
                 .max(f64::MIN_POSITIVE);
             let mem_cap = nd.device.memory.max_containers_within(avail_mem, frames).max(1);
             let k = decision.k.min(mem_cap).max(1);
+            // A live session never restarts its containers mid-job: a
+            // k-changing verdict becomes a shed — the remaining frames
+            // are re-split across the k live workers by observed
+            // throughput — so the startup cost is never re-paid
+            // (stragglers hand frames to siblings instead of forcing a
+            // restart).
+            let (k, shed) = if has_session && k != old_k { (old_k, true) } else { (k, false) };
             let restart = k != old_k;
             let startup =
                 if restart { nd.device.container_startup_s } else { startup_left };
@@ -611,6 +717,7 @@ impl<'a> ServingEngine<'a> {
                     startup,
                 ),
                 restart,
+                shed,
                 startup,
                 new_grant,
             )
@@ -620,6 +727,19 @@ impl<'a> ServingEngine<'a> {
         self.metrics.inc("regrants", 1);
         if restart {
             self.metrics.inc("regrant_restarts", 1);
+        }
+        if shed {
+            let session = self.sessions.get_mut(&job).expect("shed without a session");
+            let moved = session.shed(now_s)?;
+            self.metrics.inc("regrant_sheds", 1);
+            self.metrics.add_gauge("frames_shed", moved as f64);
+        }
+        if let Some(session) = self.sessions.get_mut(&job) {
+            // Propagate the new per-worker share to the live workers —
+            // REAL: a synchronous token-bucket rewrite per container.
+            for w in 0..session.workers() {
+                session.resize(w, plan.cpus_each, now_s)?;
+            }
         }
         self.metrics.add_gauge("grant_churn_cores", (new_grant - old_grant).abs());
         Ok(())

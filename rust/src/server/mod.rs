@@ -30,10 +30,12 @@ pub use engine::{
 };
 pub use policy::{PlacementPolicy, QueuePolicy};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use crate::config::ExecMode;
 use crate::coordinator::Coordinator;
 use crate::energy::Battery;
+use crate::exec::{RealBackend, StubEngineSpec};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::{summarize, Summary};
@@ -114,6 +116,20 @@ pub struct ServeReport {
     /// Power-mode switches applied by the planner (0 under the
     /// fixed-mode planner).
     pub mode_switches: u64,
+    /// Execution-backend sessions drained (one per job when a backend
+    /// was attached — `serve --mode real`; 0 on the pure-model path).
+    pub sessions: usize,
+    /// Live per-worker `--cpus` rewrites applied across all sessions
+    /// (REAL: token-bucket rewrites, `docker update --cpus`).
+    pub session_resizes: u64,
+    /// Measured (REAL) or shadow-modeled (SIM) energy summed over the
+    /// drained sessions. Each session bills its OWN device window
+    /// (idle floor included), so overlapping jobs re-pay the idle draw
+    /// once per session — this is a sum of per-job bills, NOT a
+    /// device-level total, and is not directly comparable to
+    /// `total_energy_j` (which pays idle once per device busy period)
+    /// under concurrency. See ROADMAP "REAL cross-job interference".
+    pub session_energy_j: f64,
     /// Battery-lifetime extrapolation on the reference pack
     /// ([`Battery::pack_50wh`]; recompute with
     /// [`ServeReport::apply_battery`] for other packs): jobs one charge
@@ -146,6 +162,13 @@ impl ServeReport {
             node_energy_j: outcome.node_energy_j.clone(),
             regrants: outcome.regrants,
             mode_switches: outcome.mode_switches,
+            sessions: outcome.session_reports.len(),
+            session_resizes: outcome
+                .session_reports
+                .iter()
+                .map(|r| r.resizes as u64)
+                .sum(),
+            session_energy_j: outcome.session_reports.iter().map(|r| r.energy_j).sum(),
             battery_jobs_per_charge: 0.0,
             battery_hours: 0.0,
         };
@@ -201,6 +224,9 @@ impl ServeReport {
             ),
             ("regrants", Json::num(self.regrants as f64)),
             ("mode_switches", Json::num(self.mode_switches as f64)),
+            ("sessions", Json::num(self.sessions as f64)),
+            ("session_resizes", Json::num(self.session_resizes as f64)),
+            ("session_energy_j", Json::num(self.session_energy_j)),
             ("battery_jobs_per_charge", Json::num(self.battery_jobs_per_charge)),
             ("battery_hours", Json::num(self.battery_hours)),
         ])
@@ -211,19 +237,40 @@ impl ServeReport {
 /// coordinator's device), each job planned by the coordinator's
 /// planner under the availability cap — a joint planner may also
 /// reconfigure the device's power mode when the node is private (see
-/// `coordinator::planner`). Time is simulated device time on
-/// the calibrated model (the SIM executor's semantics; REAL-mode
-/// serving drives `coordinator::executor::run_real` per job instead —
-/// see `examples/e2e_serving.rs`).
+/// `coordinator::planner`). The event clock is simulated device time
+/// on the calibrated model either way; in REAL mode the engine
+/// additionally dispatches every job through a
+/// [`crate::exec::RealBackend`] session — concurrent long-lived worker
+/// threads (PJRT, or the deterministic stub with
+/// `ExperimentConfig::stub_engine`) whose `--cpus` token buckets are
+/// resized live by the elastic regrant path — and the drained session
+/// reports (measured time/energy/detections) ride along in the
+/// [`ServeReport`].
 pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeReport> {
     assert!(cfg.jobs > 0);
     assert!(cfg.frames_per_job > 0);
-    anyhow::ensure!(
-        coordinator.base.mode == crate::config::ExecMode::Sim,
-        "serve() runs on the calibrated SIM models (the engine cannot overlap REAL \
-         PJRT jobs); drive coordinator::executor::run_real per job instead — see \
-         examples/e2e_serving.rs"
-    );
+    let mut real_backend = match coordinator.base.mode {
+        ExecMode::Sim => None,
+        ExecMode::Real if coordinator.base.stub_engine => {
+            Some(RealBackend::stub(StubEngineSpec::default()))
+        }
+        ExecMode::Real => {
+            // Fail fast, before the event loop starts: a missing
+            // artifact set should be an immediate, actionable error,
+            // not a mid-run abort at the first admission.
+            let manifest = crate::runtime::Manifest::load(&coordinator.base.artifacts_dir)
+                .context(
+                    "serve --mode real executes PJRT sessions and needs the AOT \
+                     artifacts (`make artifacts`) — or pass --stub-engine for the \
+                     deterministic no-artifact workers",
+                )?;
+            manifest.variant(&coordinator.base.variant)?;
+            Some(RealBackend::pjrt(
+                &coordinator.base.artifacts_dir,
+                &coordinator.base.variant,
+            ))
+        }
+    };
     let mut rng = Rng::new(cfg.seed);
 
     let (closed_loop, arrivals) = match (&cfg.arrival, cfg.mean_interarrival_s) {
@@ -252,9 +299,14 @@ pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeRe
     engine_cfg.min_cores_per_job = cfg.min_cores_per_job;
     engine_cfg.grant_policy = cfg.grant_policy;
     engine_cfg.deadline_weighted_shares = cfg.deadline_weighted_shares;
+    engine_cfg.session_variant = coordinator.base.variant.clone();
+    engine_cfg.session_sensor_period_s = coordinator.base.sensor_period_s;
 
     let mut engine =
         ServingEngine::new(engine_cfg, jobs, SplitDecider::Coordinator(&mut *coordinator));
+    if let Some(backend) = real_backend.as_mut() {
+        engine = engine.with_backend(backend);
+    }
     if closed_loop {
         engine = engine.closed_loop();
     }

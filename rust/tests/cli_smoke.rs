@@ -101,6 +101,30 @@ fn battery_reports_videos_per_charge() {
 }
 
 #[test]
+fn run_real_stub_engine_needs_no_artifacts() {
+    let (ok, text) = dsplit(&[
+        "run", "--mode", "real", "--stub-engine", "--containers", "2", "--frames", "16",
+    ]);
+    assert!(ok, "{text}");
+    let json_start = text.find('{').expect("json in output");
+    let v = divide_and_save::util::json::Json::parse(text[json_start..].trim()).unwrap();
+    assert_eq!(v.get("mode").unwrap().as_str(), Some("real"));
+    assert_eq!(v.get("frames").unwrap().as_usize(), Some(16));
+    assert!(v.get("energy_j").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn serve_real_stub_engine_reports_live_sessions() {
+    let (ok, text) = dsplit(&[
+        "serve", "--mode", "real", "--stub-engine", "--jobs", "2", "--job-frames", "16",
+        "--containers", "2", "--concurrency", "2", "--grant", "elastic",
+        "--arrival", "det:2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("sessions=2"), "{text}");
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     let (ok, text) = dsplit(&["frobnicate"]);
     assert!(!ok);

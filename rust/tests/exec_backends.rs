@@ -1,0 +1,262 @@
+//! Execution-backend properties (tier-1).
+//!
+//! * **SIM parity** — `SimBackend` one-job sessions reproduce the
+//!   retired `run_sim` figures bit-for-bit: the paper headline numbers
+//!   are pinned here against the session surface, and the wrapper and
+//!   the session surface must agree exactly.
+//! * **REAL stub smoke** — the full REAL path (worker threads, live
+//!   CFS token buckets, overlaid-span energy metering) runs in CI on
+//!   the deterministic stub engine: a resized worker's CFS budget and
+//!   the session report's energy both reflect the new share.
+//! * **Engine integration** — a serving engine with a backend admits
+//!   concurrent jobs, performs mid-job resizes through the elastic
+//!   regrant path, and sheds frames instead of restarting containers
+//!   on k-changing verdicts.
+
+use divide_and_save::config::{ExecMode, ExperimentConfig};
+use divide_and_save::coordinator::executor::run_sim;
+use divide_and_save::coordinator::router::SplitPolicy;
+use divide_and_save::coordinator::Coordinator;
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::exec::{
+    run_session, ExecutionBackend, RealBackend, SessionSpec, SimBackend, StubEngineSpec,
+};
+use divide_and_save::server::{
+    serve, EngineConfig, EngineJob, GrantPolicy, ServeConfig, ServingEngine, SplitDecider,
+};
+use divide_and_save::workload::{ArrivalProcess, TaskProfile, Video};
+
+fn sim_cfg(device: DeviceSpec, k: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.device = device;
+    c.containers = k;
+    c
+}
+
+#[test]
+fn sim_backend_sessions_pin_the_retired_run_sim_figures() {
+    // The retired executor's benchmark numbers, asserted against the
+    // session surface directly — and the one-job wrapper must agree
+    // with the session bit-for-bit (it IS a session underneath, and
+    // must stay one).
+    let bench =
+        run_session(&mut SimBackend, &SessionSpec::from_config(&sim_cfg(DeviceSpec::tx2(), 1)))
+            .unwrap();
+    assert!((bench.time_s - 325.0).abs() < 4.0, "time={}", bench.time_s);
+    assert!((bench.energy_j - 942.0).abs() < 15.0, "energy={}", bench.energy_j);
+    assert!((bench.avg_power_w - 2.9).abs() < 0.06, "power={}", bench.avg_power_w);
+
+    for device in [DeviceSpec::tx2(), DeviceSpec::orin()] {
+        for k in [1usize, 2, 4] {
+            let cfg = sim_cfg(device.clone(), k);
+            let via_session =
+                run_session(&mut SimBackend, &SessionSpec::from_config(&cfg)).unwrap();
+            let via_wrapper = run_sim(&cfg).unwrap();
+            assert_eq!(via_session.time_s, via_wrapper.time_s, "{} k={k}", device.name);
+            assert_eq!(via_session.energy_j, via_wrapper.energy_j, "{} k={k}", device.name);
+            assert_eq!(
+                via_session.avg_power_w, via_wrapper.avg_power_w,
+                "{} k={k}",
+                device.name
+            );
+            assert_eq!(via_session.workers, k);
+        }
+    }
+
+    // Paper headline ratios through the session surface (tolerances
+    // unchanged from the retired executor tests).
+    let r2 = run_session(&mut SimBackend, &SessionSpec::from_config(&sim_cfg(DeviceSpec::tx2(), 2)))
+        .unwrap();
+    let r4 = run_session(&mut SimBackend, &SessionSpec::from_config(&sim_cfg(DeviceSpec::tx2(), 4)))
+        .unwrap();
+    assert!((r2.time_s / bench.time_s - 0.81).abs() < 0.02);
+    assert!((r2.energy_j / bench.energy_j - 0.90).abs() < 0.03);
+    assert!((r4.time_s / bench.time_s - 0.75).abs() < 0.02);
+    assert!((r4.energy_j / bench.energy_j - 0.85).abs() < 0.03);
+}
+
+#[test]
+fn real_stub_resize_budget_and_energy_reflect_the_new_share() {
+    // Two identical stub sessions, except session B resizes worker 0's
+    // token bucket to a quarter core before work begins. The CFS budget
+    // must read back exactly, and the energy metering must see the
+    // throttled duty cycle: B's average power sits clearly below A's.
+    let spec = || {
+        let mut c = ExperimentConfig::default(); // TX2: 4 cores
+        c.containers = 2;
+        c.video = Video::with_frames("stub", 64, 24.0);
+        SessionSpec::from_config(&c)
+    };
+    let backend = || RealBackend::stub(StubEngineSpec { batch: 4, latency_s: 0.002 });
+
+    let a = run_session(&mut backend(), &spec()).unwrap();
+
+    let mut b = backend().open_session(&spec()).unwrap();
+    assert!((b.worker_cpus(0) - 2.0).abs() < 1e-12, "initial share is cores/k");
+    b.resize(0, 0.25, 0.0).unwrap();
+    assert!((b.worker_cpus(0) - 0.25).abs() < 1e-12, "CFS budget must read back");
+    assert!((b.worker_cpus(1) - 2.0).abs() < 1e-12, "sibling budget untouched");
+    b.start(0.0).unwrap();
+    let rb = b.drain().unwrap();
+
+    assert_eq!(rb.resizes, 1);
+    assert!((rb.worker_outcomes[0].cpus - 0.25).abs() < 1e-12, "budget survives to drain");
+    assert_eq!(rb.frames, 64, "every frame processed");
+    assert_eq!(a.frames, 64);
+    // The token bucket stretches the throttled worker's wall clock to
+    // its duty cycle, so the aggregate busy level — and with it the
+    // average power — drops.
+    assert!(
+        rb.time_s > a.time_s,
+        "throttled session must run longer: {} vs {}",
+        rb.time_s,
+        a.time_s
+    );
+    assert!(
+        rb.avg_power_w < a.avg_power_w,
+        "energy must reflect the new share: resized {:.3} W vs full {:.3} W",
+        rb.avg_power_w,
+        a.avg_power_w
+    );
+    // Worker 0's busy fraction is pinned near its 0.25 duty cycle
+    // (sleep jitter only ever lowers it); an unthrottled worker runs
+    // nearly saturated.
+    let frac = rb.worker_outcomes[0].busy_s / rb.time_s;
+    assert!(frac < 0.35, "throttled duty cycle {frac} should be ~0.25");
+    let frac_a = a.worker_outcomes[0].busy_s / a.time_s;
+    assert!(frac_a > 0.5, "unthrottled duty cycle {frac_a} should be ~1");
+}
+
+#[test]
+fn engine_with_stub_backend_overlaps_jobs_and_resizes_mid_job() {
+    // The acceptance scenario: REAL-mode serving admits two concurrent
+    // jobs and performs mid-job resizes via the token bucket, through
+    // the same elastic shrink/absorb path SIM validates. Job 0 holds
+    // the whole TX2 as 4 workers at 1 core each; job 1 arrives
+    // mid-flight, the elastic shrink halves job 0's grant (workers drop
+    // to 0.5 cores — real token-bucket rewrites on live threads), and
+    // the absorb phase hands the cores back once job 1 drains.
+    let jobs = vec![
+        EngineJob::new(0, 0.0, 64, TaskProfile::yolo_tiny()),
+        EngineJob::new(1, 5.0, 16, TaskProfile::yolo_tiny()),
+    ];
+    let mut cfg = EngineConfig::single_node(DeviceSpec::tx2());
+    cfg.max_concurrent_jobs = 2;
+    cfg.grant_policy = GrantPolicy::Elastic;
+    let mut backend = RealBackend::stub(StubEngineSpec { batch: 4, latency_s: 0.002 });
+    let out = ServingEngine::new(cfg, jobs, SplitDecider::Fixed(4))
+        .with_backend(&mut backend)
+        .run()
+        .unwrap();
+
+    assert_eq!(out.completed.len(), 2);
+    let j0 = out.completed.iter().find(|c| c.id == 0).unwrap();
+    let j1 = out.completed.iter().find(|c| c.id == 1).unwrap();
+    assert!(
+        j1.start_s < j0.finish_s,
+        "jobs must overlap: j1 started {} vs j0 finished {}",
+        j1.start_s,
+        j0.finish_s
+    );
+
+    assert_eq!(out.session_reports.len(), 2, "one drained session per job");
+    let s0 = out.session_reports.iter().find(|r| r.frames == 64).unwrap();
+    let s1 = out.session_reports.iter().find(|r| r.frames == 16).unwrap();
+    // Job 0 was resized twice per worker: the shrink when job 1
+    // arrived, the absorb when it drained.
+    assert_eq!(s0.workers, 4);
+    assert_eq!(s0.resizes, 8, "4 workers x (shrink + absorb)");
+    assert_eq!(s1.resizes, 0);
+    // After the absorb, job 0's workers are back at grant/k = 1 core —
+    // the live CFS budget must reflect it.
+    for w in &s0.worker_outcomes {
+        assert!((w.cpus - 1.0).abs() < 1e-9, "final budget {} != 1.0", w.cpus);
+    }
+    assert!(s0.energy_j > 0.0 && s1.energy_j > 0.0);
+    assert!(s0.avg_power_w <= DeviceSpec::tx2().power.peak() + 1e-9);
+    assert!(out.regrants >= 2, "shrink + absorb regrants");
+    assert_eq!(out.metrics.counter("work_conservation_violations"), 0);
+    assert_eq!(out.metrics.counter("session_resizes"), 8);
+    assert_eq!(out.metrics.counter("sessions_opened"), 2);
+}
+
+#[test]
+fn engine_sheds_frames_instead_of_restarting_live_sessions() {
+    // With a 5 s container startup, a k-changing regrant verdict is
+    // expensive: the model-only engine restarts (re-paying startup),
+    // while a session-backed engine sheds the remaining frames across
+    // the live workers instead — zero restarts, at least one shed.
+    let mut dev = DeviceSpec::tx2();
+    dev.container_startup_s = 5.0;
+    let jobs = || {
+        vec![
+            EngineJob::new(0, 0.0, 720, TaskProfile::yolo_tiny()),
+            EngineJob::new(1, 10.0, 48, TaskProfile::yolo_tiny()),
+        ]
+    };
+    let mut cfg = EngineConfig::single_node(dev.clone());
+    cfg.max_concurrent_jobs = 2;
+    cfg.grant_policy = GrantPolicy::Elastic;
+
+    let model_only = ServingEngine::new(cfg.clone(), jobs(), SplitDecider::PerNodeOptimal)
+        .run()
+        .unwrap();
+    assert!(
+        model_only.metrics.counter("regrant_restarts") >= 1,
+        "the shrink should force a k change without a session"
+    );
+
+    let mut backend = SimBackend;
+    let with_sessions = ServingEngine::new(cfg, jobs(), SplitDecider::PerNodeOptimal)
+        .with_backend(&mut backend)
+        .run()
+        .unwrap();
+    assert_eq!(
+        with_sessions.metrics.counter("regrant_restarts"),
+        0,
+        "live sessions never restart containers mid-job"
+    );
+    assert!(
+        with_sessions.metrics.counter("regrant_sheds") >= 1,
+        "the k-changing verdict must become a shed"
+    );
+    assert_eq!(with_sessions.completed.len(), 2);
+    assert_eq!(with_sessions.session_reports.len(), 2);
+    assert_eq!(with_sessions.metrics.counter("work_conservation_violations"), 0);
+}
+
+#[test]
+fn serve_real_mode_runs_concurrent_stub_sessions_end_to_end() {
+    // `serve --mode real` (stub engine): the coordinator's planner path
+    // drives real concurrent sessions; the report carries both the
+    // model-side metrics and the drained session aggregates.
+    let mut base = ExperimentConfig::default();
+    base.mode = ExecMode::Real;
+    base.stub_engine = true;
+    let mut coordinator = Coordinator::new(base, SplitPolicy::Fixed(4));
+    let report = serve(
+        &mut coordinator,
+        &ServeConfig {
+            jobs: 3,
+            arrival: Some(ArrivalProcess::Deterministic { gap_s: 5.0 }),
+            frames_per_job: 32,
+            seed: 11,
+            max_concurrent_jobs: 2,
+            grant_policy: GrantPolicy::Elastic,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.jobs, 3);
+    assert_eq!(report.frames, 96);
+    assert_eq!(report.sessions, 3, "every job ran through a live session");
+    assert!(
+        report.session_resizes >= 1,
+        "overlapping arrivals must trigger at least one live token-bucket resize"
+    );
+    assert!(report.session_energy_j > 0.0);
+    assert!(report.total_energy_j > 0.0);
+    let j = report.to_json();
+    assert_eq!(j.get("sessions").unwrap().as_usize(), Some(3));
+    assert!(j.get("session_energy_j").unwrap().as_f64().unwrap() > 0.0);
+}
