@@ -1,0 +1,197 @@
+//! FS — fleet-scale hot-path macro bench: the slab DES core, the
+//! interned plan cache and power-of-two placement under a trace-driven
+//! load (~1k simulated nodes, ~100k jobs), with the saved-baseline
+//! workflow from `divide_and_save::bench`.
+//!
+//! Usage (through `cargo bench --bench fleet_scale -- <flags>`):
+//!   --save-baseline <name>   persist this run as rust/BENCH_<name>.json
+//!   --baseline <name>        compare against a saved baseline; exits
+//!                            nonzero on a >25% des_events_per_sec
+//!                            regression (other deltas are reported but
+//!                            only warn — model-side metrics are
+//!                            deterministic, machine-side ones noisy)
+//!   --smoke                  reduced sizes for CI smoke runs
+//!   --strict                 enforce the absolute perf floors
+//!                            (>=1M DES events/sec, <1us cached plans)
+
+use std::time::Instant;
+
+use divide_and_save::bench::{
+    banner, compare_to_baseline, load_baseline, save_baseline, BenchArgs, Metric, Table,
+};
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::coordinator::planner::{PlanRequest, Planner};
+use divide_and_save::coordinator::router::SplitPolicy;
+use divide_and_save::coordinator::{FixedModePlanner, OnlineOptimizer};
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::sched::EventQueue;
+use divide_and_save::server::{
+    EngineConfig, EngineJob, PlacementPolicy, ServingEngine, SplitDecider,
+};
+use divide_and_save::util::rng::Rng;
+use divide_and_save::workload::{ArrivalProcess, TaskProfile};
+
+/// Slab DES core under the engine's steady-state churn: a standing
+/// population of events; every pop schedules a replacement, and every
+/// 4th replacement is cancelled and rescheduled (the regrant pattern).
+/// Returns events popped per second.
+fn des_queue_events_per_sec(ops: usize) -> f64 {
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut rng = Rng::new(97);
+    for i in 0..1024u64 {
+        let _ = q.push(rng.f64() * 10.0, i);
+    }
+    let t0 = Instant::now();
+    let mut pops = 0u64;
+    while (pops as usize) < ops {
+        let (t, _) = q.pop().expect("population is self-sustaining");
+        pops += 1;
+        let h = q.push(t + 0.1 + rng.f64(), pops);
+        if pops % 4 == 0 && q.cancel(h) {
+            let _ = q.push(t + 0.2 + rng.f64(), pops);
+        }
+    }
+    ops as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Warm-cache planner lookup: one probe populates the interned
+/// decision cache, then every subsequent plan is a packed-key hash hit.
+/// Returns mean nanoseconds per cached plan.
+fn cached_plan_ns(iters: usize) -> f64 {
+    let base = ExperimentConfig { device: DeviceSpec::orin(), ..ExperimentConfig::default() };
+    let mut planner =
+        FixedModePlanner::new(base, SplitPolicy::Online(OnlineOptimizer::default()));
+    let req = PlanRequest::new(DeviceSpec::orin(), TaskProfile::yolo_tiny(), 96);
+    planner.plan(&req).expect("probe"); // the one miss
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let plan = planner.plan(&req).expect("cached plan");
+        std::hint::black_box(&plan);
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let stats = planner.cache_stats();
+    assert_eq!(stats.misses, 1, "warm loop must never re-probe");
+    assert_eq!(stats.hits, iters as u64);
+    ns
+}
+
+struct FleetRun {
+    wall_s: f64,
+    des_events: u64,
+    jobs: usize,
+    mean_latency_s: f64,
+    energy_per_job_j: f64,
+}
+
+/// Trace-driven fleet macro run: `nodes` Orin nodes behind power-of-two
+/// placement, Poisson arrivals at ~45% per-node utilization, each job
+/// split at its node's energy-optimal k.
+fn fleet_macro(nodes: usize, jobs: usize) -> FleetRun {
+    let mut cfg = EngineConfig::single_node(DeviceSpec::orin());
+    cfg.nodes = vec![DeviceSpec::orin(); nodes];
+    cfg.placement = PlacementPolicy::PowerOfTwo;
+    let rate_per_s = 0.2 * nodes as f64; // ~45% of per-node capacity
+    let mut rng = Rng::new(31);
+    let engine_jobs: Vec<EngineJob> = ArrivalProcess::Poisson { rate_per_s }
+        .arrivals(jobs, &mut rng)
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| EngineJob::new(i as u64, t, 96, TaskProfile::yolo_tiny()))
+        .collect();
+    let t0 = Instant::now();
+    let outcome = ServingEngine::new(cfg, engine_jobs, SplitDecider::PerNodeOptimal)
+        .run()
+        .expect("fleet run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(outcome.completed.len(), jobs);
+    let mean_latency_s = outcome
+        .completed
+        .iter()
+        .map(|c| c.latency_s())
+        .sum::<f64>()
+        / jobs as f64;
+    FleetRun {
+        wall_s,
+        des_events: outcome.des_events,
+        jobs,
+        mean_latency_s,
+        energy_per_job_j: outcome.node_energy_j.iter().sum::<f64>() / jobs as f64,
+    }
+}
+
+fn main() {
+    let args = BenchArgs::parse_env();
+    let (des_ops, plan_iters, nodes, jobs) = if args.smoke {
+        (100_000, 20_000, 100, 5_000)
+    } else {
+        (1_000_000, 200_000, 1_000, 100_000)
+    };
+
+    banner("FS", "fleet-scale hot paths (slab DES, plan cache, p2c placement)");
+
+    let des_rate = des_queue_events_per_sec(des_ops);
+    println!("slab DES queue: {:.2}M events/sec over {des_ops} churn ops", des_rate / 1e6);
+
+    let plan_ns = cached_plan_ns(plan_iters);
+    println!("cached plan lookup: {plan_ns:.0} ns (n={plan_iters})");
+
+    let fleet = fleet_macro(nodes, jobs);
+    let fleet_rate = fleet.des_events as f64 / fleet.wall_s;
+    let admission_us = fleet.wall_s / fleet.jobs as f64 * 1e6;
+    println!(
+        "fleet macro ({nodes} nodes, {jobs} jobs): {:.2}s wall, {} DES events \
+         ({:.2}M events/sec), {admission_us:.1} us/job end to end",
+        fleet.wall_s,
+        fleet.des_events,
+        fleet_rate / 1e6
+    );
+
+    let metrics = vec![
+        Metric::higher("des_events_per_sec", des_rate),
+        Metric::lower("cached_plan_ns", plan_ns),
+        Metric::higher("fleet_events_per_sec", fleet_rate),
+        Metric::lower("admission_decision_us", admission_us),
+        Metric::lower("fleet_mean_latency_s", fleet.mean_latency_s),
+        Metric::lower("fleet_energy_per_job_j", fleet.energy_per_job_j),
+    ];
+
+    let mut t = Table::new(["metric", "value"]);
+    for m in &metrics {
+        t.row([m.name.as_str(), &format!("{:.3}", m.value)]);
+    }
+    t.print();
+
+    if let Some(name) = &args.baseline {
+        match load_baseline(name).expect("loading baseline") {
+            None => println!("\nno saved baseline {name:?} — skipping comparison"),
+            Some(base) => {
+                let (table, failures) = compare_to_baseline(&metrics, &base, 0.25);
+                println!("\nvs baseline {name:?}:\n{table}");
+                for f in &failures {
+                    eprintln!("regression: {f}");
+                }
+                // The CI gate is the DES core's throughput; the other
+                // deltas are informational (model metrics shift only
+                // with intentional model changes, machine metrics are
+                // host-dependent).
+                if failures.iter().any(|f| f.starts_with("des_events_per_sec")) {
+                    eprintln!("des_events_per_sec regressed more than 25% — failing");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+
+    if let Some(name) = &args.save_baseline {
+        let path = save_baseline(name, &metrics).expect("saving baseline");
+        println!("\nsaved baseline to {}", path.display());
+    }
+
+    if args.strict {
+        assert!(
+            des_rate >= 1.0e6,
+            "DES core must sustain >=1M events/sec, got {des_rate:.0}"
+        );
+        assert!(plan_ns < 1_000.0, "cached plans must stay sub-microsecond, got {plan_ns:.0} ns");
+    }
+}

@@ -1,9 +1,15 @@
 //! Self-built benchmark harness (criterion is not in the offline vendor
-//! set): warmup + timed iterations, mean ± σ, and aligned table printing
-//! shared by every `rust/benches/*.rs` target.
+//! set): warmup + timed iterations, mean ± σ, aligned table printing,
+//! and a saved-baseline workflow (`--save-baseline <name>` /
+//! `--baseline <name>`) so bench numbers can be compared across PRs —
+//! see the "Performance" section of DESIGN.md.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
 use crate::util::stats::{summarize, Summary};
 
 /// Timing result of one benchmark case.
@@ -98,6 +104,204 @@ pub fn banner(id: &str, what: &str) {
     println!("\n=== {id}: {what} ===");
 }
 
+/// One scalar a bench run tracks across PRs (events/sec, ns/lookup, …).
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    /// Direction of goodness: `true` for throughputs (bigger is
+    /// better), `false` for latencies/energies (smaller is better).
+    /// The regression gate only fires on moves in the BAD direction.
+    pub higher_is_better: bool,
+}
+
+impl Metric {
+    /// A bigger-is-better metric (throughput, events/sec).
+    pub fn higher(name: &str, value: f64) -> Metric {
+        Metric { name: name.to_string(), value, higher_is_better: true }
+    }
+
+    /// A smaller-is-better metric (latency, energy).
+    pub fn lower(name: &str, value: f64) -> Metric {
+        Metric { name: name.to_string(), value, higher_is_better: false }
+    }
+}
+
+/// Common CLI surface for bench binaries: `--save-baseline <name>`,
+/// `--baseline <name>`, `--iters <n>`, `--smoke`, `--strict`.
+/// Unrecognized arguments are ignored (cargo's own `--bench` etc.).
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    /// Persist this run's metrics as `BENCH_<name>.json`.
+    pub save_baseline: Option<String>,
+    /// Compare this run's metrics against a saved `BENCH_<name>.json`.
+    pub baseline: Option<String>,
+    /// Override the bench's iteration count.
+    pub iters: Option<usize>,
+    /// Reduced problem sizes for CI smoke runs.
+    pub smoke: bool,
+    /// Enforce the bench's absolute perf assertions (off by default so
+    /// loaded CI machines can't spuriously fail a functional run).
+    pub strict: bool,
+}
+
+impl BenchArgs {
+    pub fn parse_env() -> BenchArgs {
+        BenchArgs::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> BenchArgs {
+        let mut out = BenchArgs::default();
+        let mut it = args.into_iter();
+        while let Some(arg) = it.next() {
+            // Accept both `--flag value` and `--flag=value`.
+            let (flag, inline) = match arg.split_once('=') {
+                Some((f, v)) => (f.to_string(), Some(v.to_string())),
+                None => (arg, None),
+            };
+            let value = |it: &mut I::IntoIter| inline.clone().or_else(|| it.next());
+            match flag.as_str() {
+                "--save-baseline" => out.save_baseline = value(&mut it),
+                "--baseline" => out.baseline = value(&mut it),
+                "--iters" => out.iters = value(&mut it).and_then(|v| v.parse().ok()),
+                "--smoke" => out.smoke = true,
+                "--strict" => out.strict = true,
+                _ => {}
+            }
+        }
+        out
+    }
+}
+
+/// Where `BENCH_<name>.json` lives: the crate root (`rust/`), so saved
+/// baselines sit next to the benches that produce them and can be
+/// checked in.
+pub fn baseline_path(name: &str) -> PathBuf {
+    let dir = std::env::var("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("."));
+    dir.join(format!("BENCH_{name}.json"))
+}
+
+/// Serialize metrics to a baseline file.
+pub fn write_baseline(path: &Path, name: &str, metrics: &[Metric]) -> Result<()> {
+    let entries: Vec<Json> = metrics
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("name", Json::str(&m.name)),
+                ("value", Json::num(m.value)),
+                ("higher_is_better", Json::Bool(m.higher_is_better)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("baseline", Json::str(name)),
+        ("metrics", Json::arr(entries)),
+    ]);
+    std::fs::write(path, doc.pretty())
+        .with_context(|| format!("writing baseline {}", path.display()))
+}
+
+/// Read a baseline file back into (metric name, value) pairs.
+pub fn read_baseline(path: &Path) -> Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading baseline {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing baseline {}: {e:?}", path.display()))?;
+    let metrics = doc
+        .get("metrics")
+        .and_then(Json::as_array)
+        .context("baseline has no `metrics` array")?;
+    metrics
+        .iter()
+        .map(|m| {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .context("metric without a name")?;
+            let value = m
+                .get("value")
+                .and_then(Json::as_f64)
+                .context("metric without a value")?;
+            Ok((name.to_string(), value))
+        })
+        .collect()
+}
+
+/// Persist this run's metrics as `BENCH_<name>.json` (checked in, so
+/// PRs diff against it).
+pub fn save_baseline(name: &str, metrics: &[Metric]) -> Result<PathBuf> {
+    let path = baseline_path(name);
+    write_baseline(&path, name, metrics)?;
+    Ok(path)
+}
+
+/// Load `BENCH_<name>.json`, or `None` when no baseline was ever saved
+/// (first run on a branch — a comparison then is a warning, not an
+/// error).
+pub fn load_baseline(name: &str) -> Result<Option<Vec<(String, f64)>>> {
+    let path = baseline_path(name);
+    if !path.exists() {
+        return Ok(None);
+    }
+    read_baseline(&path).map(Some)
+}
+
+fn fmt_metric(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1e6 || v.abs() < 1e-3 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Criterion-style delta report: every current metric against the
+/// baseline, with the signed relative change. Returns the rendered
+/// table and the list of metrics whose move in the BAD direction
+/// exceeds `fail_threshold` (a fraction: 0.25 = fail a >25%
+/// regression). Metrics absent from the baseline are listed as new and
+/// never fail.
+pub fn compare_to_baseline(
+    current: &[Metric],
+    baseline: &[(String, f64)],
+    fail_threshold: f64,
+) -> (String, Vec<String>) {
+    let mut t = Table::new(["metric", "current", "baseline", "delta"]);
+    let mut failures = Vec::new();
+    for m in current {
+        let base = baseline.iter().find(|(n, _)| *n == m.name).map(|&(_, v)| v);
+        match base {
+            None => t.row([m.name.as_str(), &fmt_metric(m.value), "-", "(new)"]),
+            Some(b) if b.abs() <= f64::EPSILON => {
+                t.row([m.name.as_str(), &fmt_metric(m.value), &fmt_metric(b), "n/a"]);
+            }
+            Some(b) => {
+                let delta = (m.value - b) / b;
+                let regression = if m.higher_is_better { -delta } else { delta };
+                t.row([
+                    m.name.as_str(),
+                    &fmt_metric(m.value),
+                    &fmt_metric(b),
+                    &format!("{:+.1}%", delta * 100.0),
+                ]);
+                if regression > fail_threshold {
+                    failures.push(format!(
+                        "{}: {:+.1}% vs baseline {} (budget {:.0}%)",
+                        m.name,
+                        delta * 100.0,
+                        fmt_metric(b),
+                        fail_threshold * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    (t.render(), failures)
+}
+
 /// The A5 bursty operating point (motion-triggered-camera MMPP): the
 /// single definition the A5/A7/A8 benches share, so the ablations that
 /// claim to reuse "the A5 trace" cannot silently drift from it.
@@ -170,5 +374,70 @@ mod tests {
     fn table_arity_checked() {
         let mut t = Table::new(["a", "b"]);
         t.row(["only"]);
+    }
+
+    #[test]
+    fn bench_args_parse_both_forms() {
+        let args = |xs: &[&str]| BenchArgs::parse(xs.iter().map(|s| s.to_string()));
+        let a = args(&["--save-baseline", "fleet", "--iters=3", "--smoke"]);
+        assert_eq!(a.save_baseline.as_deref(), Some("fleet"));
+        assert_eq!(a.iters, Some(3));
+        assert!(a.smoke);
+        assert!(!a.strict);
+        let b = args(&["--baseline=main", "--strict", "--bench", "ignored"]);
+        assert_eq!(b.baseline.as_deref(), Some("main"));
+        assert!(b.strict);
+        assert!(b.save_baseline.is_none());
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let path = std::env::temp_dir()
+            .join(format!("BENCH_roundtrip_{}.json", std::process::id()));
+        let metrics = vec![
+            Metric::higher("des_events_per_sec", 2.5e6),
+            Metric::lower("cached_plan_ns", 240.0),
+        ];
+        write_baseline(&path, "roundtrip", &metrics).unwrap();
+        let back = read_baseline(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "des_events_per_sec");
+        assert!((back[0].1 - 2.5e6).abs() < 1e-6);
+        assert!((back[1].1 - 240.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compare_flags_only_bad_direction_moves() {
+        let baseline = vec![
+            ("throughput".to_string(), 1000.0),
+            ("latency_ns".to_string(), 100.0),
+        ];
+        // Throughput UP and latency DOWN are improvements: no failures,
+        // however large.
+        let better = vec![
+            Metric::higher("throughput", 2000.0),
+            Metric::lower("latency_ns", 10.0),
+        ];
+        let (table, failures) = compare_to_baseline(&better, &baseline, 0.25);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(table.contains("throughput"));
+        // A 30% throughput DROP breaks the 25% budget; a 10% one holds.
+        let worse = vec![Metric::higher("throughput", 700.0)];
+        let (_, failures) = compare_to_baseline(&worse, &baseline, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("throughput"));
+        let slight = vec![Metric::higher("throughput", 900.0)];
+        let (_, failures) = compare_to_baseline(&slight, &baseline, 0.25);
+        assert!(failures.is_empty(), "{failures:?}");
+        // Latency REGRESSES upward.
+        let slow = vec![Metric::lower("latency_ns", 200.0)];
+        let (_, failures) = compare_to_baseline(&slow, &baseline, 0.25);
+        assert_eq!(failures.len(), 1);
+        // Metrics new to the baseline inform, never fail.
+        let new = vec![Metric::higher("fresh_metric", 1.0)];
+        let (table, failures) = compare_to_baseline(&new, &baseline, 0.25);
+        assert!(failures.is_empty());
+        assert!(table.contains("(new)"));
     }
 }

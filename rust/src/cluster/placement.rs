@@ -104,6 +104,7 @@ impl Cluster {
             min_cores_per_job: 1.0,
             grant_policy: self.grant_policy,
             deadline_weighted_shares: false,
+            ..EngineConfig::single_node(self.devices[0].clone())
         };
         let outcome =
             ServingEngine::new(cfg, engine_jobs, SplitDecider::PerNodeOptimal).run()?;

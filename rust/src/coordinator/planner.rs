@@ -25,16 +25,16 @@
 //! service agrees with what `server::allocator::plan_service` will
 //! schedule.
 
-use std::collections::BTreeMap;
-
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::optimizer::{OnlineOptimizer, OptimizerDecision};
 use crate::coordinator::router::SplitPolicy;
 use crate::device::dvfs::PowerMode;
+use crate::device::intern::{intern, Sym};
 use crate::device::DeviceSpec;
 use crate::sched::interference;
+use crate::util::hash::FxHashMap;
 use crate::workload::TaskProfile;
 
 /// Everything a planner needs to decide (mode, k) for one job.
@@ -158,10 +158,16 @@ pub trait Planner: std::fmt::Debug {
     /// Short name for logs / CLI summaries.
     fn name(&self) -> &'static str;
 
-    /// Cached optimizer decisions, for inspection and tests. Planners
-    /// without a cache return an empty list.
-    fn cached_decisions(&self) -> Vec<(&String, &OptimizerDecision)> {
+    /// Cached optimizer decisions, for inspection and tests, sorted by
+    /// their human-readable key. Planners without a cache return an
+    /// empty list.
+    fn cached_decisions(&self) -> Vec<(&str, &OptimizerDecision)> {
         Vec::new()
+    }
+
+    /// Decision-cache counters. Planners without a cache report zeros.
+    fn cache_stats(&self) -> PlanCacheStats {
+        PlanCacheStats::default()
     }
 
     /// The raw k of a wrapped `SplitPolicy::Fixed`, when this planner
@@ -308,35 +314,84 @@ fn k_max_for(req: &PlanRequest, mode: &PowerMode) -> usize {
     core_cap.min(mem_cap).min(req.k_cap).max(1)
 }
 
+/// Hit/miss/occupancy counters for a planner's decision cache, exposed
+/// through `ServeReport` so serving runs can show whether admissions
+/// amortized their probe cost.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// Packed decision-cache key: interned identifiers plus the integer
+/// quantizations the legacy string key spelled out. Two requests
+/// collide on this key exactly when they collided on the old
+/// `format!("{device}{mode_tag}/{task}/c{grant:.1}/k{cap}[/p{p}]")`
+/// string — the grant is stored in half-cores, the same resolution the
+/// `{:.1}` formatting of the half-core-floored grant exposed — so the
+/// cache rewrite cannot change any decision, only its lookup cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PlanKey {
+    device: Sym,
+    /// `Sym::NONE` for the device's default mode (the legacy key
+    /// omitted the mode segment there).
+    mode: Sym,
+    task: Sym,
+    /// Grant quantized DOWN to half-cores, stored as a count of
+    /// half-cores (`(avail_cores * 2).floor()`, min 2).
+    grant_half_cores: u32,
+    cap: usize,
+    current_k: Option<usize>,
+}
+
+/// A cached decision plus the human-readable twin of its packed key
+/// (built once, on the miss path) for logs and `cached_decisions`.
+#[derive(Debug)]
+struct CacheEntry {
+    key_str: String,
+    decision: OptimizerDecision,
+}
+
 /// The pre-redesign decision logic behind the [`Planner`] surface:
 /// chooses k exactly as the retired `Coordinator::decide_k_*` family
 /// did (same clamps, same tiny-grant shortcut, same half-core grant
-/// quantization, same cache keys, same sticky regrant preference), in
-/// the request's pinned mode or the device default.
+/// quantization, same cache-key equivalence classes, same sticky
+/// regrant preference), in the request's pinned mode or the device
+/// default.
 #[derive(Debug)]
 pub struct FixedModePlanner {
     /// Base experiment config: probe runs clone this (sensor period,
     /// seed, startup override — the knobs the old router inherited).
     pub base: ExperimentConfig,
     pub policy: SplitPolicy,
-    decisions: BTreeMap<String, OptimizerDecision>,
+    decisions: FxHashMap<PlanKey, CacheEntry>,
+    cache_hits: u64,
+    cache_misses: u64,
 }
 
 impl FixedModePlanner {
     pub fn new(base: ExperimentConfig, policy: SplitPolicy) -> Self {
-        FixedModePlanner { base, policy, decisions: BTreeMap::new() }
+        FixedModePlanner {
+            base,
+            policy,
+            decisions: FxHashMap::default(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
     }
 
     /// Decide k for the request — verbatim the old `decide_k_inner`.
-    /// `mode_tag` disambiguates the decision cache when `device` is a
+    /// `mode` disambiguates the decision cache when `device` is a
     /// non-default mode derivation (same `name`, different clocks);
-    /// empty for the default mode, so pre-redesign cache keys are
-    /// preserved byte-for-byte.
+    /// `default_mode` keys as the legacy no-mode-segment case, so
+    /// pre-redesign cache equivalence classes are preserved exactly.
     fn decide_k(
         &mut self,
         req: &PlanRequest,
         device: &DeviceSpec,
-        mode_tag: &str,
+        mode: &PowerMode,
+        default_mode: bool,
     ) -> Result<usize> {
         let frames = req.frames;
         let core_cap = device
@@ -370,19 +425,19 @@ impl FixedModePlanner {
                 // actually granted; half-core resolution is finer than
                 // any k decision boundary the convex models produce.
                 let grant_q = ((req.avail_cores * 2.0).floor() / 2.0).max(1.0);
-                let key = match req.current_k {
-                    None => format!(
-                        "{}{mode_tag}/{}/c{:.1}/k{}",
-                        device.name, req.task.name, grant_q, cap
-                    ),
-                    Some(p) => format!(
-                        "{}{mode_tag}/{}/c{:.1}/k{}/p{p}",
-                        device.name, req.task.name, grant_q, cap
-                    ),
+                let key = PlanKey {
+                    device: intern(device.name),
+                    mode: if default_mode { Sym::NONE } else { intern(mode.name) },
+                    task: intern(&req.task.name),
+                    grant_half_cores: (grant_q * 2.0) as u32,
+                    cap,
+                    current_k: req.current_k,
                 };
-                if let Some(d) = self.decisions.get(&key) {
-                    return Ok(d.best_k);
+                if let Some(e) = self.decisions.get(&key) {
+                    self.cache_hits += 1;
+                    return Ok(e.decision.best_k);
                 }
+                self.cache_misses += 1;
                 let mut cfg = self.base.clone();
                 cfg.task = req.task.clone();
                 cfg.video = crate::workload::Video::with_frames("plan", frames, cfg.video.fps);
@@ -392,18 +447,33 @@ impl FixedModePlanner {
                 // the device probes an enlarged device model. Derived
                 // modes clamp to the mode's core count (probing cores
                 // the mode disabled would be meaningless).
-                cfg.device.cores = if mode_tag.is_empty() {
+                cfg.device.cores = if default_mode {
                     grant_q
                 } else {
                     grant_q.min(device.cores)
                 };
                 let d = opt.fit_decision(&cfg, cap, req.current_k)?;
                 let k = d.best_k;
+                let mode_tag = if default_mode {
+                    String::new()
+                } else {
+                    format!("/m:{}", mode.name)
+                };
+                let key_str = match req.current_k {
+                    None => format!(
+                        "{}{mode_tag}/{}/c{grant_q:.1}/k{cap}",
+                        device.name, req.task.name
+                    ),
+                    Some(p) => format!(
+                        "{}{mode_tag}/{}/c{grant_q:.1}/k{cap}/p{p}",
+                        device.name, req.task.name
+                    ),
+                };
                 log::info!(
-                    "planner: optimized k={k} for {key} (model: {})",
+                    "planner: optimized k={k} for {key_str} (model: {})",
                     d.model.describe()
                 );
-                self.decisions.insert(key, d);
+                self.decisions.insert(key, CacheEntry { key_str, decision: d });
                 Ok(k)
             }
         }
@@ -412,29 +482,43 @@ impl FixedModePlanner {
 
 impl Planner for FixedModePlanner {
     fn plan(&mut self, req: &PlanRequest) -> Result<Plan> {
-        let mode = req
-            .pinned_mode
-            .clone()
-            .unwrap_or_else(|| PowerMode::default_for(&req.device));
+        let default_mode_store;
+        let mode = match &req.pinned_mode {
+            Some(m) => m,
+            None => {
+                default_mode_store = PowerMode::default_for(&req.device);
+                &default_mode_store
+            }
+        };
         // The default mode's `apply` is the identity on the calibrated
         // spec, so the probe/cache path below sees exactly the device
         // the old decide_k surface saw.
         let eff = mode.apply(&req.device);
-        let mode_tag = if mode.is_default_for(&req.device) {
-            String::new()
-        } else {
-            format!("/m:{}", mode.name)
-        };
-        let k = self.decide_k(req, &eff, &mode_tag)?;
-        Ok(plan_candidate(req, &mode, k))
+        let default_mode = mode.is_default_for(&req.device);
+        let k = self.decide_k(req, &eff, mode, default_mode)?;
+        Ok(plan_candidate(req, mode, k))
     }
 
     fn name(&self) -> &'static str {
         "fixed"
     }
 
-    fn cached_decisions(&self) -> Vec<(&String, &OptimizerDecision)> {
-        self.decisions.iter().collect()
+    fn cached_decisions(&self) -> Vec<(&str, &OptimizerDecision)> {
+        let mut out: Vec<(&str, &OptimizerDecision)> = self
+            .decisions
+            .values()
+            .map(|e| (e.key_str.as_str(), &e.decision))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(b.0));
+        out
+    }
+
+    fn cache_stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.cache_hits,
+            misses: self.cache_misses,
+            entries: self.decisions.len(),
+        }
     }
 
     fn fixed_policy_k(&self) -> Option<usize> {
@@ -476,37 +560,45 @@ impl Planner for JointPlanner {
         // is spendable), the baseline's predicted time otherwise (a
         // deadline-less job must not slow down).
         let budget = req.deadline_s.unwrap_or(baseline.predicted_time_s);
+        let baseline_energy_j = baseline.predicted_energy_j;
 
+        // Candidates are selected by index and moved out at the end —
+        // a winning plan is never cloned.
         let mut candidates = Vec::new();
         for mode in PowerMode::modes_for(&req.device) {
             for k in 1..=k_max_for(req, &mode) {
                 candidates.push(plan_candidate(req, &mode, k));
             }
         }
-        candidates.push(baseline.clone());
+        candidates.push(baseline);
 
-        let feasible: Vec<&Plan> = candidates
-            .iter()
-            .filter(|p| p.predicted_time_s <= budget + 1e-9)
+        let feasible: Vec<usize> = (0..candidates.len())
+            .filter(|&i| candidates[i].predicted_time_s <= budget + 1e-9)
             .collect();
         if feasible.is_empty() {
             // Deadline tighter than anything achievable: race. The
             // baseline competes too, so this never regresses its time.
-            let fastest = candidates
-                .iter()
-                .min_by(|a, b| {
-                    (a.predicted_time_s, a.predicted_energy_j)
-                        .partial_cmp(&(b.predicted_time_s, b.predicted_energy_j))
+            let fastest = (0..candidates.len())
+                .min_by(|&a, &b| {
+                    (candidates[a].predicted_time_s, candidates[a].predicted_energy_j)
+                        .partial_cmp(&(
+                            candidates[b].predicted_time_s,
+                            candidates[b].predicted_energy_j,
+                        ))
                         .unwrap_or(std::cmp::Ordering::Equal)
                 })
                 .expect("candidate grid is never empty");
-            return Ok(fastest.clone());
+            return Ok(candidates.swap_remove(fastest));
         }
         let best = feasible
             .iter()
-            .min_by(|a, b| {
-                (a.predicted_energy_j, a.predicted_time_s)
-                    .partial_cmp(&(b.predicted_energy_j, b.predicted_time_s))
+            .copied()
+            .min_by(|&a, &b| {
+                (candidates[a].predicted_energy_j, candidates[a].predicted_time_s)
+                    .partial_cmp(&(
+                        candidates[b].predicted_energy_j,
+                        candidates[b].predicted_time_s,
+                    ))
                     .unwrap_or(std::cmp::Ordering::Equal)
             })
             .expect("feasible set checked non-empty");
@@ -517,35 +609,41 @@ impl Planner for JointPlanner {
         // guarantee (joint ≤ fixed on predicted energy) survives the
         // stickiness.
         if let Some(cur) = req.current_k {
-            if best.k != cur {
+            if candidates[best].k != cur {
                 let sticky = feasible
                     .iter()
-                    .filter(|p| p.k == cur)
-                    .min_by(|a, b| {
-                        a.predicted_energy_j
-                            .partial_cmp(&b.predicted_energy_j)
+                    .copied()
+                    .filter(|&i| candidates[i].k == cur)
+                    .min_by(|&a, &b| {
+                        candidates[a]
+                            .predicted_energy_j
+                            .partial_cmp(&candidates[b].predicted_energy_j)
                             .unwrap_or(std::cmp::Ordering::Equal)
                     });
                 if let Some(sticky) = sticky {
-                    let band =
-                        best.predicted_energy_j * (1.0 + OnlineOptimizer::REGRANT_STICKINESS);
-                    if sticky.predicted_energy_j <= band
-                        && sticky.predicted_energy_j <= baseline.predicted_energy_j + 1e-9
+                    let band = candidates[best].predicted_energy_j
+                        * (1.0 + OnlineOptimizer::REGRANT_STICKINESS);
+                    if candidates[sticky].predicted_energy_j <= band
+                        && candidates[sticky].predicted_energy_j <= baseline_energy_j + 1e-9
                     {
-                        return Ok((*sticky).clone());
+                        return Ok(candidates.swap_remove(sticky));
                     }
                 }
             }
         }
-        Ok((*best).clone())
+        Ok(candidates.swap_remove(best))
     }
 
     fn name(&self) -> &'static str {
         "joint"
     }
 
-    fn cached_decisions(&self) -> Vec<(&String, &OptimizerDecision)> {
+    fn cached_decisions(&self) -> Vec<(&str, &OptimizerDecision)> {
         self.inner.cached_decisions()
+    }
+
+    fn cache_stats(&self) -> PlanCacheStats {
+        self.inner.cache_stats()
     }
 }
 
@@ -685,6 +783,31 @@ mod tests {
         let j2 = p2.plan(&r2).unwrap();
         assert_eq!(j2.k, 4);
         assert_eq!(j2.action, PlanAction::Restart);
+    }
+
+    #[test]
+    fn plan_cache_counts_hits_and_misses() {
+        let mut p = FixedModePlanner::new(
+            ExperimentConfig::default(),
+            SplitPolicy::Online(OnlineOptimizer::default()),
+        );
+        let r = req(DeviceSpec::tx2());
+        let first = p.plan(&r).unwrap();
+        let s1 = p.cache_stats();
+        assert_eq!((s1.hits, s1.misses, s1.entries), (0, 1, 1));
+        let second = p.plan(&r).unwrap();
+        assert_eq!(second.k, first.k, "cache hit must return the same decision");
+        let s2 = p.cache_stats();
+        assert_eq!((s2.hits, s2.misses, s2.entries), (1, 1, 1));
+        // The inspection surface still speaks the legacy key format.
+        let cached = p.cached_decisions();
+        assert_eq!(cached.len(), 1);
+        assert!(
+            cached[0].0.starts_with(DeviceSpec::tx2().name),
+            "key = {}",
+            cached[0].0
+        );
+        assert!(cached[0].0.contains("/c"), "key = {}", cached[0].0);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::config::ExperimentConfig;
 use crate::coordinator::executor::{self, ExperimentResult};
 use crate::coordinator::optimizer::{OnlineOptimizer, OptimizerDecision};
-use crate::coordinator::planner::{FixedModePlanner, Plan, PlanRequest, Planner};
+use crate::coordinator::planner::{FixedModePlanner, Plan, PlanCacheStats, PlanRequest, Planner};
 use crate::metrics::Registry;
 use crate::workload::{TaskProfile, Video};
 
@@ -124,8 +124,13 @@ impl Coordinator {
     }
 
     /// Cached optimizer decisions (for inspection / tests).
-    pub fn decisions(&self) -> Vec<(&String, &OptimizerDecision)> {
+    pub fn decisions(&self) -> Vec<(&str, &OptimizerDecision)> {
         self.planner.cached_decisions()
+    }
+
+    /// Plan-cache hit/miss/occupancy counters from the planner.
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        self.planner.cache_stats()
     }
 }
 

@@ -1,0 +1,103 @@
+//! String interning for the identifiers that appear in hot-path cache
+//! keys: device-spec names, power-mode names, task names.
+//!
+//! The plan cache used to key on `format!`-built strings — one heap
+//! allocation plus a byte-wise compare per admission. Interning maps
+//! each distinct name to a stable `u32` [`Sym`] once, so cache keys
+//! become packed integer structs that hash and compare in a few cycles.
+//!
+//! The table leaks each distinct string once (`Box::leak`) to hand out
+//! `&'static str` on resolve without a lock. That is deliberate and
+//! bounded: the domain is device presets (2), their power modes (≤3
+//! each) and task profiles (a handful) — not user-controlled input.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::hash::FxBuildHasher;
+
+/// Interned string id. `Sym(0)` is reserved for [`Sym::NONE`], the
+/// explicit "no value" marker packed cache keys use instead of
+/// `Option<Sym>` padding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Sym(u32);
+
+impl Sym {
+    /// Sentinel meaning "absent" (e.g. the default power mode, which
+    /// the legacy string keys encoded by omitting the mode segment).
+    pub const NONE: Sym = Sym(0);
+
+    pub fn is_none(self) -> bool {
+        self == Sym::NONE
+    }
+
+    /// Raw id, for packing into wider key words.
+    pub fn raw(self) -> u32 {
+        self.0
+    }
+}
+
+struct InternTable {
+    by_name: HashMap<&'static str, Sym, FxBuildHasher>,
+    names: Vec<&'static str>,
+}
+
+fn table() -> &'static Mutex<InternTable> {
+    static TABLE: OnceLock<Mutex<InternTable>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        Mutex::new(InternTable {
+            by_name: HashMap::default(),
+            // Index 0 backs Sym::NONE so raw ids index `names` directly.
+            names: vec![""],
+        })
+    })
+}
+
+/// Intern `name`, returning its stable [`Sym`]. Idempotent; the first
+/// call for a given string leaks one copy of it.
+pub fn intern(name: &str) -> Sym {
+    let mut t = table().lock().unwrap();
+    if let Some(&sym) = t.by_name.get(name) {
+        return sym;
+    }
+    let leaked: &'static str = Box::leak(name.to_owned().into_boxed_str());
+    let sym = Sym(t.names.len() as u32);
+    t.names.push(leaked);
+    t.by_name.insert(leaked, sym);
+    sym
+}
+
+/// Resolve a [`Sym`] back to its string. `Sym::NONE` resolves to `""`.
+pub fn resolve(sym: Sym) -> &'static str {
+    table().lock().unwrap().names[sym.0 as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let a = intern("intern-test-tx2");
+        let b = intern("intern-test-tx2");
+        assert_eq!(a, b);
+        assert_eq!(resolve(a), "intern-test-tx2");
+    }
+
+    #[test]
+    fn distinct_names_get_distinct_syms() {
+        let a = intern("intern-test-a");
+        let b = intern("intern-test-b");
+        assert_ne!(a, b);
+        assert_eq!(resolve(a), "intern-test-a");
+        assert_eq!(resolve(b), "intern-test-b");
+    }
+
+    #[test]
+    fn none_is_reserved_and_empty() {
+        assert!(Sym::NONE.is_none());
+        assert_eq!(resolve(Sym::NONE), "");
+        // Interning a real name never yields the sentinel.
+        assert!(!intern("intern-test-c").is_none());
+    }
+}

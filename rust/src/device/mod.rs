@@ -15,6 +15,7 @@
 
 pub mod calibrate;
 pub mod dvfs;
+pub mod intern;
 pub mod memory;
 pub mod power;
 pub mod sensor;

@@ -376,9 +376,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         report.regrants
     );
     println!(
-        "planner={}  mode switches={}",
+        "planner={}  mode switches={}  plan cache hits={} misses={} cached={}",
         coordinator.planner_name(),
-        report.mode_switches
+        report.mode_switches,
+        report.plan_cache_hits,
+        report.plan_cache_misses,
+        report.plans_cached
     );
     if report.sessions > 0 {
         println!(

@@ -1,26 +1,49 @@
 //! Discrete-event simulation core: a monotonic clock + time-ordered
 //! event queue with stable FIFO ordering for simultaneous events.
+//!
+//! The queue is slab-backed: events live in a reusable `Vec` of slots
+//! and the binary heap orders lightweight `(time, seq, slot)` entries,
+//! so a push on the hot path never allocates once the slab has grown to
+//! the simulation's peak in-flight event count. Every push returns an
+//! [`EventHandle`] (slot index + generation) that supports O(1) logical
+//! cancellation: `cancel` tombstones the slot and `pop` skips
+//! tombstones, which is what lets regrant passes reschedule completions
+//! without rebuilding the heap.
+//!
+//! # Invariants
+//!
+//! * Event times must be finite and must not precede the current clock
+//!   (`now_s`, within 1e-12 slack). Violations are programming errors in
+//!   the simulator, not data errors, so they are checked with
+//!   `debug_assert!` — release builds skip the check (and the panic
+//!   message formatting) on the hottest path in the repo.
+//! * A slot is freed — and its generation bumped — only when its heap
+//!   entry is consumed by `pop`. Cancellation alone never frees a slot,
+//!   so a slot index can never be aliased by a live handle (no ABA).
+//! * `len()` counts live (non-cancelled) events; the heap may hold more
+//!   entries than `len()` reports while tombstones await their pop.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// An event scheduled at `time_s`. `seq` breaks ties FIFO.
-#[derive(Debug, Clone)]
-pub struct ScheduledEvent<E> {
-    pub time_s: f64,
+/// Heap entry: schedule time plus a FIFO tie-break sequence and the
+/// index of the slab slot holding the event payload.
+#[derive(Debug, Clone, Copy)]
+struct HeapEntry {
+    time_s: f64,
     seq: u64,
-    pub event: E,
+    slot: u32,
 }
 
-impl<E> PartialEq for ScheduledEvent<E> {
+impl PartialEq for HeapEntry {
     fn eq(&self, other: &Self) -> bool {
         self.time_s == other.time_s && self.seq == other.seq
     }
 }
 
-impl<E> Eq for ScheduledEvent<E> {}
+impl Eq for HeapEntry {}
 
-impl<E> Ord for ScheduledEvent<E> {
+impl Ord for HeapEntry {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap: invert so earliest time pops first,
         // lowest seq first among ties.
@@ -32,18 +55,36 @@ impl<E> Ord for ScheduledEvent<E> {
     }
 }
 
-impl<E> PartialOrd for ScheduledEvent<E> {
+impl PartialOrd for HeapEntry {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
+/// Generation-tagged reference to a scheduled event. Stale handles
+/// (the event already popped, or the slot since reused) are detected by
+/// the generation check and cancel as a no-op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EventHandle {
+    slot: u32,
+    gen: u32,
+}
+
+#[derive(Debug)]
+struct Slot<E> {
+    gen: u32,
+    event: Option<E>,
+}
+
 /// Time-ordered event queue with a monotonic clock.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<ScheduledEvent<E>>,
+    heap: BinaryHeap<HeapEntry>,
+    slots: Vec<Slot<E>>,
+    free: Vec<u32>,
     now_s: f64,
     next_seq: u64,
+    live: usize,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -54,47 +95,93 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), now_s: 0.0, next_seq: 0 }
+        EventQueue {
+            heap: BinaryHeap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            now_s: 0.0,
+            next_seq: 0,
+            live: 0,
+        }
     }
 
     pub fn now_s(&self) -> f64 {
         self.now_s
     }
 
-    /// Schedule `event` at absolute time `time_s` (>= now).
-    pub fn push(&mut self, time_s: f64, event: E) {
-        assert!(
+    /// Schedule `event` at absolute time `time_s` (>= now, finite — see
+    /// the type-level invariants). Returns a handle for O(1) cancel.
+    pub fn push(&mut self, time_s: f64, event: E) -> EventHandle {
+        debug_assert!(
             time_s >= self.now_s - 1e-12,
             "cannot schedule in the past: {time_s} < {}",
             self.now_s
         );
-        assert!(time_s.is_finite(), "non-finite event time");
+        debug_assert!(time_s.is_finite(), "non-finite event time");
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(ScheduledEvent { time_s, seq, event });
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize].event = Some(event);
+                s
+            }
+            None => {
+                let s = self.slots.len() as u32;
+                self.slots.push(Slot { gen: 0, event: Some(event) });
+                s
+            }
+        };
+        self.live += 1;
+        let gen = self.slots[slot as usize].gen;
+        self.heap.push(HeapEntry { time_s, seq, slot });
+        EventHandle { slot, gen }
     }
 
     /// Schedule relative to now.
-    pub fn push_in(&mut self, delay_s: f64, event: E) {
-        assert!(delay_s >= 0.0);
-        self.push(self.now_s + delay_s, event);
+    pub fn push_in(&mut self, delay_s: f64, event: E) -> EventHandle {
+        debug_assert!(delay_s >= 0.0, "negative delay");
+        self.push(self.now_s + delay_s, event)
     }
 
-    /// Pop the earliest event, advancing the clock to its time.
+    /// Logically cancel the event behind `handle`. Returns `true` if
+    /// the event was still pending; stale handles are a no-op. The slot
+    /// itself is reclaimed when the tombstoned heap entry pops.
+    pub fn cancel(&mut self, handle: EventHandle) -> bool {
+        let slot = &mut self.slots[handle.slot as usize];
+        if slot.gen == handle.gen && slot.event.is_some() {
+            slot.event = None;
+            self.live -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Pop the earliest live event, advancing the clock to its time.
+    /// Tombstones left by `cancel` are skipped and their slots recycled.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        self.heap.pop().map(|se| {
-            debug_assert!(se.time_s >= self.now_s - 1e-12, "clock went backwards");
-            self.now_s = self.now_s.max(se.time_s);
-            (se.time_s, se.event)
-        })
+        while let Some(entry) = self.heap.pop() {
+            let slot = &mut self.slots[entry.slot as usize];
+            let taken = slot.event.take();
+            slot.gen = slot.gen.wrapping_add(1);
+            self.free.push(entry.slot);
+            if let Some(event) = taken {
+                debug_assert!(entry.time_s >= self.now_s - 1e-12, "clock went backwards");
+                self.now_s = self.now_s.max(entry.time_s);
+                self.live -= 1;
+                return Some((entry.time_s, event));
+            }
+        }
+        None
+    }
+
+    /// Number of live (non-cancelled) pending events.
+    pub fn len(&self) -> usize {
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
-    }
-
-    pub fn len(&self) -> usize {
-        self.heap.len()
+        self.live == 0
     }
 }
 
@@ -137,6 +224,9 @@ mod tests {
         assert_eq!(q.pop().unwrap().0, 2.5);
     }
 
+    // The past-event guard is debug-only (see the type-level invariants),
+    // so the panic can only be observed in debug builds.
+    #[cfg(debug_assertions)]
     #[test]
     #[should_panic(expected = "cannot schedule in the past")]
     fn rejects_past_events() {
@@ -144,6 +234,51 @@ mod tests {
         q.push(5.0, ());
         q.pop();
         q.push(1.0, ());
+    }
+
+    #[test]
+    fn cancelled_events_never_pop() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "keep");
+        let h = q.push(2.0, "drop");
+        q.push(3.0, "keep2");
+        assert_eq!(q.len(), 3);
+        assert!(q.cancel(h));
+        assert!(!q.cancel(h), "second cancel must be a no-op");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((1.0, "keep")));
+        assert_eq!(q.pop(), Some((3.0, "keep2")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn stale_handle_after_pop_is_noop() {
+        let mut q = EventQueue::new();
+        let h = q.push(1.0, 1);
+        assert_eq!(q.pop(), Some((1.0, 1)));
+        assert!(!q.cancel(h), "handle to a popped event must be stale");
+        // The slot is recycled; the old handle must not hit the new event.
+        let h2 = q.push(2.0, 2);
+        assert!(!q.cancel(h), "recycled slot must reject the old generation");
+        assert!(q.cancel(h2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn slab_reuses_slots_across_generations() {
+        let mut q = EventQueue::new();
+        for round in 0..100 {
+            let t = round as f64;
+            let h = q.push(t + 0.25, round + 1000);
+            q.push(t + 0.5, round);
+            q.cancel(h);
+            // The pop skips the earlier tombstone, reclaiming both slots.
+            assert_eq!(q.pop(), Some((t + 0.5, round)));
+        }
+        assert!(q.is_empty());
+        // Two slots cover the whole run: one live, one tombstoned.
+        assert!(q.slots.len() <= 2, "slab grew to {} slots", q.slots.len());
     }
 
     #[test]
@@ -162,6 +297,48 @@ mod tests {
                     ensure(t >= prev, format!("out of order: {t} after {prev}"))?;
                     prev = t;
                 }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn random_cancel_property() {
+        // Forall interleavings of push/cancel, the survivors pop in time
+        // order and len() tracks exactly the live population.
+        forall(
+            23,
+            50,
+            |r: &mut Rng| {
+                (0..80)
+                    .map(|_| (r.range_f64(0.0, 1000.0), r.bool()))
+                    .collect::<Vec<(f64, bool)>>()
+            },
+            |plan| {
+                let mut q = EventQueue::new();
+                let mut handles = Vec::new();
+                let mut expect = 0usize;
+                for &(t, doomed) in plan {
+                    let h = q.push(t, doomed);
+                    if doomed {
+                        handles.push(h);
+                    } else {
+                        expect += 1;
+                    }
+                }
+                for h in handles {
+                    ensure(q.cancel(h), "cancel of a pending event must succeed".into())?;
+                }
+                ensure(q.len() == expect, format!("len {} != {expect}", q.len()))?;
+                let mut prev = f64::NEG_INFINITY;
+                let mut popped = 0usize;
+                while let Some((t, doomed)) = q.pop() {
+                    ensure(!doomed, format!("cancelled event at t={t} escaped"))?;
+                    ensure(t >= prev, format!("out of order: {t} after {prev}"))?;
+                    prev = t;
+                    popped += 1;
+                }
+                ensure(popped == expect, format!("popped {popped} != {expect}"))?;
                 Ok(())
             },
         );

@@ -9,4 +9,4 @@ pub mod des;
 pub mod interference;
 
 pub use cpu::{CpuScheduler, JobSpec, ScheduleResult, TraceSegment};
-pub use des::{EventQueue, ScheduledEvent};
+pub use des::{EventHandle, EventQueue};

@@ -31,7 +31,8 @@ use crate::coordinator::Coordinator;
 use crate::device::DeviceSpec;
 use crate::exec::{ExecutionBackend, Session, SessionReport, SessionSpec};
 use crate::metrics::Registry;
-use crate::sched::des::EventQueue;
+use crate::sched::des::{EventHandle, EventQueue};
+use crate::util::rng::Rng;
 use crate::workload::{split_even, TaskProfile};
 
 /// One job offered to the engine.
@@ -136,6 +137,10 @@ pub struct EngineConfig {
     /// Power-sensor sampling period for backend sessions' pristine SIM
     /// metering (`serve()` copies the experiment config's value).
     pub session_sensor_period_s: f64,
+    /// Seed for the sampling placement policies
+    /// ([`PlacementPolicy::PowerOfTwo`]): same seed + same job stream =
+    /// bit-identical placements. Deterministic policies ignore it.
+    pub placement_seed: u64,
 }
 
 impl EngineConfig {
@@ -154,6 +159,7 @@ impl EngineConfig {
             deadline_weighted_shares: false,
             session_variant: defaults.variant,
             session_sensor_period_s: defaults.sensor_period_s,
+            placement_seed: 0x9E37_79B9_7F4A_7C15,
         }
     }
 }
@@ -180,6 +186,12 @@ pub struct EngineOutcome {
     /// completion order (empty when the engine ran without a backend —
     /// the pure-model SIM path).
     pub session_reports: Vec<SessionReport>,
+    /// DES events processed by the run loop (arrivals + dispatches +
+    /// completions, stale ones included) — the numerator of the macro
+    /// bench's events/sec figure. Counted locally, not through the
+    /// metrics registry: the registry's lock + string keys are far too
+    /// slow to touch once per event.
+    pub des_events: u64,
     pub metrics: Registry,
 }
 
@@ -187,11 +199,12 @@ pub struct EngineOutcome {
 enum Ev {
     Arrival(usize),
     Dispatch,
-    /// `gen` is the job's grant generation at scheduling time: a
-    /// regrant bumps the resident job's generation and schedules a
-    /// fresh completion, turning any in-flight completion event for an
-    /// older generation into a stale no-op (the DES queue has no
-    /// random-access delete; generation-tagging is the cancel).
+    /// `gen` is the job's grant generation at scheduling time. A
+    /// regrant cancels the superseded completion outright through its
+    /// [`EventHandle`] (the slab queue supports O(1) cancellation), and
+    /// the generation tag is kept as a second line of defense: even if
+    /// a stale event ever slipped through, it would no-op here instead
+    /// of double-completing the job.
     Completion { node: usize, job: usize, gen: u64 },
 }
 
@@ -205,10 +218,22 @@ pub struct ServingEngine<'a> {
     nodes: Vec<NodeAllocator>,
     queue: AdmissionQueue,
     events: EventQueue<Ev>,
+    /// Handle of each job's in-flight completion event (index = job):
+    /// regrants cancel it before scheduling the replacement, so the
+    /// queue never accumulates superseded completions.
+    completion_handles: Vec<Option<EventHandle>>,
     completed: Vec<CompletedJob>,
     dispatch_scheduled: bool,
     next_arrival: usize,
     rr_next: usize,
+    /// Sampling source for [`PlacementPolicy::PowerOfTwo`], seeded from
+    /// [`EngineConfig::placement_seed`].
+    place_rng: Rng,
+    /// Scratch buffers reused across elastic shrink/absorb passes so
+    /// the per-event hot path stays allocation-free once warmed up.
+    scratch_jobs: Vec<usize>,
+    scratch_residents: Vec<(usize, f64)>,
+    scratch_weights: Vec<f64>,
     metrics: Registry,
     /// Execution backend the engine dispatches jobs through (None = the
     /// engine's own DES math only, with no live data plane).
@@ -241,14 +266,21 @@ impl<'a> ServingEngine<'a> {
             .cloned()
             .map(|d| NodeAllocator::new(d, cfg.max_concurrent_jobs))
             .collect();
+        let completion_handles = vec![None; jobs.len()];
+        let place_rng = Rng::new(cfg.placement_seed);
         ServingEngine {
             nodes,
             queue: AdmissionQueue::new(),
             events: EventQueue::new(),
+            completion_handles,
             completed: Vec::new(),
             dispatch_scheduled: false,
             next_arrival: 0,
             rr_next: 0,
+            place_rng,
+            scratch_jobs: Vec::new(),
+            scratch_residents: Vec::new(),
+            scratch_weights: Vec::new(),
             metrics: Registry::new(),
             closed_loop: false,
             cfg,
@@ -289,7 +321,7 @@ impl<'a> ServingEngine<'a> {
     /// Run the simulation to completion.
     pub fn run(mut self) -> Result<EngineOutcome> {
         if self.jobs.is_empty() {
-            return Ok(self.into_outcome(0.0));
+            return Ok(self.into_outcome(0.0, 0));
         }
         if self.closed_loop {
             self.emit_next_arrival(0.0);
@@ -300,7 +332,9 @@ impl<'a> ServingEngine<'a> {
             self.next_arrival = self.jobs.len();
         }
 
+        let mut des_events: u64 = 0;
         while let Some((t, ev)) = self.events.pop() {
+            des_events += 1;
             match ev {
                 Ev::Arrival(i) => {
                     self.jobs[i].arrival_s = t;
@@ -323,6 +357,7 @@ impl<'a> ServingEngine<'a> {
                     if !live {
                         continue;
                     }
+                    self.completion_handles[job] = None;
                     if let Some(mut session) = self.sessions.remove(&job) {
                         // The data plane finishes the job for real (a
                         // REAL session blocks until its workers drain).
@@ -369,10 +404,10 @@ impl<'a> ServingEngine<'a> {
             self.jobs.len()
         );
         let wall = self.completed.iter().map(|c| c.finish_s).fold(0.0, f64::max);
-        Ok(self.into_outcome(wall))
+        Ok(self.into_outcome(wall, des_events))
     }
 
-    fn into_outcome(self, wall_s: f64) -> EngineOutcome {
+    fn into_outcome(self, wall_s: f64, des_events: u64) -> EngineOutcome {
         for (i, n) in self.nodes.iter().enumerate() {
             self.metrics.set_gauge(&format!("node{i}_utilization"), n.utilization());
             self.metrics.set_gauge(&format!("node{i}_energy_j"), n.energy_j());
@@ -388,6 +423,7 @@ impl<'a> ServingEngine<'a> {
             regrants: self.metrics.counter("regrants"),
             mode_switches: self.metrics.counter("mode_switches"),
             session_reports: self.session_reports,
+            des_events,
             metrics: self.metrics,
         }
     }
@@ -523,7 +559,8 @@ impl<'a> ServingEngine<'a> {
             let finish = self.nodes[node_i].admit(now_s, j, frames, plan);
             self.open_session_for(j, node_i, now_s, &plan)?;
             self.queue.remove(now_s, j);
-            self.events.push(finish, Ev::Completion { node: node_i, job: j, gen: 0 });
+            let h = self.events.push(finish, Ev::Completion { node: node_i, job: j, gen: 0 });
+            self.completion_handles[j] = Some(h);
             self.metrics.set_gauge("queue_depth", self.queue.len() as f64);
         }
         if self.cfg.grant_policy == GrantPolicy::Elastic {
@@ -538,7 +575,7 @@ impl<'a> ServingEngine<'a> {
     /// within a dispatch pass (a second call with the same backlog finds
     /// everyone at or below the target already).
     fn shrink_node_for_backlog(&mut self, now_s: f64, node_i: usize) -> Result<()> {
-        let (residents, target) = {
+        let target = {
             let nd = &self.nodes[node_i];
             if nd.active.is_empty() {
                 return Ok(());
@@ -556,11 +593,15 @@ impl<'a> ServingEngine<'a> {
             if incoming == 0 {
                 return Ok(());
             }
-            let target = nd.device.cores / (nd.active.len() + incoming) as f64;
-            let residents: Vec<usize> = nd.active.iter().map(|a| a.job_idx).collect();
-            (residents, target)
+            nd.device.cores / (nd.active.len() + incoming) as f64
         };
-        for job in residents {
+        // Resident snapshot in a reused scratch buffer: regrants mutate
+        // the node's active list, so iterate a stable copy — without
+        // paying a fresh allocation per dispatch event.
+        let mut residents = std::mem::take(&mut self.scratch_jobs);
+        residents.clear();
+        residents.extend(self.nodes[node_i].active.iter().map(|a| a.job_idx));
+        for &job in &residents {
             let grant = self.nodes[node_i].find(job).unwrap().plan.grant_cores;
             if grant > target + 1e-9 {
                 // Never a mode decision: the shrink exists to make room
@@ -568,6 +609,7 @@ impl<'a> ServingEngine<'a> {
                 self.regrant_job(now_s, node_i, job, target, false)?;
             }
         }
+        self.scratch_jobs = residents;
         Ok(())
     }
 
@@ -577,26 +619,32 @@ impl<'a> ServingEngine<'a> {
     /// is on under the EDF queue policy. After this pass a node with
     /// any work resident has no ungranted core.
     fn absorb_free_cores(&mut self, now_s: f64) -> Result<()> {
+        let mut residents = std::mem::take(&mut self.scratch_residents);
+        let mut weights = std::mem::take(&mut self.scratch_weights);
         for node_i in 0..self.nodes.len() {
             let free = self.nodes[node_i].free_cores;
             let n = self.nodes[node_i].active.len();
             if n == 0 || free <= 1e-9 {
                 continue;
             }
-            let residents: Vec<(usize, f64)> = self.nodes[node_i]
-                .active
-                .iter()
-                .map(|a| (a.job_idx, a.plan.grant_cores))
-                .collect();
-            let weights = self.absorb_weights(now_s, node_i, &residents);
+            residents.clear();
+            residents.extend(
+                self.nodes[node_i]
+                    .active
+                    .iter()
+                    .map(|a| (a.job_idx, a.plan.grant_cores)),
+            );
+            self.absorb_weights_into(now_s, node_i, &residents, &mut weights);
             // A sole survivor absorbing the whole device is the drain
             // moment — the one regrant where a joint plan may switch
             // the power mode (race-to-idle vs slow-and-steady).
             let mode_free = n == 1;
-            for ((job, grant), w) in residents.into_iter().zip(weights) {
+            for (&(job, grant), &w) in residents.iter().zip(weights.iter()) {
                 self.regrant_job(now_s, node_i, job, grant + free * w, mode_free)?;
             }
         }
+        self.scratch_residents = residents;
+        self.scratch_weights = weights;
         Ok(())
     }
 
@@ -607,38 +655,43 @@ impl<'a> ServingEngine<'a> {
     /// 2x closer to its deadline absorbs 2x the bonus cores. Jobs
     /// without a deadline (weight 0) keep their base grant; if no job
     /// carries urgency the split falls back to equal.
-    fn absorb_weights(
+    fn absorb_weights_into(
         &self,
         now_s: f64,
         node_i: usize,
         residents: &[(usize, f64)],
-    ) -> Vec<f64> {
+        out: &mut Vec<f64>,
+    ) {
         let n = residents.len().max(1);
-        let equal = vec![1.0 / n as f64; n];
+        out.clear();
         if !(self.cfg.deadline_weighted_shares
             && self.cfg.queue_policy == QueuePolicy::Edf
             && n > 1)
         {
-            return equal;
+            out.resize(n, 1.0 / n as f64);
+            return;
         }
         let nd = &self.nodes[node_i];
-        let urgency: Vec<f64> = residents
-            .iter()
-            .map(|&(job, _)| {
-                let work = nd.find(job).map(|a| a.work_remaining(now_s)).unwrap_or(0.0);
-                match self.jobs[job].deadline_s {
-                    // Past-due slack clamps to a hair above zero: the
-                    // overdue job gets (nearly) everything.
-                    Some(d) => work / (d - now_s).max(1e-6),
-                    None => 0.0,
-                }
-            })
-            .collect();
-        let total: f64 = urgency.iter().sum();
-        if total <= 1e-12 {
-            return equal;
+        let mut total = 0.0;
+        for &(job, _) in residents {
+            let work = nd.find(job).map(|a| a.work_remaining(now_s)).unwrap_or(0.0);
+            let u = match self.jobs[job].deadline_s {
+                // Past-due slack clamps to a hair above zero: the
+                // overdue job gets (nearly) everything.
+                Some(d) => work / (d - now_s).max(1e-6),
+                None => 0.0,
+            };
+            total += u;
+            out.push(u);
         }
-        urgency.into_iter().map(|u| u / total).collect()
+        if total <= 1e-12 {
+            out.clear();
+            out.resize(n, 1.0 / n as f64);
+            return;
+        }
+        for w in out.iter_mut() {
+            *w /= total;
+        }
     }
 
     /// Change one resident job's core grant at `now_s`: measure its
@@ -723,7 +776,13 @@ impl<'a> ServingEngine<'a> {
             )
         };
         let (gen, finish) = self.nodes[node_i].regrant(now_s, job, work_left, plan, startup);
-        self.events.push(finish, Ev::Completion { node: node_i, job, gen });
+        // Cancel the superseded completion in place — the queue stays
+        // free of dead events instead of skipping them at pop time.
+        if let Some(h) = self.completion_handles[job].take() {
+            self.events.cancel(h);
+        }
+        let h = self.events.push(finish, Ev::Completion { node: node_i, job, gen });
+        self.completion_handles[job] = Some(h);
         self.metrics.inc("regrants", 1);
         if restart {
             self.metrics.inc("regrant_restarts", 1);
@@ -849,32 +908,39 @@ impl<'a> ServingEngine<'a> {
                 }
                 None
             }
-            PlacementPolicy::LeastLoaded => {
-                let keyed: Vec<(f64, usize)> = (0..self.nodes.len())
-                    .filter(|&i| self.node_can_take(i, frames))
-                    .map(|i| {
-                        let key = match self.cfg.grant_policy {
-                            // Fixed grants never move after admission,
-                            // so the admission-time earliest-free
-                            // estimate stays honest.
-                            GrantPolicy::Fixed => self.nodes[i].est_free_at_s,
-                            // Under elastic grants that estimate goes
-                            // stale the moment a regrant reshapes the
-                            // residents: rank by the job's predicted
-                            // finish at the node's post-regrant fair
-                            // share instead (the job is admitted
-                            // immediately after the shrink phase).
-                            GrantPolicy::Elastic => {
-                                now_s + self.post_regrant_service_estimate(i, j)
-                            }
-                        };
-                        (key, i)
-                    })
-                    .collect();
-                keyed
-                    .into_iter()
-                    .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
-                    .map(|(_, i)| i)
+            PlacementPolicy::LeastLoaded => self.least_loaded_node(j, now_s, frames),
+            PlacementPolicy::PowerOfTwo => {
+                // Power-of-two-choices: sample two distinct nodes and
+                // take the less loaded — an O(1) decision per job with
+                // near-least-loaded balance (Mitzenmacher), where the
+                // full scan is O(nodes) per admission. Degenerate
+                // fleets (n <= 2) sample everything, so the policy is
+                // exactly least-loaded there.
+                let n = self.nodes.len();
+                if n <= 2 {
+                    return self.least_loaded_node(j, now_s, frames);
+                }
+                let a = self.place_rng.below(n as u64) as usize;
+                let mut b = self.place_rng.below(n as u64 - 1) as usize;
+                if b >= a {
+                    b += 1; // distinct second sample, uniform over the rest
+                }
+                match (self.node_can_take(a, frames), self.node_can_take(b, frames)) {
+                    (true, true) => {
+                        let ka = (self.placement_key(a, j, now_s), a);
+                        let kb = (self.placement_key(b, j, now_s), b);
+                        Some(if kb < ka { b } else { a })
+                    }
+                    (true, false) => Some(a),
+                    (false, true) => Some(b),
+                    (false, false) => {
+                        // Neither sample can take the job right now:
+                        // fall back to the full scan rather than
+                        // stranding an admissible job in the queue.
+                        self.metrics.inc("p2c_fallback_scans", 1);
+                        self.least_loaded_node(j, now_s, frames)
+                    }
+                }
             }
             PlacementPolicy::EnergyAware => {
                 // EASE-style: the globally energy-best node, even if the
@@ -896,6 +962,46 @@ impl<'a> ServingEngine<'a> {
                 self.node_can_take(best, frames).then_some(best)
             }
         }
+    }
+
+    /// Load key placement ranks node `i` by for job `j` — lower is
+    /// better. Shared by the full least-loaded scan and the
+    /// power-of-two sampler, so the two policies agree on what "less
+    /// loaded" means and differ only in how many nodes they look at.
+    fn placement_key(&self, i: usize, j: usize, now_s: f64) -> f64 {
+        match self.cfg.grant_policy {
+            // Fixed grants never move after admission, so the
+            // admission-time earliest-free estimate stays honest.
+            GrantPolicy::Fixed => self.nodes[i].est_free_at_s,
+            // Under elastic grants that estimate goes stale the moment
+            // a regrant reshapes the residents: rank by the job's
+            // predicted finish at the node's post-regrant fair share
+            // instead (the job is admitted immediately after the
+            // shrink phase).
+            GrantPolicy::Elastic => now_s + self.post_regrant_service_estimate(i, j),
+        }
+    }
+
+    /// Full least-loaded scan: the admissible node with the smallest
+    /// placement key, ties broken toward the lower index (the first
+    /// minimum, matching the retired `min_by` over an index-ordered
+    /// candidate list). Allocation-free.
+    fn least_loaded_node(&self, j: usize, now_s: f64, frames: usize) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for i in 0..self.nodes.len() {
+            if !self.node_can_take(i, frames) {
+                continue;
+            }
+            let cand = (self.placement_key(i, j, now_s), i);
+            let better = match best {
+                None => true,
+                Some(b) => cand < b,
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        best.map(|(_, i)| i)
     }
 
     /// Predicted service of job `j` on node `node_i` if admitted right

@@ -137,6 +137,13 @@ pub struct ServeReport {
     pub battery_jobs_per_charge: f64,
     /// Hours one charge sustains at the observed average draw.
     pub battery_hours: f64,
+    /// Planner plan-cache hits over the run (admissions + regrants that
+    /// reused an interned decision; 0 for planners without a cache).
+    pub plan_cache_hits: u64,
+    /// Planner plan-cache misses (each one paid a full probe-and-fit).
+    pub plan_cache_misses: u64,
+    /// Distinct decisions resident in the plan cache after the run.
+    pub plans_cached: usize,
 }
 
 impl ServeReport {
@@ -171,6 +178,9 @@ impl ServeReport {
             session_energy_j: outcome.session_reports.iter().map(|r| r.energy_j).sum(),
             battery_jobs_per_charge: 0.0,
             battery_hours: 0.0,
+            plan_cache_hits: 0,
+            plan_cache_misses: 0,
+            plans_cached: 0,
         };
         report.apply_battery(&Battery::pack_50wh());
         report
@@ -229,6 +239,9 @@ impl ServeReport {
             ("session_energy_j", Json::num(self.session_energy_j)),
             ("battery_jobs_per_charge", Json::num(self.battery_jobs_per_charge)),
             ("battery_hours", Json::num(self.battery_hours)),
+            ("plan_cache_hits", Json::num(self.plan_cache_hits as f64)),
+            ("plan_cache_misses", Json::num(self.plan_cache_misses as f64)),
+            ("plans_cached", Json::num(self.plans_cached as f64)),
         ])
     }
 }
@@ -316,7 +329,19 @@ pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeRe
     let frames: usize = outcome.completed.iter().map(|c| c.frames).sum();
     coordinator.metrics.inc("frames_processed", frames as u64);
 
-    Ok(ServeReport::from_outcome(&outcome))
+    // Plan-cache effectiveness, from the planner's own counters: into
+    // the metrics registry (for scrapes) and onto the report (for the
+    // JSON diffs and the CLI summary line).
+    let cache = coordinator.plan_cache_stats();
+    coordinator.metrics.inc("plan_cache_hits", cache.hits);
+    coordinator.metrics.inc("plan_cache_misses", cache.misses);
+    coordinator.metrics.set_gauge("plans_cached", cache.entries as f64);
+
+    let mut report = ServeReport::from_outcome(&outcome);
+    report.plan_cache_hits = cache.hits;
+    report.plan_cache_misses = cache.misses;
+    report.plans_cached = cache.entries;
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -476,6 +501,31 @@ mod tests {
         assert_eq!(j.get("regrants").unwrap().as_usize(), Some(0));
         assert!(j.get("battery_jobs_per_charge").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("battery_hours").unwrap().as_f64().unwrap() > 0.0);
+        // Fixed-k planner: no cache, but the fields must still export.
+        assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("plan_cache_misses").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("plans_cached").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn serving_surfaces_plan_cache_counters() {
+        // Six identical closed-loop jobs through the online planner:
+        // the first admission probes (miss), the rest reuse the interned
+        // decision (hits), and the counters ride the report + registry.
+        let mut c = orin_coordinator(SplitPolicy::Online(OnlineOptimizer::default()));
+        let report = serve(
+            &mut c,
+            &ServeConfig { jobs: 6, frames_per_job: 96, seed: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(report.plan_cache_misses, 1, "one probe for six identical jobs");
+        assert_eq!(report.plan_cache_hits, 5);
+        assert_eq!(report.plans_cached, 1);
+        assert_eq!(c.metrics.counter("plan_cache_hits"), 5);
+        assert_eq!(c.metrics.counter("plan_cache_misses"), 1);
+        let j = report.to_json();
+        assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("plans_cached").unwrap().as_usize(), Some(1));
     }
 
     #[test]

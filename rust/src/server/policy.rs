@@ -55,8 +55,16 @@ pub enum PlacementPolicy {
     /// Cycle through the nodes (jobs pre-pinned `i mod n` in cluster
     /// runs, so fairness holds even when nodes differ in speed).
     RoundRobin,
-    /// Earliest-available node (makespan-greedy).
+    /// Earliest-available node (makespan-greedy). Scans every node per
+    /// admission — exact, but O(nodes).
     LeastLoaded,
+    /// Power-of-two-choices: sample two distinct nodes (seeded,
+    /// deterministic per [`crate::server::engine::EngineConfig::placement_seed`])
+    /// and take the less loaded by the same key [`Self::LeastLoaded`]
+    /// uses. O(1) per admission with near-least-loaded balance
+    /// (Mitzenmacher's "power of two choices"); identical to
+    /// [`Self::LeastLoaded`] on fleets of one or two nodes.
+    PowerOfTwo,
     /// Node minimizing predicted job energy, breaking ties on
     /// completion time — jobs wait for the energy-best node rather than
     /// burn more joules on a worse one.
@@ -68,6 +76,9 @@ impl PlacementPolicy {
         match s.to_ascii_lowercase().as_str() {
             "rr" | "round-robin" | "round_robin" => Some(PlacementPolicy::RoundRobin),
             "least-loaded" | "least_loaded" | "ll" => Some(PlacementPolicy::LeastLoaded),
+            "p2c" | "po2" | "power-of-two" | "power_of_two" => {
+                Some(PlacementPolicy::PowerOfTwo)
+            }
             "energy" | "energy_aware" | "energy-aware" | "ea" => {
                 Some(PlacementPolicy::EnergyAware)
             }
@@ -101,6 +112,11 @@ mod tests {
             Some(PlacementPolicy::LeastLoaded)
         );
         assert_eq!(PlacementPolicy::parse("energy"), Some(PlacementPolicy::EnergyAware));
+        assert_eq!(PlacementPolicy::parse("p2c"), Some(PlacementPolicy::PowerOfTwo));
+        assert_eq!(
+            PlacementPolicy::parse("power-of-two"),
+            Some(PlacementPolicy::PowerOfTwo)
+        );
         assert_eq!(PlacementPolicy::parse("x"), None);
     }
 

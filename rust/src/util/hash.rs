@@ -1,0 +1,122 @@
+//! Fast non-cryptographic hashing for hot-path lookup tables.
+//!
+//! `std`'s default `SipHash` is DoS-resistant but costs ~2× a plan-cache
+//! probe on its own. The caches here key on small packed structs of
+//! interned IDs and integers built from trusted, bounded inputs (device
+//! presets, task names, quantized grants), so HashDoS is not in the
+//! threat model and an FxHash-style multiply-xor mix is the right
+//! trade: one multiply per word, good avalanche on low-entropy integer
+//! keys.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xor hasher in the style of rustc's FxHasher.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+/// 64-bit mixing constant (the golden-ratio-derived one rustc uses).
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for chunk in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rest.len()].copy_from_slice(rest);
+            self.add_to_hash(u64::from_le_bytes(tail));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`]; plug into `HashMap::with_hasher`.
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` keyed by the fast hasher.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// `HashSet` keyed by the fast hasher.
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::{BuildHasher, Hash};
+
+    fn hash_of<T: Hash>(v: &T) -> u64 {
+        FxBuildHasher::default().hash_one(v)
+    }
+
+    #[test]
+    fn deterministic_across_hasher_instances() {
+        assert_eq!(hash_of(&(3u32, 7u32, 11u64)), hash_of(&(3u32, 7u32, 11u64)));
+        assert_eq!(hash_of(&"tx2"), hash_of(&"tx2"));
+    }
+
+    #[test]
+    fn nearby_integer_keys_spread() {
+        // Plan-cache keys differ in single fields by small deltas; the
+        // mix must not collapse them onto each other.
+        let hs: Vec<u64> = (0..64u32).map(|i| hash_of(&(i, 4u32, 8u64))).collect();
+        let mut uniq = hs.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), hs.len(), "nearby keys collided");
+    }
+
+    #[test]
+    fn byte_tail_is_hashed() {
+        assert_ne!(hash_of(&"yolo-tiny"), hash_of(&"yolo-tinz"));
+        assert_ne!(hash_of(&[1u8, 2, 3].as_slice()), hash_of(&[1u8, 2, 4].as_slice()));
+    }
+
+    #[test]
+    fn works_as_map_hasher() {
+        let mut m: FxHashMap<(u32, u32), usize> = FxHashMap::default();
+        for i in 0..100u32 {
+            m.insert((i, i * 2), i as usize);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.get(&(7, 14)), Some(&7));
+        assert_eq!(m.get(&(7, 15)), None);
+    }
+}

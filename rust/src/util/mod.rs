@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod csv;
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod proptest;

@@ -1,0 +1,287 @@
+//! Hot-path property tests: the slab-backed DES queue against a naive
+//! reference model (including cancel/reschedule interleavings), and
+//! power-of-two placement against the full least-loaded scan.
+
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::sched::{EventHandle, EventQueue};
+use divide_and_save::server::{
+    EngineConfig, EngineJob, GrantPolicy, PlacementPolicy, ServingEngine, SplitDecider,
+};
+use divide_and_save::util::proptest::{ensure, forall, PropResult};
+use divide_and_save::util::rng::Rng;
+use divide_and_save::workload::TaskProfile;
+
+// ---------------------------------------------------------------- DES queue
+
+/// One step of a random queue workout.
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    /// Schedule an event `delay` after the current clock.
+    Push(f64),
+    /// Cancel the handle at `raw % pushed` (no-op when nothing pushed).
+    Cancel(u64),
+    Pop,
+}
+
+fn gen_ops(r: &mut Rng, n: usize) -> Vec<Op> {
+    (0..n)
+        .map(|_| match r.below(10) {
+            0..=4 => Op::Push(r.f64() * 5.0),
+            5..=6 => Op::Cancel(r.next_u64()),
+            _ => Op::Pop,
+        })
+        .collect()
+}
+
+/// Naive reference: every pushed event with its scheduled time and
+/// liveness; the next pop is the live minimum by (time, insertion seq).
+struct ModelEntry {
+    time: f64,
+    alive: bool,
+}
+
+fn model_min(model: &[ModelEntry]) -> Option<usize> {
+    model
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.alive)
+        .min_by(|a, b| {
+            (a.1.time, a.0)
+                .partial_cmp(&(b.1.time, b.0))
+                .expect("finite times")
+        })
+        .map(|(i, _)| i)
+}
+
+/// Run one op sequence through the slab queue and the reference model
+/// in lockstep, comparing every observable step.
+fn check_against_model(ops: &[Op]) -> PropResult {
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut model: Vec<ModelEntry> = Vec::new();
+    let mut handles: Vec<EventHandle> = Vec::new();
+    let mut now = 0.0f64;
+    for op in ops {
+        match *op {
+            Op::Push(delay) => {
+                let t = now + delay;
+                handles.push(q.push(t, model.len() as u64));
+                model.push(ModelEntry { time: t, alive: true });
+            }
+            Op::Cancel(raw) => {
+                if handles.is_empty() {
+                    continue;
+                }
+                let i = (raw % handles.len() as u64) as usize;
+                let expect = model[i].alive;
+                let got = q.cancel(handles[i]);
+                ensure(
+                    got == expect,
+                    format!("cancel({i}) returned {got}, model says {expect}"),
+                )?;
+                model[i].alive = false;
+            }
+            Op::Pop => match (q.pop(), model_min(&model)) {
+                (None, None) => {}
+                (Some((t, id)), Some(want)) => {
+                    let e = &mut model[want];
+                    ensure(
+                        id == want as u64 && (t - e.time).abs() < 1e-12,
+                        format!(
+                            "pop returned (t={t}, id={id}), model wants \
+                             (t={}, id={want})",
+                            e.time
+                        ),
+                    )?;
+                    e.alive = false;
+                    now = now.max(t);
+                }
+                (got, want) => {
+                    return Err(format!("pop {got:?} vs model min {want:?}"));
+                }
+            },
+        }
+        ensure(
+            q.len() == model.iter().filter(|e| e.alive).count(),
+            format!("len {} != model live count", q.len()),
+        )?;
+    }
+    // Drain: the remaining pops must come out in exact model order.
+    while let Some(want) = model_min(&model) {
+        match q.pop() {
+            Some((t, id)) => {
+                ensure(
+                    id == want as u64 && (t - model[want].time).abs() < 1e-12,
+                    format!("drain pop (t={t}, id={id}) expected id {want}"),
+                )?;
+                model[want].alive = false;
+            }
+            None => return Err(format!("queue drained early; model still holds {want}")),
+        }
+    }
+    ensure(q.pop().is_none(), "queue must be empty once the model is")
+}
+
+#[test]
+fn slab_queue_matches_reference_under_random_order() {
+    // The seed-17 random_order_property from the unit suite, replayed
+    // through the integration oracle: pushes only, then a full drain.
+    forall(
+        17,
+        50,
+        |r| {
+            let n = 1 + r.usize(60);
+            (0..n).map(|_| Op::Push(r.f64() * 10.0)).collect::<Vec<_>>()
+        },
+        |ops| check_against_model(ops),
+    );
+}
+
+#[test]
+fn slab_queue_matches_reference_under_cancel_reschedule_interleaving() {
+    forall(23, 80, |r| gen_ops(r, 120), |ops| check_against_model(ops));
+}
+
+// ------------------------------------------------------------- placement
+
+fn mixed_fleet(n: usize) -> Vec<DeviceSpec> {
+    (0..n)
+        .map(|i| if i % 3 == 2 { DeviceSpec::orin() } else { DeviceSpec::tx2() })
+        .collect()
+}
+
+fn fleet_cfg(devices: Vec<DeviceSpec>, placement: PlacementPolicy, seed: u64) -> EngineConfig {
+    let mut cfg = EngineConfig::single_node(devices[0].clone());
+    cfg.nodes = devices;
+    cfg.placement = placement;
+    cfg.max_concurrent_jobs = 2;
+    cfg.placement_seed = seed;
+    cfg
+}
+
+fn random_jobs(r: &mut Rng, n: usize) -> Vec<EngineJob> {
+    (0..n)
+        .map(|i| {
+            let arrival = r.f64() * 30.0;
+            let frames = 48 + 48 * r.usize(4);
+            EngineJob::new(i as u64, arrival, frames, TaskProfile::yolo_tiny())
+        })
+        .collect()
+}
+
+/// (id, node, start, finish) per job, sorted by id — the placement
+/// observables two runs must agree on to count as identical.
+fn placements(
+    devices: Vec<DeviceSpec>,
+    placement: PlacementPolicy,
+    seed: u64,
+    jobs: Vec<EngineJob>,
+) -> Vec<(u64, usize, f64, f64)> {
+    let cfg = fleet_cfg(devices, placement, seed);
+    let out = ServingEngine::new(cfg, jobs, SplitDecider::PerNodeOptimal)
+        .run()
+        .expect("fleet run");
+    let mut got: Vec<(u64, usize, f64, f64)> = out
+        .completed
+        .iter()
+        .map(|c| (c.id, c.node, c.start_s, c.finish_s))
+        .collect();
+    got.sort_by(|a, b| a.0.cmp(&b.0));
+    got
+}
+
+#[test]
+fn power_of_two_never_strands_an_admissible_job() {
+    // The engine itself errors when jobs strand or go missing, so
+    // completing the run IS the property; assert the count anyway.
+    forall(
+        41,
+        25,
+        |r| random_jobs(r, 30),
+        |jobs| {
+            let cfg = fleet_cfg(mixed_fleet(6), PlacementPolicy::PowerOfTwo, 9);
+            let out = ServingEngine::new(
+                cfg,
+                jobs.clone(),
+                SplitDecider::PerNodeOptimal,
+            )
+            .run()
+            .map_err(|e| format!("p2c run failed: {e:#}"))?;
+            ensure(
+                out.completed.len() == jobs.len(),
+                format!("{} of {} jobs completed", out.completed.len(), jobs.len()),
+            )
+        },
+    );
+}
+
+#[test]
+fn power_of_two_is_deterministic_per_seed() {
+    forall(
+        43,
+        15,
+        |r| random_jobs(r, 24),
+        |jobs| {
+            let a = placements(mixed_fleet(5), PlacementPolicy::PowerOfTwo, 7, jobs.clone());
+            let b = placements(mixed_fleet(5), PlacementPolicy::PowerOfTwo, 7, jobs.clone());
+            ensure(a == b, "same seed must reproduce bit-identical placements")
+        },
+    );
+}
+
+#[test]
+fn power_of_two_equals_least_loaded_on_tiny_fleets() {
+    // With one or two nodes the sampler sees the whole fleet, so the
+    // policies must be literally the same decision procedure.
+    forall(
+        47,
+        15,
+        |r| random_jobs(r, 20),
+        |jobs| {
+            for n in [1usize, 2] {
+                let p2c = placements(
+                    mixed_fleet(n),
+                    PlacementPolicy::PowerOfTwo,
+                    11,
+                    jobs.clone(),
+                );
+                let ll = placements(
+                    mixed_fleet(n),
+                    PlacementPolicy::LeastLoaded,
+                    11,
+                    jobs.clone(),
+                );
+                ensure(
+                    p2c == ll,
+                    format!("p2c must equal least-loaded on a {n}-node fleet"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn power_of_two_with_elastic_grants_completes_and_regrants() {
+    // Elastic regrants drive the queue's cancel/reschedule path inside
+    // the real engine: overlapping jobs shrink and re-absorb grants,
+    // each regrant cancelling its superseded completion event.
+    let mut rng = Rng::new(53);
+    let jobs: Vec<EngineJob> = (0..24)
+        .map(|i| {
+            let arrival = rng.f64() * 10.0;
+            EngineJob::new(i as u64, arrival, 96 + 96 * rng.usize(3), TaskProfile::yolo_tiny())
+        })
+        .collect();
+    let mut cfg = fleet_cfg(mixed_fleet(4), PlacementPolicy::PowerOfTwo, 13);
+    cfg.grant_policy = GrantPolicy::Elastic;
+    let out = ServingEngine::new(cfg, jobs, SplitDecider::PerNodeOptimal)
+        .run()
+        .expect("elastic p2c run");
+    assert_eq!(out.completed.len(), 24);
+    assert!(out.regrants > 0, "overlapping elastic load must regrant");
+    assert_eq!(
+        out.metrics.counter("work_conservation_violations"),
+        0,
+        "regrant cancellation must not break work conservation"
+    );
+}
