@@ -1,7 +1,9 @@
 //! FS — fleet-scale hot-path macro bench: the slab DES core, the
 //! interned plan cache and power-of-two placement under a trace-driven
-//! load (~1k simulated nodes, ~100k jobs), with the saved-baseline
-//! workflow from `divide_and_save::bench`.
+//! load (~1k simulated nodes, ~100k jobs), plus the sharded-fleet
+//! macro comparison (~10k nodes, ~1M jobs: unsharded engine vs
+//! per-shard event loops behind the energy-conscious router), with the
+//! saved-baseline workflow from `divide_and_save::bench`.
 //!
 //! Usage (through `cargo bench --bench fleet_scale -- <flags>`):
 //!   --save-baseline <name>   persist this run as rust/BENCH_<name>.json
@@ -11,6 +13,8 @@
 //!                            only warn — model-side metrics are
 //!                            deterministic, machine-side ones noisy)
 //!   --smoke                  reduced sizes for CI smoke runs
+//!   --shards <n>             shard count for the sharded macro run
+//!                            (default 8; CI smokes both 1 and 4)
 //!   --strict                 enforce the absolute perf floors
 //!                            (>=1M DES events/sec, <1us cached plans)
 
@@ -26,7 +30,8 @@ use divide_and_save::coordinator::{FixedModePlanner, OnlineOptimizer};
 use divide_and_save::device::DeviceSpec;
 use divide_and_save::sched::EventQueue;
 use divide_and_save::server::{
-    EngineConfig, EngineJob, PlacementPolicy, ServingEngine, SplitDecider,
+    run_sharded, EngineConfig, EngineJob, FleetDecider, PlacementPolicy, ServingEngine,
+    ShardedConfig, ShardedOutcome, SplitDecider,
 };
 use divide_and_save::util::rng::Rng;
 use divide_and_save::workload::{ArrivalProcess, TaskProfile};
@@ -119,6 +124,29 @@ fn fleet_macro(nodes: usize, jobs: usize) -> FleetRun {
     }
 }
 
+/// Build the sharded macro config + job trace (same workload shape as
+/// `fleet_macro`, one level up in scale) and run it.
+fn sharded_macro(nodes: usize, jobs: usize, shards: usize) -> (ShardedOutcome, f64) {
+    let mut cfg = EngineConfig::single_node(DeviceSpec::orin());
+    cfg.nodes = vec![DeviceSpec::orin(); nodes];
+    cfg.placement = PlacementPolicy::PowerOfTwo;
+    let rate_per_s = 0.2 * nodes as f64;
+    let mut rng = Rng::new(31);
+    let engine_jobs: Vec<EngineJob> = ArrivalProcess::Poisson { rate_per_s }
+        .arrivals(jobs, &mut rng)
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| EngineJob::new(i as u64, t, 96, TaskProfile::yolo_tiny()))
+        .collect();
+    let scfg = ShardedConfig::new(cfg, shards);
+    let t0 = Instant::now();
+    let out = run_sharded(&scfg, engine_jobs, FleetDecider::PerNodeOptimal)
+        .expect("sharded fleet run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(out.outcome.completed.len(), jobs);
+    (out, wall_s)
+}
+
 fn main() {
     let args = BenchArgs::parse_env();
     let (des_ops, plan_iters, nodes, jobs) = if args.smoke {
@@ -146,6 +174,54 @@ fn main() {
         fleet_rate / 1e6
     );
 
+    // Sharded macro: the same workload shape one level up in scale,
+    // unsharded engine vs per-shard event loops + two-level routing.
+    let (big_nodes, big_jobs) = if args.smoke { (200, 10_000) } else { (10_000, 1_000_000) };
+    let shards = args.shards.unwrap_or(8).max(1);
+    banner(
+        "FS-SHARD",
+        &format!("sharded fleet macro ({big_nodes} nodes, {big_jobs} jobs, {shards} shards)"),
+    );
+    let (ref_out, ref_wall) = sharded_macro(big_nodes, big_jobs, 1);
+    println!(
+        "1 shard (reference): {ref_wall:.2}s wall, {} DES events ({:.2}M events/sec)",
+        ref_out.outcome.des_events,
+        ref_out.outcome.des_events as f64 / ref_wall / 1e6
+    );
+    let (out, wall) =
+        if shards > 1 { sharded_macro(big_nodes, big_jobs, shards) } else { (ref_out, ref_wall) };
+    let speedup = ref_wall / wall;
+    let sharded_rate = out.outcome.des_events as f64 / wall;
+    let sharded_admission_us = wall / big_jobs as f64 * 1e6;
+    let sharded_latency_s = out
+        .outcome
+        .completed
+        .iter()
+        .map(|c| c.latency_s())
+        .sum::<f64>()
+        / big_jobs as f64;
+    let sharded_energy_j =
+        out.outcome.node_energy_j.iter().sum::<f64>() / big_jobs as f64;
+    println!(
+        "{shards} shard(s): {wall:.2}s wall ({speedup:.2}x vs 1 shard), {:.2}M events/sec, \
+         {sharded_admission_us:.1} us/job, {} overflow reroutes",
+        sharded_rate / 1e6,
+        out.overflow_reroutes
+    );
+    let mut st = Table::new(["shard", "nodes", "jobs", "des_events", "Mev/s", "q_peak", "energy_kJ"]);
+    for s in &out.per_shard {
+        st.row([
+            format!("{}", s.shard),
+            format!("{}", s.nodes),
+            format!("{}", s.jobs),
+            format!("{}", s.des_events),
+            format!("{:.2}", s.des_events as f64 / wall / 1e6),
+            format!("{}", s.max_queue_depth),
+            format!("{:.1}", s.energy_j / 1e3),
+        ]);
+    }
+    st.print();
+
     let metrics = vec![
         Metric::higher("des_events_per_sec", des_rate),
         Metric::lower("cached_plan_ns", plan_ns),
@@ -153,6 +229,12 @@ fn main() {
         Metric::lower("admission_decision_us", admission_us),
         Metric::lower("fleet_mean_latency_s", fleet.mean_latency_s),
         Metric::lower("fleet_energy_per_job_j", fleet.energy_per_job_j),
+        Metric::lower("sharded_wall_s", wall),
+        Metric::higher("sharded_events_per_sec", sharded_rate),
+        Metric::higher("shard_speedup", speedup),
+        Metric::lower("sharded_admission_us", sharded_admission_us),
+        Metric::lower("sharded_mean_latency_s", sharded_latency_s),
+        Metric::lower("sharded_energy_per_job_j", sharded_energy_j),
     ];
 
     let mut t = Table::new(["metric", "value"]);

@@ -143,6 +143,9 @@ pub struct BenchArgs {
     /// Enforce the bench's absolute perf assertions (off by default so
     /// loaded CI machines can't spuriously fail a functional run).
     pub strict: bool,
+    /// Override the shard count for sharded fleet benches (CI runs the
+    /// smoke gate at `--shards 1` and `--shards 4`).
+    pub shards: Option<usize>,
 }
 
 impl BenchArgs {
@@ -166,6 +169,7 @@ impl BenchArgs {
                 "--iters" => out.iters = value(&mut it).and_then(|v| v.parse().ok()),
                 "--smoke" => out.smoke = true,
                 "--strict" => out.strict = true,
+                "--shards" => out.shards = value(&mut it).and_then(|v| v.parse().ok()),
                 _ => {}
             }
         }
@@ -262,8 +266,9 @@ fn fmt_metric(v: f64) -> String {
 /// baseline, with the signed relative change. Returns the rendered
 /// table and the list of metrics whose move in the BAD direction
 /// exceeds `fail_threshold` (a fraction: 0.25 = fail a >25%
-/// regression). Metrics absent from the baseline are listed as new and
-/// never fail.
+/// regression). Metrics absent from the baseline are listed as new, and
+/// baseline metrics this run no longer reports as removed; neither
+/// fails — a bench reshape shouldn't masquerade as a perf regression.
 pub fn compare_to_baseline(
     current: &[Metric],
     baseline: &[(String, f64)],
@@ -297,6 +302,11 @@ pub fn compare_to_baseline(
                     ));
                 }
             }
+        }
+    }
+    for (name, value) in baseline {
+        if !current.iter().any(|m| m.name == *name) {
+            t.row([name.as_str(), "-", &fmt_metric(*value), "(removed)"]);
         }
     }
     (t.render(), failures)
@@ -388,6 +398,12 @@ mod tests {
         assert_eq!(b.baseline.as_deref(), Some("main"));
         assert!(b.strict);
         assert!(b.save_baseline.is_none());
+        assert!(b.shards.is_none());
+        let c = args(&["--shards", "4"]);
+        assert_eq!(c.shards, Some(4));
+        let d = args(&["--shards=1", "--smoke"]);
+        assert_eq!(d.shards, Some(1));
+        assert!(d.smoke);
     }
 
     #[test]
@@ -439,5 +455,8 @@ mod tests {
         let (table, failures) = compare_to_baseline(&new, &baseline, 0.25);
         assert!(failures.is_empty());
         assert!(table.contains("(new)"));
+        // Baseline metrics the run no longer reports inform too.
+        assert!(table.contains("latency_ns"));
+        assert!(table.contains("(removed)"));
     }
 }

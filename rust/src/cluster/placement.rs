@@ -14,8 +14,9 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::executor::run_sim;
 use crate::device::DeviceSpec;
 use crate::server::allocator::GrantPolicy;
-use crate::server::engine::{EngineConfig, EngineJob, ServingEngine, SplitDecider};
+use crate::server::engine::{EngineConfig, EngineJob, EngineOutcome, ServingEngine, SplitDecider};
 use crate::server::policy::QueuePolicy;
+use crate::server::shard::{run_sharded, FleetDecider, ShardedConfig};
 use crate::workload::{TaskProfile, Video};
 
 pub use crate::server::policy::PlacementPolicy;
@@ -31,6 +32,10 @@ pub struct Cluster {
     /// Fixed admission-time grants, or elastic work-conserving regrants
     /// at every arrival/completion (see `server::allocator`).
     pub grant_policy: GrantPolicy,
+    /// Event-loop shards driving the fleet (1 = the plain unsharded
+    /// engine; >1 = per-shard engines behind the energy-conscious
+    /// two-level router, see `server::shard`).
+    pub shards: usize,
 }
 
 /// Per-run summary.
@@ -51,7 +56,13 @@ pub struct ClusterReport {
 impl Cluster {
     pub fn new(devices: Vec<DeviceSpec>, policy: PlacementPolicy) -> Self {
         assert!(!devices.is_empty());
-        Cluster { devices, policy, max_concurrent_jobs: 1, grant_policy: GrantPolicy::Fixed }
+        Cluster {
+            devices,
+            policy,
+            max_concurrent_jobs: 1,
+            grant_policy: GrantPolicy::Fixed,
+            shards: 1,
+        }
     }
 
     /// Energy-optimal split for a device (memory-capped core count; the
@@ -106,8 +117,12 @@ impl Cluster {
             deadline_weighted_shares: false,
             ..EngineConfig::single_node(self.devices[0].clone())
         };
-        let outcome =
-            ServingEngine::new(cfg, engine_jobs, SplitDecider::PerNodeOptimal).run()?;
+        let outcome: EngineOutcome = if self.shards > 1 {
+            run_sharded(&ShardedConfig::new(cfg, self.shards), engine_jobs, FleetDecider::PerNodeOptimal)?
+                .outcome
+        } else {
+            ServingEngine::new(cfg, engine_jobs, SplitDecider::PerNodeOptimal).run()?
+        };
 
         let mut jobs_per_node = vec![0usize; n];
         for c in &outcome.completed {
@@ -268,6 +283,22 @@ mod tests {
             fixed.total_energy_j
         );
         assert!(elastic.makespan_s < fixed.makespan_s);
+    }
+
+    #[test]
+    fn sharded_cluster_serves_the_same_stream() {
+        // Staggered stream over 4 nodes: the 2-shard run must serve
+        // every job, keep round-robin pins exact, and report per-node
+        // vectors for the whole fleet.
+        let devices = vec![DeviceSpec::tx2(), DeviceSpec::tx2(), DeviceSpec::orin(), DeviceSpec::orin()];
+        let jobs: Vec<(f64, usize)> = (0..16).map(|i| (i as f64 * 1.5, 120)).collect();
+        let mut c = Cluster::new(devices, PlacementPolicy::RoundRobin);
+        c.shards = 2;
+        let r = c.run(&jobs).unwrap();
+        assert_eq!(r.jobs, 16);
+        assert_eq!(r.jobs_per_node, vec![4, 4, 4, 4]);
+        assert_eq!(r.node_utilization.len(), 4);
+        assert!(r.total_energy_j > 0.0 && r.makespan_s > 0.0);
     }
 
     #[test]

@@ -13,7 +13,10 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::executor::{self, ExperimentResult};
 use crate::coordinator::optimizer::{OnlineOptimizer, OptimizerDecision};
 use crate::coordinator::planner::{FixedModePlanner, Plan, PlanCacheStats, PlanRequest, Planner};
+use crate::device::DeviceSpec;
 use crate::metrics::Registry;
+use crate::server::allocator::predict_full_device;
+use crate::server::shard::ShardSnapshot;
 use crate::workload::{TaskProfile, Video};
 
 /// How the fixed-mode planner chooses k.
@@ -131,6 +134,150 @@ impl Coordinator {
     /// Plan-cache hit/miss/occupancy counters from the planner.
     pub fn plan_cache_stats(&self) -> PlanCacheStats {
         self.planner.cache_stats()
+    }
+}
+
+/// Energy-conscious cross-shard selector: the top level of the sharded
+/// fleet's two-level router ([`crate::server::shard`]). It chooses the
+/// shard; the shard's own engine then places the job on a node with its
+/// configured policy (power-of-two choices at fleet scale).
+///
+/// The objective is ECORE-style: each shard is scored by the predicted
+/// energy of its best device for this job, inflated by the shard's
+/// current congestion — `energy * (1 + (queued + routed_this_epoch) /
+/// nodes)` — so a cheap pool absorbs load until its backlog erodes the
+/// energy advantage. Queue saturation triggers overflow re-routing to
+/// the least-loaded unsaturated shard.
+///
+/// Deterministic by construction: decisions depend only on the static
+/// pool profiles, the barrier-time [`ShardSnapshot`]s (collected in
+/// shard order) and the in-epoch routing counts — never on thread
+/// timing.
+#[derive(Debug)]
+pub struct ShardRouter {
+    pools: Vec<PoolProfile>,
+    /// Queue depth (`queued + routed_this_epoch`) at which a shard
+    /// stops taking overflow-eligible jobs.
+    saturation: usize,
+    routed_epoch: Vec<usize>,
+    /// Jobs routed per shard over the whole run.
+    routed_total: Vec<usize>,
+    /// Per-(shard, task, frames) energy estimates. The fleet serves a
+    /// handful of task shapes across millions of jobs, so this is
+    /// effectively a free lookup after warmup.
+    energy_cache: std::collections::HashMap<(usize, usize, u64, u64), f64>,
+    /// Jobs re-routed away from their scored-best shard because its
+    /// admission queue was saturated.
+    pub overflow_reroutes: u64,
+}
+
+#[derive(Debug)]
+struct PoolProfile {
+    nodes: usize,
+    /// Distinct device types in the pool (deduped by name), for the
+    /// per-job energy estimate.
+    devices: Vec<DeviceSpec>,
+}
+
+impl ShardRouter {
+    /// Build from each shard's node list. `saturation` is the queued
+    /// depth beyond which a shard overflows (see [`Self::choose`]).
+    pub fn new(pools: &[&[DeviceSpec]], saturation: usize) -> Self {
+        assert!(!pools.is_empty(), "router needs at least one shard");
+        let pools: Vec<PoolProfile> = pools
+            .iter()
+            .map(|nodes| {
+                assert!(!nodes.is_empty(), "empty shard pool");
+                let mut devices: Vec<DeviceSpec> = Vec::new();
+                for d in *nodes {
+                    if !devices.iter().any(|seen| seen.name == d.name) {
+                        devices.push(d.clone());
+                    }
+                }
+                PoolProfile { nodes: nodes.len(), devices }
+            })
+            .collect();
+        let n = pools.len();
+        ShardRouter {
+            pools,
+            saturation: saturation.max(1),
+            routed_epoch: vec![0; n],
+            routed_total: vec![0; n],
+            energy_cache: std::collections::HashMap::new(),
+            overflow_reroutes: 0,
+        }
+    }
+
+    /// Pick a shard for a `frames`-sized `task` job given the
+    /// barrier-time load snapshots (one per shard, in shard order).
+    pub fn choose(
+        &mut self,
+        task: &TaskProfile,
+        frames: usize,
+        load: &[ShardSnapshot],
+    ) -> usize {
+        debug_assert_eq!(load.len(), self.pools.len());
+        let mut best = 0usize;
+        let mut best_key = (f64::INFINITY, usize::MAX, usize::MAX);
+        for s in 0..self.pools.len() {
+            let energy = self.energy_estimate(s, task, frames);
+            let depth = load[s].queued + self.routed_epoch[s];
+            let congestion = depth as f64 / self.pools[s].nodes as f64;
+            // Ties (identical pools, identical load) break to the
+            // shallower queue, then the lower shard index.
+            let key = (energy * (1.0 + congestion), depth, s);
+            if key < best_key {
+                best_key = key;
+                best = s;
+            }
+        }
+        let depth = |me: &Self, s: usize| load[s].queued + me.routed_epoch[s];
+        if depth(self, best) >= self.saturation {
+            // Overflow: the energy-best shard is saturated. Re-route to
+            // the unsaturated shard with the lowest per-node depth (if
+            // every shard is saturated, stay — the backlog is global).
+            let alt = (0..self.pools.len())
+                .filter(|&s| depth(self, s) < self.saturation)
+                .min_by(|&a, &b| {
+                    let da = depth(self, a) as f64 / self.pools[a].nodes as f64;
+                    let db = depth(self, b) as f64 / self.pools[b].nodes as f64;
+                    da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+                });
+            if let Some(alt) = alt {
+                self.overflow_reroutes += 1;
+                best = alt;
+            }
+        }
+        self.routed_epoch[best] += 1;
+        self.routed_total[best] += 1;
+        best
+    }
+
+    /// Reset the in-epoch routing counts (fresh snapshots supersede
+    /// them at the next barrier).
+    pub fn end_epoch(&mut self) {
+        self.routed_epoch.iter_mut().for_each(|c| *c = 0);
+    }
+
+    /// Jobs routed to each shard over the run so far.
+    pub fn routed_per_shard(&self) -> &[usize] {
+        &self.routed_total
+    }
+
+    /// Best-case (whole-device) predicted energy for this job in shard
+    /// `s`: the minimum over the pool's distinct device types.
+    fn energy_estimate(&mut self, s: usize, task: &TaskProfile, frames: usize) -> f64 {
+        let key = (s, frames, task.flops_per_frame, task.relative_cost.to_bits());
+        if let Some(&e) = self.energy_cache.get(&key) {
+            return e;
+        }
+        let e = self.pools[s]
+            .devices
+            .iter()
+            .map(|d| predict_full_device(d, task, frames).1)
+            .fold(f64::INFINITY, f64::min);
+        self.energy_cache.insert(key, e);
+        e
     }
 }
 
@@ -287,6 +434,74 @@ mod tests {
         })
         .unwrap();
         assert_eq!(c.decisions().len(), 2);
+    }
+
+    fn idle_snapshot(nodes: usize, cores_per_node: f64) -> ShardSnapshot {
+        ShardSnapshot {
+            queued: 0,
+            resident: 0,
+            free_cores: nodes as f64 * cores_per_node,
+            total_cores: nodes as f64 * cores_per_node,
+            energy_j: 0.0,
+            des_events: 0,
+        }
+    }
+
+    #[test]
+    fn shard_router_prefers_the_energy_best_pool_at_equal_load() {
+        let orin = vec![crate::device::DeviceSpec::orin(); 4];
+        let tx2 = vec![crate::device::DeviceSpec::tx2(); 4];
+        let task = TaskProfile::yolo_tiny();
+        let e_orin = predict_full_device(&orin[0], &task, 96).1;
+        let e_tx2 = predict_full_device(&tx2[0], &task, 96).1;
+        assert_ne!(e_orin, e_tx2, "pools must differ for this test to bite");
+        let cheaper = if e_orin < e_tx2 { 0 } else { 1 };
+        let mut r = ShardRouter::new(&[&orin[..], &tx2[..]], 1_000);
+        let load = vec![idle_snapshot(4, 12.0), idle_snapshot(4, 4.0)];
+        assert_eq!(r.choose(&task, 96, &load), cheaper);
+        // The estimate is cached after the first probe.
+        assert_eq!(r.choose(&task, 96, &load), cheaper);
+        assert_eq!(r.routed_per_shard()[cheaper], 2);
+    }
+
+    #[test]
+    fn shard_router_congestion_erodes_the_energy_advantage() {
+        // Two identical pools: ties break to shard 0, but every routed
+        // job raises its congestion term, so a burst spreads over both.
+        let pool = vec![crate::device::DeviceSpec::orin(); 2];
+        let mut r = ShardRouter::new(&[&pool[..], &pool[..]], 1_000);
+        let load = vec![idle_snapshot(2, 12.0), idle_snapshot(2, 12.0)];
+        let task = TaskProfile::yolo_tiny();
+        for _ in 0..10 {
+            r.choose(&task, 96, &load);
+        }
+        assert_eq!(r.routed_per_shard(), &[5, 5], "identical pools must split evenly");
+        // New epoch, new counts: the in-epoch pressure resets.
+        r.end_epoch();
+        assert_eq!(r.choose(&task, 96, &load), 0);
+    }
+
+    #[test]
+    fn shard_router_overflows_a_saturated_shard() {
+        // Same device type in both pools (equal energy) so the outcome
+        // is pinned by load terms alone: the big pool's low per-node
+        // congestion makes it the scored favorite, and once its depth
+        // crosses the saturation bar the router must overflow to the
+        // small pool while IT still has room — and stop once both are
+        // saturated.
+        let small = vec![crate::device::DeviceSpec::orin(); 1];
+        let big = vec![crate::device::DeviceSpec::orin(); 4];
+        let mut r = ShardRouter::new(&[&small[..], &big[..]], 3);
+        let load = vec![idle_snapshot(1, 12.0), idle_snapshot(4, 12.0)];
+        let task = TaskProfile::yolo_tiny();
+        let picks: Vec<usize> = (0..8).map(|_| r.choose(&task, 96, &load)).collect();
+        assert!(picks.contains(&0) && picks.contains(&1), "{picks:?}");
+        assert!(r.overflow_reroutes > 0, "saturating the favorite must re-route");
+        // Overflow re-routing never pushes a shard past saturation
+        // while an alternative has room: the small pool stops at the
+        // bar (its own picks + reroutes), the rest lands on the big one.
+        assert!(r.routed_per_shard()[0] <= 3, "{:?}", r.routed_per_shard());
+        assert_eq!(r.routed_per_shard().iter().sum::<usize>(), 8);
     }
 
     #[test]

@@ -376,13 +376,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         report.regrants
     );
     println!(
-        "planner={}  mode switches={}  plan cache hits={} misses={} cached={}",
+        "planner={}  mode switches={}  plan cache hits={} misses={} cached={}  p2c fallback scans={}",
         coordinator.planner_name(),
         report.mode_switches,
         report.plan_cache_hits,
         report.plan_cache_misses,
-        report.plans_cached
+        report.plans_cached,
+        report.p2c_fallback_scans
     );
+    if !report.shard_queue_depth_peaks.is_empty() {
+        println!("shard queue-depth peaks={:?}", report.shard_queue_depth_peaks);
+    }
     if report.sessions > 0 {
         println!(
             "sessions={}  live resizes={}  measured energy={:.1} J",

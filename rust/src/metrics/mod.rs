@@ -74,6 +74,20 @@ impl Histogram {
         self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e9
     }
 
+    /// Fold another histogram into this one, bucket-wise. Exact: both
+    /// sides use the same fixed log-scale buckets, so counts, sums and
+    /// bucket populations add without re-bucketing error.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// Approximate quantile from bucket upper bounds; `q` in [0,1].
     pub fn quantile_s(&self, q: f64) -> f64 {
         let total = self.count();
@@ -148,6 +162,30 @@ impl Registry {
             .entry(name.to_string())
             .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
             .clone()
+    }
+
+    /// Fold another registry into this one — the shard merge layer.
+    /// Counters sum. Gauges sum too, except high-water marks (names
+    /// ending in `_peak`), which keep the maximum — a fleet-wide peak is
+    /// the max over shards, not their sum. Histograms are merged
+    /// bucket-wise (exact; shared bucket layout). Per-node gauges
+    /// (`node{i}_*`) sum like any other, which is only correct when the
+    /// sources cover disjoint index ranges — the shard merge re-writes
+    /// them from the merged vectors afterwards.
+    pub fn merge_from(&self, other: &Registry) {
+        for (name, v) in other.counters.lock().unwrap().iter() {
+            self.inc(name, *v);
+        }
+        for (name, v) in other.gauges.lock().unwrap().iter() {
+            if name.ends_with("_peak") {
+                self.set_gauge_max(name, *v);
+            } else {
+                self.add_gauge(name, *v);
+            }
+        }
+        for (name, h) in other.histograms.lock().unwrap().iter() {
+            self.histogram(name).merge_from(h);
+        }
     }
 
     /// Export everything as JSON.
@@ -280,6 +318,37 @@ mod tests {
         }
         assert_eq!(h.count(), 8000);
         assert_eq!(r.counter("n"), 8000);
+    }
+
+    #[test]
+    fn registry_merge_sums_and_keeps_peaks() {
+        let a = Registry::new();
+        a.inc("jobs", 3);
+        a.add_gauge("frames_shed", 2.0);
+        a.set_gauge_max("queue_depth_peak", 5.0);
+        a.histogram("lat").record_s(0.1);
+        a.histogram("lat").record_s(0.2);
+
+        let b = Registry::new();
+        b.inc("jobs", 4);
+        b.inc("only_b", 1);
+        b.add_gauge("frames_shed", 1.5);
+        b.set_gauge_max("queue_depth_peak", 3.0);
+        b.histogram("lat").record_s(0.4);
+        b.histogram("only_b").record_s(0.01);
+
+        a.merge_from(&b);
+        assert_eq!(a.counter("jobs"), 7);
+        assert_eq!(a.counter("only_b"), 1);
+        assert_eq!(a.gauge("frames_shed"), Some(3.5));
+        // _peak gauges keep the maximum across shards, not the sum.
+        assert_eq!(a.gauge("queue_depth_peak"), Some(5.0));
+        let lat = a.histogram("lat");
+        assert_eq!(lat.count(), 3);
+        assert!((lat.mean_s() - (0.1 + 0.2 + 0.4) / 3.0).abs() < 1e-6);
+        assert_eq!(a.histogram("only_b").count(), 1);
+        // The source is untouched.
+        assert_eq!(b.counter("jobs"), 4);
     }
 
     #[test]

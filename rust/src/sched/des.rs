@@ -175,6 +175,23 @@ impl<E> EventQueue<E> {
         None
     }
 
+    /// Time of the earliest live event without consuming it, or `None`
+    /// when the queue is empty. Tombstones encountered at the top are
+    /// lazily reclaimed (their `cancel` already decremented `live`), so
+    /// repeated peeks stay amortized O(1). The clock does not advance.
+    pub fn next_time_s(&mut self) -> Option<f64> {
+        while let Some(entry) = self.heap.peek().copied() {
+            if self.slots[entry.slot as usize].event.is_some() {
+                return Some(entry.time_s);
+            }
+            self.heap.pop();
+            let slot = &mut self.slots[entry.slot as usize];
+            slot.gen = slot.gen.wrapping_add(1);
+            self.free.push(entry.slot);
+        }
+        None
+    }
+
     /// Number of live (non-cancelled) pending events.
     pub fn len(&self) -> usize {
         self.live
@@ -279,6 +296,20 @@ mod tests {
         assert!(q.is_empty());
         // Two slots cover the whole run: one live, one tombstoned.
         assert!(q.slots.len() <= 2, "slab grew to {} slots", q.slots.len());
+    }
+
+    #[test]
+    fn peek_skips_tombstones_without_advancing_clock() {
+        let mut q = EventQueue::new();
+        let h = q.push(1.0, "drop");
+        q.push(2.0, "keep");
+        q.cancel(h);
+        assert_eq!(q.next_time_s(), Some(2.0));
+        assert_eq!(q.now_s(), 0.0, "peek must not advance the clock");
+        assert_eq!(q.len(), 1);
+        // The tombstone's slot was reclaimed during the peek.
+        assert_eq!(q.pop(), Some((2.0, "keep")));
+        assert_eq!(q.next_time_s(), None);
     }
 
     #[test]

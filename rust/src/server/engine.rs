@@ -226,6 +226,10 @@ pub struct ServingEngine<'a> {
     dispatch_scheduled: bool,
     next_arrival: usize,
     rr_next: usize,
+    /// Events processed so far (see [`EngineOutcome::des_events`]).
+    /// A plain field, not a registry counter: the lock + string key
+    /// would dominate the per-event cost.
+    des_events: u64,
     /// Sampling source for [`PlacementPolicy::PowerOfTwo`], seeded from
     /// [`EngineConfig::placement_seed`].
     place_rng: Rng,
@@ -277,6 +281,7 @@ impl<'a> ServingEngine<'a> {
             dispatch_scheduled: false,
             next_arrival: 0,
             rr_next: 0,
+            des_events: 0,
             place_rng,
             scratch_jobs: Vec::new(),
             scratch_residents: Vec::new(),
@@ -320,21 +325,53 @@ impl<'a> ServingEngine<'a> {
 
     /// Run the simulation to completion.
     pub fn run(mut self) -> Result<EngineOutcome> {
-        if self.jobs.is_empty() {
-            return Ok(self.into_outcome(0.0, 0));
-        }
+        self.prime();
+        self.run_until(f64::INFINITY)?;
+        self.finish()
+    }
+
+    /// Schedule the arrival events for every job the engine was
+    /// constructed with. `run` calls this once before draining; a
+    /// sharded driver calls it on an (initially empty) engine and then
+    /// feeds jobs through [`Self::push_job`] at the epoch barriers.
+    /// Jobs already scheduled (via `push_job`) are not re-scheduled.
+    pub fn prime(&mut self) {
         if self.closed_loop {
             self.emit_next_arrival(0.0);
         } else {
-            for i in 0..self.jobs.len() {
+            for i in self.next_arrival..self.jobs.len() {
                 self.events.push(self.jobs[i].arrival_s, Ev::Arrival(i));
             }
             self.next_arrival = self.jobs.len();
         }
+    }
 
-        let mut des_events: u64 = 0;
-        while let Some((t, ev)) = self.events.pop() {
-            des_events += 1;
+    /// Offer one more job to a live open-loop engine — the sharded
+    /// driver's path, where jobs are routed to a shard at the epoch
+    /// barrier rather than known at construction. The arrival is
+    /// clamped to the shard clock so late cross-shard routing can never
+    /// schedule into the past.
+    pub fn push_job(&mut self, mut job: EngineJob) {
+        assert!(!self.closed_loop, "push_job drives open-loop engines only");
+        job.arrival_s = job.arrival_s.max(self.events.now_s());
+        let i = self.jobs.len();
+        self.jobs.push(job);
+        self.completion_handles.push(None);
+        self.next_arrival = self.jobs.len();
+        self.events.push(self.jobs[i].arrival_s, Ev::Arrival(i));
+    }
+
+    /// Process every event with time <= `t_max` (an epoch barrier);
+    /// `f64::INFINITY` drains the queue. Between barriers a shard's
+    /// engine is fully isolated, which is what makes the sharded run
+    /// deterministic regardless of thread interleaving.
+    pub fn run_until(&mut self, t_max: f64) -> Result<()> {
+        while let Some(next_t) = self.events.next_time_s() {
+            if next_t > t_max {
+                break;
+            }
+            let (t, ev) = self.events.pop().expect("peeked event vanished");
+            self.des_events += 1;
             match ev {
                 Ev::Arrival(i) => {
                     self.jobs[i].arrival_s = t;
@@ -390,7 +427,12 @@ impl<'a> ServingEngine<'a> {
                 }
             }
         }
+        Ok(())
+    }
 
+    /// Close a drained run: assert nothing was lost and fold the
+    /// engine's state into an [`EngineOutcome`].
+    pub fn finish(self) -> Result<EngineOutcome> {
         anyhow::ensure!(
             self.queue.is_empty(),
             "engine drained with {} jobs still queued (jobs can never be admitted \
@@ -404,10 +446,24 @@ impl<'a> ServingEngine<'a> {
             self.jobs.len()
         );
         let wall = self.completed.iter().map(|c| c.finish_s).fold(0.0, f64::max);
-        Ok(self.into_outcome(wall, des_events))
+        Ok(self.into_outcome(wall))
     }
 
-    fn into_outcome(self, wall_s: f64, des_events: u64) -> EngineOutcome {
+    /// Cheap load/energy snapshot for the cross-shard router, taken at
+    /// an epoch barrier (single-threaded: workers are parked between
+    /// `run_until` calls when this runs).
+    pub fn shard_snapshot(&self) -> super::shard::ShardSnapshot {
+        super::shard::ShardSnapshot {
+            queued: self.queue.len(),
+            resident: self.nodes.iter().map(|n| n.active.len()).sum(),
+            free_cores: self.nodes.iter().map(|n| n.free_cores).sum(),
+            total_cores: self.nodes.iter().map(|n| n.device.cores).sum(),
+            energy_j: self.nodes.iter().map(NodeAllocator::energy_j).sum(),
+            des_events: self.des_events,
+        }
+    }
+
+    fn into_outcome(self, wall_s: f64) -> EngineOutcome {
         for (i, n) in self.nodes.iter().enumerate() {
             self.metrics.set_gauge(&format!("node{i}_utilization"), n.utilization());
             self.metrics.set_gauge(&format!("node{i}_energy_j"), n.energy_j());
@@ -423,7 +479,7 @@ impl<'a> ServingEngine<'a> {
             regrants: self.metrics.counter("regrants"),
             mode_switches: self.metrics.counter("mode_switches"),
             session_reports: self.session_reports,
-            des_events,
+            des_events: self.des_events,
             metrics: self.metrics,
         }
     }

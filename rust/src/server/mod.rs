@@ -23,12 +23,16 @@ pub mod allocator;
 pub mod engine;
 pub mod policy;
 pub mod queue;
+pub mod shard;
 
 pub use allocator::GrantPolicy;
 pub use engine::{
     CompletedJob, EngineConfig, EngineJob, EngineOutcome, ServingEngine, SplitDecider,
 };
 pub use policy::{PlacementPolicy, QueuePolicy};
+pub use shard::{
+    run_sharded, FleetDecider, ShardSnapshot, ShardStats, ShardedConfig, ShardedOutcome,
+};
 
 use anyhow::{Context, Result};
 
@@ -144,6 +148,14 @@ pub struct ServeReport {
     pub plan_cache_misses: u64,
     /// Distinct decisions resident in the plan cache after the run.
     pub plans_cached: usize,
+    /// Power-of-two placements where neither sample could take the job
+    /// and the engine fell back to the full least-loaded scan (0 for
+    /// other placement policies).
+    pub p2c_fallback_scans: u64,
+    /// Per-shard peak admission-queue depths, indexed by shard (empty
+    /// on unsharded runs). Read from the merged registry's
+    /// `shard{i}_queue_depth_peak` gauges.
+    pub shard_queue_depth_peaks: Vec<usize>,
 }
 
 impl ServeReport {
@@ -181,6 +193,12 @@ impl ServeReport {
             plan_cache_hits: 0,
             plan_cache_misses: 0,
             plans_cached: 0,
+            p2c_fallback_scans: outcome.metrics.counter("p2c_fallback_scans"),
+            shard_queue_depth_peaks: (0..)
+                .map(|i| outcome.metrics.gauge(&format!("shard{i}_queue_depth_peak")))
+                .take_while(Option::is_some)
+                .map(|g| g.unwrap_or(0.0) as usize)
+                .collect(),
         };
         report.apply_battery(&Battery::pack_50wh());
         report
@@ -242,6 +260,16 @@ impl ServeReport {
             ("plan_cache_hits", Json::num(self.plan_cache_hits as f64)),
             ("plan_cache_misses", Json::num(self.plan_cache_misses as f64)),
             ("plans_cached", Json::num(self.plans_cached as f64)),
+            ("p2c_fallback_scans", Json::num(self.p2c_fallback_scans as f64)),
+            (
+                "shard_queue_depth_peaks",
+                Json::Array(
+                    self.shard_queue_depth_peaks
+                        .iter()
+                        .map(|&d| Json::num(d as f64))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -505,6 +533,13 @@ mod tests {
         assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(0));
         assert_eq!(j.get("plan_cache_misses").unwrap().as_usize(), Some(0));
         assert_eq!(j.get("plans_cached").unwrap().as_usize(), Some(0));
+        // Single node under LeastLoaded: no p2c fallbacks, no shards —
+        // but both fields must still export.
+        assert_eq!(j.get("p2c_fallback_scans").unwrap().as_usize(), Some(0));
+        assert_eq!(
+            j.get("shard_queue_depth_peaks").unwrap().as_array().map(|a| a.len()),
+            Some(0)
+        );
     }
 
     #[test]

@@ -1,0 +1,536 @@
+//! Sharded fleet driver: per-node-group event loops with a merge layer.
+//!
+//! PR 6 made the per-admission hot path cheap, but one
+//! [`ServingEngine`] still serializes the whole fleet through a single
+//! event loop and allocator, so SIM wall-clock grows linearly with
+//! fleet size. This module applies the paper's splitting insight one
+//! level up: partition the nodes into contiguous **shards**, each owned
+//! by a long-lived worker thread running its own engine (slab event
+//! queue, `NodeAllocator` state, placement RNG), and drive them
+//! concurrently between **global admission barriers**.
+//!
+//! # Epochs and the two-level router
+//!
+//! Time is divided into fixed epochs (`ShardedConfig::epoch_s`). At
+//! each barrier the driver — single-threaded — routes every job
+//! arriving inside the next epoch to a shard: pinned jobs go to the
+//! shard owning their node (affinity remapped to the shard-local
+//! index); free jobs go through the energy-conscious
+//! [`ShardRouter`] (ECORE-style: predicted pool energy inflated by
+//! congestion, with overflow re-routing away from saturated shards).
+//! The shards then run concurrently to the epoch end, each reporting a
+//! [`ShardSnapshot`] the router uses at the next barrier.
+//!
+//! # Determinism contract
+//!
+//! Sharded runs are bit-for-bit reproducible under a fixed seed
+//! regardless of thread interleaving:
+//!
+//! * routing happens only at barriers, on the single driver thread, in
+//!   arrival order (stable for ties), from snapshots collected in shard
+//!   order;
+//! * between barriers each shard engine touches exclusively its own
+//!   state, so thread scheduling cannot reorder anything observable;
+//! * per-shard placement RNG streams are derived statelessly from the
+//!   base seed ([`split_seed`]), not from a shared forked generator.
+//!
+//! A `shards == 1` configuration bypasses the epoch machinery entirely
+//! and runs the plain unsharded engine with the unchanged seed, so it
+//! is parity-identical to the pre-shard engine by construction (the
+//! oracle test in `tests/sharding.rs` pins this).
+//!
+//! # Merge semantics
+//!
+//! The merge layer folds per-shard [`EngineOutcome`]s into one:
+//! completions are stable-sorted by finish time (ties keep shard
+//! order); per-node vectors concatenate (the partition is contiguous,
+//! so shard-local node `i` is global node `start + i`); counters and
+//! DES-event counts sum; the wall clock is the max; the mean queue
+//! depth is the per-shard time-weighted average; `*_peak` gauges keep
+//! the max while other gauges/counters/histograms add
+//! ([`Registry::merge_from`]). Per-shard peaks are preserved as
+//! `shard{i}_queue_depth_peak` / `shard{i}_des_events` gauges.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{EngineConfig, EngineJob, EngineOutcome, ServingEngine, SplitDecider};
+use crate::coordinator::router::ShardRouter;
+use crate::device::DeviceSpec;
+use crate::metrics::Registry;
+use crate::util::rng::split_seed;
+
+/// Barrier-time load/energy summary of one shard, produced by
+/// [`ServingEngine::shard_snapshot`] and consumed by the
+/// [`ShardRouter`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardSnapshot {
+    /// Jobs waiting in the shard's admission queue.
+    pub queued: usize,
+    /// Jobs currently resident (admitted, running) across the shard.
+    pub resident: usize,
+    pub free_cores: f64,
+    pub total_cores: f64,
+    /// Energy metered so far.
+    pub energy_j: f64,
+    /// DES events processed so far.
+    pub des_events: u64,
+}
+
+/// How every shard engine plans admitted jobs. The coordinator-backed
+/// decider is deliberately absent: it borrows one mutable planner,
+/// which cannot be shared across shard threads (and asserts a single
+/// matching node anyway).
+#[derive(Debug, Clone, Copy)]
+pub enum FleetDecider {
+    /// Fixed k, clamped to the availability cap.
+    Fixed(usize),
+    /// Each node's energy-optimal full-device split (the fleet
+    /// default).
+    PerNodeOptimal,
+}
+
+impl FleetDecider {
+    fn split(self) -> SplitDecider<'static> {
+        match self {
+            FleetDecider::Fixed(k) => SplitDecider::Fixed(k),
+            FleetDecider::PerNodeOptimal => SplitDecider::PerNodeOptimal,
+        }
+    }
+}
+
+/// Sharded-run configuration around a base [`EngineConfig`] whose
+/// `nodes` list is the full fleet.
+#[derive(Debug, Clone)]
+pub struct ShardedConfig {
+    pub base: EngineConfig,
+    /// Shard count, clamped to `[1, nodes]` at run time. 1 = the plain
+    /// unsharded engine (parity path).
+    pub shards: usize,
+    /// Epoch length between global admission barriers, seconds.
+    /// Shorter epochs tighten routing freshness (snapshots age at most
+    /// one epoch); longer epochs amortize barrier cost.
+    pub epoch_s: f64,
+    /// Admission-queue depth at which the router overflows a shard
+    /// (see [`ShardRouter`]).
+    pub queue_saturation: usize,
+}
+
+impl ShardedConfig {
+    pub fn new(base: EngineConfig, shards: usize) -> Self {
+        let shards = shards.clamp(1, base.nodes.len().max(1));
+        let per_shard = base.nodes.len().max(1).div_ceil(shards);
+        ShardedConfig {
+            base,
+            shards,
+            epoch_s: 5.0,
+            // Twice the shard's node count: a backlog deeper than the
+            // nodes it has can drain per service time means the energy
+            // advantage has long been eaten by queueing.
+            queue_saturation: (2 * per_shard).max(8),
+        }
+    }
+}
+
+/// Per-shard accounting surfaced next to the merged outcome.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Global index of the shard's first node.
+    pub first_node: usize,
+    /// Number of nodes the shard owns.
+    pub nodes: usize,
+    pub jobs: usize,
+    pub des_events: u64,
+    pub energy_j: f64,
+    /// The shard's own wall clock (its last completion).
+    pub wall_s: f64,
+    pub max_queue_depth: usize,
+}
+
+/// The merged outcome of a sharded run plus per-shard accounting.
+#[derive(Debug)]
+pub struct ShardedOutcome {
+    /// Merged, fleet-level outcome (see module docs for the merge
+    /// rules). `completed` is sorted by finish time; node vectors are
+    /// indexed by global node id.
+    pub outcome: EngineOutcome,
+    pub per_shard: Vec<ShardStats>,
+    /// Jobs the router moved off a saturated shard.
+    pub overflow_reroutes: u64,
+}
+
+/// Commands from the driver to a shard worker.
+enum ToShard {
+    /// Jobs routed to this shard for the coming epoch (arrival times
+    /// within it).
+    Jobs(Vec<EngineJob>),
+    /// Run the shard's event loop up to the barrier time, then report
+    /// a snapshot.
+    RunUntil(f64),
+    /// Drain to completion and report the final outcome.
+    Finish,
+}
+
+/// Responses from a shard worker to the driver.
+enum FromShard {
+    Snapshot(ShardSnapshot),
+    Done(Box<Result<EngineOutcome>>),
+}
+
+/// One shard's worker loop: owns its engine for the whole run. An
+/// engine error is latched and reported at `Finish` so the barrier
+/// protocol never wedges mid-epoch.
+fn shard_worker(
+    cfg: EngineConfig,
+    decider: FleetDecider,
+    rx: mpsc::Receiver<ToShard>,
+    tx: mpsc::Sender<FromShard>,
+) {
+    let mut engine = ServingEngine::new(cfg, Vec::new(), decider.split());
+    let mut failed: Option<anyhow::Error> = None;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToShard::Jobs(batch) => {
+                for job in batch {
+                    engine.push_job(job);
+                }
+            }
+            ToShard::RunUntil(t) => {
+                if failed.is_none() {
+                    if let Err(e) = engine.run_until(t) {
+                        failed = Some(e);
+                    }
+                }
+                if tx.send(FromShard::Snapshot(engine.shard_snapshot())).is_err() {
+                    return; // driver gone; nothing left to report to
+                }
+            }
+            ToShard::Finish => {
+                let result = match failed.take() {
+                    Some(e) => Err(e),
+                    None => engine.run_until(f64::INFINITY).and_then(|()| engine.finish()),
+                };
+                let _ = tx.send(FromShard::Done(Box::new(result)));
+                return;
+            }
+        }
+    }
+}
+
+/// Contiguous near-even partition of `nodes` into `shards` ranges,
+/// returned as `(start, len)` pairs.
+fn partition(nodes: usize, shards: usize) -> Vec<(usize, usize)> {
+    let base = nodes / shards;
+    let rem = nodes % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for i in 0..shards {
+        let len = base + usize::from(i < rem);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+fn send(tx: &mpsc::Sender<ToShard>, msg: ToShard, shard: usize) -> Result<()> {
+    tx.send(msg).map_err(|_| anyhow!("shard {shard} worker hung up unexpectedly"))
+}
+
+/// Run `jobs` over the sharded fleet described by `cfg`. See the
+/// module docs for the epoch/barrier protocol, the determinism
+/// contract and the merge semantics. Open-loop, pure-SIM only (no
+/// execution backend, no closed loop — both are single-engine
+/// concepts).
+pub fn run_sharded(
+    cfg: &ShardedConfig,
+    mut jobs: Vec<EngineJob>,
+    decider: FleetDecider,
+) -> Result<ShardedOutcome> {
+    let total_nodes = cfg.base.nodes.len();
+    assert!(total_nodes > 0, "sharded run needs at least one node");
+    let shards = cfg.shards.clamp(1, total_nodes);
+    if shards == 1 {
+        // Parity path: one shard IS the unsharded engine, run with the
+        // unchanged base seed and no epoch machinery, so the output is
+        // bit-for-bit the pre-shard engine's.
+        let outcome = ServingEngine::new(cfg.base.clone(), jobs, decider.split()).run()?;
+        let stats = ShardStats {
+            shard: 0,
+            first_node: 0,
+            nodes: total_nodes,
+            jobs: outcome.completed.len(),
+            des_events: outcome.des_events,
+            energy_j: outcome.node_energy_j.iter().sum(),
+            wall_s: outcome.wall_s,
+            max_queue_depth: outcome.max_queue_depth,
+        };
+        return Ok(ShardedOutcome { outcome, per_shard: vec![stats], overflow_reroutes: 0 });
+    }
+    assert!(cfg.epoch_s > 0.0, "epoch length must be positive");
+
+    let ranges = partition(total_nodes, shards);
+    let pools: Vec<&[DeviceSpec]> =
+        ranges.iter().map(|&(start, len)| &cfg.base.nodes[start..start + len]).collect();
+    let mut router = ShardRouter::new(&pools, cfg.queue_saturation);
+
+    let mut to_shard = Vec::with_capacity(shards);
+    let mut from_shard = Vec::with_capacity(shards);
+    let mut handles = Vec::with_capacity(shards);
+    for (i, &(start, len)) in ranges.iter().enumerate() {
+        let mut shard_cfg = cfg.base.clone();
+        shard_cfg.nodes = cfg.base.nodes[start..start + len].to_vec();
+        // Stateless seed splitting: each shard's placement stream is a
+        // pure function of (base seed, shard index), so spawn order and
+        // thread scheduling cannot perturb it.
+        shard_cfg.placement_seed = split_seed(cfg.base.placement_seed, i as u64);
+        let (tx_cmd, rx_cmd) = mpsc::channel::<ToShard>();
+        let (tx_res, rx_res) = mpsc::channel::<FromShard>();
+        let handle = thread::Builder::new()
+            .name(format!("shard-{i}"))
+            .spawn(move || shard_worker(shard_cfg, decider, rx_cmd, tx_res))
+            .map_err(|e| anyhow!("spawning shard worker {i}: {e}"))?;
+        to_shard.push(tx_cmd);
+        from_shard.push(rx_res);
+        handles.push(handle);
+    }
+
+    // Route in arrival order; the stable sort keeps the offered order
+    // for simultaneous arrivals (part of the determinism contract).
+    let total_jobs = jobs.len();
+    jobs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).expect("finite arrivals"));
+
+    let mut snapshots = vec![ShardSnapshot::default(); shards];
+    let mut batches: Vec<Vec<EngineJob>> = (0..shards).map(|_| Vec::new()).collect();
+    let mut pending = jobs.into_iter().peekable();
+    let mut epoch_end = cfg.epoch_s;
+    while pending.peek().is_some() {
+        // Fast-forward empty epochs in whole-epoch steps (still
+        // deterministic: barrier times stay multiples of epoch_s).
+        while pending.peek().is_some_and(|j| j.arrival_s >= epoch_end) {
+            epoch_end += cfg.epoch_s;
+        }
+        while pending.peek().is_some_and(|j| j.arrival_s < epoch_end) {
+            let mut job = pending.next().expect("peeked job vanished");
+            let s = match job.affinity {
+                Some(g) => {
+                    assert!(g < total_nodes, "affinity {g} beyond the fleet");
+                    let s = ranges
+                        .iter()
+                        .position(|&(start, len)| g >= start && g < start + len)
+                        .expect("partition covers every node");
+                    // Remap the pin to the owning shard's local index.
+                    job.affinity = Some(g - ranges[s].0);
+                    s
+                }
+                None => router.choose(&job.task, job.frames, &snapshots),
+            };
+            batches[s].push(job);
+        }
+        for (s, batch) in batches.iter_mut().enumerate() {
+            if !batch.is_empty() {
+                send(&to_shard[s], ToShard::Jobs(std::mem::take(batch)), s)?;
+            }
+        }
+        // The concurrent window: every shard drains its epoch in
+        // parallel, then the barrier collects snapshots in shard order.
+        for (s, tx) in to_shard.iter().enumerate() {
+            send(tx, ToShard::RunUntil(epoch_end), s)?;
+        }
+        for (s, rx) in from_shard.iter().enumerate() {
+            match rx.recv() {
+                Ok(FromShard::Snapshot(snap)) => snapshots[s] = snap,
+                Ok(FromShard::Done(_)) => {
+                    return Err(anyhow!("shard {s} finished before being asked to"))
+                }
+                Err(_) => return Err(anyhow!("shard {s} worker died mid-epoch")),
+            }
+        }
+        router.end_epoch();
+        epoch_end += cfg.epoch_s;
+    }
+
+    for (s, tx) in to_shard.iter().enumerate() {
+        send(tx, ToShard::Finish, s)?;
+    }
+    drop(to_shard);
+    // Collect every shard's result before failing on any of them, so
+    // no worker is left blocked on a channel we dropped early.
+    let mut results = Vec::with_capacity(shards);
+    for (s, rx) in from_shard.iter().enumerate() {
+        let result = loop {
+            match rx.recv() {
+                Ok(FromShard::Done(r)) => break *r,
+                Ok(FromShard::Snapshot(_)) => continue,
+                Err(_) => break Err(anyhow!("shard {s} worker died before reporting")),
+            }
+        };
+        results.push(result);
+    }
+    for (s, handle) in handles.into_iter().enumerate() {
+        handle.join().map_err(|_| anyhow!("shard {s} worker panicked"))?;
+    }
+    let outcomes = results.into_iter().collect::<Result<Vec<_>>>()?;
+
+    let merged = merge(&ranges, outcomes, &router);
+    debug_assert_eq!(merged.outcome.completed.len(), total_jobs);
+    Ok(merged)
+}
+
+/// Fold per-shard outcomes into one fleet-level [`EngineOutcome`] (see
+/// the module docs for the rules).
+fn merge(
+    ranges: &[(usize, usize)],
+    outcomes: Vec<EngineOutcome>,
+    router: &ShardRouter,
+) -> ShardedOutcome {
+    let metrics = Registry::new();
+    let mut completed = Vec::new();
+    let mut node_energy_j = Vec::new();
+    let mut node_utilization = Vec::new();
+    let mut node_jobs = Vec::new();
+    let mut session_reports = Vec::new();
+    let mut per_shard = Vec::with_capacity(outcomes.len());
+    let mut des_events = 0u64;
+    let mut wall_s = 0f64;
+    let mut max_queue_depth = 0usize;
+    let mut depth_area = 0f64;
+    for (i, (&(start, len), o)) in ranges.iter().zip(outcomes).enumerate() {
+        per_shard.push(ShardStats {
+            shard: i,
+            first_node: start,
+            nodes: len,
+            jobs: o.completed.len(),
+            des_events: o.des_events,
+            energy_j: o.node_energy_j.iter().sum(),
+            wall_s: o.wall_s,
+            max_queue_depth: o.max_queue_depth,
+        });
+        metrics.merge_from(&o.metrics);
+        metrics.set_gauge(&format!("shard{i}_queue_depth_peak"), o.max_queue_depth as f64);
+        metrics.set_gauge(&format!("shard{i}_des_events"), o.des_events as f64);
+        for mut c in o.completed {
+            c.node += start; // shard-local -> global node index
+            completed.push(c);
+        }
+        node_energy_j.extend(o.node_energy_j);
+        node_utilization.extend(o.node_utilization);
+        node_jobs.extend(o.node_jobs);
+        session_reports.extend(o.session_reports);
+        des_events += o.des_events;
+        wall_s = wall_s.max(o.wall_s);
+        max_queue_depth = max_queue_depth.max(o.max_queue_depth);
+        depth_area += o.mean_queue_depth * o.wall_s;
+    }
+    // Deterministic merged order: finish time, ties in shard order
+    // (stable sort over the shard-concatenated list).
+    completed.sort_by(|a, b| a.finish_s.partial_cmp(&b.finish_s).expect("finite finishes"));
+    // The registry merge summed the shard-local node{i}_* gauges into
+    // colliding keys; rewrite them all under global node indices.
+    for g in 0..node_utilization.len() {
+        metrics.set_gauge(&format!("node{g}_utilization"), node_utilization[g]);
+        metrics.set_gauge(&format!("node{g}_energy_j"), node_energy_j[g]);
+    }
+    metrics.inc("shard_overflow_reroutes", router.overflow_reroutes);
+    let outcome = EngineOutcome {
+        completed,
+        node_energy_j,
+        node_utilization,
+        node_jobs,
+        max_queue_depth,
+        mean_queue_depth: if wall_s > 0.0 { depth_area / wall_s } else { 0.0 },
+        wall_s,
+        regrants: metrics.counter("regrants"),
+        mode_switches: metrics.counter("mode_switches"),
+        session_reports,
+        des_events,
+        metrics,
+    };
+    ShardedOutcome { outcome, per_shard, overflow_reroutes: router.overflow_reroutes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::PlacementPolicy;
+    use crate::util::rng::Rng;
+    use crate::workload::{ArrivalProcess, TaskProfile};
+
+    fn fleet_cfg(nodes: usize) -> EngineConfig {
+        let mut cfg = EngineConfig::single_node(crate::device::DeviceSpec::orin());
+        cfg.nodes = vec![crate::device::DeviceSpec::orin(); nodes];
+        cfg.placement = PlacementPolicy::PowerOfTwo;
+        cfg.max_concurrent_jobs = 2;
+        cfg
+    }
+
+    fn poisson_jobs(n: usize, rate_per_s: f64, seed: u64) -> Vec<EngineJob> {
+        let mut rng = Rng::new(seed);
+        ArrivalProcess::Poisson { rate_per_s }
+            .arrivals(n, &mut rng)
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| EngineJob::new(i as u64, t, 48, TaskProfile::yolo_tiny()))
+            .collect()
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_covers() {
+        for nodes in 1..40 {
+            for shards in 1..=nodes {
+                let ranges = partition(nodes, shards);
+                assert_eq!(ranges.len(), shards);
+                assert_eq!(ranges[0].0, 0);
+                let mut covered = 0;
+                for (i, &(start, len)) in ranges.iter().enumerate() {
+                    assert!(len >= 1);
+                    assert_eq!(start, covered);
+                    covered += len;
+                    if i > 0 {
+                        assert!(ranges[i - 1].1 >= len, "earlier shards take the remainder");
+                    }
+                }
+                assert_eq!(covered, nodes);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_run_serves_every_job_once() {
+        let cfg = ShardedConfig::new(fleet_cfg(8), 4);
+        let jobs = poisson_jobs(60, 1.5, 5);
+        let out = run_sharded(&cfg, jobs, FleetDecider::PerNodeOptimal).unwrap();
+        assert_eq!(out.outcome.completed.len(), 60);
+        // Every job id exactly once.
+        let mut ids: Vec<u64> = out.outcome.completed.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..60).collect::<Vec<_>>());
+        // Merged completion order is non-decreasing in finish time.
+        for w in out.outcome.completed.windows(2) {
+            assert!(w[0].finish_s <= w[1].finish_s);
+        }
+        // Node indices are global.
+        assert!(out.outcome.completed.iter().all(|c| c.node < 8));
+        assert_eq!(out.per_shard.len(), 4);
+        assert_eq!(out.outcome.node_energy_j.len(), 8);
+    }
+
+    #[test]
+    fn affinity_pins_survive_the_shard_remap() {
+        let cfg = ShardedConfig::new(fleet_cfg(6), 3);
+        let jobs: Vec<EngineJob> = (0..12u64)
+            .map(|i| {
+                let mut j =
+                    EngineJob::new(i, 0.1 * i as f64, 48, TaskProfile::yolo_tiny());
+                j.affinity = Some((i as usize * 5) % 6);
+                j
+            })
+            .collect();
+        let out = run_sharded(&cfg, jobs, FleetDecider::PerNodeOptimal).unwrap();
+        for c in &out.outcome.completed {
+            assert_eq!(c.node, (c.id as usize * 5) % 6, "pin broken for job {}", c.id);
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Sharded-fleet integration tests: the 1-shard parity oracle, the
+//! N-shard conservation invariants, determinism under a fixed seed, and
+//! the two-level router's overflow/energy behavior end to end
+//! (see `server::shard` and DESIGN.md "Sharded fleet").
+
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::server::{
+    run_sharded, EngineConfig, EngineJob, FleetDecider, PlacementPolicy, ServingEngine,
+    ShardedConfig, SplitDecider,
+};
+use divide_and_save::util::proptest::{ensure, forall};
+use divide_and_save::util::rng::Rng;
+use divide_and_save::workload::{ArrivalProcess, TaskProfile};
+
+fn fleet_cfg(nodes: Vec<DeviceSpec>) -> EngineConfig {
+    let mut cfg = EngineConfig::single_node(nodes[0].clone());
+    cfg.nodes = nodes;
+    cfg.placement = PlacementPolicy::PowerOfTwo;
+    cfg.max_concurrent_jobs = 2;
+    cfg
+}
+
+fn poisson_jobs(n: usize, rate_per_s: f64, seed: u64) -> Vec<EngineJob> {
+    let mut rng = Rng::new(seed);
+    ArrivalProcess::Poisson { rate_per_s }
+        .arrivals(n, &mut rng)
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| EngineJob::new(i as u64, t, 96, TaskProfile::yolo_tiny()))
+        .collect()
+}
+
+/// The merge layer's parity oracle: a 1-shard sharded run IS the plain
+/// unsharded engine — bit-for-bit, not approximately. Debug formatting
+/// round-trips f64s exactly, so comparing rendered outcomes compares
+/// every timestamp, grant and energy figure to the last bit.
+#[test]
+fn one_shard_is_bit_for_bit_the_unsharded_engine() {
+    let cfg = fleet_cfg(vec![DeviceSpec::orin(); 6]);
+    let jobs = poisson_jobs(50, 1.2, 42);
+
+    let plain = ServingEngine::new(cfg.clone(), jobs.clone(), SplitDecider::PerNodeOptimal)
+        .run()
+        .unwrap();
+    let sharded = run_sharded(
+        &ShardedConfig::new(cfg, 1),
+        jobs,
+        FleetDecider::PerNodeOptimal,
+    )
+    .unwrap();
+
+    assert_eq!(
+        format!("{:?}", plain.completed),
+        format!("{:?}", sharded.outcome.completed)
+    );
+    assert_eq!(plain.des_events, sharded.outcome.des_events);
+    assert_eq!(plain.wall_s.to_bits(), sharded.outcome.wall_s.to_bits());
+    assert_eq!(plain.max_queue_depth, sharded.outcome.max_queue_depth);
+    assert_eq!(
+        plain.mean_queue_depth.to_bits(),
+        sharded.outcome.mean_queue_depth.to_bits()
+    );
+    assert_eq!(
+        format!("{:?}", plain.node_energy_j),
+        format!("{:?}", sharded.outcome.node_energy_j)
+    );
+    assert_eq!(sharded.overflow_reroutes, 0);
+    assert_eq!(sharded.per_shard.len(), 1);
+    assert_eq!(sharded.per_shard[0].jobs, plain.completed.len());
+}
+
+/// The merge layer's conservation invariants: nothing is lost or
+/// double-counted when per-shard outcomes fold into one.
+#[test]
+fn merged_outcome_conserves_per_shard_totals() {
+    let cfg = fleet_cfg(vec![DeviceSpec::orin(); 8]);
+    let jobs = poisson_jobs(80, 1.6, 7);
+    let total_frames: usize = jobs.iter().map(|j| j.frames).sum();
+
+    let out = run_sharded(
+        &ShardedConfig::new(cfg, 3),
+        jobs,
+        FleetDecider::PerNodeOptimal,
+    )
+    .unwrap();
+    assert_eq!(out.per_shard.len(), 3);
+
+    // Jobs: every shard's count sums to the merged stream, exactly.
+    let shard_jobs: usize = out.per_shard.iter().map(|s| s.jobs).sum();
+    assert_eq!(shard_jobs, 80);
+    assert_eq!(out.outcome.completed.len(), 80);
+    let merged_frames: usize = out.outcome.completed.iter().map(|c| c.frames).sum();
+    assert_eq!(merged_frames, total_frames);
+
+    // DES events: the merged count is the exact sum.
+    let shard_events: u64 = out.per_shard.iter().map(|s| s.des_events).sum();
+    assert_eq!(shard_events, out.outcome.des_events);
+
+    // Energy: per-shard sums vs the concatenated node vector (same
+    // addends, possibly different association order).
+    let shard_energy: f64 = out.per_shard.iter().map(|s| s.energy_j).sum();
+    let merged_energy: f64 = out.outcome.node_energy_j.iter().sum();
+    assert!((shard_energy - merged_energy).abs() <= 1e-9 * merged_energy.max(1.0));
+
+    // Wall clock is the max; queue peak is the max.
+    let max_wall = out.per_shard.iter().fold(0f64, |a, s| a.max(s.wall_s));
+    assert_eq!(out.outcome.wall_s.to_bits(), max_wall.to_bits());
+    let max_peak = out.per_shard.iter().map(|s| s.max_queue_depth).max().unwrap();
+    assert_eq!(out.outcome.max_queue_depth, max_peak);
+
+    // Node vectors cover the whole fleet under global indices.
+    assert_eq!(out.outcome.node_energy_j.len(), 8);
+    assert_eq!(out.outcome.node_utilization.len(), 8);
+    assert!(out.outcome.completed.iter().all(|c| c.node < 8));
+
+    // Merged registry: summed counters and per-shard gauges.
+    assert_eq!(out.outcome.metrics.counter("jobs_completed"), 80);
+    assert_eq!(
+        out.outcome.metrics.counter("frames_processed") as usize,
+        total_frames
+    );
+    for (i, s) in out.per_shard.iter().enumerate() {
+        assert_eq!(
+            out.outcome.metrics.gauge(&format!("shard{i}_queue_depth_peak")),
+            Some(s.max_queue_depth as f64)
+        );
+        assert_eq!(
+            out.outcome.metrics.gauge(&format!("shard{i}_des_events")),
+            Some(s.des_events as f64)
+        );
+    }
+    assert_eq!(out.outcome.metrics.gauge("shard3_queue_depth_peak"), None);
+    assert_eq!(
+        out.outcome.metrics.counter("shard_overflow_reroutes"),
+        out.overflow_reroutes
+    );
+
+    // Merged completion order is sorted by finish time.
+    for w in out.outcome.completed.windows(2) {
+        assert!(w[0].finish_s <= w[1].finish_s);
+    }
+}
+
+/// Sharded runs are reproducible bit-for-bit under a fixed seed: same
+/// config + same jobs → identical merged outcome, every time, for any
+/// shard count — the thread interleaving between barriers must not be
+/// observable.
+#[test]
+fn sharded_runs_are_deterministic_for_any_shard_count() {
+    forall(
+        19,
+        10,
+        |rng: &mut Rng| {
+            let nodes = 2 + rng.usize(7); // 2..=8
+            let shards = 2 + rng.usize(3); // 2..=4, clamped by the config
+            let jobs = 15 + rng.usize(26); // 15..=40
+            let seed = rng.next_u64();
+            (nodes, shards, jobs, seed)
+        },
+        |&(nodes, shards, jobs, seed)| {
+            let mut cfg = fleet_cfg(vec![DeviceSpec::orin(); nodes]);
+            cfg.placement_seed = seed;
+            let scfg = ShardedConfig::new(cfg, shards);
+            let run = || {
+                let out = run_sharded(
+                    &scfg,
+                    poisson_jobs(jobs, 0.3 * nodes as f64, seed ^ 0xABCD),
+                    FleetDecider::PerNodeOptimal,
+                )
+                .unwrap();
+                (
+                    format!("{:?}", out.outcome.completed),
+                    out.outcome.des_events,
+                    out.overflow_reroutes,
+                )
+            };
+            let a = run();
+            let b = run();
+            ensure(a == b, format!("nondeterministic run: {nodes} nodes, {shards} shards"))
+        },
+    );
+}
+
+/// At low load the router sends free jobs to the energy-cheaper pool:
+/// an Orin shard next to a TX2 shard takes the whole trickle.
+#[test]
+fn router_prefers_the_energy_cheaper_shard_at_low_load() {
+    let cfg = fleet_cfg(vec![
+        DeviceSpec::orin(),
+        DeviceSpec::orin(),
+        DeviceSpec::tx2(),
+        DeviceSpec::tx2(),
+    ]);
+    // Orin at 120 frames is ~65 J vs the TX2's ~135 J (the cluster
+    // EnergyAware tests pin this), so the Orin shard wins every pick.
+    let jobs: Vec<EngineJob> = (0..10u64)
+        .map(|i| EngineJob::new(i, i as f64 * 10.0, 120, TaskProfile::yolo_tiny()))
+        .collect();
+    let out = run_sharded(
+        &ShardedConfig::new(cfg, 2),
+        jobs,
+        FleetDecider::PerNodeOptimal,
+    )
+    .unwrap();
+    assert_eq!(out.outcome.completed.len(), 10);
+    assert!(
+        out.outcome.completed.iter().all(|c| c.node < 2),
+        "jobs leaked to the TX2 shard: {:?}",
+        out.outcome.completed.iter().map(|c| c.node).collect::<Vec<_>>()
+    );
+}
+
+/// When the cheap shard's admission queue saturates mid-epoch, the
+/// router overflows the excess onto the expensive-but-idle shard
+/// instead of stacking the backlog.
+#[test]
+fn overflow_rerouting_spills_a_saturated_cheap_shard() {
+    let cfg = fleet_cfg(vec![
+        DeviceSpec::orin(),
+        DeviceSpec::orin(),
+        DeviceSpec::tx2(),
+        DeviceSpec::tx2(),
+    ]);
+    let mut scfg = ShardedConfig::new(cfg, 2);
+    scfg.queue_saturation = 2;
+    // A burst of 8 simultaneous jobs lands inside one epoch: the Orin
+    // shard fills to saturation, then the spill goes to the TX2s.
+    let jobs: Vec<EngineJob> = (0..8u64)
+        .map(|i| EngineJob::new(i, 0.0, 120, TaskProfile::yolo_tiny()))
+        .collect();
+    let out = run_sharded(&scfg, jobs, FleetDecider::PerNodeOptimal).unwrap();
+    assert_eq!(out.outcome.completed.len(), 8);
+    assert!(out.overflow_reroutes > 0, "no overflow under a saturating burst");
+    assert_eq!(
+        out.outcome.metrics.counter("shard_overflow_reroutes"),
+        out.overflow_reroutes
+    );
+    let tx2_jobs = out.outcome.completed.iter().filter(|c| c.node >= 2).count();
+    assert!(tx2_jobs > 0, "saturated shard kept the whole burst");
+    assert!(out.per_shard.iter().all(|s| s.jobs > 0));
+}
+
+/// Affinity pins route to the owning shard and come back under global
+/// node indices, even when the pinned node sits mid-shard.
+#[test]
+fn pinned_jobs_keep_their_global_node_through_sharding() {
+    let cfg = fleet_cfg(vec![DeviceSpec::orin(); 9]);
+    let jobs: Vec<EngineJob> = (0..18u64)
+        .map(|i| {
+            let mut j = EngineJob::new(i, 0.5 * i as f64, 96, TaskProfile::yolo_tiny());
+            j.affinity = Some((i as usize * 7) % 9);
+            j
+        })
+        .collect();
+    let out = run_sharded(
+        &ShardedConfig::new(cfg, 3),
+        jobs,
+        FleetDecider::PerNodeOptimal,
+    )
+    .unwrap();
+    assert_eq!(out.outcome.completed.len(), 18);
+    for c in &out.outcome.completed {
+        assert_eq!(c.node, (c.id as usize * 7) % 9, "pin broken for job {}", c.id);
+    }
+}
