@@ -107,6 +107,23 @@ impl ThrottleClock {
         self.bw.cpus
     }
 
+    /// Wall-clock sleep still owed right now — `debt_before(0.0)`
+    /// without recording any work. A checkpoint snapshots this so a
+    /// preemption cannot launder throttling away.
+    pub fn outstanding_debt_s(&self) -> f64 {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        (self.consumed_s / self.bw.cpus - elapsed).max(0.0)
+    }
+
+    /// Inject `debt_s` of outstanding wall-clock debt — restoring a
+    /// checkpointed container's unpaid throttle sleep onto a fresh
+    /// bucket (the restore-side inverse of [`Self::outstanding_debt_s`]).
+    /// Like real CFS debt, it decays as wall clock passes unconsumed.
+    pub fn carry_debt(&mut self, debt_s: f64) {
+        assert!(debt_s >= 0.0, "debt cannot be negative");
+        self.consumed_s += debt_s * self.bw.cpus;
+    }
+
     /// Rewrite the `--cpus` budget in place — `docker update --cpus` on
     /// a live container. The accounting window rebases at the call
     /// instant: consumption so far is settled against the old rate, and
@@ -230,6 +247,23 @@ mod tests {
         clk.set_cpus(10.0);
         let debt = clk.debt_before(0.05);
         assert!(debt.as_secs_f64() >= 0.004, "debt={debt:?}");
+    }
+
+    #[test]
+    fn carried_debt_round_trips_through_a_fresh_bucket() {
+        // Checkpoint a bucket owing ~50 ms, restore onto a new one: the
+        // new bucket owes the same sleep (minus wall-clock decay).
+        let mut old = ThrottleClock::new(CfsBandwidth::new(0.01));
+        old.debt_before(0.0005);
+        let owed = old.outstanding_debt_s();
+        assert!(owed > 0.04, "owed={owed}");
+        let mut fresh = ThrottleClock::new(CfsBandwidth::new(2.0));
+        fresh.carry_debt(owed);
+        let carried = fresh.outstanding_debt_s();
+        assert!((carried - owed).abs() < 0.01, "owed {owed} vs carried {carried}");
+        // And it decays like real CFS debt instead of accumulating.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(fresh.outstanding_debt_s() < carried);
     }
 
     #[test]

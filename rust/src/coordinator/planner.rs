@@ -67,6 +67,12 @@ pub struct PlanRequest {
     /// under this mode, so a per-job switch is off the table). `None`
     /// lets a joint planner search modes.
     pub pinned_mode: Option<PowerMode>,
+    /// This request re-admits a checkpointed job on a *different* node
+    /// (fault recovery / preemption). The k decision is the same as a
+    /// fresh admission — the new node starts containers from scratch —
+    /// but the verdict is [`PlanAction::Migrate`], so the engine knows
+    /// to restore session state instead of starting from frame zero.
+    pub migrating: bool,
 }
 
 impl PlanRequest {
@@ -85,6 +91,7 @@ impl PlanRequest {
             current_k: None,
             deadline_s: None,
             pinned_mode: None,
+            migrating: false,
         }
     }
 
@@ -112,6 +119,13 @@ impl PlanRequest {
         self.pinned_mode = Some(mode);
         self
     }
+
+    /// Mark this as a migration: a checkpointed job re-admitted on a
+    /// fresh node (restores state instead of restarting from zero).
+    pub fn migrating(mut self) -> Self {
+        self.migrating = true;
+        self
+    }
 }
 
 /// What acting on a plan costs at the container layer.
@@ -125,6 +139,10 @@ pub enum PlanAction {
     /// k changed mid-job: containers are torn down and restarted,
     /// paying `container_startup_s` again.
     Restart,
+    /// A checkpointed job re-admitted on a different node: fresh
+    /// containers (full startup) that restore saved progress instead of
+    /// recomputing completed frames.
+    Migrate,
 }
 
 /// A joint (mode, k) decision with its predicted cost.
@@ -264,20 +282,25 @@ impl Plan {
 fn plan_candidate(req: &PlanRequest, mode: &PowerMode, k: usize) -> Plan {
     let eff = mode.apply(&req.device);
     let grant_cores = req.avail_cores.min(eff.cores).max(f64::MIN_POSITIVE);
-    let action = match req.current_k {
-        None => PlanAction::Admit,
-        Some(c) if c == k => PlanAction::Resize,
-        Some(_) => PlanAction::Restart,
+    let action = if req.migrating {
+        PlanAction::Migrate
+    } else {
+        match req.current_k {
+            None => PlanAction::Admit,
+            Some(c) if c == k => PlanAction::Resize,
+            Some(_) => PlanAction::Restart,
+        }
     };
     // A share-only resize keeps the live containers: no startup charge.
-    // Fresh admissions and restarts pay the device's startup cost.
-    // (A resize during a still-elapsing startup window actually carries
-    // the un-elapsed remainder — the engine re-plans with it — so a
-    // same-k prediction is optimistic by at most that remainder when a
-    // startup override is calibrated in.)
+    // Fresh admissions, restarts and migrations pay the device's
+    // startup cost — a migration starts containers from scratch on the
+    // new node. (A resize during a still-elapsing startup window
+    // actually carries the un-elapsed remainder — the engine re-plans
+    // with it — so a same-k prediction is optimistic by at most that
+    // remainder when a startup override is calibrated in.)
     let startup = match action {
         PlanAction::Resize => 0.0,
-        PlanAction::Admit | PlanAction::Restart => eff.container_startup_s,
+        PlanAction::Admit | PlanAction::Restart | PlanAction::Migrate => eff.container_startup_s,
     };
     let (predicted_time_s, predicted_energy_j) = predict_on(
         &eff,
@@ -783,6 +806,21 @@ mod tests {
         let j2 = p2.plan(&r2).unwrap();
         assert_eq!(j2.k, 4);
         assert_eq!(j2.action, PlanAction::Restart);
+    }
+
+    #[test]
+    fn migration_requests_get_the_migrate_verdict_with_full_startup() {
+        // A migrating request plans like a fresh admission (same k,
+        // same startup charge) but carries the Migrate verdict so the
+        // engine restores checkpointed progress.
+        let mut p =
+            FixedModePlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let admit = p.plan(&req(DeviceSpec::tx2())).unwrap();
+        let migrate = p.plan(&req(DeviceSpec::tx2()).migrating()).unwrap();
+        assert_eq!(admit.action, PlanAction::Admit);
+        assert_eq!(migrate.action, PlanAction::Migrate);
+        assert_eq!(migrate.k, admit.k);
+        assert!((migrate.predicted_time_s - admit.predicted_time_s).abs() < 1e-12);
     }
 
     #[test]

@@ -9,21 +9,34 @@
 //!
 //! This module redesigns that layer around **sessions**: an
 //! [`ExecutionBackend`] opens a [`Session`] that owns the `k` workers
-//! for a job's whole lifetime and accepts the operations a live
-//! deployment actually performs —
+//! for a job's whole lifetime and accepts every mid-flight operation a
+//! live deployment actually performs through one typed-command entry
+//! point, [`Session::apply`] —
 //!
-//! * [`Session::resize`] — rewrite one worker's `--cpus` share. REAL
+//! * [`SessionCmd::Resize`] — rewrite one worker's `--cpus` share. REAL
 //!   rewrites the live [`crate::container::cfs::ThrottleClock`] token
 //!   bucket in place (modeling `docker update --cpus`); SIM rewrites
 //!   the worker's CFS share in the calibrated model.
-//! * [`Session::reassign`] / [`Session::shed`] — move frames between
-//!   workers mid-job, so stragglers hand work to siblings instead of
-//!   forcing a container restart (uneven re-split via
+//! * [`SessionCmd::Reassign`] / [`SessionCmd::Shed`] — move frames
+//!   between workers mid-job, so stragglers hand work to siblings
+//!   instead of forcing a container restart (uneven re-split via
 //!   [`crate::workload::split_weighted`]).
-//! * [`Session::set_mode`] — switch the device power mode; energy is
+//! * [`SessionCmd::SetMode`] — switch the device power mode; energy is
 //!   billed per mode interval.
+//! * [`SessionCmd::Checkpoint`] / [`SessionCmd::Restore`] — snapshot a
+//!   running job's progress as a serializable [`SessionState`] and
+//!   rehydrate it into a fresh (unstarted) session, so the serving
+//!   engine can preempt a job, resume it later, or migrate it to
+//!   another node without re-running completed frames (the new node
+//!   still pays container startup — moving is physical — but never
+//!   recomputes retired work).
 //! * [`Session::drain`] — finish the remaining work and report the
 //!   paper's three metrics plus per-worker outcomes.
+//!
+//! The pre-redesign per-operation mutators (`resize` / `reassign` /
+//! `shed` / `set_mode`) survive one release as thin deprecated trait
+//! wrappers over `apply`; `tests/ops_surface.rs` pins old-vs-new
+//! bit-for-bit.
 //!
 //! The old `run_sim` / `run_real` / `run` entry points survive as thin
 //! wrappers over a one-job session ([`run_session`]), and the serving
@@ -51,12 +64,14 @@ pub mod sim;
 pub use real::{EngineKind, RealBackend, StubEngineSpec};
 pub use sim::SimBackend;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::ExperimentConfig;
 use crate::detect::Detection;
 use crate::device::dvfs::PowerMode;
 use crate::device::DeviceSpec;
+use crate::util::json::Json;
+use crate::util::jsonl::JsonWriter;
 use crate::workload::{split_even, Segment, TaskProfile};
 
 /// Everything a backend needs to open one session: the effective device
@@ -149,7 +164,17 @@ pub struct SessionReport {
     /// the session clock starts, as container startup did in the paper's
     /// metering).
     pub time_s: f64,
+    /// Total energy billed over the job's whole life — a restored
+    /// session carries its earlier incarnations' bill, so one report
+    /// covers the job even across a migration.
     pub energy_j: f64,
+    /// The idle-floor share of `energy_j`. The serve-report rollup
+    /// subtracts it and re-adds host-level idle once per device busy
+    /// period, so co-resident sessions stop double-counting the floor.
+    pub idle_energy_j: f64,
+    /// Average power over *this incarnation's* window (carried energy
+    /// from before a migration is excluded — power is a property of the
+    /// node the session ran on, not of the job's history).
     pub avg_power_w: f64,
     pub worker_outcomes: Vec<WorkerOutcome>,
     pub total_detections: usize,
@@ -161,10 +186,299 @@ pub struct SessionReport {
     pub mode_switches: usize,
 }
 
+impl SessionReport {
+    /// Write the versioned (`"schema": 2`) report through the shared
+    /// streaming encoder — the same writer the telemetry stream uses.
+    pub fn write_json(&self, w: &mut JsonWriter) {
+        w.begin_obj()
+            .field_usize("schema", 2)
+            .field_str("device", &self.device)
+            .field_usize("workers", self.workers)
+            .field_usize("frames", self.frames)
+            .field_num("time_s", self.time_s)
+            .field_num("energy_j", self.energy_j)
+            .field_num("idle_energy_j", self.idle_energy_j)
+            .field_num("avg_power_w", self.avg_power_w)
+            .field_usize("total_detections", self.total_detections)
+            .field_usize("resizes", self.resizes)
+            .field_usize("reassigns", self.reassigns)
+            .field_usize("mode_switches", self.mode_switches)
+            .key("workers_detail")
+            .begin_arr();
+        for o in &self.worker_outcomes {
+            w.begin_obj()
+                .field_usize("segment", o.segment.index)
+                .field_usize("frames_done", o.frames_done)
+                .field_num("finish_s", o.finish_s)
+                .field_num("cpus", o.cpus)
+                .field_num("busy_s", o.busy_s)
+                .end_obj();
+        }
+        w.end_arr().end_obj();
+    }
+
+    pub fn to_json_string(&self) -> String {
+        let mut w = JsonWriter::new();
+        self.write_json(&mut w);
+        w.finish()
+    }
+}
+
+/// One typed mid-flight command — the whole mutation surface of a
+/// [`Session`], including checkpoint/restore. Collapsing the accreted
+/// per-operation mutators into one enum gives every backend a single
+/// entry point to validate, log and extend (telemetry records commands,
+/// not method names).
+#[derive(Debug, Clone)]
+pub enum SessionCmd {
+    /// Rewrite one worker's `--cpus` share — a live CFS-quota rewrite
+    /// (`docker update --cpus`), never a restart.
+    Resize { worker: usize, cpus: f64 },
+    /// Replace the workers' remaining frame assignments. With
+    /// `segments.len() == workers()` this is a pure re-assignment of
+    /// pending frames (no restart); SIM sessions additionally accept a
+    /// different worker count, modeling a container restart (the full
+    /// startup cost is charged again).
+    Reassign(Vec<Segment>),
+    /// Re-split the remaining frames across the live workers weighted
+    /// by their observed throughput
+    /// ([`crate::workload::split_weighted`]) — stragglers shed frames
+    /// to siblings instead of forcing a restart.
+    Shed,
+    /// Switch the device's power mode. Affects worker speed (SIM) and
+    /// the power model the elapsed/remaining spans are billed with
+    /// (both). The caller owns the policy of when a device is private
+    /// enough to reconfigure.
+    SetMode(PowerMode),
+    /// Snapshot progress as a [`SessionState`]. SIM sessions keep
+    /// running (the snapshot is a pure read of the swept model); REAL
+    /// sessions **preempt**: pending frames are pulled from the worker
+    /// queues, in-flight batches finish and are counted, and the
+    /// workers park — exactly what seizing a node does to a container.
+    Checkpoint,
+    /// Rehydrate a checkpoint into this session. Only valid before
+    /// `start`, on a session opened for exactly the checkpoint's
+    /// remaining frames: carries retired-frame counts, billed energy,
+    /// outstanding token-bucket debt, the power mode and the
+    /// perturbation counters, so the drained report covers the job's
+    /// whole life while no completed frame is re-run or re-billed.
+    Restore(SessionState),
+}
+
+impl SessionCmd {
+    /// Short tag for logs and telemetry records.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SessionCmd::Resize { .. } => "resize",
+            SessionCmd::Reassign(_) => "reassign",
+            SessionCmd::Shed => "shed",
+            SessionCmd::SetMode(_) => "set_mode",
+            SessionCmd::Checkpoint => "checkpoint",
+            SessionCmd::Restore(_) => "restore",
+        }
+    }
+}
+
+/// What applying a [`SessionCmd`] produced.
+#[derive(Debug, Clone)]
+pub enum CmdOutcome {
+    /// Command applied; nothing to report.
+    Applied,
+    /// A `Shed` moved this many frames between workers.
+    Shed { moved: usize },
+    /// A `Checkpoint`'s snapshot.
+    Checkpointed(SessionState),
+}
+
+impl CmdOutcome {
+    /// Frames moved, for `Shed` outcomes (0 otherwise).
+    pub fn moved(&self) -> usize {
+        match self {
+            CmdOutcome::Shed { moved } => *moved,
+            _ => 0,
+        }
+    }
+}
+
+/// One worker's slice of a [`SessionState`]. Progress is fractional
+/// for SIM workers (the integrator tracks partial frames); REAL
+/// workers report whole frames.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerCkpt {
+    /// The worker's segment assignment at checkpoint time.
+    pub segment: Segment,
+    /// The `--cpus` budget in force at checkpoint time.
+    pub cpus: f64,
+    pub frames_done: f64,
+    pub frames_left: f64,
+}
+
+/// A serializable snapshot of a running session — everything needed to
+/// resume the job on this node or another one: whole-frame progress,
+/// billed energy (idle share broken out for the host-level rollup),
+/// outstanding CFS token-bucket debt, the power mode in force, and the
+/// perturbation counters. Round-trips through JSON via the same
+/// hand-rolled encoder as the telemetry stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionState {
+    /// Device name the snapshot was taken on (sanity + telemetry).
+    pub device: String,
+    pub task: String,
+    /// Non-default power mode in force, if any.
+    pub mode: Option<PowerMode>,
+    /// Whole frames completed (including frames carried from earlier
+    /// incarnations). A frame in flight at checkpoint time that SIM had
+    /// only partially integrated counts as not done: preemption loses
+    /// in-flight work, never completed work.
+    pub frames_done: usize,
+    /// Whole frames still pending. `frames_done + frames_left` is the
+    /// job's original frame count, always.
+    pub frames_left: usize,
+    /// Energy billed so far over the job's whole life, joules.
+    pub energy_j: f64,
+    /// The idle-floor share of `energy_j` (billed once per device busy
+    /// period in the host-level rollup, so co-resident sessions don't
+    /// each re-pay it).
+    pub idle_energy_j: f64,
+    /// Busy core-seconds consumed so far.
+    pub busy_s: f64,
+    /// Outstanding CFS token-bucket debt, wall seconds (REAL sessions;
+    /// 0 for SIM). Carried into the restored workers' clocks so a
+    /// preemption cannot launder throttling away.
+    pub throttle_debt_s: f64,
+    pub resizes: usize,
+    pub reassigns: usize,
+    pub mode_switches: usize,
+    /// Per-worker progress at checkpoint time (informational: restore
+    /// re-splits `frames_left` for the new node's plan).
+    pub workers: Vec<WorkerCkpt>,
+}
+
+impl SessionState {
+    /// Total frames the checkpointed job was opened for.
+    pub fn frames_total(&self) -> usize {
+        self.frames_done + self.frames_left
+    }
+
+    /// Serialize through the shared streaming encoder (one line,
+    /// compact — a telemetry checkpoint record embeds this verbatim).
+    pub fn to_json_string(&self) -> String {
+        let mut w = JsonWriter::new();
+        self.write_json(&mut w);
+        w.finish()
+    }
+
+    /// Write this state as one JSON object into an open writer.
+    pub fn write_json(&self, w: &mut JsonWriter) {
+        w.begin_obj()
+            .field_str("device", &self.device)
+            .field_str("task", &self.task);
+        match &self.mode {
+            Some(m) => w.field_str("mode", m.name),
+            None => w.key("mode").null(),
+        };
+        w.field_usize("frames_done", self.frames_done)
+            .field_usize("frames_left", self.frames_left)
+            .field_num("energy_j", self.energy_j)
+            .field_num("idle_energy_j", self.idle_energy_j)
+            .field_num("busy_s", self.busy_s)
+            .field_num("throttle_debt_s", self.throttle_debt_s)
+            .field_usize("resizes", self.resizes)
+            .field_usize("reassigns", self.reassigns)
+            .field_usize("mode_switches", self.mode_switches)
+            .key("workers")
+            .begin_arr();
+        for wk in &self.workers {
+            w.begin_obj()
+                .field_usize("segment", wk.segment.index)
+                .field_usize("start_frame", wk.segment.start_frame)
+                .field_usize("len", wk.segment.len)
+                .field_num("cpus", wk.cpus)
+                .field_num("frames_done", wk.frames_done)
+                .field_num("frames_left", wk.frames_left)
+                .end_obj();
+        }
+        w.end_arr().end_obj();
+    }
+
+    /// Decode a snapshot serialized by [`Self::to_json_string`]. The
+    /// power mode is stored by name and resolved against `device`'s
+    /// mode table (a snapshot only ever restores onto a node of the
+    /// same device family).
+    pub fn from_json(s: &str, device: &DeviceSpec) -> Result<SessionState> {
+        let j = Json::parse(s).map_err(|e| anyhow!("session state: {e}"))?;
+        Self::from_json_value(&j, device)
+    }
+
+    /// Decode from an already-parsed JSON value (a telemetry replay
+    /// holds the parsed record).
+    pub fn from_json_value(j: &Json, device: &DeviceSpec) -> Result<SessionState> {
+        let str_field = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("session state: missing string {k:?}"))?
+                .to_string())
+        };
+        let num = |v: &Json, k: &str| -> Result<f64> {
+            v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("session state: missing {k:?}"))
+        };
+        let count = |v: &Json, k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("session state: missing count {k:?}"))
+        };
+        let mode = match j.get("mode") {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(name)) => Some(
+                PowerMode::modes_for(device)
+                    .into_iter()
+                    .find(|m| m.name == name)
+                    .ok_or_else(|| {
+                        anyhow!("session state: unknown mode {name:?} for {}", device.name)
+                    })?,
+            ),
+            Some(other) => bail!("session state: bad mode field {other}"),
+        };
+        let mut workers = Vec::new();
+        for wk in j
+            .get("workers")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("session state: missing workers array"))?
+        {
+            workers.push(WorkerCkpt {
+                segment: Segment {
+                    index: count(wk, "segment")?,
+                    start_frame: count(wk, "start_frame")?,
+                    len: count(wk, "len")?,
+                },
+                cpus: num(wk, "cpus")?,
+                frames_done: num(wk, "frames_done")?,
+                frames_left: num(wk, "frames_left")?,
+            });
+        }
+        Ok(SessionState {
+            device: str_field("device")?,
+            task: str_field("task")?,
+            mode,
+            frames_done: count(j, "frames_done")?,
+            frames_left: count(j, "frames_left")?,
+            energy_j: num(j, "energy_j")?,
+            idle_energy_j: num(j, "idle_energy_j")?,
+            busy_s: num(j, "busy_s")?,
+            throttle_debt_s: num(j, "throttle_debt_s")?,
+            resizes: count(j, "resizes")?,
+            reassigns: count(j, "reassigns")?,
+            mode_switches: count(j, "mode_switches")?,
+            workers,
+        })
+    }
+}
+
 /// One job's live execution: `k` long-lived workers under a shared
-/// device, mutable mid-flight. Timestamps (`now_s`) are the caller's
-/// clock — virtual seconds for SIM sessions driven by a discrete-event
-/// engine, ignored by REAL sessions (which live on the wall clock).
+/// device, mutable mid-flight through [`Session::apply`]. Timestamps
+/// (`now_s`) are the caller's clock — virtual seconds for SIM sessions
+/// driven by a discrete-event engine, ignored by REAL sessions (which
+/// live on the wall clock).
 pub trait Session {
     /// Worker count (`k`).
     fn workers(&self) -> usize;
@@ -182,32 +496,55 @@ pub trait Session {
     /// the session implicitly if the caller never did.
     fn start(&mut self, now_s: f64) -> Result<()>;
 
-    /// Rewrite worker `worker`'s `--cpus` share at `now_s` — a live
-    /// CFS-quota rewrite (`docker update --cpus`), never a restart.
-    fn resize(&mut self, worker: usize, cpus: f64, now_s: f64) -> Result<()>;
-
-    /// Replace the workers' remaining frame assignments. With
-    /// `segments.len() == workers()` this is a pure re-assignment of
-    /// pending frames (no restart); SIM sessions additionally accept a
-    /// different worker count, modeling a container restart (the full
-    /// startup cost is charged again).
-    fn reassign(&mut self, segments: Vec<Segment>, now_s: f64) -> Result<()>;
-
-    /// Re-split the remaining frames across the live workers weighted
-    /// by their observed throughput ([`crate::workload::split_weighted`])
-    /// — stragglers shed frames to siblings instead of forcing a
-    /// restart. Returns the number of frames that moved.
-    fn shed(&mut self, now_s: f64) -> Result<usize>;
-
-    /// Switch the device's power mode at `now_s`. Affects worker speed
-    /// (SIM) and the power model the elapsed/remaining spans are billed
-    /// with (both). The caller owns the policy of when a device is
-    /// private enough to reconfigure.
-    fn set_mode(&mut self, mode: &PowerMode, now_s: f64) -> Result<()>;
+    /// Apply one typed command at `now_s` — the session's whole
+    /// mutation surface (see [`SessionCmd`] for the per-command
+    /// semantics both backends honor).
+    fn apply(&mut self, cmd: SessionCmd, now_s: f64) -> Result<CmdOutcome>;
 
     /// Run the remaining work to completion and report. REAL sessions
     /// block until the workers actually finish.
     fn drain(&mut self) -> Result<SessionReport>;
+
+    /// Snapshot progress — sugar for [`SessionCmd::Checkpoint`].
+    fn checkpoint(&mut self, now_s: f64) -> Result<SessionState> {
+        match self.apply(SessionCmd::Checkpoint, now_s)? {
+            CmdOutcome::Checkpointed(state) => Ok(state),
+            other => Err(anyhow!("checkpoint returned {other:?}")),
+        }
+    }
+
+    /// Rehydrate a checkpoint — sugar for [`SessionCmd::Restore`].
+    fn restore(&mut self, state: SessionState, now_s: f64) -> Result<()> {
+        self.apply(SessionCmd::Restore(state), now_s).map(|_| ())
+    }
+
+    /// Deprecated pre-redesign wrapper over
+    /// [`SessionCmd::Resize`]; removed next release.
+    #[deprecated(note = "use apply(SessionCmd::Resize { worker, cpus }, now_s)")]
+    fn resize(&mut self, worker: usize, cpus: f64, now_s: f64) -> Result<()> {
+        self.apply(SessionCmd::Resize { worker, cpus }, now_s).map(|_| ())
+    }
+
+    /// Deprecated pre-redesign wrapper over
+    /// [`SessionCmd::Reassign`]; removed next release.
+    #[deprecated(note = "use apply(SessionCmd::Reassign(segments), now_s)")]
+    fn reassign(&mut self, segments: Vec<Segment>, now_s: f64) -> Result<()> {
+        self.apply(SessionCmd::Reassign(segments), now_s).map(|_| ())
+    }
+
+    /// Deprecated pre-redesign wrapper over [`SessionCmd::Shed`];
+    /// removed next release.
+    #[deprecated(note = "use apply(SessionCmd::Shed, now_s)")]
+    fn shed(&mut self, now_s: f64) -> Result<usize> {
+        self.apply(SessionCmd::Shed, now_s).map(|o| o.moved())
+    }
+
+    /// Deprecated pre-redesign wrapper over [`SessionCmd::SetMode`];
+    /// removed next release.
+    #[deprecated(note = "use apply(SessionCmd::SetMode(mode), now_s)")]
+    fn set_mode(&mut self, mode: &PowerMode, now_s: f64) -> Result<()> {
+        self.apply(SessionCmd::SetMode(mode.clone()), now_s).map(|_| ())
+    }
 }
 
 /// A factory of sessions — the one surface `run_sim`-style one-shot
@@ -251,5 +588,46 @@ mod tests {
         cfg.containers = 0;
         let spec = SessionSpec::from_config(&cfg);
         assert_eq!(spec.workers(), 0);
+    }
+
+    #[test]
+    fn session_state_round_trips_through_json() {
+        let tx2 = DeviceSpec::tx2();
+        let maxq = PowerMode::modes_for(&tx2)
+            .into_iter()
+            .find(|m| m.name.starts_with("MAXQ"))
+            .unwrap();
+        let state = SessionState {
+            device: "jetson-tx2".into(),
+            task: "yolo_tiny".into(),
+            mode: Some(maxq),
+            frames_done: 41,
+            frames_left: 23,
+            energy_j: 12.5,
+            idle_energy_j: 3.25,
+            busy_s: 7.75,
+            throttle_debt_s: 0.125,
+            resizes: 2,
+            reassigns: 1,
+            mode_switches: 1,
+            workers: vec![WorkerCkpt {
+                segment: Segment { index: 0, start_frame: 0, len: 32 },
+                cpus: 1.5,
+                frames_done: 20.5,
+                frames_left: 11.5,
+            }],
+        };
+        let line = state.to_json_string();
+        let back = SessionState::from_json(&line, &tx2).unwrap();
+        assert_eq!(back, state);
+        assert_eq!(back.frames_total(), 64);
+        // Default-mode snapshots serialize the mode as null.
+        let mut nomode = state.clone();
+        nomode.mode = None;
+        let back = SessionState::from_json(&nomode.to_json_string(), &tx2).unwrap();
+        assert_eq!(back.mode, None);
+        // An unknown mode name must fail loudly, not restore wrong.
+        let bad = line.replace("MAXQ", "WARP9");
+        assert!(SessionState::from_json(&bad, &tx2).is_err());
     }
 }

@@ -6,10 +6,13 @@
 //! [`ThrottleClock`] token bucket enforcing its `--cpus` share, and a
 //! work queue of frame ranges it claims batch by batch. Because the
 //! throttle and the queue live in shared state, the session can rewrite
-//! a live worker's CFS budget ([`Session::resize`] — `docker update
+//! a live worker's CFS budget ([`SessionCmd::Resize`] — `docker update
 //! --cpus`, applied synchronously) and move pending frames between
-//! workers ([`Session::shed`], [`Session::reassign`]) while inference
-//! is running.
+//! workers ([`SessionCmd::Shed`], [`SessionCmd::Reassign`]) while
+//! inference is running. [`SessionCmd::Checkpoint`] preempts for real:
+//! pending frames are pulled off the queues, the in-flight batches
+//! finish and are counted, the workers retire, and the snapshot carries
+//! measured energy plus each bucket's unpaid throttle debt.
 //!
 //! Energy: every engine call is recorded as a busy window (~one core);
 //! at drain the per-worker windows are overlaid into one device
@@ -25,7 +28,10 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::{ExecutionBackend, Session, SessionReport, SessionSpec, WorkerOutcome};
+use super::{
+    CmdOutcome, ExecutionBackend, Session, SessionCmd, SessionReport, SessionSpec, SessionState,
+    WorkerCkpt, WorkerOutcome,
+};
 use crate::container::cfs::{CfsBandwidth, ThrottleClock};
 use crate::detect::{decode_output, nms, Detection, NmsParams};
 use crate::device::dvfs::PowerMode;
@@ -325,6 +331,7 @@ fn worker_main(
 /// session lives on the wall clock.
 pub struct RealSession {
     device: DeviceSpec,
+    task_name: String,
     segments: Vec<Segment>,
     workers: Vec<Arc<Mutex<WorkerShared>>>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -333,6 +340,19 @@ pub struct RealSession {
     epoch: Option<Instant>,
     /// (epoch-relative time, mode) — applied to the energy model.
     mode_history: Vec<(f64, PowerMode)>,
+    /// Mode entries injected by a restore (carried, not switched here).
+    injected_mode_entries: usize,
+    /// Whole frames carried in by a `Restore` (completed in earlier
+    /// incarnations of the job, never re-run here).
+    restored_done: usize,
+    /// Accounting carried in by a `Restore` (already billed by earlier
+    /// incarnations; excluded from this node's avg power).
+    carried_energy_j: f64,
+    carried_idle_j: f64,
+    carried_busy_s: f64,
+    carried_resizes: usize,
+    carried_reassigns: usize,
+    carried_mode_switches: usize,
     resizes: usize,
     reassigns: usize,
     drained: bool,
@@ -388,6 +408,7 @@ impl RealSession {
         barrier.wait(); // all engines loaded ("containers started")
         Ok(RealSession {
             device: spec.device.clone(),
+            task_name: spec.task.name.clone(),
             segments: spec.segments.clone(),
             workers,
             handles,
@@ -395,6 +416,14 @@ impl RealSession {
             started: false,
             epoch: None,
             mode_history: Vec::new(),
+            injected_mode_entries: 0,
+            restored_done: 0,
+            carried_energy_j: 0.0,
+            carried_idle_j: 0.0,
+            carried_busy_s: 0.0,
+            carried_resizes: 0,
+            carried_reassigns: 0,
+            carried_mode_switches: 0,
             resizes: 0,
             reassigns: 0,
             drained: false,
@@ -426,56 +455,26 @@ impl RealSession {
         }
         energy
     }
-}
 
-impl Session for RealSession {
-    fn workers(&self) -> usize {
-        self.workers.len()
-    }
-
-    fn worker_cpus(&self, worker: usize) -> f64 {
-        lock(&self.workers[worker]).cpus
-    }
-
-    fn worker_rates(&self, _now_s: f64) -> Vec<f64> {
-        let mut rates = Vec::with_capacity(self.workers.len());
-        let mut shares = Vec::with_capacity(self.workers.len());
-        let mut all_observed = true;
-        for w in &self.workers {
-            let g = lock(w);
-            shares.push(g.cpus.max(1e-6));
-            if g.frames_done == 0 || g.busy_s <= 1e-9 {
-                all_observed = false;
-                rates.push(0.0);
-            } else {
-                // The rate the worker can sustain from NOW on: its
-                // measured per-busy-second speed scaled by the duty
-                // cycle the current budget allows (one engine call
-                // keeps ~one core busy) — not the since-epoch average,
-                // which would keep ranking a freshly-throttled worker
-                // as fast and invert a shed's intent.
-                rates.push((g.frames_done as f64 / g.busy_s) * g.cpus.min(1.0));
+    /// The idle-floor share of the bill over `[0, t_end]`: each mode
+    /// interval's `idle_w` times its duration. What the host-level
+    /// rollup subtracts so co-resident sessions pay the floor once.
+    fn idle_by_mode(&self, t_end: f64) -> f64 {
+        let mut specs: Vec<(f64, DeviceSpec)> = vec![(0.0, self.device.clone())];
+        for (t, m) in &self.mode_history {
+            specs.push((*t, m.apply(&self.device)));
+        }
+        let mut idle = 0.0;
+        for (i, (t_from, dev)) in specs.iter().enumerate() {
+            let t_to = specs.get(i + 1).map(|x| x.0).unwrap_or(f64::INFINITY).min(t_end);
+            if t_to > *t_from {
+                idle += dev.power.idle_w * (t_to - t_from);
             }
         }
-        // Measured frames/s and --cpus shares are different units:
-        // mixing them would let one observed sibling dwarf an
-        // unobserved one in a weighted split. Until EVERY worker has
-        // been observed, the shares are the (consistent) prior.
-        if all_observed {
-            rates
-        } else {
-            shares
-        }
+        idle
     }
 
-    fn start(&mut self, _now_s: f64) -> Result<()> {
-        anyhow::ensure!(!self.started, "session already started");
-        self.started = true;
-        self.epoch = Some(self.gate.release());
-        Ok(())
-    }
-
-    fn resize(&mut self, worker: usize, cpus: f64, _now_s: f64) -> Result<()> {
+    fn resize_impl(&mut self, worker: usize, cpus: f64) -> Result<()> {
         anyhow::ensure!(worker < self.workers.len(), "resize of unknown worker {worker}");
         anyhow::ensure!(cpus > 0.0, "--cpus must be positive");
         {
@@ -489,7 +488,7 @@ impl Session for RealSession {
         Ok(())
     }
 
-    fn reassign(&mut self, segments: Vec<Segment>, _now_s: f64) -> Result<()> {
+    fn reassign_impl(&mut self, segments: Vec<Segment>) -> Result<()> {
         anyhow::ensure!(
             segments.len() == self.workers.len(),
             "REAL sessions keep k sticky: cannot go from {} to {} live containers \
@@ -516,7 +515,7 @@ impl Session for RealSession {
         Ok(())
     }
 
-    fn shed(&mut self, _now_s: f64) -> Result<usize> {
+    fn shed_impl(&mut self) -> Result<usize> {
         if self.epoch.is_none() {
             return Ok(0); // nothing observed yet: the initial split stands
         }
@@ -586,13 +585,190 @@ impl Session for RealSession {
         Ok((moved / 2) as usize)
     }
 
-    fn set_mode(&mut self, mode: &PowerMode, _now_s: f64) -> Result<()> {
+    fn set_mode_impl(&mut self, mode: PowerMode) {
         // The host has no nvpmodel to flip; the switch applies to the
         // power model the session bills with (run_real always modeled
         // power) and is stamped on the timeline for per-mode billing.
         let t = self.epoch.map(|e| e.elapsed().as_secs_f64()).unwrap_or(0.0);
-        self.mode_history.push((t, mode.clone()));
+        self.mode_history.push((t, mode));
+    }
+
+    /// Preempt and snapshot. Pending frames come off every queue first;
+    /// then each worker's in-flight batch lands (retirement and claims
+    /// share one lock, so waiting on `done` races nothing) and the
+    /// snapshot reads settled counters, measured energy and the unpaid
+    /// throttle debt. The workers have retired when this returns — a
+    /// REAL checkpoint IS the preemption, exactly what seizing a node
+    /// does to its containers.
+    fn checkpoint_impl(&mut self) -> Result<SessionState> {
+        anyhow::ensure!(!self.drained, "checkpoint of a drained session");
+        let mut pending_per_worker: Vec<usize> = Vec::with_capacity(self.workers.len());
+        let mut frames_left = 0usize;
+        for w in &self.workers {
+            let mut g = lock(w);
+            let left: usize = g.queue.iter().map(|s| s.len).sum();
+            g.queue.clear();
+            pending_per_worker.push(left);
+            frames_left += left;
+        }
+        if self.started {
+            // In-flight batches finish and count; workers then retire on
+            // their empty claim.
+            for w in &self.workers {
+                while !lock(w).done {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+            }
+        }
+        let t_now = self.epoch.map(|e| e.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let mut windows: Vec<(f64, f64)> = Vec::new();
+        let mut frames_done = self.restored_done;
+        let mut busy_s = self.carried_busy_s;
+        let mut debt_s = 0.0;
+        let mut workers = Vec::with_capacity(self.workers.len());
+        for ((shared, seg), left) in
+            self.workers.iter().zip(&self.segments).zip(&pending_per_worker)
+        {
+            let g = lock(shared);
+            if let Some(e) = &g.error {
+                anyhow::bail!("checkpoint of a failed worker: {e}");
+            }
+            windows.extend(g.spans.iter().copied());
+            frames_done += g.frames_done;
+            busy_s += g.busy_s;
+            debt_s += g.throttle.outstanding_debt_s();
+            workers.push(WorkerCkpt {
+                segment: *seg,
+                cpus: g.cpus,
+                frames_done: g.frames_done as f64,
+                frames_left: *left as f64,
+            });
+        }
+        let timeline = overlay_windows(&windows, t_now);
+        Ok(SessionState {
+            device: self.device.name.to_string(),
+            task: self.task_name.clone(),
+            mode: self
+                .mode_history
+                .last()
+                .map(|(_, m)| m.clone())
+                .filter(|m| !m.is_default_for(&self.device)),
+            frames_done,
+            frames_left,
+            energy_j: self.carried_energy_j + self.energy_by_mode(&timeline),
+            idle_energy_j: self.carried_idle_j + self.idle_by_mode(t_now),
+            busy_s,
+            throttle_debt_s: debt_s,
+            resizes: self.carried_resizes + self.resizes,
+            reassigns: self.carried_reassigns + self.reassigns,
+            mode_switches: self.carried_mode_switches
+                + (self.mode_history.len() - self.injected_mode_entries),
+            workers,
+        })
+    }
+
+    /// Rehydrate a checkpoint into this (unstarted) session: carry the
+    /// retired-frame count, billed energy and perturbation counters,
+    /// re-apply the power mode from t=0, and spread the unpaid throttle
+    /// debt across the fresh token buckets (where it decays with wall
+    /// clock exactly like real CFS debt). The session must have been
+    /// opened for exactly `state.frames_left` frames — the caller
+    /// re-plans k/cpus for the new node.
+    fn restore_impl(&mut self, state: SessionState) -> Result<()> {
+        anyhow::ensure!(!self.started, "restore must precede start");
+        anyhow::ensure!(!self.drained, "restore of a drained session");
+        let opened: usize = self.segments.iter().map(|s| s.len).sum();
+        anyhow::ensure!(
+            opened == state.frames_left,
+            "session opened for {opened} frames but the checkpoint has {} left",
+            state.frames_left
+        );
+        self.restored_done = state.frames_done;
+        self.carried_energy_j = state.energy_j;
+        self.carried_idle_j = state.idle_energy_j;
+        self.carried_busy_s = state.busy_s;
+        self.carried_resizes = state.resizes;
+        self.carried_reassigns = state.reassigns;
+        self.carried_mode_switches = state.mode_switches;
+        if let Some(m) = state.mode {
+            if !m.is_default_for(&self.device) {
+                self.mode_history.push((0.0, m));
+                self.injected_mode_entries += 1;
+            }
+        }
+        if state.throttle_debt_s > 0.0 {
+            let per = state.throttle_debt_s / self.workers.len() as f64;
+            for w in &self.workers {
+                lock(w).throttle.carry_debt(per);
+            }
+        }
         Ok(())
+    }
+}
+
+impl Session for RealSession {
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn worker_cpus(&self, worker: usize) -> f64 {
+        lock(&self.workers[worker]).cpus
+    }
+
+    fn worker_rates(&self, _now_s: f64) -> Vec<f64> {
+        let mut rates = Vec::with_capacity(self.workers.len());
+        let mut shares = Vec::with_capacity(self.workers.len());
+        let mut all_observed = true;
+        for w in &self.workers {
+            let g = lock(w);
+            shares.push(g.cpus.max(1e-6));
+            if g.frames_done == 0 || g.busy_s <= 1e-9 {
+                all_observed = false;
+                rates.push(0.0);
+            } else {
+                // The rate the worker can sustain from NOW on: its
+                // measured per-busy-second speed scaled by the duty
+                // cycle the current budget allows (one engine call
+                // keeps ~one core busy) — not the since-epoch average,
+                // which would keep ranking a freshly-throttled worker
+                // as fast and invert a shed's intent.
+                rates.push((g.frames_done as f64 / g.busy_s) * g.cpus.min(1.0));
+            }
+        }
+        // Measured frames/s and --cpus shares are different units:
+        // mixing them would let one observed sibling dwarf an
+        // unobserved one in a weighted split. Until EVERY worker has
+        // been observed, the shares are the (consistent) prior.
+        if all_observed {
+            rates
+        } else {
+            shares
+        }
+    }
+
+    fn start(&mut self, _now_s: f64) -> Result<()> {
+        anyhow::ensure!(!self.started, "session already started");
+        self.started = true;
+        self.epoch = Some(self.gate.release());
+        Ok(())
+    }
+
+    fn apply(&mut self, cmd: SessionCmd, _now_s: f64) -> Result<CmdOutcome> {
+        match cmd {
+            SessionCmd::Resize { worker, cpus } => {
+                self.resize_impl(worker, cpus).map(|()| CmdOutcome::Applied)
+            }
+            SessionCmd::Reassign(segments) => {
+                self.reassign_impl(segments).map(|()| CmdOutcome::Applied)
+            }
+            SessionCmd::Shed => self.shed_impl().map(|moved| CmdOutcome::Shed { moved }),
+            SessionCmd::SetMode(mode) => {
+                self.set_mode_impl(mode);
+                Ok(CmdOutcome::Applied)
+            }
+            SessionCmd::Checkpoint => self.checkpoint_impl().map(CmdOutcome::Checkpointed),
+            SessionCmd::Restore(state) => self.restore_impl(state).map(|()| CmdOutcome::Applied),
+        }
     }
 
     fn drain(&mut self) -> Result<SessionReport> {
@@ -640,15 +816,19 @@ impl Session for RealSession {
         Ok(SessionReport {
             device: self.device.name.to_string(),
             workers: self.workers.len(),
-            frames,
+            frames: self.restored_done + frames,
             time_s,
-            energy_j,
+            energy_j: self.carried_energy_j + energy_j,
+            idle_energy_j: self.carried_idle_j + self.idle_by_mode(time_s),
+            // Carried energy is excluded: average power belongs to this
+            // incarnation's window on this node.
             avg_power_w: if time_s > 0.0 { energy_j / time_s } else { 0.0 },
             worker_outcomes,
             total_detections,
-            resizes: self.resizes,
-            reassigns: self.reassigns,
-            mode_switches: self.mode_history.len(),
+            resizes: self.carried_resizes + self.resizes,
+            reassigns: self.carried_reassigns + self.reassigns,
+            mode_switches: self.carried_mode_switches
+                + (self.mode_history.len() - self.injected_mode_entries),
         })
     }
 }
@@ -703,7 +883,7 @@ mod tests {
     fn resize_rewrites_the_live_cfs_budget() {
         let mut s = stub_backend().open_session(&stub_spec(2, 16)).unwrap();
         assert!((s.worker_cpus(0) - 2.0).abs() < 1e-12, "TX2: 4 cores / 2");
-        s.resize(0, 0.25, 0.0).unwrap();
+        s.apply(SessionCmd::Resize { worker: 0, cpus: 0.25 }, 0.0).unwrap();
         assert!((s.worker_cpus(0) - 0.25).abs() < 1e-12);
         assert!((s.worker_cpus(1) - 2.0).abs() < 1e-12);
         let r = s.drain().unwrap();
@@ -718,11 +898,11 @@ mod tests {
         let mut s = stub_backend().open_session(&spec).unwrap();
         // Worker 0 throttled hard, worker 1 moderately: 0 becomes the
         // straggler.
-        s.resize(0, 0.05, 0.0).unwrap();
-        s.resize(1, 0.5, 0.0).unwrap();
+        s.apply(SessionCmd::Resize { worker: 0, cpus: 0.05 }, 0.0).unwrap();
+        s.apply(SessionCmd::Resize { worker: 1, cpus: 0.5 }, 0.0).unwrap();
         s.start(0.0).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(15));
-        let moved = s.shed(0.0).unwrap();
+        let moved = s.apply(SessionCmd::Shed, 0.0).unwrap().moved();
         let r = s.drain().unwrap();
         assert!(moved > 0, "straggler shed nothing");
         assert_eq!(r.frames, 80, "frames must be conserved through the shed");
@@ -733,6 +913,34 @@ mod tests {
             r.worker_outcomes[0].frames_done
         );
         assert_eq!(r.reassigns, 1);
+    }
+
+    #[test]
+    fn checkpoint_preempts_and_restore_loses_no_frames() {
+        // Start 64 frames on 2 throttled workers, preempt mid-job, then
+        // restore the snapshot into a fresh session: every frame is
+        // processed exactly once across the two incarnations.
+        let mut s = stub_backend().open_session(&stub_spec(2, 64)).unwrap();
+        s.apply(SessionCmd::Resize { worker: 0, cpus: 0.1 }, 0.0).unwrap();
+        s.apply(SessionCmd::Resize { worker: 1, cpus: 0.1 }, 0.0).unwrap();
+        s.start(0.0).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let state = s.checkpoint(0.0).unwrap();
+        drop(s); // the preempted session's threads have already retired
+        assert_eq!(state.frames_total(), 64, "preemption lost frames");
+        assert!(state.frames_left > 0, "job already finished; preempt earlier");
+        // Round-trip through JSON like the engine's telemetry stream.
+        let tx2 = crate::device::DeviceSpec::tx2();
+        let state = SessionState::from_json(&state.to_json_string(), &tx2).unwrap();
+        let mut resumed = stub_spec(2, 64);
+        resumed.segments = crate::workload::split_even(state.frames_left, 2);
+        let mut s2 = stub_backend().open_session(&resumed).unwrap();
+        s2.restore(state.clone(), 0.0).unwrap();
+        s2.start(0.0).unwrap();
+        let r = s2.drain().unwrap();
+        assert_eq!(r.frames, 64, "restored drain must cover the whole job");
+        assert!(r.energy_j >= state.energy_j, "carried energy must be kept");
+        assert_eq!(r.resizes, 2, "perturbation history must carry");
     }
 
     #[test]

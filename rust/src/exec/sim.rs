@@ -4,18 +4,31 @@
 //! A pristine session (started, never perturbed, drained) reproduces
 //! the retired `run_sim` bit-for-bit: same container pool (memory check,
 //! startup cost), same DES fair-share schedule, same sampled power
-//! sensor. The moment a session is perturbed mid-work — a `resize`,
-//! `reassign`, `shed` or `set_mode` after work began — it switches to
-//! an exact piecewise-constant integrator: per-worker progress advances
-//! linearly at the calibrated frame rate of the share in force, and
-//! energy is the closed-form integral of the power model over the
-//! aggregate busy level, billed with the power mode in force over each
-//! interval (the same math `server::allocator` schedules elastic
-//! regrants by).
+//! sensor. The moment a session is perturbed mid-work — a `Resize`,
+//! `Reassign`, `Shed` or `SetMode` command after work began — it
+//! switches to an exact piecewise-constant integrator: per-worker
+//! progress advances linearly at the calibrated frame rate of the share
+//! in force, and energy is the closed-form integral of the power model
+//! over the aggregate busy level, billed with the power mode in force
+//! over each interval (the same math `server::allocator` schedules
+//! elastic regrants by).
+//!
+//! `Checkpoint` is a pure read (the session keeps running): the sweep
+//! brings the integrator to the caller's clock, whole-frame progress is
+//! floored (an in-flight partial frame loses its progress — preemption
+//! never loses *completed* work), and the snapshot carries billed
+//! energy and counters. `Restore` rehydrates a snapshot into a fresh
+//! session opened for exactly the remaining frames; the restored
+//! session is perturbed by construction (carried accounting cannot
+//! replay through the pristine DES + sampled-sensor path) and pays
+//! container startup on its new pool, but never re-runs retired frames.
 
 use anyhow::{Context, Result};
 
-use super::{ExecutionBackend, Session, SessionReport, SessionSpec, WorkerOutcome};
+use super::{
+    CmdOutcome, ExecutionBackend, Session, SessionCmd, SessionReport, SessionSpec, SessionState,
+    WorkerCkpt, WorkerOutcome,
+};
 use crate::container::{ContainerPool, ImageSpec};
 use crate::device::dvfs::PowerMode;
 use crate::device::{DeviceSpec, PowerSensor};
@@ -70,6 +83,17 @@ pub struct SimSession {
     spec_frames: usize,
     /// Frames completed by workers retired in a k-changing reassign.
     frames_done_retired: f64,
+    /// Whole frames carried in by a `Restore` (completed in earlier
+    /// incarnations of the job, never re-run here).
+    restored_done: usize,
+    /// Energy / idle / busy carried in by a `Restore` (already billed
+    /// by earlier incarnations; excluded from this node's avg power).
+    carried_energy_j: f64,
+    carried_idle_j: f64,
+    carried_busy_s: f64,
+    /// Power mode in force (None until a `SetMode` or mode-carrying
+    /// `Restore`).
+    current_mode: Option<PowerMode>,
     started: bool,
     start_s: f64,
     /// Startup completes this long after start (container readiness).
@@ -79,6 +103,9 @@ pub struct SimSession {
     cursor_rel_s: f64,
     pristine: bool,
     energy_acc_j: f64,
+    /// Idle-floor share of `energy_acc_j` (the host-level rollup bills
+    /// it once per device busy period across co-resident sessions).
+    idle_acc_j: f64,
     resizes: usize,
     reassigns: usize,
     mode_switches: usize,
@@ -117,12 +144,18 @@ impl SimSession {
             workers,
             spec_frames: total_frames,
             frames_done_retired: 0.0,
+            restored_done: 0,
+            carried_energy_j: 0.0,
+            carried_idle_j: 0.0,
+            carried_busy_s: 0.0,
+            current_mode: None,
             started: false,
             start_s: 0.0,
             ready_rel_s: 0.0,
             cursor_rel_s: 0.0,
             pristine: true,
             energy_acc_j: 0.0,
+            idle_acc_j: 0.0,
             resizes: 0,
             reassigns: 0,
             mode_switches: 0,
@@ -238,84 +271,12 @@ impl SimSession {
         let dt = t_rel - self.cursor_rel_s;
         if dt > 0.0 {
             self.energy_acc_j += self.device.power.power(busy) * dt;
+            self.idle_acc_j += self.device.power.idle_w * dt;
             self.cursor_rel_s = t_rel;
         }
     }
 
-    /// The retired `run_sim` body, verbatim: DES schedule + sampled
-    /// sensor. Only reachable while the session is unperturbed.
-    fn drain_pristine(&mut self) -> Result<SessionReport> {
-        debug_assert_eq!(self.cursor_rel_s, 0.0, "pristine session must never sweep");
-        let base = self.task.base_frame_s(self.device.base_frame_s);
-        let sched = CpuScheduler::new(&self.device).with_base_frame(base);
-        let jobs: Vec<JobSpec> = self
-            .workers
-            .iter()
-            .map(|w| JobSpec {
-                container_id: w.segment.index as u64,
-                frames: w.segment.len,
-                cpus: w.cpus,
-                ready_at_s: self.ready_rel_s,
-            })
-            .collect();
-        let schedule = sched.run(&jobs);
-        let sensor = PowerSensor::new(self.sensor_period_s);
-        let report = meter_schedule(&self.device, &sensor, &schedule);
-        self.pool.stop_all(self.start_s + schedule.makespan_s).ok();
-        let worker_outcomes = self
-            .workers
-            .iter()
-            .zip(&schedule.finish_s)
-            .map(|(w, &(_, finish))| WorkerOutcome {
-                segment: w.segment,
-                frames_done: w.segment.len,
-                finish_s: finish,
-                cpus: w.cpus,
-                busy_s: w.segment.len as f64
-                    * self.per_frame(w.cpus)
-                    * self.device.curve.busy_cores(w.cpus),
-                detections: Vec::new(),
-            })
-            .collect();
-        Ok(SessionReport {
-            device: self.device.name.to_string(),
-            workers: self.workers.len(),
-            frames: self.spec_frames,
-            time_s: report.time_s,
-            energy_j: report.energy_j,
-            avg_power_w: report.avg_power_w,
-            worker_outcomes,
-            total_detections: 0,
-            resizes: self.resizes,
-            reassigns: self.reassigns,
-            mode_switches: self.mode_switches,
-        })
-    }
-}
-
-impl Session for SimSession {
-    fn workers(&self) -> usize {
-        self.workers.len()
-    }
-
-    fn worker_cpus(&self, worker: usize) -> f64 {
-        self.workers[worker].cpus
-    }
-
-    fn worker_rates(&self, _now_s: f64) -> Vec<f64> {
-        self.workers.iter().map(|w| 1.0 / self.per_frame(w.cpus)).collect()
-    }
-
-    fn start(&mut self, now_s: f64) -> Result<()> {
-        anyhow::ensure!(!self.started, "session already started");
-        self.started = true;
-        self.start_s = now_s;
-        let ready_abs = self.pool.start_all(now_s).context("start containers")?;
-        self.ready_rel_s = ready_abs - now_s;
-        Ok(())
-    }
-
-    fn resize(&mut self, worker: usize, cpus: f64, now_s: f64) -> Result<()> {
+    fn resize_impl(&mut self, worker: usize, cpus: f64, now_s: f64) -> Result<()> {
         anyhow::ensure!(worker < self.workers.len(), "resize of unknown worker {worker}");
         anyhow::ensure!(cpus > 0.0, "--cpus must be positive");
         self.perturb(now_s);
@@ -324,7 +285,7 @@ impl Session for SimSession {
         Ok(())
     }
 
-    fn reassign(&mut self, segments: Vec<Segment>, now_s: f64) -> Result<()> {
+    fn reassign_impl(&mut self, segments: Vec<Segment>, now_s: f64) -> Result<()> {
         anyhow::ensure!(!segments.is_empty(), "reassign with no segments");
         self.perturb(now_s);
         if segments.len() == self.workers.len() {
@@ -381,7 +342,7 @@ impl Session for SimSession {
         Ok(())
     }
 
-    fn shed(&mut self, now_s: f64) -> Result<usize> {
+    fn shed_impl(&mut self, now_s: f64) -> Result<usize> {
         if !self.started {
             return Ok(0);
         }
@@ -416,14 +377,186 @@ impl Session for SimSession {
         Ok((moved / 2.0).round() as usize)
     }
 
-    fn set_mode(&mut self, mode: &PowerMode, now_s: f64) -> Result<()> {
+    fn set_mode_impl(&mut self, mode: PowerMode, now_s: f64) -> Result<()> {
         self.perturb(now_s);
         // Elapsed time was already billed with the old mode's power
         // model by the sweep; from here on the derived spec rules both
         // frame times and the power integrand.
         self.device = mode.apply(&self.base_device);
+        self.current_mode = Some(mode);
         self.mode_switches += 1;
         Ok(())
+    }
+
+    /// Snapshot whole-frame progress and billed accounting. The session
+    /// keeps running (a SIM checkpoint is a read of the swept model),
+    /// but it is perturbed from here on: the snapshot's floored frame
+    /// counts only mean anything on the integrator's books.
+    fn checkpoint_impl(&mut self, now_s: f64) -> Result<SessionState> {
+        anyhow::ensure!(!self.drained, "checkpoint of a drained session");
+        if self.started {
+            self.pristine = false;
+            self.sweep_to((now_s - self.start_s).max(0.0));
+        }
+        let done_live: f64 =
+            self.frames_done_retired + self.workers.iter().map(|w| w.done_frames).sum::<f64>();
+        let left_live: f64 = self.workers.iter().map(|w| w.left_frames).sum::<f64>();
+        let total = (self.restored_done as f64 + done_live + left_live).round() as usize;
+        let frames_done = ((self.restored_done as f64 + done_live).floor() as usize).min(total);
+        Ok(SessionState {
+            device: self.base_device.name.to_string(),
+            task: self.task.name.clone(),
+            mode: self
+                .current_mode
+                .clone()
+                .filter(|m| !m.is_default_for(&self.base_device)),
+            frames_done,
+            frames_left: total - frames_done,
+            energy_j: self.carried_energy_j + self.energy_acc_j,
+            idle_energy_j: self.carried_idle_j + self.idle_acc_j,
+            busy_s: self.carried_busy_s + self.workers.iter().map(|w| w.busy_s).sum::<f64>(),
+            // SIM has no token bucket; nothing outstanding to carry.
+            throttle_debt_s: 0.0,
+            resizes: self.resizes,
+            reassigns: self.reassigns,
+            mode_switches: self.mode_switches,
+            workers: self
+                .workers
+                .iter()
+                .map(|w| WorkerCkpt {
+                    segment: w.segment,
+                    cpus: w.cpus,
+                    frames_done: w.done_frames,
+                    frames_left: w.left_frames,
+                })
+                .collect(),
+        })
+    }
+
+    /// Rehydrate a checkpoint into this (unstarted) session: carry the
+    /// retired-frame count, the billed energy and the perturbation
+    /// counters, and re-apply the power mode. The session must have
+    /// been opened for exactly `state.frames_left` frames — restore
+    /// carries accounting, not topology (the caller re-plans k/cpus for
+    /// the new node). REAL-side throttle debt does not survive a hop to
+    /// the modeled backend (SIM workers have no token bucket to owe it
+    /// to); the modeled schedule simply starts clean.
+    fn restore_impl(&mut self, state: SessionState) -> Result<()> {
+        anyhow::ensure!(!self.started, "restore must precede start");
+        anyhow::ensure!(!self.drained, "restore of a drained session");
+        anyhow::ensure!(
+            self.spec_frames == state.frames_left,
+            "session opened for {} frames but the checkpoint has {} left",
+            self.spec_frames,
+            state.frames_left
+        );
+        self.restored_done = state.frames_done;
+        self.carried_energy_j = state.energy_j;
+        self.carried_idle_j = state.idle_energy_j;
+        self.carried_busy_s = state.busy_s;
+        self.resizes += state.resizes;
+        self.reassigns += state.reassigns;
+        self.mode_switches += state.mode_switches;
+        if let Some(m) = state.mode {
+            self.device = m.apply(&self.base_device);
+            self.current_mode = Some(m);
+        }
+        // Carried accounting cannot replay through the pristine DES +
+        // sampled-sensor path; the restored incarnation lives on the
+        // exact integrator from frame one.
+        self.pristine = false;
+        Ok(())
+    }
+
+    /// The retired `run_sim` body, verbatim: DES schedule + sampled
+    /// sensor. Only reachable while the session is unperturbed.
+    fn drain_pristine(&mut self) -> Result<SessionReport> {
+        debug_assert_eq!(self.cursor_rel_s, 0.0, "pristine session must never sweep");
+        let base = self.task.base_frame_s(self.device.base_frame_s);
+        let sched = CpuScheduler::new(&self.device).with_base_frame(base);
+        let jobs: Vec<JobSpec> = self
+            .workers
+            .iter()
+            .map(|w| JobSpec {
+                container_id: w.segment.index as u64,
+                frames: w.segment.len,
+                cpus: w.cpus,
+                ready_at_s: self.ready_rel_s,
+            })
+            .collect();
+        let schedule = sched.run(&jobs);
+        let sensor = PowerSensor::new(self.sensor_period_s);
+        let report = meter_schedule(&self.device, &sensor, &schedule);
+        self.pool.stop_all(self.start_s + schedule.makespan_s).ok();
+        let worker_outcomes = self
+            .workers
+            .iter()
+            .zip(&schedule.finish_s)
+            .map(|(w, &(_, finish))| WorkerOutcome {
+                segment: w.segment,
+                frames_done: w.segment.len,
+                finish_s: finish,
+                cpus: w.cpus,
+                busy_s: w.segment.len as f64
+                    * self.per_frame(w.cpus)
+                    * self.device.curve.busy_cores(w.cpus),
+                detections: Vec::new(),
+            })
+            .collect();
+        Ok(SessionReport {
+            device: self.device.name.to_string(),
+            workers: self.workers.len(),
+            frames: self.spec_frames,
+            time_s: report.time_s,
+            energy_j: report.energy_j,
+            idle_energy_j: self.device.power.idle_w * report.time_s,
+            avg_power_w: report.avg_power_w,
+            worker_outcomes,
+            total_detections: 0,
+            resizes: self.resizes,
+            reassigns: self.reassigns,
+            mode_switches: self.mode_switches,
+        })
+    }
+}
+
+impl Session for SimSession {
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn worker_cpus(&self, worker: usize) -> f64 {
+        self.workers[worker].cpus
+    }
+
+    fn worker_rates(&self, _now_s: f64) -> Vec<f64> {
+        self.workers.iter().map(|w| 1.0 / self.per_frame(w.cpus)).collect()
+    }
+
+    fn start(&mut self, now_s: f64) -> Result<()> {
+        anyhow::ensure!(!self.started, "session already started");
+        self.started = true;
+        self.start_s = now_s;
+        let ready_abs = self.pool.start_all(now_s).context("start containers")?;
+        self.ready_rel_s = ready_abs - now_s;
+        Ok(())
+    }
+
+    fn apply(&mut self, cmd: SessionCmd, now_s: f64) -> Result<CmdOutcome> {
+        match cmd {
+            SessionCmd::Resize { worker, cpus } => {
+                self.resize_impl(worker, cpus, now_s).map(|()| CmdOutcome::Applied)
+            }
+            SessionCmd::Reassign(segments) => {
+                self.reassign_impl(segments, now_s).map(|()| CmdOutcome::Applied)
+            }
+            SessionCmd::Shed => self.shed_impl(now_s).map(|moved| CmdOutcome::Shed { moved }),
+            SessionCmd::SetMode(mode) => {
+                self.set_mode_impl(mode, now_s).map(|()| CmdOutcome::Applied)
+            }
+            SessionCmd::Checkpoint => self.checkpoint_impl(now_s).map(CmdOutcome::Checkpointed),
+            SessionCmd::Restore(state) => self.restore_impl(state).map(|()| CmdOutcome::Applied),
+        }
     }
 
     fn drain(&mut self) -> Result<SessionReport> {
@@ -454,15 +587,19 @@ impl Session for SimSession {
                 detections: Vec::new(),
             })
             .collect();
-        let frames = (self.frames_done_retired
-            + self.workers.iter().map(|w| w.done_frames).sum::<f64>())
-        .round() as usize;
+        let frames = self.restored_done
+            + (self.frames_done_retired
+                + self.workers.iter().map(|w| w.done_frames).sum::<f64>())
+            .round() as usize;
         Ok(SessionReport {
             device: self.device.name.to_string(),
             workers: self.workers.len(),
             frames,
             time_s,
-            energy_j: self.energy_acc_j,
+            energy_j: self.carried_energy_j + self.energy_acc_j,
+            idle_energy_j: self.carried_idle_j + self.idle_acc_j,
+            // Carried energy is excluded: average power belongs to this
+            // incarnation's window on this node.
             avg_power_w: if time_s > 0.0 { self.energy_acc_j / time_s } else { 0.0 },
             worker_outcomes,
             total_detections: 0,
@@ -505,7 +642,7 @@ mod tests {
         let mut s = SimBackend.open_session(&spec(4)).unwrap();
         s.start(0.0).unwrap();
         for w in 0..4 {
-            s.resize(w, 1.0, 50.0).unwrap();
+            s.apply(SessionCmd::Resize { worker: w, cpus: 1.0 }, 50.0).unwrap();
         }
         let r = s.drain().unwrap();
         assert!(
@@ -531,7 +668,7 @@ mod tests {
         one.cpus_each = 2.0;
         let mut s = SimBackend.open_session(&one).unwrap();
         s.start(0.0).unwrap();
-        s.resize(0, 4.0, 100.0).unwrap();
+        s.apply(SessionCmd::Resize { worker: 0, cpus: 4.0 }, 100.0).unwrap();
         let r = s.drain().unwrap();
         let dev = one.device.clone();
         let base = one.task.base_frame_s(dev.base_frame_s)
@@ -549,10 +686,10 @@ mod tests {
         let run = |do_shed: bool| {
             let mut s = SimBackend.open_session(&spec(4)).unwrap();
             s.start(0.0).unwrap();
-            s.resize(0, 0.25, 10.0).unwrap();
+            s.apply(SessionCmd::Resize { worker: 0, cpus: 0.25 }, 10.0).unwrap();
             let mut moved = 0;
             if do_shed {
-                moved = s.shed(20.0).unwrap();
+                moved = s.apply(SessionCmd::Shed, 20.0).unwrap().moved();
             }
             (s.drain().unwrap(), moved)
         };
@@ -582,7 +719,7 @@ mod tests {
         let pristine = run_session(&mut SimBackend, &spec(4)).unwrap();
         let mut s = SimBackend.open_session(&spec(4)).unwrap();
         s.start(0.0).unwrap();
-        s.set_mode(&maxq, 100.0).unwrap();
+        s.apply(SessionCmd::SetMode(maxq), 100.0).unwrap();
         let r = s.drain().unwrap();
         assert_eq!(r.mode_switches, 1);
         assert!(r.time_s > pristine.time_s, "MAXQ remainder must run slower");
@@ -604,7 +741,8 @@ mod tests {
         // Restart as 4 containers at t=50: remaining frames re-split,
         // startup paid again.
         let remaining = 600usize;
-        s.reassign(crate::workload::split_even(remaining, 4), 50.0).unwrap();
+        s.apply(SessionCmd::Reassign(crate::workload::split_even(remaining, 4)), 50.0)
+            .unwrap();
         let r = s.drain().unwrap();
         assert_eq!(r.workers, 4);
         assert_eq!(r.reassigns, 1);
@@ -612,6 +750,45 @@ mod tests {
         // never beat a hypothetical free resize by more than it saves.
         assert!(r.time_s > 55.0, "restart startup missing: {}", r.time_s);
         assert!(r.time_s < pristine.time_s * 2.0);
+    }
+
+    #[test]
+    fn checkpoint_restore_conserves_frames_and_energy() {
+        // Run k=4 to t=60, checkpoint, open a fresh session for the
+        // remaining frames, restore, drain: progress and billed energy
+        // carry over and no completed frame is re-run.
+        let mut s = SimBackend.open_session(&spec(4)).unwrap();
+        s.start(0.0).unwrap();
+        let state = s.checkpoint(60.0).unwrap();
+        assert!(state.frames_done > 0, "no progress by t=60");
+        assert_eq!(state.frames_total(), 720);
+        assert!(state.energy_j > 0.0 && state.idle_energy_j < state.energy_j);
+        // Round-trip through JSON exactly like the telemetry stream.
+        let tx2 = DeviceSpec::tx2();
+        let state = SessionState::from_json(&state.to_json_string(), &tx2).unwrap();
+        let mut resumed = spec(4);
+        resumed.segments = crate::workload::split_even(state.frames_left, 4);
+        let mut s2 = SimBackend.open_session(&resumed).unwrap();
+        s2.restore(state.clone(), 60.0).unwrap();
+        s2.start(60.0).unwrap();
+        let r = s2.drain().unwrap();
+        assert_eq!(r.frames, 720, "restored drain must cover the whole job");
+        assert!(r.energy_j > state.energy_j, "carried energy must be kept");
+        // The resumed incarnation only runs the remaining frames: even
+        // paying startup again it beats a from-scratch run of the job.
+        let scratch = run_session(&mut SimBackend, &spec(4)).unwrap();
+        assert!(r.time_s < scratch.time_s, "resume {} vs scratch {}", r.time_s, scratch.time_s);
+    }
+
+    #[test]
+    fn restore_rejects_a_mismatched_frame_count() {
+        let mut s = SimBackend.open_session(&spec(4)).unwrap();
+        s.start(0.0).unwrap();
+        let state = s.checkpoint(60.0).unwrap();
+        // Opened for the full 720 frames, not the checkpoint's remainder.
+        let mut s2 = SimBackend.open_session(&spec(4)).unwrap();
+        let err = s2.restore(state, 60.0).unwrap_err();
+        assert!(format!("{err:#}").contains("checkpoint"), "{err:#}");
     }
 
     #[test]

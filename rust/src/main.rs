@@ -8,6 +8,7 @@
 //!   optimize  online optimal-k decision
 //!   serve     serving session over the coordinator
 //!   variants  list AOT artifact variants
+//!   telemetry-lint  validate a serve telemetry JSONL stream
 
 use anyhow::{anyhow, Result};
 
@@ -22,7 +23,7 @@ use divide_and_save::energy::meter_schedule;
 use divide_and_save::modelfit::{fit_exponential, fit_quadratic, FittedModel};
 use divide_and_save::bench::Table;
 use divide_and_save::sched::CpuScheduler;
-use divide_and_save::server::{serve, GrantPolicy, QueuePolicy, ServeConfig};
+use divide_and_save::server::{serve, FaultEvent, GrantPolicy, QueuePolicy, ServeConfig};
 use divide_and_save::util::cli::{CliError, Command, OptSpec};
 use divide_and_save::util::csv::CsvWriter;
 use divide_and_save::util::logging;
@@ -315,7 +316,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "arrival spec: poisson:RATE | det:GAP | mmpp:CALM,BURST,MCALM,MBURST",
         ))
         .opt(OptSpec::opt("deadline", "relative deadline in seconds (for EDF)"))
-        .opt(OptSpec::opt("report-json", "write the serve report JSON to this path"));
+        .opt(OptSpec::opt("report-json", "write the serve report JSON to this path"))
+        .opt(OptSpec::opt("nodes", "device replicas to serve across").with_default("1"))
+        .opt(OptSpec::opt(
+            "pace",
+            "wall-clock pacing: sim-seconds per wall second (1 = real time; omit = free-run)",
+        ))
+        .opt(OptSpec::opt("telemetry", "write per-event JSONL telemetry to this path"))
+        .opt(OptSpec::opt(
+            "faults",
+            "fault plan: comma-separated kind:NODE@T (kill|restart|overload), e.g. kill:0@2,restart:0@30",
+        ));
     let p = parse_or_help(&cmd, args)?;
     let cfg = build_config(&p)?;
     let policy = match p.get_usize("containers")? {
@@ -335,6 +346,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         ),
         None => None,
     };
+    let faults = match p.get("faults") {
+        Some(spec) => FaultEvent::parse_plan(spec)
+            .ok_or_else(|| anyhow!("bad fault plan {spec:?} (want kind:NODE@T,...)"))?,
+        None => Vec::new(),
+    };
     let planner = planner_kind.build(cfg.clone(), policy);
     let mut coordinator = Coordinator::with_planner(cfg, planner);
     let report = serve(
@@ -348,6 +364,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             deadline_s: p.get_f64("deadline")?,
             grant_policy,
             deadline_weighted_shares: p.flag("edf-weighted"),
+            nodes: p.get_usize("nodes")?.unwrap_or(1).max(1),
+            pace: p.get_f64("pace")?,
+            telemetry: p.get("telemetry").map(str::to_string),
+            faults,
             ..Default::default()
         },
     )?;
@@ -393,6 +413,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             report.sessions, report.session_resizes, report.session_energy_j
         );
     }
+    if report.jobs_preempted > 0 || report.migrations > 0 {
+        println!(
+            "faults: jobs preempted={}  migrations={}",
+            report.jobs_preempted, report.migrations
+        );
+    }
     println!(
         "battery (50 Wh pack): {:.0} jobs/charge, {:.1} h at the observed {:.1} W draw",
         report.battery_jobs_per_charge,
@@ -400,7 +426,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         report.total_energy_j / report.wall_s
     );
     if let Some(path) = p.get("report-json") {
-        std::fs::write(path, report.to_json().pretty())?;
+        let pretty = divide_and_save::util::json::Json::parse(&report.to_json_string())
+            .map_err(|e| anyhow!("re-parsing serve report: {e}"))?
+            .pretty();
+        std::fs::write(path, pretty)?;
         println!("wrote {path}");
     }
     println!("{}", coordinator.metrics.to_json().pretty());
@@ -448,6 +477,36 @@ fn cmd_battery(args: &[String]) -> Result<()> {
         r.device, r.containers, r.energy_j, r.avg_power_w, jobs, battery.capacity_wh,
         jobs as f64 * r.time_s / 3600.0
     );
+    Ok(())
+}
+
+fn cmd_telemetry_lint(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "telemetry-lint",
+        "validate a serve telemetry JSONL stream and summarize its events",
+    )
+    .opt(OptSpec::opt("file", "telemetry JSONL path").with_default("telemetry.jsonl"));
+    let p = parse_or_help(&cmd, args)?;
+    let path = p.get_or("file", "telemetry.jsonl");
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let mut counts: std::collections::BTreeMap<String, usize> =
+        std::collections::BTreeMap::new();
+    let mut records = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let event = divide_and_save::server::telemetry::lint_line(line)
+            .map_err(|e| anyhow!("{path}:{}: {e}", i + 1))?;
+        *counts.entry(event).or_insert(0) += 1;
+        records += 1;
+    }
+    anyhow::ensure!(records > 0, "{path} holds no telemetry records");
+    for (event, n) in &counts {
+        println!("{event:12} {n}");
+    }
+    println!("{records} records OK");
     Ok(())
 }
 
@@ -499,6 +558,7 @@ COMMANDS:
   trace      record / replay an experiment trace
   battery    videos-per-charge under a split policy
   variants   list AOT artifact variants
+  telemetry-lint  validate a serve telemetry JSONL stream
 ";
 
 fn main() {
@@ -521,6 +581,7 @@ fn main() {
         "trace" => cmd_trace(&rest),
         "battery" => cmd_battery(&rest),
         "variants" => cmd_variants(&rest),
+        "telemetry-lint" => cmd_telemetry_lint(&rest),
         "--help" | "-h" | "help" => {
             print!("{USAGE}");
             return;

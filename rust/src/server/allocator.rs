@@ -228,6 +228,11 @@ pub struct NodeAllocator {
     /// single end-of-run `meter_spans` pass cannot price a timeline
     /// whose power mode changed mid-way.
     energy_acc_j: f64,
+    /// The idle-floor portion of `energy_acc_j`: `idle_w` integrated
+    /// over the same busy windows. The report layer needs it to bill
+    /// the shared idle floor once per device instead of once per
+    /// co-resident session.
+    idle_acc_j: f64,
 }
 
 impl NodeAllocator {
@@ -249,6 +254,7 @@ impl NodeAllocator {
             busy_level: 0.0,
             last_change_s: 0.0,
             energy_acc_j: 0.0,
+            idle_acc_j: 0.0,
         }
     }
 
@@ -297,6 +303,7 @@ impl NodeAllocator {
         if !self.active.is_empty() && now_s > self.last_change_s + 1e-12 {
             let busy = self.busy_level.min(self.device.cores);
             self.energy_acc_j += self.device.power.power(busy) * (now_s - self.last_change_s);
+            self.idle_acc_j += self.device.power.idle_w * (now_s - self.last_change_s);
             push_span(
                 &mut self.spans,
                 TraceSegment { t0_s: self.last_change_s, t1_s: now_s, busy_cores: busy },
@@ -327,6 +334,25 @@ impl NodeAllocator {
 
     /// Admit a planned job at `now`; returns its completion time.
     pub fn admit(&mut self, now_s: f64, job_idx: usize, frames: usize, plan: ServicePlan) -> f64 {
+        // effective work: straggler padding of the uneven split is real
+        // makespan and survives regrants (see ActiveJob field docs)
+        let work = (frames.div_ceil(plan.k) * plan.k) as f64;
+        self.admit_with_work(now_s, job_idx, frames, plan, work)
+    }
+
+    /// [`Self::admit`] with an explicit effective-work override — the
+    /// migration path re-admits a checkpointed job carrying only its
+    /// *remaining* work (the plan was built by [`plan_remaining`]),
+    /// while `frames` stays the job's original total so frame
+    /// conservation holds when the job finally completes here.
+    pub fn admit_with_work(
+        &mut self,
+        now_s: f64,
+        job_idx: usize,
+        frames: usize,
+        plan: ServicePlan,
+        work_left: f64,
+    ) -> f64 {
         debug_assert!(self.has_slot(), "admit without a free slot");
         debug_assert!(
             plan.grant_cores <= self.free_cores + 1e-6,
@@ -346,9 +372,7 @@ impl NodeAllocator {
             plan,
             start_s: now_s,
             finish_s,
-            // effective work: straggler padding of the uneven split is
-            // real makespan and survives regrants (see field docs)
-            work_left: (frames.div_ceil(plan.k) * plan.k) as f64,
+            work_left: work_left.max(0.0),
             seg_start_s: now_s,
             seg_startup_s: self.device.container_startup_s,
             grant_gen: 0,
@@ -419,16 +443,31 @@ impl NodeAllocator {
 
     /// Release a finished job's resources at `now`.
     pub fn complete(&mut self, now_s: f64, job_idx: usize) -> ActiveJob {
+        let job = self.release(now_s, job_idx, "completion");
+        self.jobs_done += 1;
+        self.frames_done += job.frames;
+        job
+    }
+
+    /// Release a *preempted* job's resources at `now` — same resource
+    /// bookkeeping as [`Self::complete`], but the job did not finish
+    /// here: the node's jobs_done/frames_done throughput counters stay
+    /// untouched (the surviving node that finishes the migrated job
+    /// gets the credit). The returned [`ActiveJob`] carries the plan in
+    /// force at eviction for the caller's migration bookkeeping.
+    pub fn evict(&mut self, now_s: f64, job_idx: usize) -> ActiveJob {
+        self.release(now_s, job_idx, "eviction")
+    }
+
+    fn release(&mut self, now_s: f64, job_idx: usize, what: &str) -> ActiveJob {
         self.close_span(now_s);
         let pos = self
             .active
             .iter()
             .position(|a| a.job_idx == job_idx)
-            .expect("completion for a job not resident on this node");
+            .unwrap_or_else(|| panic!("{what} for a job not resident on this node"));
         let job = self.active.swap_remove(pos);
         self.busy_level = (self.busy_level - job.plan.busy_cores).max(0.0);
-        self.jobs_done += 1;
-        self.frames_done += job.frames;
         // Re-derive the earliest-free estimate from the survivors, as
         // regrant() does: the admit-time ratchet sums the service times
         // of concurrent jobs, and without a rewind here a node that ran
@@ -487,6 +526,14 @@ impl NodeAllocator {
     /// never changed.
     pub fn energy_j(&self) -> f64 {
         self.energy_acc_j
+    }
+
+    /// The idle-floor slice of [`Self::energy_j`]: `idle_w` integrated
+    /// over the node's busy windows. Paid once per device however many
+    /// sessions overlap — the per-session report rollup subtracts each
+    /// session's own idle integral and adds this back.
+    pub fn idle_energy_j(&self) -> f64 {
+        self.idle_acc_j
     }
 }
 
@@ -726,6 +773,61 @@ mod tests {
         node.complete(f1.max(f2), if f1 <= f2 { 1 } else { 0 });
         let reference = crate::energy::meter_spans(&dev, node.spans()).energy_j;
         assert!((node.energy_j() - reference).abs() < 1e-9);
+    }
+
+    #[test]
+    fn evict_releases_resources_without_counting_throughput() {
+        // Kill a resident mid-flight: cores/memory come back and the
+        // node snaps to pristine, but jobs_done/frames_done must not
+        // move — the job did not finish here.
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let mut node = NodeAllocator::new(dev.clone(), 2);
+        let plan = plan_service(&dev, &task, 96, 2, 2.0, 0);
+        node.admit(0.0, 0, 96, plan);
+        let evicted = node.evict(5.0, 0);
+        assert_eq!(evicted.job_idx, 0);
+        assert_eq!(evicted.frames, 96);
+        assert_eq!(node.active.len(), 0);
+        assert_eq!(node.free_cores, dev.cores);
+        assert_eq!(node.free_mem_mib, dev.memory.available_mib());
+        assert_eq!((node.jobs_done, node.frames_done), (0, 0));
+        // The 5 s the job did run is still billed energy.
+        assert!(node.energy_j() > 0.0);
+    }
+
+    #[test]
+    fn admit_with_work_carries_migrated_progress() {
+        // Re-admitting a checkpointed job: frames stay the original
+        // total (conservation), work_left is only the remainder, and
+        // the finish time comes from the remainder's plan.
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let mut node = NodeAllocator::new(dev.clone(), 1);
+        let plan = plan_remaining(&dev, &task, 40.0, 2, 2.0, 0, dev.container_startup_s);
+        let finish = node.admit_with_work(10.0, 7, 96, plan, 40.0);
+        assert!((finish - (10.0 + plan.service_s)).abs() < 1e-12);
+        let a = node.find(7).unwrap();
+        assert_eq!(a.frames, 96);
+        assert!((a.work_left - 40.0).abs() < 1e-12);
+        node.complete(finish, 7);
+        assert_eq!((node.jobs_done, node.frames_done), (1, 96));
+    }
+
+    #[test]
+    fn idle_energy_is_the_idle_floor_over_the_busy_window() {
+        let dev = tx2();
+        let task = TaskProfile::yolo_tiny();
+        let plan = plan_service(&dev, &task, 48, 2, 2.0, 0);
+        let mut node = NodeAllocator::new(dev.clone(), 2);
+        node.admit(0.0, 0, 48, plan);
+        node.admit(0.0, 1, 48, plan);
+        let t = plan.service_s;
+        node.complete(t, 0);
+        node.complete(t, 1);
+        // Fully-overlapping jobs: one busy window, one idle floor.
+        assert!((node.idle_energy_j() - dev.power.idle_w * t).abs() < 1e-6);
+        assert!(node.idle_energy_j() < node.energy_j());
     }
 
     #[test]

@@ -26,12 +26,16 @@ use super::allocator::{
 };
 use super::policy::{PlacementPolicy, QueuePolicy};
 use super::queue::AdmissionQueue;
+use super::telemetry::TelemetrySink;
 use crate::coordinator::planner::{Plan, PlanRequest};
 use crate::coordinator::Coordinator;
 use crate::device::DeviceSpec;
-use crate::exec::{ExecutionBackend, Session, SessionReport, SessionSpec};
+use crate::exec::{
+    ExecutionBackend, Session, SessionCmd, SessionReport, SessionSpec, SessionState,
+};
 use crate::metrics::Registry;
 use crate::sched::des::{EventHandle, EventQueue};
+use crate::util::jsonl::JsonWriter;
 use crate::util::rng::Rng;
 use crate::workload::{split_even, TaskProfile};
 
@@ -90,6 +94,66 @@ impl CompletedJob {
     }
 }
 
+/// What a scripted [`FaultEvent`] does to its node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The node dies: every resident job is checkpointed, evicted and
+    /// re-queued for migration; the node admits nothing until a
+    /// `Restart` brings it back.
+    Kill,
+    /// A killed node comes back, empty and pristine.
+    Restart,
+    /// Overload shock: the youngest resident is preempted and migrated
+    /// away; the node itself stays up.
+    Overload,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Restart => "restart",
+            FaultKind::Overload => "overload",
+        }
+    }
+}
+
+/// One scripted infrastructure event injected into a serving run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Absolute sim-clock seconds.
+    pub at_s: f64,
+    /// Engine node index the fault hits.
+    pub node: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Parse a CLI fault plan: comma-separated `kind:NODE@T` entries,
+    /// e.g. `kill:0@2,restart:0@30,overload:1@5.5`. Returns `None` on
+    /// any malformed entry.
+    pub fn parse_plan(spec: &str) -> Option<Vec<FaultEvent>> {
+        let mut out = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part.split_once(':')?;
+            let (node, at) = rest.split_once('@')?;
+            let kind = match kind.trim().to_ascii_lowercase().as_str() {
+                "kill" => FaultKind::Kill,
+                "restart" => FaultKind::Restart,
+                "overload" => FaultKind::Overload,
+                _ => return None,
+            };
+            let node = node.trim().parse::<usize>().ok()?;
+            let at_s = at.trim().parse::<f64>().ok()?;
+            if !at_s.is_finite() || at_s < 0.0 {
+                return None;
+            }
+            out.push(FaultEvent { at_s, node, kind });
+        }
+        Some(out)
+    }
+}
+
 /// How the engine plans an admitted job.
 #[derive(Debug)]
 pub enum SplitDecider<'a> {
@@ -141,6 +205,14 @@ pub struct EngineConfig {
     /// ([`PlacementPolicy::PowerOfTwo`]): same seed + same job stream =
     /// bit-identical placements. Deterministic policies ignore it.
     pub placement_seed: u64,
+    /// Scripted fault plan: node deaths, restarts and overload shocks
+    /// injected at absolute sim times. Empty = no faults.
+    pub faults: Vec<FaultEvent>,
+    /// Wall-clock pacing: sim-seconds advanced per wall-clock second
+    /// (`Some(1.0)` = real time, `Some(10.0)` = 10x faster). `None`
+    /// runs the event loop as fast as it can — the default, and the
+    /// only sensible setting for pure-model runs.
+    pub pace: Option<f64>,
 }
 
 impl EngineConfig {
@@ -160,6 +232,8 @@ impl EngineConfig {
             session_variant: defaults.variant,
             session_sensor_period_s: defaults.sensor_period_s,
             placement_seed: 0x9E37_79B9_7F4A_7C15,
+            faults: Vec::new(),
+            pace: None,
         }
     }
 }
@@ -170,6 +244,11 @@ pub struct EngineOutcome {
     /// All jobs, in completion order.
     pub completed: Vec<CompletedJob>,
     pub node_energy_j: Vec<f64>,
+    /// The idle-floor slice of each node's energy (idle power over its
+    /// busy windows, paid once per device however many sessions
+    /// overlapped) — what the report layer bills instead of each
+    /// session's own idle integral.
+    pub node_idle_j: Vec<f64>,
     pub node_utilization: Vec<f64>,
     pub node_jobs: Vec<usize>,
     pub max_queue_depth: usize,
@@ -206,6 +285,28 @@ enum Ev {
     /// a stale event ever slipped through, it would no-op here instead
     /// of double-completing the job.
     Completion { node: usize, job: usize, gen: u64 },
+    /// A scripted fault fires (index into `EngineConfig::faults`).
+    Fault(usize),
+}
+
+/// A preempted job's parked context between eviction and re-admission.
+#[derive(Debug)]
+struct PendingMigration {
+    from_node: usize,
+    /// Effective frames of work left at preemption (model clock).
+    work_left: f64,
+    /// Checkpointed backend session, when the engine runs a data plane
+    /// (`None` on pure-model runs — the DES math needs only
+    /// `work_left`).
+    state: Option<SessionState>,
+}
+
+/// Wall-clock governor: sim time `t` may not run ahead of
+/// `started + t / factor` ([`EngineConfig::pace`]).
+#[derive(Debug)]
+struct Pacer {
+    started: std::time::Instant,
+    factor: f64,
 }
 
 /// The engine itself. Build with [`ServingEngine::new`], then
@@ -245,6 +346,14 @@ pub struct ServingEngine<'a> {
     /// Live sessions, keyed by job index.
     sessions: BTreeMap<usize, Box<dyn Session>>,
     session_reports: Vec<SessionReport>,
+    /// Nodes currently dead (admit nothing until a Restart fault).
+    node_down: Vec<bool>,
+    /// Preempted jobs parked for re-admission, keyed by job index.
+    migrations: BTreeMap<usize, PendingMigration>,
+    /// Per-event JSONL stream (None = no telemetry requested).
+    telemetry: Option<TelemetrySink>,
+    /// Wall-clock pacing governor (None = free-running).
+    pacer: Option<Pacer>,
 }
 
 impl<'a> ServingEngine<'a> {
@@ -254,17 +363,17 @@ impl<'a> ServingEngine<'a> {
         assert!(cfg.min_cores_per_job > 0.0, "min core grant must be positive");
         if let SplitDecider::Coordinator(c) = &decider {
             // The coordinator decides k against ITS device model; a
-            // multi-node engine would get splits sized for the wrong
-            // hardware. Clusters use PerNodeOptimal (or per-node
-            // coordinators, when that lands).
+            // heterogeneous engine would get splits sized for the wrong
+            // hardware. A homogeneous fleet (every node the same device
+            // as the coordinator's) is fine: the decision transfers.
             assert!(
-                cfg.nodes.len() == 1 && cfg.nodes[0].name == c.base.device.name,
-                "SplitDecider::Coordinator requires a single node matching the \
+                cfg.nodes.iter().all(|n| n.name == c.base.device.name),
+                "SplitDecider::Coordinator requires a homogeneous fleet of the \
                  coordinator's device ({})",
                 c.base.device.name
             );
         }
-        let nodes = cfg
+        let nodes: Vec<NodeAllocator> = cfg
             .nodes
             .iter()
             .cloned()
@@ -272,10 +381,27 @@ impl<'a> ServingEngine<'a> {
             .collect();
         let completion_handles = vec![None; jobs.len()];
         let place_rng = Rng::new(cfg.placement_seed);
+        // Faults are scheduled here, NOT in prime(): the sharded driver
+        // constructs engines with empty job lists and never primes them
+        // (jobs arrive via push_job), and its fault plan must still fire.
+        let mut events = EventQueue::new();
+        for (i, f) in cfg.faults.iter().enumerate() {
+            assert!(
+                f.node < nodes.len(),
+                "fault plan names node {}, fleet has {}",
+                f.node,
+                nodes.len()
+            );
+            events.push(f.at_s, Ev::Fault(i));
+        }
+        let pacer = cfg
+            .pace
+            .map(|factor| Pacer { started: std::time::Instant::now(), factor: factor.max(1e-9) });
+        let node_down = vec![false; nodes.len()];
         ServingEngine {
             nodes,
             queue: AdmissionQueue::new(),
-            events: EventQueue::new(),
+            events,
             completion_handles,
             completed: Vec::new(),
             dispatch_scheduled: false,
@@ -294,7 +420,19 @@ impl<'a> ServingEngine<'a> {
             backend: None,
             sessions: BTreeMap::new(),
             session_reports: Vec::new(),
+            node_down,
+            migrations: BTreeMap::new(),
+            telemetry: None,
+            pacer,
         }
+    }
+
+    /// Stream per-event JSONL telemetry into `sink` (admissions,
+    /// regrants, sheds, mode switches, checkpoints, faults, migrations,
+    /// completions). Flushed in [`Self::finish`].
+    pub fn with_telemetry(mut self, sink: TelemetrySink) -> Self {
+        self.telemetry = Some(sink);
+        self
     }
 
     /// Dispatch admitted jobs through an execution backend: every
@@ -372,6 +510,18 @@ impl<'a> ServingEngine<'a> {
             }
             let (t, ev) = self.events.pop().expect("peeked event vanished");
             self.des_events += 1;
+            if let Some(p) = &self.pacer {
+                // Time dilation: don't process the event until the wall
+                // clock catches up to `t / factor`. Sleeping here (not
+                // per sub-operation) keeps event ORDER identical to the
+                // free-running engine — pacing changes when things
+                // happen, never what happens.
+                let target = t / p.factor;
+                let elapsed = p.started.elapsed().as_secs_f64();
+                if target > elapsed {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(target - elapsed));
+                }
+            }
             match ev {
                 Ev::Arrival(i) => {
                     self.jobs[i].arrival_s = t;
@@ -405,10 +555,11 @@ impl<'a> ServingEngine<'a> {
                     }
                     let done = self.nodes[node].complete(t, job);
                     let j = &self.jobs[job];
+                    let (id, arrival_s) = (j.id, j.arrival_s);
                     self.completed.push(CompletedJob {
-                        id: j.id,
+                        id,
                         node,
-                        arrival_s: j.arrival_s,
+                        arrival_s,
                         start_s: done.start_s,
                         finish_s: t,
                         containers: done.plan.k,
@@ -418,12 +569,52 @@ impl<'a> ServingEngine<'a> {
                     });
                     self.metrics.inc("jobs_completed", 1);
                     self.metrics.inc("frames_processed", done.frames as u64);
-                    self.metrics.histogram("job_latency_s").record_s(t - j.arrival_s);
+                    self.metrics.histogram("job_latency_s").record_s(t - arrival_s);
                     self.metrics.histogram("job_service_s").record_s(t - done.start_s);
+                    let (frames, start_s) = (done.frames, done.start_s);
+                    self.emit_event("complete", t, |w| {
+                        w.field_num("job", id as f64)
+                            .field_usize("node", node)
+                            .field_usize("frames", frames)
+                            .field_num("latency_s", t - arrival_s)
+                            .field_num("service_s", t - start_s);
+                    })?;
                     if self.closed_loop {
                         self.emit_next_arrival(t);
                     }
                     self.schedule_dispatch(t);
+                }
+                Ev::Fault(i) => {
+                    let f = self.cfg.faults[i];
+                    match f.kind {
+                        FaultKind::Kill => {
+                            self.emit_event("fault", t, |w| {
+                                w.field_usize("node", f.node).field_str("kind", "kill");
+                            })?;
+                            self.fault_preempt(t, f.node, usize::MAX)?;
+                            self.node_down[f.node] = true;
+                            self.metrics.inc("faults_injected", 1);
+                            self.schedule_dispatch(t);
+                        }
+                        FaultKind::Overload => {
+                            self.emit_event("fault", t, |w| {
+                                w.field_usize("node", f.node).field_str("kind", "overload");
+                            })?;
+                            self.fault_preempt(t, f.node, 1)?;
+                            self.metrics.inc("faults_injected", 1);
+                            self.schedule_dispatch(t);
+                        }
+                        FaultKind::Restart => {
+                            if self.node_down[f.node] {
+                                self.node_down[f.node] = false;
+                                self.emit_event("restart", t, |w| {
+                                    w.field_usize("node", f.node);
+                                })?;
+                                self.metrics.inc("faults_injected", 1);
+                                self.schedule_dispatch(t);
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -432,7 +623,16 @@ impl<'a> ServingEngine<'a> {
 
     /// Close a drained run: assert nothing was lost and fold the
     /// engine's state into an [`EngineOutcome`].
-    pub fn finish(self) -> Result<EngineOutcome> {
+    pub fn finish(mut self) -> Result<EngineOutcome> {
+        if let Some(sink) = self.telemetry.as_mut() {
+            sink.flush()?;
+        }
+        anyhow::ensure!(
+            self.migrations.is_empty(),
+            "engine drained with {} preempted jobs never re-admitted (did the fault \
+             plan kill a node without restarting it, with nowhere else to run?)",
+            self.migrations.len()
+        );
         anyhow::ensure!(
             self.queue.is_empty(),
             "engine drained with {} jobs still queued (jobs can never be admitted \
@@ -470,6 +670,7 @@ impl<'a> ServingEngine<'a> {
         }
         EngineOutcome {
             node_energy_j: self.nodes.iter().map(NodeAllocator::energy_j).collect(),
+            node_idle_j: self.nodes.iter().map(NodeAllocator::idle_energy_j).collect(),
             node_utilization: self.nodes.iter().map(NodeAllocator::utilization).collect(),
             node_jobs: self.nodes.iter().map(|n| n.jobs_done).collect(),
             max_queue_depth: self.queue.max_depth,
@@ -503,19 +704,100 @@ impl<'a> ServingEngine<'a> {
         }
     }
 
+    /// Emit one telemetry record: `build` fills the event-specific
+    /// fields after the common `event`/`t_s` header. Callers compute
+    /// the values first and move them in — the closure must not borrow
+    /// the engine. No-op without a sink.
+    fn emit_event(
+        &mut self,
+        event: &str,
+        t_s: f64,
+        build: impl FnOnce(&mut JsonWriter),
+    ) -> Result<()> {
+        let Some(sink) = self.telemetry.as_mut() else { return Ok(()) };
+        let mut w = JsonWriter::new();
+        w.begin_obj().field_str("event", event).field_num("t_s", t_s);
+        build(&mut w);
+        w.end_obj();
+        sink.emit(&w.finish())
+    }
+
+    /// Preempt up to `max_victims` residents of `node` at `t`, youngest
+    /// (latest-started) first — an overload shock sheds the job that
+    /// has sunk the least progress. Each victim's live session is
+    /// checkpointed (REAL workers park; no completed frame is lost),
+    /// its allocator entry evicted, and the job re-queued with its
+    /// remaining work parked in [`Self::migrations`] for the dispatcher
+    /// to re-admit elsewhere (or here again, after a restart).
+    fn fault_preempt(&mut self, t: f64, node: usize, max_victims: usize) -> Result<()> {
+        let mut victims: Vec<(f64, usize)> = self.nodes[node]
+            .active
+            .iter()
+            .map(|a| (a.start_s, a.job_idx))
+            .collect();
+        victims
+            .sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+        victims.truncate(max_victims.min(victims.len()));
+        for (_, j) in victims {
+            // The in-flight completion is dead: the job will finish on
+            // whatever node re-admits it.
+            if let Some(h) = self.completion_handles[j].take() {
+                self.events.cancel(h);
+            }
+            let work_left = self.nodes[node]
+                .find(j)
+                .map(|a| a.work_remaining(t))
+                .unwrap_or(0.0);
+            let state = match self.sessions.remove(&j) {
+                // Checkpoint preempts the data plane; dropping the
+                // session afterwards reaps its parked workers.
+                Some(mut session) => Some(session.checkpoint(t)?),
+                None => None,
+            };
+            self.nodes[node].evict(t, j);
+            let id = self.jobs[j].id;
+            let (frames_done, frames_left) = state
+                .as_ref()
+                .map(|s| (s.frames_done, s.frames_left))
+                .unwrap_or((0, self.jobs[j].frames));
+            self.emit_event("checkpoint", t, |w| {
+                w.field_num("job", id as f64)
+                    .field_usize("node", node)
+                    .field_usize("frames_done", frames_done)
+                    .field_usize("frames_left", frames_left)
+                    .field_num("work_left", work_left);
+            })?;
+            self.migrations
+                .insert(j, PendingMigration { from_node: node, work_left, state });
+            self.queue.push(t, j);
+            self.metrics.inc("jobs_preempted", 1);
+        }
+        self.metrics.set_gauge("queue_depth", self.queue.len() as f64);
+        self.metrics.set_gauge_max("queue_depth_peak", self.queue.len() as f64);
+        Ok(())
+    }
+
     /// Open a backend session for job `j` just admitted on `node_i`
     /// under `plan` (k workers at `plan.cpus_each`), and start its
-    /// measured window at `now_s`. No-op without a backend.
+    /// measured window at `now_s`. With `restore`, the session is
+    /// opened for only the checkpoint's remaining frames and rehydrated
+    /// from it before starting — completed frames are neither re-run
+    /// nor re-billed. No-op without a backend.
     fn open_session_for(
         &mut self,
         j: usize,
         node_i: usize,
         now_s: f64,
         plan: &ServicePlan,
+        restore: Option<&SessionState>,
     ) -> Result<()> {
         let Some(backend) = self.backend.as_mut() else { return Ok(()) };
         let job = &self.jobs[j];
         let nd = &self.nodes[node_i];
+        let frames = match restore {
+            Some(s) => s.frames_left,
+            None => job.frames,
+        };
         // Sessions derive power modes from the device THEY are given:
         // hand them the calibrated base spec and re-apply the node's
         // current mode explicitly, so a later set_mode never compounds
@@ -523,15 +805,32 @@ impl<'a> ServingEngine<'a> {
         let spec = SessionSpec {
             device: nd.base_device.clone(),
             task: job.task.clone(),
-            segments: split_even(job.frames, plan.k.max(1)),
+            segments: split_even(frames, plan.k.max(1)),
             cpus_each: plan.cpus_each.max(f64::MIN_POSITIVE),
             seed: job.id,
             sensor_period_s: self.cfg.session_sensor_period_s,
             variant: self.cfg.session_variant.clone(),
         };
         let mut session = backend.open_session(&spec)?;
-        if !nd.mode.is_default_for(&nd.base_device) {
-            session.set_mode(&nd.mode, now_s)?;
+        match restore {
+            Some(state) => {
+                session.restore(state.clone(), now_s)?;
+                // Restore re-applies the checkpointed mode; reconcile
+                // with THIS node's mode when the two differ (`None` in
+                // the snapshot means the default mode).
+                let already = match &state.mode {
+                    Some(m) => *m == nd.mode,
+                    None => nd.mode.is_default_for(&nd.base_device),
+                };
+                if !already {
+                    session.apply(SessionCmd::SetMode(nd.mode.clone()), now_s)?;
+                }
+            }
+            None => {
+                if !nd.mode.is_default_for(&nd.base_device) {
+                    session.apply(SessionCmd::SetMode(nd.mode.clone()), now_s)?;
+                }
+            }
         }
         session.start(now_s)?;
         self.metrics.inc("sessions_opened", 1);
@@ -595,25 +894,81 @@ impl<'a> ServingEngine<'a> {
             if mode_free && decision.mode != self.nodes[node_i].mode {
                 self.nodes[node_i].set_mode(now_s, &decision.mode);
                 self.metrics.inc("mode_switches", 1);
+                let mode_name = decision.mode.name;
+                self.emit_event("mode", now_s, |w| {
+                    w.field_usize("node", node_i).field_str("mode", mode_name);
+                })?;
             }
             // A mode with fewer cores shrinks the grant with it.
             let grant = decision
                 .grant_cores
                 .min(self.nodes[node_i].free_cores)
                 .max(f64::MIN_POSITIVE);
+            let k = decision.k.min(mem_cap).max(1);
+            // A re-admitted preemption victim plans only its REMAINING
+            // work (plus a fresh container startup on the new node);
+            // `frames` stays the job's original total so completion
+            // counts conserve frames fleet-wide.
+            let pending = self.migrations.remove(&j);
             let plan = {
                 let nd = &self.nodes[node_i];
-                plan_service(
-                    &nd.device,
-                    &self.jobs[j].task,
-                    frames,
-                    decision.k.min(mem_cap).max(1),
-                    grant,
-                    nd.resident_containers(),
-                )
+                match &pending {
+                    Some(m) => plan_remaining(
+                        &nd.device,
+                        &self.jobs[j].task,
+                        m.work_left,
+                        k,
+                        grant,
+                        nd.resident_containers(),
+                        nd.device.container_startup_s,
+                    ),
+                    None => plan_service(
+                        &nd.device,
+                        &self.jobs[j].task,
+                        frames,
+                        k,
+                        grant,
+                        nd.resident_containers(),
+                    ),
+                }
             };
-            let finish = self.nodes[node_i].admit(now_s, j, frames, plan);
-            self.open_session_for(j, node_i, now_s, &plan)?;
+            let finish = match &pending {
+                Some(m) => {
+                    self.nodes[node_i].admit_with_work(now_s, j, frames, plan, m.work_left)
+                }
+                None => self.nodes[node_i].admit(now_s, j, frames, plan),
+            };
+            self.open_session_for(
+                j,
+                node_i,
+                now_s,
+                &plan,
+                pending.as_ref().and_then(|m| m.state.as_ref()),
+            )?;
+            let id = self.jobs[j].id;
+            match &pending {
+                Some(m) => {
+                    self.metrics.inc("migrations", 1);
+                    let (from, work_left) = (m.from_node, m.work_left);
+                    self.emit_event("migrate", now_s, |w| {
+                        w.field_num("job", id as f64)
+                            .field_usize("from", from)
+                            .field_usize("node", node_i)
+                            .field_usize("k", plan.k)
+                            .field_num("grant_cores", plan.grant_cores)
+                            .field_num("work_left", work_left);
+                    })?;
+                }
+                None => {
+                    self.emit_event("admit", now_s, |w| {
+                        w.field_num("job", id as f64)
+                            .field_usize("node", node_i)
+                            .field_usize("k", plan.k)
+                            .field_num("grant_cores", plan.grant_cores)
+                            .field_usize("frames", frames);
+                    })?;
+                }
+            }
             self.queue.remove(now_s, j);
             let h = self.events.push(finish, Ev::Completion { node: node_i, job: j, gen: 0 });
             self.completion_handles[j] = Some(h);
@@ -792,8 +1147,12 @@ impl<'a> ServingEngine<'a> {
             self.nodes[node_i].set_mode(now_s, &decision.mode);
             self.metrics.inc("mode_switches", 1);
             if let Some(session) = self.sessions.get_mut(&job) {
-                session.set_mode(&decision.mode, now_s)?;
+                session.apply(SessionCmd::SetMode(decision.mode.clone()), now_s)?;
             }
+            let mode_name = decision.mode.name;
+            self.emit_event("mode", now_s, |w| {
+                w.field_usize("node", node_i).field_str("mode", mode_name);
+            })?;
         }
         let (plan, restart, shed, startup, new_grant) = {
             let nd = &self.nodes[node_i];
@@ -843,20 +1202,34 @@ impl<'a> ServingEngine<'a> {
         if restart {
             self.metrics.inc("regrant_restarts", 1);
         }
+        let id = self.jobs[job].id;
         if shed {
             let session = self.sessions.get_mut(&job).expect("shed without a session");
-            let moved = session.shed(now_s)?;
+            let moved = session.apply(SessionCmd::Shed, now_s)?.moved();
             self.metrics.inc("regrant_sheds", 1);
             self.metrics.add_gauge("frames_shed", moved as f64);
+            self.emit_event("shed", now_s, |w| {
+                w.field_num("job", id as f64)
+                    .field_usize("node", node_i)
+                    .field_usize("moved", moved);
+            })?;
         }
         if let Some(session) = self.sessions.get_mut(&job) {
             // Propagate the new per-worker share to the live workers —
             // REAL: a synchronous token-bucket rewrite per container.
             for w in 0..session.workers() {
-                session.resize(w, plan.cpus_each, now_s)?;
+                session.apply(SessionCmd::Resize { worker: w, cpus: plan.cpus_each }, now_s)?;
             }
         }
         self.metrics.add_gauge("grant_churn_cores", (new_grant - old_grant).abs());
+        let (k, grant_cores) = (plan.k, plan.grant_cores);
+        self.emit_event("regrant", now_s, |w| {
+            w.field_num("job", id as f64)
+                .field_usize("node", node_i)
+                .field_usize("k", k)
+                .field_num("grant_cores", grant_cores)
+                .field_bool("shed", shed);
+        })?;
         Ok(())
     }
 
@@ -889,7 +1262,11 @@ impl<'a> ServingEngine<'a> {
         let open_nodes = self
             .nodes
             .iter()
-            .filter(|nd| nd.can_admit_under(self.cfg.min_cores_per_job, self.cfg.grant_policy))
+            .enumerate()
+            .filter(|(i, nd)| {
+                !self.node_down[*i]
+                    && nd.can_admit_under(self.cfg.min_cores_per_job, self.cfg.grant_policy)
+            })
             .count()
             .max(1);
         let nd = &self.nodes[node_i];
@@ -929,6 +1306,9 @@ impl<'a> ServingEngine<'a> {
     /// container counts (freeing memory), so only the node's whole
     /// container memory is a hard bar.
     fn node_can_take(&self, node_i: usize, frames: usize) -> bool {
+        if self.node_down[node_i] {
+            return false;
+        }
         let nd = &self.nodes[node_i];
         if !nd.can_admit_under(self.cfg.min_cores_per_job, self.cfg.grant_policy) {
             return false;
@@ -948,9 +1328,12 @@ impl<'a> ServingEngine<'a> {
         let policy = self.cfg.grant_policy;
         let frames = self.jobs[j].frames;
         if let Some(i) = self.jobs[j].affinity {
-            // Pinned jobs have no alternative node: only the core/slot
-            // check gates them (memory is re-checked at admission).
-            return self.nodes[i].can_admit_under(min_cores, policy).then_some(i);
+            // Pinned jobs have no alternative node: only the
+            // liveness/core/slot checks gate them (memory is re-checked
+            // at admission).
+            return (!self.node_down[i]
+                && self.nodes[i].can_admit_under(min_cores, policy))
+            .then_some(i);
         }
         match self.cfg.placement {
             PlacementPolicy::RoundRobin => {
@@ -1005,6 +1388,9 @@ impl<'a> ServingEngine<'a> {
                 let mut best = 0usize;
                 let mut best_key = (f64::INFINITY, f64::INFINITY);
                 for (i, nd) in self.nodes.iter().enumerate() {
+                    if self.node_down[i] {
+                        continue;
+                    }
                     let (service, energy) =
                         predict_full_device(&nd.device, &job.task, job.frames);
                     let finish = nd.est_free_at_s.max(now_s) + service;
@@ -1113,6 +1499,16 @@ impl<'a> ServingEngine<'a> {
             // Regrants know the job's actual remaining work; deadline
             // feasibility should be judged on it, not the full video.
             req.work_remaining = nd.find(j).map(|a| a.work_remaining(now_s));
+        }
+        if let Some(m) = self.migrations.get(&j) {
+            // A preemption victim being re-admitted elsewhere: the k
+            // decision is the same as a fresh admission (its old
+            // containers are gone, so `current_k` stays `None` and the
+            // admission cache entry is shared), but the verdict comes
+            // back `Migrate` and deadline feasibility is judged on the
+            // checkpointed remaining work only.
+            req.migrating = true;
+            req.work_remaining = Some(m.work_left);
         }
         let core_cap = nd.device.core_cap_for_grant(grant_cores).unwrap_or(usize::MAX);
         match &mut self.decider {
@@ -1531,6 +1927,111 @@ mod tests {
         for out in [&equal, &weighted] {
             assert_eq!(out.completed.len(), 3);
             assert_eq!(out.metrics.counter("work_conservation_violations"), 0);
+        }
+    }
+
+    #[test]
+    fn fault_plans_parse_and_reject() {
+        let plan = FaultEvent::parse_plan(" kill:0@2, restart:0@30 ,overload:1@5.5").unwrap();
+        assert_eq!(
+            plan,
+            vec![
+                FaultEvent { at_s: 2.0, node: 0, kind: FaultKind::Kill },
+                FaultEvent { at_s: 30.0, node: 0, kind: FaultKind::Restart },
+                FaultEvent { at_s: 5.5, node: 1, kind: FaultKind::Overload },
+            ]
+        );
+        assert_eq!(FaultEvent::parse_plan("").unwrap(), vec![]);
+        assert!(FaultEvent::parse_plan("explode:0@2").is_none());
+        assert!(FaultEvent::parse_plan("kill:x@2").is_none());
+        assert!(FaultEvent::parse_plan("kill:0@-2").is_none());
+        assert!(FaultEvent::parse_plan("kill:0").is_none());
+    }
+
+    #[test]
+    fn killed_node_migrates_its_resident_to_the_survivor() {
+        // Two Orins; the job lands on node 0 (lower index wins the tie)
+        // and node 0 dies mid-job. The job must checkpoint, migrate and
+        // finish on node 1 with its full frame count intact.
+        let mut cfg = EngineConfig {
+            nodes: vec![DeviceSpec::orin(), DeviceSpec::orin()],
+            ..EngineConfig::single_node(DeviceSpec::orin())
+        };
+        cfg.faults = vec![FaultEvent { at_s: 2.0, node: 0, kind: FaultKind::Kill }];
+        let out = ServingEngine::new(
+            cfg,
+            vec![yolo_job(0, 0.0, 720)],
+            SplitDecider::PerNodeOptimal,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(out.completed.len(), 1);
+        let c = &out.completed[0];
+        assert_eq!(c.node, 1, "job must finish on the survivor");
+        assert_eq!(c.frames, 720, "frames are conserved across the migration");
+        assert!(c.finish_s > 2.0);
+        assert_eq!(out.metrics.counter("jobs_preempted"), 1);
+        assert_eq!(out.metrics.counter("migrations"), 1);
+        assert_eq!(out.metrics.counter("faults_injected"), 1);
+    }
+
+    #[test]
+    fn restart_lets_a_lone_node_resume_its_preempted_job() {
+        // Single node killed at t=2 and restarted at t=10: the job has
+        // nowhere else to go, waits out the outage, and resumes on the
+        // same node after the restart.
+        let mut cfg = orin_engine(1);
+        cfg.faults = vec![
+            FaultEvent { at_s: 2.0, node: 0, kind: FaultKind::Kill },
+            FaultEvent { at_s: 10.0, node: 0, kind: FaultKind::Restart },
+        ];
+        let out =
+            ServingEngine::new(cfg, vec![yolo_job(0, 0.0, 240)], SplitDecider::Fixed(4))
+                .run()
+                .unwrap();
+        assert_eq!(out.completed.len(), 1);
+        let c = &out.completed[0];
+        assert_eq!(c.node, 0);
+        assert!(c.finish_s > 10.0, "completion must postdate the restart");
+        assert_eq!(out.metrics.counter("jobs_preempted"), 1);
+        assert_eq!(out.metrics.counter("migrations"), 1);
+        assert_eq!(out.metrics.counter("faults_injected"), 2);
+    }
+
+    #[test]
+    fn overload_preempts_the_youngest_resident_and_streams_telemetry() {
+        // Two jobs share the node; an overload shock at t=2 must evict
+        // exactly one — the youngest (here the start-time tie breaks
+        // toward the higher job index) — and the telemetry stream must
+        // name it in a lintable checkpoint record.
+        let mut cfg = orin_engine(2);
+        cfg.faults = vec![FaultEvent { at_s: 2.0, node: 0, kind: FaultKind::Overload }];
+        let (sink, buf) = TelemetrySink::to_buffer();
+        let out = ServingEngine::new(
+            cfg,
+            vec![yolo_job(0, 0.0, 480), yolo_job(1, 0.0, 480)],
+            SplitDecider::Fixed(2),
+        )
+        .with_telemetry(sink)
+        .run()
+        .unwrap();
+        assert_eq!(out.completed.len(), 2);
+        assert_eq!(out.metrics.counter("jobs_preempted"), 1);
+        assert_eq!(out.metrics.counter("migrations"), 1);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let mut kinds = Vec::new();
+        let mut checkpointed_job = None;
+        for line in text.lines() {
+            let ev = super::super::telemetry::lint_line(line).unwrap();
+            if ev == "checkpoint" {
+                let v = crate::util::jsonl::decode_line(line).unwrap();
+                checkpointed_job = v.get("job").and_then(|j| j.as_f64());
+            }
+            kinds.push(ev);
+        }
+        assert_eq!(checkpointed_job, Some(1.0), "the younger resident is the victim");
+        for needed in ["admit", "fault", "checkpoint", "migrate", "complete"] {
+            assert!(kinds.iter().any(|k| k == needed), "missing {needed} event");
         }
     }
 

@@ -24,15 +24,18 @@ pub mod engine;
 pub mod policy;
 pub mod queue;
 pub mod shard;
+pub mod telemetry;
 
 pub use allocator::GrantPolicy;
 pub use engine::{
-    CompletedJob, EngineConfig, EngineJob, EngineOutcome, ServingEngine, SplitDecider,
+    CompletedJob, EngineConfig, EngineJob, EngineOutcome, FaultEvent, FaultKind,
+    ServingEngine, SplitDecider,
 };
 pub use policy::{PlacementPolicy, QueuePolicy};
 pub use shard::{
     run_sharded, FleetDecider, ShardSnapshot, ShardStats, ShardedConfig, ShardedOutcome,
 };
+pub use telemetry::TelemetrySink;
 
 use anyhow::{Context, Result};
 
@@ -40,7 +43,7 @@ use crate::config::ExecMode;
 use crate::coordinator::Coordinator;
 use crate::energy::Battery;
 use crate::exec::{RealBackend, StubEngineSpec};
-use crate::util::json::Json;
+use crate::util::jsonl::JsonWriter;
 use crate::util::rng::Rng;
 use crate::util::stats::{summarize, Summary};
 use crate::workload::ArrivalProcess;
@@ -75,6 +78,18 @@ pub struct ServeConfig {
     /// Skew elastic regrant shares toward tight-deadline jobs (weighted
     /// fair share; needs the EDF queue policy). Off by default.
     pub deadline_weighted_shares: bool,
+    /// Replicas of the coordinator's device to serve across (a
+    /// homogeneous mini-fleet; migration needs a survivor). 1 = the
+    /// single MEC server.
+    pub nodes: usize,
+    /// Wall-clock pacing factor: sim-seconds per wall-clock second
+    /// (`Some(1.0)` = real time). `None` = free-running.
+    pub pace: Option<f64>,
+    /// Path for the per-event JSONL telemetry stream (`None` = off).
+    pub telemetry: Option<String>,
+    /// Scripted fault plan injected into the run (node kills, restarts,
+    /// overload shocks).
+    pub faults: Vec<FaultEvent>,
 }
 
 impl Default for ServeConfig {
@@ -91,6 +106,10 @@ impl Default for ServeConfig {
             deadline_s: None,
             grant_policy: GrantPolicy::Fixed,
             deadline_weighted_shares: false,
+            nodes: 1,
+            pace: None,
+            telemetry: None,
+            faults: Vec::new(),
         }
     }
 }
@@ -115,6 +134,10 @@ pub struct ServeReport {
     /// Mean busy-core fraction per device while it was on.
     pub node_utilization: Vec<f64>,
     pub node_energy_j: Vec<f64>,
+    /// The idle-floor slice of each node's energy (idle power over its
+    /// busy windows), paid once per device however many sessions
+    /// overlapped.
+    pub node_idle_j: Vec<f64>,
     /// Mid-flight grant recomputations (0 under fixed grants).
     pub regrants: u64,
     /// Power-mode switches applied by the planner (0 under the
@@ -126,14 +149,20 @@ pub struct ServeReport {
     /// Live per-worker `--cpus` rewrites applied across all sessions
     /// (REAL: token-bucket rewrites, `docker update --cpus`).
     pub session_resizes: u64,
-    /// Measured (REAL) or shadow-modeled (SIM) energy summed over the
-    /// drained sessions. Each session bills its OWN device window
-    /// (idle floor included), so overlapping jobs re-pay the idle draw
-    /// once per session — this is a sum of per-job bills, NOT a
-    /// device-level total, and is not directly comparable to
-    /// `total_energy_j` (which pays idle once per device busy period)
-    /// under concurrency. See ROADMAP "REAL cross-job interference".
+    /// Measured (REAL) or shadow-modeled (SIM) energy over the drained
+    /// sessions, billed like `total_energy_j`: each session contributes
+    /// its busy energy (`energy_j - idle_energy_j`) and the device idle
+    /// floor is re-added once per node busy period from the engine's
+    /// aggregated timeline — so co-resident sessions no longer
+    /// double-count the idle draw. 0 on the pure-model path (no
+    /// sessions).
     pub session_energy_j: f64,
+    /// Jobs checkpointed and evicted by scripted faults (0 without a
+    /// fault plan).
+    pub jobs_preempted: u64,
+    /// Preempted jobs re-admitted (possibly on another node) from their
+    /// checkpoints.
+    pub migrations: u64,
     /// Battery-lifetime extrapolation on the reference pack
     /// ([`Battery::pack_50wh`]; recompute with
     /// [`ServeReport::apply_battery`] for other packs): jobs one charge
@@ -179,6 +208,7 @@ impl ServeReport {
             mean_queue_depth: outcome.mean_queue_depth,
             node_utilization: outcome.node_utilization.clone(),
             node_energy_j: outcome.node_energy_j.clone(),
+            node_idle_j: outcome.node_idle_j.clone(),
             regrants: outcome.regrants,
             mode_switches: outcome.mode_switches,
             sessions: outcome.session_reports.len(),
@@ -187,7 +217,21 @@ impl ServeReport {
                 .iter()
                 .map(|r| r.resizes as u64)
                 .sum(),
-            session_energy_j: outcome.session_reports.iter().map(|r| r.energy_j).sum(),
+            // Busy energy per session + the device idle floor once per
+            // node busy period — NOT once per session (co-resident
+            // sessions used to triple-bill the floor).
+            session_energy_j: if outcome.session_reports.is_empty() {
+                0.0
+            } else {
+                outcome
+                    .session_reports
+                    .iter()
+                    .map(|r| r.energy_j - r.idle_energy_j)
+                    .sum::<f64>()
+                    + outcome.node_idle_j.iter().sum::<f64>()
+            },
+            jobs_preempted: outcome.metrics.counter("jobs_preempted"),
+            migrations: outcome.metrics.counter("migrations"),
             battery_jobs_per_charge: 0.0,
             battery_hours: 0.0,
             plan_cache_hits: 0,
@@ -220,57 +264,62 @@ impl ServeReport {
         };
     }
 
-    /// JSON export, so bench runs can be diffed across PRs.
-    pub fn to_json(&self) -> Json {
-        let summary = |s: &Summary| {
-            Json::obj(vec![
-                ("mean_s", Json::num(s.mean)),
-                ("p50_s", Json::num(s.p50)),
-                ("p95_s", Json::num(s.p95)),
-                ("p99_s", Json::num(s.p99)),
-                ("max_s", Json::num(s.max)),
-            ])
-        };
-        Json::obj(vec![
-            ("jobs", Json::num(self.jobs as f64)),
-            ("frames", Json::num(self.frames as f64)),
-            ("latency", summary(&self.latency)),
-            ("service", summary(&self.service)),
-            ("wall_s", Json::num(self.wall_s)),
-            ("jobs_per_s", Json::num(self.jobs_per_s)),
-            ("frames_per_s", Json::num(self.frames_per_s)),
-            ("total_energy_j", Json::num(self.total_energy_j)),
-            ("max_queue_depth", Json::num(self.max_queue_depth as f64)),
-            ("mean_queue_depth", Json::num(self.mean_queue_depth)),
-            (
-                "node_utilization",
-                Json::Array(self.node_utilization.iter().map(|&u| Json::num(u)).collect()),
-            ),
-            (
-                "node_energy_j",
-                Json::Array(self.node_energy_j.iter().map(|&e| Json::num(e)).collect()),
-            ),
-            ("regrants", Json::num(self.regrants as f64)),
-            ("mode_switches", Json::num(self.mode_switches as f64)),
-            ("sessions", Json::num(self.sessions as f64)),
-            ("session_resizes", Json::num(self.session_resizes as f64)),
-            ("session_energy_j", Json::num(self.session_energy_j)),
-            ("battery_jobs_per_charge", Json::num(self.battery_jobs_per_charge)),
-            ("battery_hours", Json::num(self.battery_hours)),
-            ("plan_cache_hits", Json::num(self.plan_cache_hits as f64)),
-            ("plan_cache_misses", Json::num(self.plan_cache_misses as f64)),
-            ("plans_cached", Json::num(self.plans_cached as f64)),
-            ("p2c_fallback_scans", Json::num(self.p2c_fallback_scans as f64)),
-            (
-                "shard_queue_depth_peaks",
-                Json::Array(
-                    self.shard_queue_depth_peaks
-                        .iter()
-                        .map(|&d| Json::num(d as f64))
-                        .collect(),
-                ),
-            ),
-        ])
+    /// Write the versioned (`"schema": 2`) report through the shared
+    /// streaming encoder — the same writer the telemetry stream and the
+    /// session reports use — so bench runs can be diffed across PRs and
+    /// consumers can gate on the schema number instead of sniffing
+    /// fields. Schema history is documented in DESIGN.md.
+    pub fn write_json(&self, w: &mut JsonWriter) {
+        fn summary(w: &mut JsonWriter, key: &str, s: &Summary) {
+            w.key(key)
+                .begin_obj()
+                .field_num("mean_s", s.mean)
+                .field_num("p50_s", s.p50)
+                .field_num("p95_s", s.p95)
+                .field_num("p99_s", s.p99)
+                .field_num("max_s", s.max)
+                .end_obj();
+        }
+        w.begin_obj()
+            .field_usize("schema", 2)
+            .field_usize("jobs", self.jobs)
+            .field_usize("frames", self.frames);
+        summary(w, "latency", &self.latency);
+        summary(w, "service", &self.service);
+        w.field_num("wall_s", self.wall_s)
+            .field_num("jobs_per_s", self.jobs_per_s)
+            .field_num("frames_per_s", self.frames_per_s)
+            .field_num("total_energy_j", self.total_energy_j)
+            .field_usize("max_queue_depth", self.max_queue_depth)
+            .field_num("mean_queue_depth", self.mean_queue_depth)
+            .field_nums("node_utilization", &self.node_utilization)
+            .field_nums("node_energy_j", &self.node_energy_j)
+            .field_nums("node_idle_j", &self.node_idle_j)
+            .field_num("regrants", self.regrants as f64)
+            .field_num("mode_switches", self.mode_switches as f64)
+            .field_usize("sessions", self.sessions)
+            .field_num("session_resizes", self.session_resizes as f64)
+            .field_num("session_energy_j", self.session_energy_j)
+            .field_num("jobs_preempted", self.jobs_preempted as f64)
+            .field_num("migrations", self.migrations as f64)
+            .field_num("battery_jobs_per_charge", self.battery_jobs_per_charge)
+            .field_num("battery_hours", self.battery_hours)
+            .field_num("plan_cache_hits", self.plan_cache_hits as f64)
+            .field_num("plan_cache_misses", self.plan_cache_misses as f64)
+            .field_usize("plans_cached", self.plans_cached)
+            .field_num("p2c_fallback_scans", self.p2c_fallback_scans as f64)
+            .key("shard_queue_depth_peaks")
+            .begin_arr();
+        for &d in &self.shard_queue_depth_peaks {
+            w.num(d as f64);
+        }
+        w.end_arr().end_obj();
+    }
+
+    pub fn to_json_string(&self) -> String {
+        let mut w = JsonWriter::new();
+        self.write_json(&mut w);
+        w.finish()
     }
 }
 
@@ -335,6 +384,9 @@ pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeRe
         .collect();
 
     let mut engine_cfg = EngineConfig::single_node(coordinator.base.effective_device());
+    // A homogeneous mini-fleet of the coordinator's device: replicas
+    // give a fault plan somewhere to migrate checkpointed jobs to.
+    engine_cfg.nodes = vec![coordinator.base.effective_device(); cfg.nodes.max(1)];
     engine_cfg.queue_policy = cfg.queue_policy;
     engine_cfg.max_concurrent_jobs = cfg.max_concurrent_jobs;
     engine_cfg.min_cores_per_job = cfg.min_cores_per_job;
@@ -342,9 +394,14 @@ pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeRe
     engine_cfg.deadline_weighted_shares = cfg.deadline_weighted_shares;
     engine_cfg.session_variant = coordinator.base.variant.clone();
     engine_cfg.session_sensor_period_s = coordinator.base.sensor_period_s;
+    engine_cfg.faults = cfg.faults.clone();
+    engine_cfg.pace = cfg.pace;
 
     let mut engine =
         ServingEngine::new(engine_cfg, jobs, SplitDecider::Coordinator(&mut *coordinator));
+    if let Some(path) = &cfg.telemetry {
+        engine = engine.with_telemetry(TelemetrySink::to_file(path)?);
+    }
     if let Some(backend) = real_backend.as_mut() {
         engine = engine.with_backend(backend);
     }
@@ -379,6 +436,7 @@ mod tests {
     use crate::coordinator::router::SplitPolicy;
     use crate::coordinator::OnlineOptimizer;
     use crate::device::DeviceSpec;
+    use crate::util::json::Json;
 
     fn coordinator(k: usize) -> Coordinator {
         Coordinator::new(ExperimentConfig::default(), SplitPolicy::Fixed(k))
@@ -518,7 +576,8 @@ mod tests {
             &ServeConfig { jobs: 4, frames_per_job: 48, seed: 1, ..Default::default() },
         )
         .unwrap();
-        let j = report.to_json();
+        let j = Json::parse(&report.to_json_string()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("jobs").unwrap().as_usize(), Some(4));
         assert!(j.get("latency").unwrap().get("p99_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("total_energy_j").unwrap().as_f64().unwrap() > 0.0);
@@ -540,6 +599,11 @@ mod tests {
             j.get("shard_queue_depth_peaks").unwrap().as_array().map(|a| a.len()),
             Some(0)
         );
+        // Pure-model run, no fault plan: the ops fields still export.
+        assert_eq!(j.get("node_idle_j").unwrap().as_array().map(|a| a.len()), Some(1));
+        assert_eq!(j.get("jobs_preempted").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("migrations").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("session_energy_j").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
@@ -558,9 +622,49 @@ mod tests {
         assert_eq!(report.plans_cached, 1);
         assert_eq!(c.metrics.counter("plan_cache_hits"), 5);
         assert_eq!(c.metrics.counter("plan_cache_misses"), 1);
-        let j = report.to_json();
+        let j = Json::parse(&report.to_json_string()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("plans_cached").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn co_resident_sessions_bill_the_idle_floor_once() {
+        // Three stub-backend jobs share one Orin. Summing raw session
+        // bills pays the device idle floor three times over the overlap;
+        // the report's rollup must bill each session's busy energy plus
+        // the node idle floor exactly once.
+        let mut backend = RealBackend::stub(StubEngineSpec::default());
+        let mut cfg = EngineConfig::single_node(DeviceSpec::orin());
+        cfg.max_concurrent_jobs = 3;
+        let jobs: Vec<EngineJob> = (0..3)
+            .map(|i| {
+                EngineJob::new(i, 0.0, 96, crate::workload::TaskProfile::yolo_tiny())
+            })
+            .collect();
+        let outcome = ServingEngine::new(cfg, jobs, SplitDecider::Fixed(2))
+            .with_backend(&mut backend)
+            .run()
+            .unwrap();
+        assert_eq!(outcome.session_reports.len(), 3);
+        let report = ServeReport::from_outcome(&outcome);
+        let naive: f64 = outcome.session_reports.iter().map(|r| r.energy_j).sum();
+        let busy: f64 =
+            outcome.session_reports.iter().map(|r| r.energy_j - r.idle_energy_j).sum();
+        let node_idle: f64 = outcome.node_idle_j.iter().sum();
+        assert!(node_idle > 0.0, "the busy period must accrue an idle floor");
+        assert!(
+            (report.session_energy_j - (busy + node_idle)).abs() < 1e-9,
+            "rollup must be busy + idle-once: {} vs {}",
+            report.session_energy_j,
+            busy + node_idle
+        );
+        assert!(
+            report.session_energy_j < naive - 1e-6,
+            "idle-once rollup {} must undercut the per-session sum {}",
+            report.session_energy_j,
+            naive
+        );
     }
 
     #[test]

@@ -56,7 +56,9 @@ use std::thread;
 
 use anyhow::{anyhow, Result};
 
-use super::engine::{EngineConfig, EngineJob, EngineOutcome, ServingEngine, SplitDecider};
+use super::engine::{
+    EngineConfig, EngineJob, EngineOutcome, FaultEvent, ServingEngine, SplitDecider,
+};
 use crate::coordinator::router::ShardRouter;
 use crate::device::DeviceSpec;
 use crate::metrics::Registry;
@@ -282,6 +284,17 @@ pub fn run_sharded(
     for (i, &(start, len)) in ranges.iter().enumerate() {
         let mut shard_cfg = cfg.base.clone();
         shard_cfg.nodes = cfg.base.nodes[start..start + len].to_vec();
+        // Each shard sees only the faults hitting ITS nodes, remapped
+        // to shard-local indices (the engine asserts fault targets are
+        // in range). Fault times are absolute, so the slice of the plan
+        // a shard owns fires identically however the fleet is cut.
+        shard_cfg.faults = cfg
+            .base
+            .faults
+            .iter()
+            .filter(|f| f.node >= start && f.node < start + len)
+            .map(|f| FaultEvent { node: f.node - start, ..*f })
+            .collect();
         // Stateless seed splitting: each shard's placement stream is a
         // pure function of (base seed, shard index), so spawn order and
         // thread scheduling cannot perturb it.
@@ -389,6 +402,7 @@ fn merge(
     let metrics = Registry::new();
     let mut completed = Vec::new();
     let mut node_energy_j = Vec::new();
+    let mut node_idle_j = Vec::new();
     let mut node_utilization = Vec::new();
     let mut node_jobs = Vec::new();
     let mut session_reports = Vec::new();
@@ -416,6 +430,7 @@ fn merge(
             completed.push(c);
         }
         node_energy_j.extend(o.node_energy_j);
+        node_idle_j.extend(o.node_idle_j);
         node_utilization.extend(o.node_utilization);
         node_jobs.extend(o.node_jobs);
         session_reports.extend(o.session_reports);
@@ -437,6 +452,7 @@ fn merge(
     let outcome = EngineOutcome {
         completed,
         node_energy_j,
+        node_idle_j,
         node_utilization,
         node_jobs,
         max_queue_depth,

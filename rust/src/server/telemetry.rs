@@ -1,0 +1,148 @@
+//! Per-event JSON-lines telemetry for serving runs.
+//!
+//! The engine emits one line per lifecycle event — admission, regrant,
+//! shed, mode switch, checkpoint, fault, restart, migration,
+//! completion — encoded with [`crate::util::jsonl::JsonWriter`] (no
+//! tree building on the hot path) and decoded by
+//! [`crate::util::jsonl::decode_line`]. Every record carries `event`
+//! (one of [`EVENT_NAMES`]) and `t_s` (sim-clock seconds); the rest of
+//! the fields are event-specific. The stream is the ops ground truth:
+//! the fault-injection tests reconstruct the full preempt → migrate →
+//! complete sequence from the JSONL alone, and `telemetry-lint` replays
+//! a file through the decoder line by line.
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::jsonl::decode_line;
+
+/// Every `event` value the engine emits. `telemetry-lint` rejects
+/// records outside this vocabulary, so extending the stream means
+/// extending this list (and the schema notes in DESIGN.md).
+pub const EVENT_NAMES: &[&str] = &[
+    "admit",
+    "regrant",
+    "shed",
+    "mode",
+    "checkpoint",
+    "fault",
+    "restart",
+    "migrate",
+    "complete",
+];
+
+/// Destination for the engine's event stream: a line-buffered writer
+/// plus an emitted-line counter. Construction picks the backing store
+/// (file, arbitrary writer, shared in-memory buffer for tests).
+pub struct TelemetrySink {
+    out: Box<dyn Write + Send>,
+    events: u64,
+}
+
+impl std::fmt::Debug for TelemetrySink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetrySink").field("events", &self.events).finish()
+    }
+}
+
+/// `Write` view of a shared byte buffer — lets a test hold the buffer
+/// while the engine owns the sink writing into it.
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().expect("telemetry buffer poisoned").extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl TelemetrySink {
+    /// Stream into an arbitrary writer.
+    pub fn to_writer(out: Box<dyn Write + Send>) -> Self {
+        TelemetrySink { out, events: 0 }
+    }
+
+    /// Stream into a file at `path` (created or truncated), buffered.
+    pub fn to_file(path: &str) -> Result<Self> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating telemetry file {path}"))?;
+        Ok(Self::to_writer(Box::new(std::io::BufWriter::new(f))))
+    }
+
+    /// Stream into a shared in-memory buffer; the returned handle reads
+    /// it back after the run (tests reconstruct event sequences from it).
+    pub fn to_buffer() -> (Self, Arc<Mutex<Vec<u8>>>) {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        (Self::to_writer(Box::new(SharedBuf(Arc::clone(&buf)))), buf)
+    }
+
+    /// Append one encoded record (no trailing newline) as a JSONL line.
+    pub fn emit(&mut self, line: &str) -> Result<()> {
+        self.out.write_all(line.as_bytes()).context("writing telemetry line")?;
+        self.out.write_all(b"\n").context("writing telemetry line")?;
+        self.events += 1;
+        Ok(())
+    }
+
+    /// Lines emitted so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush().context("flushing telemetry stream")
+    }
+}
+
+/// Decode and validate one telemetry line; returns its event name.
+/// The validation `telemetry-lint` and the tests share: parseable JSON
+/// object, `event` in [`EVENT_NAMES`], finite non-negative `t_s`.
+pub fn lint_line(line: &str) -> Result<String> {
+    let v = decode_line(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let Some(event) = v.get("event").and_then(|e| e.as_str()) else {
+        bail!("record has no string \"event\" field");
+    };
+    if !EVENT_NAMES.contains(&event) {
+        bail!("unknown event {event:?}");
+    }
+    match v.get("t_s").and_then(|t| t.as_f64()) {
+        Some(t) if t.is_finite() && t >= 0.0 => {}
+        _ => bail!("event {event:?} has no finite non-negative \"t_s\""),
+    }
+    Ok(event.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::jsonl::JsonWriter;
+
+    #[test]
+    fn buffer_sink_round_trips_lines() {
+        let (mut sink, buf) = TelemetrySink::to_buffer();
+        let mut w = JsonWriter::new();
+        w.begin_obj().field_str("event", "admit").field_num("t_s", 0.5).end_obj();
+        sink.emit(&w.finish()).unwrap();
+        sink.flush().unwrap();
+        assert_eq!(sink.events(), 1);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lint_line(lines[0]).unwrap(), "admit");
+    }
+
+    #[test]
+    fn lint_rejects_malformed_records() {
+        assert!(lint_line("not json").is_err());
+        assert!(lint_line(r#"{"t_s":1}"#).is_err(), "missing event");
+        assert!(lint_line(r#"{"event":"warp","t_s":1}"#).is_err(), "unknown event");
+        assert!(lint_line(r#"{"event":"admit"}"#).is_err(), "missing t_s");
+        assert!(lint_line(r#"{"event":"admit","t_s":-1}"#).is_err(), "negative t_s");
+    }
+}

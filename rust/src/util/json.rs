@@ -118,13 +118,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    out.push_str(&format!("{}", *n as i64));
-                } else {
-                    out.push_str(&format!("{n}"));
-                }
-            }
+            Json::Num(n) => write_num(out, *n),
             Json::Str(s) => write_escaped(out, s),
             Json::Array(a) => {
                 if a.is_empty() {
@@ -191,7 +185,19 @@ impl fmt::Display for Json {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Serialize a JSON number the way [`Json`] does: integers (within
+/// exact-f64 range) print without a decimal point. Shared with the
+/// streaming writer in [`super::jsonl`] so both encoders emit
+/// byte-identical numbers.
+pub(crate) fn write_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {

@@ -1,0 +1,209 @@
+//! Streaming JSON writer — the one encoder behind the telemetry JSONL
+//! stream, serialized session state and the versioned serve/session
+//! reports.
+//!
+//! [`super::json::Json`] builds a tree (BTreeMap per object) before it
+//! can serialize; fine for config files, too heavy for a per-event
+//! telemetry stream on the serving hot path. [`JsonWriter`] appends
+//! straight into one `String` with no intermediate values, emitting
+//! byte-compatible output (same escaping, same number formatting) so
+//! `Json::parse` is its decoder — the telemetry lint and the tests
+//! replay every line through it.
+
+use super::json::{write_escaped, write_num, Json, JsonError};
+
+/// Append-only JSON encoder. Call sequence is validated with
+/// `debug_assert`s (key before value inside objects, balanced
+/// begin/end); `finish()` asserts the document is complete.
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    buf: String,
+    /// One entry per open container: `true` once an element separator
+    /// is owed.
+    stack: Vec<bool>,
+    /// A key was written and its value is still owed.
+    pending_key: bool,
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        JsonWriter::default()
+    }
+
+    /// Separator bookkeeping before an element (value in an array,
+    /// key in an object, or the value owed to a pending key).
+    fn pad(&mut self) {
+        if self.pending_key {
+            self.pending_key = false;
+            return;
+        }
+        if let Some(top) = self.stack.last_mut() {
+            if *top {
+                self.buf.push(',');
+            } else {
+                *top = true;
+            }
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.pad();
+        self.buf.push('{');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        debug_assert!(!self.pending_key, "dangling key");
+        debug_assert!(self.stack.pop().is_some(), "end_obj with nothing open");
+        self.buf.push('}');
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.pad();
+        self.buf.push('[');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        debug_assert!(!self.pending_key, "dangling key");
+        debug_assert!(self.stack.pop().is_some(), "end_arr with nothing open");
+        self.buf.push(']');
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        debug_assert!(!self.pending_key, "two keys in a row");
+        self.pad();
+        write_escaped(&mut self.buf, k);
+        self.buf.push(':');
+        self.pending_key = true;
+        self
+    }
+
+    pub fn num(&mut self, v: f64) -> &mut Self {
+        self.pad();
+        write_num(&mut self.buf, v);
+        self
+    }
+
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.pad();
+        write_escaped(&mut self.buf, v);
+        self
+    }
+
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.pad();
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    pub fn null(&mut self) -> &mut Self {
+        self.pad();
+        self.buf.push_str("null");
+        self
+    }
+
+    // Key+value conveniences — the dominant call shape.
+
+    pub fn field_num(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k).num(v)
+    }
+
+    pub fn field_usize(&mut self, k: &str, v: usize) -> &mut Self {
+        self.key(k).num(v as f64)
+    }
+
+    pub fn field_str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k).str(v)
+    }
+
+    pub fn field_bool(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k).bool(v)
+    }
+
+    /// `"k":[v0,v1,...]` for a numeric slice.
+    pub fn field_nums(&mut self, k: &str, vs: &[f64]) -> &mut Self {
+        self.key(k).begin_arr();
+        for &v in vs {
+            self.num(v);
+        }
+        self.end_arr()
+    }
+
+    /// Finish and return the encoded document.
+    pub fn finish(self) -> String {
+        debug_assert!(self.stack.is_empty(), "unbalanced begin/end");
+        debug_assert!(!self.pending_key, "dangling key");
+        self.buf
+    }
+}
+
+/// Decode one line produced by [`JsonWriter`] (or any JSON value) —
+/// the telemetry decoder. Thin alias over [`Json::parse`], named so
+/// call sites read as the decode half of this module's contract.
+pub fn decode_line(line: &str) -> Result<Json, JsonError> {
+    Json::parse(line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_matches_tree_encoder_byte_for_byte() {
+        let mut w = JsonWriter::new();
+        w.begin_obj()
+            .field_str("event", "admit \"x\"\n")
+            .field_num("t_s", 1.5)
+            .field_usize("job", 3)
+            .field_bool("ok", true)
+            .key("none")
+            .null()
+            .field_nums("xs", &[1.0, 2.25])
+            .key("nested")
+            .begin_obj()
+            .field_num("k", 4.0)
+            .end_obj()
+            .key("empty")
+            .begin_arr()
+            .end_arr();
+        w.end_obj();
+        let line = w.finish();
+        // The tree encoder sorts keys (BTreeMap); round-tripping through
+        // it proves escaping and number formats agree exactly.
+        let v = decode_line(&line).unwrap();
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(v.get("event").unwrap().as_str(), Some("admit \"x\"\n"));
+        assert_eq!(v.get("t_s").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("job").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("none"), Some(&Json::Null));
+        assert_eq!(v.get("xs").unwrap().as_array().unwrap().len(), 2);
+        assert_eq!(v.get("nested").unwrap().get("k").unwrap().as_usize(), Some(4));
+        assert!(v.get("empty").unwrap().as_array().unwrap().is_empty());
+        // Integral floats print as integers, like the tree encoder.
+        assert!(line.contains("\"job\":3"));
+        assert!(!line.contains("3.0"));
+    }
+
+    #[test]
+    fn arrays_of_objects_get_separators() {
+        let mut w = JsonWriter::new();
+        w.begin_arr();
+        for i in 0..3 {
+            w.begin_obj().field_usize("i", i).end_obj();
+        }
+        w.end_arr();
+        let line = w.finish();
+        assert_eq!(line, r#"[{"i":0},{"i":1},{"i":2}]"#);
+    }
+
+    #[test]
+    fn decode_rejects_truncated_lines() {
+        assert!(decode_line(r#"{"event":"admit""#).is_err());
+        assert!(decode_line("").is_err());
+    }
+}

@@ -6,6 +6,7 @@ pub mod cli;
 pub mod csv;
 pub mod hash;
 pub mod json;
+pub mod jsonl;
 pub mod logging;
 pub mod proptest;
 pub mod rng;

@@ -19,7 +19,8 @@ use divide_and_save::coordinator::router::SplitPolicy;
 use divide_and_save::coordinator::Coordinator;
 use divide_and_save::device::DeviceSpec;
 use divide_and_save::exec::{
-    run_session, ExecutionBackend, RealBackend, SessionSpec, SimBackend, StubEngineSpec,
+    run_session, ExecutionBackend, RealBackend, SessionCmd, SessionSpec, SimBackend,
+    StubEngineSpec,
 };
 use divide_and_save::server::{
     serve, EngineConfig, EngineJob, GrantPolicy, ServeConfig, ServingEngine, SplitDecider,
@@ -93,7 +94,7 @@ fn real_stub_resize_budget_and_energy_reflect_the_new_share() {
 
     let mut b = backend().open_session(&spec()).unwrap();
     assert!((b.worker_cpus(0) - 2.0).abs() < 1e-12, "initial share is cores/k");
-    b.resize(0, 0.25, 0.0).unwrap();
+    b.apply(SessionCmd::Resize { worker: 0, cpus: 0.25 }, 0.0).unwrap();
     assert!((b.worker_cpus(0) - 0.25).abs() < 1e-12, "CFS budget must read back");
     assert!((b.worker_cpus(1) - 2.0).abs() < 1e-12, "sibling budget untouched");
     b.start(0.0).unwrap();
@@ -256,7 +257,8 @@ fn serve_real_mode_runs_concurrent_stub_sessions_end_to_end() {
     );
     assert!(report.session_energy_j > 0.0);
     assert!(report.total_energy_j > 0.0);
-    let j = report.to_json();
+    let j = divide_and_save::util::json::Json::parse(&report.to_json_string()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_usize(), Some(2));
     assert_eq!(j.get("sessions").unwrap().as_usize(), Some(3));
     assert!(j.get("session_energy_j").unwrap().as_f64().unwrap() > 0.0);
 }

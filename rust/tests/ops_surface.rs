@@ -1,0 +1,243 @@
+//! Ops-surface integration tests (tier-1): the redesigned Session
+//! lifecycle API end to end.
+//!
+//! * **Checkpoint/restore round trip** — property-tested over random
+//!   splits and checkpoint times: a SIM snapshot serializes through the
+//!   telemetry JSON encoder exactly, rehydrates into a fresh session,
+//!   and the restored drain covers the job's whole life without
+//!   re-running a completed frame or dropping billed energy.
+//! * **Fault recovery with a live backend** — a REAL (stub-engine)
+//!   serving fleet loses a node mid-job: the resident is checkpointed,
+//!   migrated and finished on the survivor with zero lost frames, and
+//!   the whole story is reconstructible from the telemetry JSONL alone.
+//! * **Deprecated-wrapper parity** — the pre-redesign per-operation
+//!   mutators are thin shims over `apply`; an identical command
+//!   sequence driven through either surface drains bit-identical
+//!   reports.
+//! * **Sharded fault determinism** — a fleet-wide outage injected
+//!   mid-epoch through the sharded driver replays bit-for-bit under
+//!   the same seed, and conserves every offered frame.
+
+use divide_and_save::config::ExperimentConfig;
+use divide_and_save::device::dvfs::PowerMode;
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::exec::{
+    ExecutionBackend, RealBackend, SessionCmd, SessionSpec, SessionState, SimBackend,
+    StubEngineSpec,
+};
+use divide_and_save::server::telemetry::lint_line;
+use divide_and_save::server::{
+    run_sharded, EngineConfig, EngineJob, FaultEvent, FleetDecider, PlacementPolicy,
+    ServingEngine, ShardedConfig, SplitDecider, TelemetrySink,
+};
+use divide_and_save::util::json::Json;
+use divide_and_save::util::jsonl::decode_line;
+use divide_and_save::util::proptest::{ensure, forall};
+use divide_and_save::workload::{split_even, TaskProfile};
+
+fn sim_spec(k: usize) -> SessionSpec {
+    let mut c = ExperimentConfig::default(); // TX2, 720 frames
+    c.containers = k;
+    SessionSpec::from_config(&c)
+}
+
+/// Checkpoint at a random time under a random split, round-trip the
+/// snapshot through its JSON wire form, restore into a fresh session
+/// and drain: frames and billed energy are conserved for every case.
+#[test]
+fn checkpoint_restore_conserves_frames_for_any_split_and_time() {
+    let tx2 = DeviceSpec::tx2();
+    forall(
+        0xD15,
+        12,
+        |r| (1 + r.usize(4), r.range_f64(10.0, 190.0)),
+        |&(k, t)| {
+            let err = |e: anyhow::Error| format!("{e:#}");
+            let mut s = SimBackend.open_session(&sim_spec(k)).map_err(err)?;
+            s.start(0.0).map_err(err)?;
+            let state = s.checkpoint(t).map_err(err)?;
+            ensure(
+                state.frames_total() == 720,
+                format!("done {} + left {} != 720", state.frames_done, state.frames_left),
+            )?;
+            // The wire form is the same hand-rolled encoder telemetry
+            // uses; `{}`-formatted f64s are shortest-round-trip, so the
+            // decode must be *equal*, not merely close.
+            let back = SessionState::from_json(&state.to_json_string(), &tx2).map_err(err)?;
+            ensure(back == state, "JSON round trip must be exact")?;
+            if state.frames_left == 0 {
+                return Ok(()); // job finished before t — nothing to resume
+            }
+            let mut resumed = sim_spec(k);
+            resumed.segments = split_even(state.frames_left, k);
+            let mut s2 = SimBackend.open_session(&resumed).map_err(err)?;
+            s2.restore(back, t).map_err(err)?;
+            s2.start(t).map_err(err)?;
+            let r = s2.drain().map_err(err)?;
+            ensure(
+                r.frames == 720,
+                format!("restored drain must cover the whole job, frames={}", r.frames),
+            )?;
+            ensure(
+                r.energy_j >= state.energy_j - 1e-9,
+                format!("carried energy dropped: {} < {}", r.energy_j, state.energy_j),
+            )?;
+            ensure(
+                r.idle_energy_j <= r.energy_j + 1e-9,
+                "idle share cannot exceed the total bill",
+            )
+        },
+    );
+}
+
+/// The acceptance scenario: a two-node stub-engine REAL fleet loses
+/// node 0 mid-job. The resident must checkpoint, migrate and finish on
+/// the survivor with zero lost frames — and the full event sequence
+/// (admit → fault → checkpoint → migrate → complete) must be
+/// reconstructible from the telemetry JSONL alone, every line lintable.
+#[test]
+fn killed_node_loses_zero_frames_and_telemetry_replays_the_story() {
+    let offered = 480usize;
+    let mut cfg = EngineConfig::single_node(DeviceSpec::orin());
+    cfg.nodes = vec![DeviceSpec::orin(), DeviceSpec::orin()];
+    cfg.faults = FaultEvent::parse_plan("kill:0@2").unwrap();
+    let mut backend = RealBackend::stub(StubEngineSpec { batch: 4, latency_s: 0.002 });
+    let (sink, buf) = TelemetrySink::to_buffer();
+    let out = ServingEngine::new(
+        cfg,
+        vec![EngineJob::new(0, 0.0, offered, TaskProfile::yolo_tiny())],
+        SplitDecider::Fixed(4),
+    )
+    .with_backend(&mut backend)
+    .with_telemetry(sink)
+    .run()
+    .unwrap();
+
+    assert_eq!(out.completed.len(), 1);
+    let c = &out.completed[0];
+    assert_eq!(c.node, 1, "the job must finish on the survivor");
+    assert_eq!(c.frames, offered, "zero frames lost across the migration");
+    assert_eq!(out.metrics.counter("jobs_preempted"), 1);
+    assert_eq!(out.metrics.counter("migrations"), 1);
+    // The restored session's report covers the job's whole life: the
+    // checkpointed frames are carried, not re-run.
+    assert_eq!(out.session_reports.len(), 1, "one drained session for the job");
+    assert_eq!(out.session_reports[0].frames, offered);
+
+    // Replay the story from the wire alone.
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    let f64_of = |v: &Json, k: &str| v.get(k).and_then(Json::as_f64).unwrap();
+    let mut kinds = Vec::new();
+    let (mut admitted, mut completed) = (0.0, 0.0);
+    let mut ckpt_split = None;
+    let mut route = None;
+    for line in text.lines() {
+        let ev = lint_line(line).unwrap(); // every record passes the linter
+        let v = decode_line(line).unwrap();
+        match ev.as_str() {
+            "admit" => admitted += f64_of(&v, "frames"),
+            "complete" => completed += f64_of(&v, "frames"),
+            "checkpoint" => {
+                ckpt_split = Some((f64_of(&v, "frames_done"), f64_of(&v, "frames_left")));
+            }
+            "migrate" => route = Some((f64_of(&v, "from"), f64_of(&v, "node"))),
+            _ => {}
+        }
+        kinds.push(ev);
+    }
+    let at = |kind: &str| {
+        kinds
+            .iter()
+            .position(|k| k == kind)
+            .unwrap_or_else(|| panic!("no {kind} event in {kinds:?}"))
+    };
+    assert!(at("admit") < at("fault"), "{kinds:?}");
+    assert!(at("fault") < at("checkpoint"), "{kinds:?}");
+    assert!(at("checkpoint") < at("migrate"), "{kinds:?}");
+    assert!(at("migrate") < at("complete"), "{kinds:?}");
+    assert_eq!(admitted, offered as f64, "admitted frames from telemetry");
+    assert_eq!(completed, offered as f64, "completed frames from telemetry");
+    let (done, left) = ckpt_split.expect("checkpoint record");
+    assert_eq!(done + left, offered as f64, "the checkpoint conserves the split");
+    assert_eq!(route, Some((0.0, 1.0)), "migration route from telemetry");
+}
+
+/// The pre-redesign mutators survive one release as deprecated shims
+/// over `apply`; an identical perturbation history driven through the
+/// old names and through typed commands must drain bit-identical
+/// reports (Debug formatting round-trips every f64 exactly).
+#[test]
+#[allow(deprecated)]
+fn deprecated_wrappers_match_apply_bit_for_bit() {
+    let tx2 = DeviceSpec::tx2();
+    let maxq = PowerMode::modes_for(&tx2)
+        .into_iter()
+        .find(|m| m.name.starts_with("MAXQ"))
+        .unwrap();
+
+    let mut old = SimBackend.open_session(&sim_spec(4)).unwrap();
+    old.start(0.0).unwrap();
+    old.resize(0, 0.5, 30.0).unwrap();
+    let moved_old = old.shed(60.0).unwrap();
+    old.set_mode(&maxq, 90.0).unwrap();
+    let r_old = old.drain().unwrap();
+
+    let mut new = SimBackend.open_session(&sim_spec(4)).unwrap();
+    new.start(0.0).unwrap();
+    new.apply(SessionCmd::Resize { worker: 0, cpus: 0.5 }, 30.0).unwrap();
+    let moved_new = new.apply(SessionCmd::Shed, 60.0).unwrap().moved();
+    new.apply(SessionCmd::SetMode(maxq), 90.0).unwrap();
+    let r_new = new.drain().unwrap();
+
+    assert!(moved_old > 0, "the starved worker must shed frames");
+    assert_eq!(moved_old, moved_new);
+    assert_eq!(format!("{r_old:?}"), format!("{r_new:?}"), "wrappers must be pure shims");
+}
+
+/// A fleet-wide outage injected through the sharded driver: every node
+/// dies at t=5 and restarts at t=40, mid-epoch. Two runs under the same
+/// seed must replay bit-for-bit, and the outage must not lose a frame.
+#[test]
+fn sharded_mid_epoch_faults_replay_deterministically() {
+    let mut cfg = EngineConfig::single_node(DeviceSpec::orin());
+    cfg.nodes = vec![DeviceSpec::orin(); 4];
+    cfg.placement = PlacementPolicy::PowerOfTwo;
+    cfg.max_concurrent_jobs = 2;
+    cfg.faults = FaultEvent::parse_plan(
+        "kill:0@5,kill:1@5,kill:2@5,kill:3@5,restart:0@40,restart:1@40,restart:2@40,restart:3@40",
+    )
+    .unwrap();
+    let jobs: Vec<EngineJob> = (0..16u64)
+        .map(|i| {
+            // Four long residents guarantee work in flight at the kill;
+            // the short tail keeps arriving through the outage.
+            let frames = if i < 4 { 720 } else { 96 };
+            EngineJob::new(i, 0.45 * i as f64, frames, TaskProfile::yolo_tiny())
+        })
+        .collect();
+    let offered: usize = jobs.iter().map(|j| j.frames).sum();
+    let run = || {
+        run_sharded(&ShardedConfig::new(cfg.clone(), 2), jobs.clone(), FleetDecider::PerNodeOptimal)
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        format!("{:?}", a.outcome.completed),
+        format!("{:?}", b.outcome.completed),
+        "fault recovery must be deterministic under a fixed seed"
+    );
+    assert_eq!(a.outcome.wall_s.to_bits(), b.outcome.wall_s.to_bits());
+    assert_eq!(
+        format!("{:?}", a.outcome.node_energy_j),
+        format!("{:?}", b.outcome.node_energy_j)
+    );
+    assert_eq!(a.outcome.completed.len(), 16, "every job survives the outage");
+    let done: usize = a.outcome.completed.iter().map(|c| c.frames).sum();
+    assert_eq!(done, offered, "no frames lost across the fleet-wide outage");
+    assert!(a.outcome.metrics.counter("jobs_preempted") >= 1, "the kill must preempt");
+    assert_eq!(
+        a.outcome.metrics.counter("faults_injected"),
+        b.outcome.metrics.counter("faults_injected")
+    );
+}
