@@ -38,7 +38,7 @@ pub use combiner::combine_segments;
 pub use executor::{run_sim, ExperimentResult, SegmentResult};
 pub use optimizer::{OnlineOptimizer, OptimizeObjective};
 pub use planner::{
-    FixedModePlanner, JointPlanner, Plan, PlanAction, PlanCacheStats, PlanRequest, Planner,
-    PlannerKind,
+    FixedModePlanner, JointPlanner, OffloadPlan, Plan, PlanAction, PlanCacheStats, PlanRequest,
+    Planner, PlannerKind,
 };
 pub use router::{Coordinator, InferenceJob, JobResult};

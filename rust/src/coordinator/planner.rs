@@ -17,7 +17,13 @@
 //!   completion-time budget (the job's deadline when it has one, the
 //!   fixed-mode plan's time otherwise). With deadline slack this makes
 //!   race-to-idle vs slow-and-steady a measurable policy choice — a
-//!   draining device downclocks instead of sprinting into idle.
+//!   draining device downclocks instead of sprinting into idle. When
+//!   the request carries an offload tier ([`crate::net::TierSpec`]),
+//!   the search grows a split axis: part of the frames can ship over
+//!   the tier's link and run remotely in parallel with the local half,
+//!   with transfer time and TX energy as first-class costs (a
+//!   [`PlanAction::Offload`] verdict + [`OffloadPlan`] describe the
+//!   remote half).
 //!
 //! Predictions use the same calibrated closed forms the serving engine
 //! plans with (`SpeedupCurve::completion_time_piecewise` for time, the
@@ -33,6 +39,7 @@ use crate::coordinator::router::SplitPolicy;
 use crate::device::dvfs::PowerMode;
 use crate::device::intern::{intern, Sym};
 use crate::device::DeviceSpec;
+use crate::net::TierSpec;
 use crate::sched::interference;
 use crate::util::hash::FxHashMap;
 use crate::workload::TaskProfile;
@@ -73,6 +80,17 @@ pub struct PlanRequest {
     /// but the verdict is [`PlanAction::Migrate`], so the engine knows
     /// to restore session state instead of starting from frame zero.
     pub migrating: bool,
+    /// Offload tier reachable from this node, if any. A joint planner
+    /// adds the split axis (ship part of the frames over the tier's
+    /// link) to its search; the fixed-mode planner ignores it.
+    pub tier: Option<TierSpec>,
+    /// Privacy pin: this job's frames must not leave the device. An
+    /// offload verdict is never produced for a pinned request,
+    /// whatever the tier economics say.
+    pub pin_local: bool,
+    /// Absolute clock at planning time — only consulted by the link
+    /// model's time-varying bandwidth profile (0.0 is always safe).
+    pub now_s: f64,
 }
 
 impl PlanRequest {
@@ -92,6 +110,9 @@ impl PlanRequest {
             deadline_s: None,
             pinned_mode: None,
             migrating: false,
+            tier: None,
+            pin_local: false,
+            now_s: 0.0,
         }
     }
 
@@ -126,6 +147,25 @@ impl PlanRequest {
         self.migrating = true;
         self
     }
+
+    /// Offer an offload tier: a joint planner may split the job's
+    /// frames between the local device and `tier`.
+    pub fn with_tier(mut self, tier: TierSpec) -> Self {
+        self.tier = Some(tier);
+        self
+    }
+
+    /// Privacy-pin the job to the local device (offload forbidden).
+    pub fn pinned_local(mut self) -> Self {
+        self.pin_local = true;
+        self
+    }
+
+    /// Set the absolute planning clock (time-varying link profiles).
+    pub fn at(mut self, now_s: f64) -> Self {
+        self.now_s = now_s;
+        self
+    }
 }
 
 /// What acting on a plan costs at the container layer.
@@ -143,6 +183,10 @@ pub enum PlanAction {
     /// containers (full startup) that restore saved progress instead of
     /// recomputing completed frames.
     Migrate,
+    /// Split admission: `split` frames ship over the tier's link and
+    /// run remotely while the rest are admitted locally as a fresh
+    /// start. The plan's `offload` field carries the remote half.
+    Offload { split: usize },
 }
 
 /// A joint (mode, k) decision with its predicted cost.
@@ -163,6 +207,38 @@ pub struct Plan {
     pub predicted_energy_j: f64,
     /// Restart-vs-resize verdict relative to `PlanRequest::current_k`.
     pub action: PlanAction,
+    /// The remote half of an [`PlanAction::Offload`] verdict (`None`
+    /// for purely local plans). The plan's own k/grant/mode fields
+    /// describe the *local* half; predicted time/energy cover both
+    /// halves plus the link.
+    pub offload: Option<OffloadPlan>,
+}
+
+/// The remote half of a split admission: what runs on the offload tier
+/// and what the link costs. Predicted with the same calibrated closed
+/// forms as local plans, on the tier's device spec.
+#[derive(Debug, Clone)]
+pub struct OffloadPlan {
+    /// Tier display name (reports, telemetry).
+    pub tier: String,
+    /// Frames shipped to the tier.
+    pub remote_frames: usize,
+    /// Container split on the remote device.
+    pub remote_k: usize,
+    /// Per-container cpu share on the remote device.
+    pub remote_cpus_each: f64,
+    /// Power mode the remote half runs under.
+    pub remote_mode: PowerMode,
+    /// Remote compute time, excluding the link.
+    pub remote_time_s: f64,
+    /// Remote compute energy as billed (the tier's `energy_mult`
+    /// already applied).
+    pub remote_energy_j: f64,
+    /// Transfer time over the link (latency + serialization,
+    /// retransmits included).
+    pub link_time_s: f64,
+    /// Radio TX energy for the transfer, joules.
+    pub link_tx_j: f64,
 }
 
 /// The one decision surface: request in, plan out.
@@ -319,6 +395,7 @@ fn plan_candidate(req: &PlanRequest, mode: &PowerMode, k: usize) -> Plan {
         predicted_time_s,
         predicted_energy_j,
         action,
+        offload: None,
     }
 }
 
@@ -335,6 +412,104 @@ fn k_max_for(req: &PlanRequest, mode: &PowerMode) -> usize {
         .memory
         .max_containers_within(req.avail_mem_mib, req.frames);
     core_cap.min(mem_cap).min(req.k_cap).max(1)
+}
+
+/// The tier the split search may use, if the request is offloadable at
+/// all: fresh whole-job admissions only (a running job's frames are
+/// already on a device — regrants, migrations and mid-job re-plans
+/// keep their work where it is), never privacy-pinned jobs, and at
+/// least two frames (both halves must be non-empty).
+fn offload_eligible_tier(req: &PlanRequest) -> Option<&TierSpec> {
+    if req.pin_local
+        || req.migrating
+        || req.current_k.is_some()
+        || req.work_remaining.is_some()
+        || req.frames < 2
+    {
+        return None;
+    }
+    req.tier.as_ref()
+}
+
+/// Push one combined candidate per split fraction onto `candidates`.
+///
+/// The halves run in parallel — the local containers start while the
+/// shipped frames are in flight — so the joint completion time is
+/// `max(local, link + remote)` and feasibility decomposes: a split is
+/// within budget iff each half is (the remote half's clock includes
+/// the transfer). Since the energy objective is also a sum
+/// (`local + mult * remote + tx`), the best (mode, k) for each half
+/// can be chosen independently per split without losing optimality.
+fn offload_candidates(
+    req: &PlanRequest,
+    tier: &TierSpec,
+    budget_s: f64,
+    candidates: &mut Vec<Plan>,
+) {
+    let mut splits: Vec<usize> = (1..8).map(|i| req.frames * i / 8).collect();
+    splits.sort_unstable();
+    splits.dedup();
+    for split in splits {
+        if split == 0 || split >= req.frames {
+            continue;
+        }
+        let local_req =
+            PlanRequest { frames: req.frames - split, tier: None, ..req.clone() };
+        let link_time_s = tier.link.transfer_time_s(split, req.now_s);
+        let link_tx_j = tier.link.tx_energy_j(split);
+        let mut remote_req =
+            PlanRequest::new(tier.device.clone(), req.task.clone(), split);
+        remote_req.k_cap = req.k_cap;
+        let local = best_half(&local_req, budget_s);
+        let remote = best_half(&remote_req, budget_s - link_time_s);
+        let remote_energy_j = tier.energy_mult * remote.predicted_energy_j;
+        let mut plan = local;
+        plan.predicted_time_s =
+            plan.predicted_time_s.max(link_time_s + remote.predicted_time_s);
+        plan.predicted_energy_j += remote_energy_j + link_tx_j;
+        plan.action = PlanAction::Offload { split };
+        plan.offload = Some(OffloadPlan {
+            tier: tier.name.clone(),
+            remote_frames: split,
+            remote_k: remote.k,
+            remote_cpus_each: remote.cpus_each,
+            remote_mode: remote.mode,
+            remote_time_s: remote.predicted_time_s,
+            remote_energy_j,
+            link_time_s,
+            link_tx_j,
+        });
+        candidates.push(plan);
+    }
+}
+
+/// Best (mode, k) plan for one half of a split: minimum predicted
+/// energy among candidates within `budget_s`, else the fastest (the
+/// race fallback — the joint selection still holds the whole split to
+/// the budget, so an infeasible half only survives when *nothing*
+/// feasible exists). Energy is compared unscaled; a tier's constant
+/// `energy_mult` cannot change the argmin.
+fn best_half(req: &PlanRequest, budget_s: f64) -> Plan {
+    let mut best: Option<Plan> = None;
+    let mut best_key = (f64::INFINITY, f64::INFINITY);
+    let mut fastest: Option<Plan> = None;
+    let mut fastest_key = (f64::INFINITY, f64::INFINITY);
+    for mode in PowerMode::modes_for(&req.device) {
+        for k in 1..=k_max_for(req, &mode) {
+            let c = plan_candidate(req, &mode, k);
+            let t_key = (c.predicted_time_s, c.predicted_energy_j);
+            let e_key = (c.predicted_energy_j, c.predicted_time_s);
+            if t_key < fastest_key {
+                fastest_key = t_key;
+                fastest = Some(c.clone());
+            }
+            if c.predicted_time_s <= budget_s + 1e-9 && e_key < best_key {
+                best_key = e_key;
+                best = Some(c);
+            }
+        }
+    }
+    best.or(fastest).expect("mode grid is never empty")
 }
 
 /// Hit/miss/occupancy counters for a planner's decision cache, exposed
@@ -594,6 +769,9 @@ impl Planner for JointPlanner {
             }
         }
         candidates.push(baseline);
+        if let Some(tier) = offload_eligible_tier(req) {
+            offload_candidates(req, tier, budget, &mut candidates);
+        }
 
         let feasible: Vec<usize> = (0..candidates.len())
             .filter(|&i| candidates[i].predicted_time_s <= budget + 1e-9)
@@ -846,6 +1024,81 @@ mod tests {
             cached[0].0
         );
         assert!(cached[0].0.contains("/c"), "key = {}", cached[0].0);
+    }
+
+    #[test]
+    fn offload_only_on_fresh_unpinned_admissions() {
+        use crate::net::{LinkSpec, TierSpec};
+        let tier = TierSpec::parse("orin", LinkSpec::zero_cost()).unwrap();
+        let mut joint =
+            JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        // A free link to a strictly better device with a hopeless local
+        // deadline: a fresh admission must offload...
+        let r = req(DeviceSpec::tx2()).with_tier(tier.clone()).with_deadline(60.0);
+        let j = joint.plan(&r).unwrap();
+        assert!(
+            matches!(j.action, PlanAction::Offload { .. }) && j.offload.is_some(),
+            "free link + tight deadline must offload, got {:?}",
+            j.action
+        );
+        // ...but a privacy pin forbids it,
+        let pinned = joint.plan(&r.clone().pinned_local()).unwrap();
+        assert!(pinned.offload.is_none(), "pinned job offloaded: {:?}", pinned.action);
+        // a regrant keeps its work where it is,
+        let regrant = joint.plan(&r.clone().preferring(4)).unwrap();
+        assert!(regrant.offload.is_none(), "regrant offloaded: {:?}", regrant.action);
+        // and so does a migrating checkpoint restore.
+        let migrate = joint.plan(&r.migrating()).unwrap();
+        assert_eq!(migrate.action, PlanAction::Migrate);
+        assert!(migrate.offload.is_none());
+    }
+
+    #[test]
+    fn offload_split_predictions_account_for_the_link() {
+        use crate::net::{LinkSpec, TierSpec};
+        let link = LinkSpec::parse("50ms:100mbps").unwrap();
+        let tier = TierSpec::parse("orin*2", link.clone()).unwrap();
+        let mut joint =
+            JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let j = joint
+            .plan(&req(DeviceSpec::tx2()).with_tier(tier).with_deadline(100.0))
+            .unwrap();
+        let off = j.offload.as_ref().expect("tight deadline must force a split");
+        let PlanAction::Offload { split } = j.action else {
+            panic!("verdict {:?} disagrees with offload field", j.action)
+        };
+        assert_eq!(split, off.remote_frames);
+        assert!(split >= 1 && split < 720);
+        // The combined prediction is exactly max(local, link+remote).
+        assert!(
+            j.predicted_time_s >= off.link_time_s + off.remote_time_s - 1e-9,
+            "time {} ignores the link ({} + {})",
+            j.predicted_time_s,
+            off.link_time_s,
+            off.remote_time_s
+        );
+        let expected_link = LinkSpec::parse("50ms:100mbps").unwrap();
+        assert!((off.link_tx_j - expected_link.tx_energy_j(split)).abs() < 1e-9);
+        assert!(
+            (off.link_time_s - expected_link.transfer_time_s(split, 0.0)).abs() < 1e-9
+        );
+        // Billed remote energy carries the x2 multiplier: it must be at
+        // least twice the raw prediction of the remote half's plan.
+        let raw = predict_on(
+            &off.remote_mode.apply(&DeviceSpec::orin()),
+            &TaskProfile::yolo_tiny(),
+            off.remote_frames,
+            None,
+            off.remote_k,
+            off.remote_k as f64 * off.remote_cpus_each,
+            off.remote_mode.apply(&DeviceSpec::orin()).container_startup_s,
+        );
+        assert!(
+            (off.remote_energy_j - 2.0 * raw.1).abs() / off.remote_energy_j < 1e-6,
+            "billed {} vs raw {}",
+            off.remote_energy_j,
+            raw.1
+        );
     }
 
     #[test]

@@ -169,6 +169,13 @@ pub struct ShardRouter {
     /// Jobs re-routed away from their scored-best shard because its
     /// admission queue was saturated.
     pub overflow_reroutes: u64,
+    /// Cloud tier the fleet can offload to (`None` = edge-only). Used
+    /// by [`Self::cloud_favors`] to decide which jobs are worth
+    /// leaving offload-eligible vs pinning to their edge shard.
+    tier: Option<crate::net::TierSpec>,
+    /// Jobs pinned local because their edge shard already undercut the
+    /// billed cloud estimate ([`Self::cloud_favors`] said no).
+    pub local_pins: u64,
 }
 
 #[derive(Debug)]
@@ -205,7 +212,45 @@ impl ShardRouter {
             routed_total: vec![0; n],
             energy_cache: std::collections::HashMap::new(),
             overflow_reroutes: 0,
+            tier: None,
+            local_pins: 0,
         }
+    }
+
+    /// Attach a cloud tier: [`Self::cloud_favors`] starts answering
+    /// against its billed energy instead of always `false`.
+    pub fn with_tier(mut self, tier: crate::net::TierSpec) -> Self {
+        self.tier = Some(tier);
+        self
+    }
+
+    /// Would the cloud tier plausibly beat shard `s` for this job right
+    /// now? Compares the shard's congestion-inflated energy score (the
+    /// same objective [`Self::choose`] ranks with) against the billed
+    /// full-cloud estimate — remote energy × tier multiplier + link TX.
+    /// `false` means the edge shard already wins outright and the job
+    /// should be privacy-pinned local, sparing the planner the offload
+    /// grid search; `true` leaves it offload-eligible so the joint
+    /// planner can search split fractions. Edge-only routers (no tier)
+    /// always answer `false`.
+    pub fn cloud_favors(
+        &mut self,
+        s: usize,
+        task: &TaskProfile,
+        frames: usize,
+        load: &[ShardSnapshot],
+    ) -> bool {
+        let Some(tier) = self.tier.clone() else { return false };
+        let edge = self.energy_estimate(s, task, frames);
+        let depth = load[s].queued + self.routed_epoch[s];
+        let congestion = depth as f64 / self.pools[s].nodes as f64;
+        let cloud = predict_full_device(&tier.device, task, frames).1 * tier.energy_mult
+            + tier.link.tx_energy_j(frames);
+        let favors = cloud < edge * (1.0 + congestion);
+        if !favors {
+            self.local_pins += 1;
+        }
+        favors
     }
 
     /// Pick a shard for a `frames`-sized `task` job given the
@@ -502,6 +547,33 @@ mod tests {
         // bar (its own picks + reroutes), the rest lands on the big one.
         assert!(r.routed_per_shard()[0] <= 3, "{:?}", r.routed_per_shard());
         assert_eq!(r.routed_per_shard().iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn cloud_favors_only_congested_shards_and_respects_the_bill() {
+        use crate::net::{LinkSpec, TierSpec};
+        let pool = vec![crate::device::DeviceSpec::orin(); 2];
+        let task = TaskProfile::yolo_tiny();
+        let tier = TierSpec::parse("orin", LinkSpec::zero_cost()).unwrap();
+        let mut r = ShardRouter::new(&[&pool[..]], 1_000).with_tier(tier);
+        // Idle pool of the same device: the cloud only ties, the edge
+        // wins outright and the job gets pinned.
+        let idle = vec![idle_snapshot(2, 12.0)];
+        assert!(!r.cloud_favors(0, &task, 96, &idle));
+        assert_eq!(r.local_pins, 1);
+        // A backlog inflates the edge score past the cloud bill.
+        let mut busy = idle_snapshot(2, 12.0);
+        busy.queued = 4;
+        assert!(r.cloud_favors(0, &task, 96, &[busy.clone()]));
+        assert_eq!(r.local_pins, 1, "favorable answers must not count as pins");
+        // A 10x-billed cloud loses even to the congested shard.
+        let dear = TierSpec::parse("orin*10", LinkSpec::zero_cost()).unwrap();
+        let mut r10 = ShardRouter::new(&[&pool[..]], 1_000).with_tier(dear);
+        assert!(!r10.cloud_favors(0, &task, 96, &[busy]));
+        // Edge-only routers always answer no and never count pins.
+        let mut edge_only = ShardRouter::new(&[&pool[..]], 1_000);
+        assert!(!edge_only.cloud_favors(0, &task, 96, &idle));
+        assert_eq!(edge_only.local_pins, 0);
     }
 
     #[test]

@@ -184,14 +184,26 @@ pub struct SessionReport {
     pub reassigns: usize,
     /// `set_mode` calls applied.
     pub mode_switches: usize,
+    /// Frames this job shipped to an offload tier (0 for purely local
+    /// sessions). A merged offload report counts them in `frames` too;
+    /// this field says how many of those ran remotely.
+    pub offloaded_frames: usize,
+    /// Radio TX energy spent shipping the offloaded frames, joules
+    /// (already included in `energy_j`).
+    pub link_tx_j: f64,
+    /// Link transfer time for the offloaded frames, seconds (overlapped
+    /// with local compute — informational, not additive to `time_s`).
+    pub link_time_s: f64,
 }
 
 impl SessionReport {
-    /// Write the versioned (`"schema": 2`) report through the shared
+    /// Write the versioned (`"schema": 3`) report through the shared
     /// streaming encoder — the same writer the telemetry stream uses.
+    /// Schema 3 adds the offload fields (`offloaded_frames`,
+    /// `link_tx_j`, `link_time_s`); schema 2 added `idle_energy_j`.
     pub fn write_json(&self, w: &mut JsonWriter) {
         w.begin_obj()
-            .field_usize("schema", 2)
+            .field_usize("schema", 3)
             .field_str("device", &self.device)
             .field_usize("workers", self.workers)
             .field_usize("frames", self.frames)
@@ -203,6 +215,9 @@ impl SessionReport {
             .field_usize("resizes", self.resizes)
             .field_usize("reassigns", self.reassigns)
             .field_usize("mode_switches", self.mode_switches)
+            .field_usize("offloaded_frames", self.offloaded_frames)
+            .field_num("link_tx_j", self.link_tx_j)
+            .field_num("link_time_s", self.link_time_s)
             .key("workers_detail")
             .begin_arr();
         for o in &self.worker_outcomes {

@@ -829,6 +829,9 @@ impl Session for RealSession {
             reassigns: self.carried_reassigns + self.reassigns,
             mode_switches: self.carried_mode_switches
                 + (self.mode_history.len() - self.injected_mode_entries),
+            offloaded_frames: 0,
+            link_tx_j: 0.0,
+            link_time_s: 0.0,
         })
     }
 }

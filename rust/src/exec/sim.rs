@@ -516,6 +516,9 @@ impl SimSession {
             resizes: self.resizes,
             reassigns: self.reassigns,
             mode_switches: self.mode_switches,
+            offloaded_frames: 0,
+            link_tx_j: 0.0,
+            link_time_s: 0.0,
         })
     }
 }
@@ -606,6 +609,9 @@ impl Session for SimSession {
             resizes: self.resizes,
             reassigns: self.reassigns,
             mode_switches: self.mode_switches,
+            offloaded_frames: 0,
+            link_tx_j: 0.0,
+            link_time_s: 0.0,
         })
     }
 }

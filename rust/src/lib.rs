@@ -35,6 +35,7 @@ pub mod energy;
 pub mod exec;
 pub mod metrics;
 pub mod modelfit;
+pub mod net;
 pub mod runtime;
 pub mod sched;
 pub mod server;

@@ -48,6 +48,39 @@ fn build_config(p: &divide_and_save::util::cli::Parsed) -> Result<ExperimentConf
     Ok(cfg)
 }
 
+/// The cross-tier flags shared by `serve` and `optimize`: `--cloud
+/// <device[*mult]>` names the tier, `--link <spec>` the path to it
+/// (default 50ms:100mbps when omitted).
+fn cloud_opts(cmd: Command) -> Command {
+    cmd.opt(OptSpec::opt(
+        "cloud",
+        "cloud tier: device[*energy-mult], e.g. orin or orin*1.5 (omit = edge-only)",
+    ))
+    .opt(OptSpec::opt(
+        "link",
+        "edge-cloud link: LAT:BW[:loss=P][:tx=J][:framekb=KB][:prof=T@M;..], e.g. 50ms:100mbps",
+    ))
+    .opt(OptSpec::flag("pin-local", "privacy pin: frames never leave the edge"))
+}
+
+fn parse_tier(
+    p: &divide_and_save::util::cli::Parsed,
+) -> Result<Option<divide_and_save::net::TierSpec>> {
+    let Some(cloud) = p.get("cloud") else {
+        if p.get("link").is_some() {
+            anyhow::bail!("--link without --cloud: a link needs a tier on the far end");
+        }
+        return Ok(None);
+    };
+    let link_spec = p.get_or("link", "50ms:100mbps");
+    let link = divide_and_save::net::LinkSpec::parse(link_spec).ok_or_else(|| {
+        anyhow!("bad link spec {link_spec:?} (want e.g. 50ms:100mbps[:loss=0.01][:tx=0.05])")
+    })?;
+    let tier = divide_and_save::net::TierSpec::parse(cloud, link)
+        .ok_or_else(|| anyhow!("bad cloud tier {cloud:?} (want device[*mult], device tx2|orin)"))?;
+    Ok(Some(tier))
+}
+
 fn cmd_run(args: &[String]) -> Result<()> {
     let cmd = common_opts(Command::new("run", "run one experiment"))
         .opt(OptSpec::opt("containers", "number of containers").with_default("1"));
@@ -244,18 +277,24 @@ pub fn pick_model(xs: &[f64], ys: &[f64]) -> Option<(FittedModel, &'static str)>
 }
 
 fn cmd_optimize(args: &[String]) -> Result<()> {
-    let cmd = common_opts(Command::new("optimize", "online optimal plan decision"))
+    let cmd = cloud_opts(common_opts(Command::new("optimize", "online optimal plan decision")))
         .opt(OptSpec::opt("objective", "time|energy").with_default("energy"))
-        .opt(OptSpec::opt("planner", "planner (fixed|joint)").with_default("fixed"))
+        .opt(OptSpec::opt("planner", "planner (fixed|joint; default joint with --cloud)"))
         .opt(OptSpec::opt("deadline", "completion deadline in seconds (joint planner)"));
     let p = parse_or_help(&cmd, args)?;
     let cfg = build_config(&p)?;
+    let tier = parse_tier(&p)?;
+    // A cloud tier implies the joint planner: it owns the tier search.
+    let planner_default = if tier.is_some() { "joint" } else { "fixed" };
     let objective = match p.get_or("objective", "energy") {
         "time" => divide_and_save::coordinator::OptimizeObjective::Time,
         _ => divide_and_save::coordinator::OptimizeObjective::Energy,
     };
-    let kind = PlannerKind::parse(p.get_or("planner", "fixed"))
-        .ok_or_else(|| anyhow!("unknown planner {:?}", p.get_or("planner", "fixed")))?;
+    let kind = PlannerKind::parse(p.get_or("planner", planner_default))
+        .ok_or_else(|| anyhow!("unknown planner {:?}", p.get_or("planner", planner_default)))?;
+    if tier.is_some() && !matches!(kind, PlannerKind::Joint) {
+        anyhow::bail!("--cloud needs --planner joint: only the joint planner searches tiers");
+    }
     let opt = OnlineOptimizer { objective, ..Default::default() };
     match kind {
         PlannerKind::Fixed => {
@@ -283,6 +322,12 @@ fn cmd_optimize(args: &[String]) -> Result<()> {
             if let Some(deadline) = p.get_f64("deadline")? {
                 req = req.with_deadline(deadline);
             }
+            if let Some(tier) = tier {
+                req = req.with_tier(tier);
+            }
+            if p.flag("pin-local") {
+                req = req.pinned_local();
+            }
             let plan = planner.plan(&req)?;
             for (key, d) in planner.cached_decisions() {
                 println!("probes[{key}]: {:?}", d.probes);
@@ -296,19 +341,44 @@ fn cmd_optimize(args: &[String]) -> Result<()> {
                 plan.predicted_time_s,
                 plan.predicted_energy_j
             );
+            match &plan.offload {
+                Some(off) => println!(
+                    "offload: {} frames -> {} (k={} @ {:.2} cpus, mode={})  link {:.2}s/{:.2}J  remote {:.1}s/{:.1}J billed",
+                    off.remote_frames,
+                    off.tier,
+                    off.remote_k,
+                    off.remote_cpus_each,
+                    off.remote_mode.name,
+                    off.link_time_s,
+                    off.link_tx_j,
+                    off.remote_time_s,
+                    off.remote_energy_j
+                ),
+                None if req.tier.is_some() => {
+                    println!("offload: none (local-only plan wins under this link)")
+                }
+                None => {}
+            }
         }
     }
     Ok(())
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let cmd = common_opts(Command::new("serve", "serving session (event-driven engine)"))
+    let cmd = cloud_opts(common_opts(Command::new(
+        "serve",
+        "serving session (event-driven engine)",
+    )))
         .opt(OptSpec::opt("jobs", "number of jobs").with_default("20"))
         .opt(OptSpec::opt("job-frames", "frames per job").with_default("96"))
         .opt(OptSpec::opt("containers", "fixed k (omit for online policy)"))
         .opt(OptSpec::opt("policy", "queue policy (fifo|sjf|edf|energy)").with_default("fifo"))
         .opt(OptSpec::opt("grant", "core-grant policy (fixed|elastic)").with_default("fixed"))
-        .opt(OptSpec::opt("planner", "decision planner (fixed|joint)").with_default("fixed"))
+        .opt(OptSpec::opt("planner", "decision planner (fixed|joint; default joint with --cloud)"))
+        .opt(OptSpec::opt(
+            "checkpoint-dir",
+            "write fault checkpoints as JSON here (restored across processes)",
+        ))
         .opt(OptSpec::flag("edf-weighted", "skew elastic regrants toward tight deadlines"))
         .opt(OptSpec::opt("concurrency", "concurrent jobs per device").with_default("1"))
         .opt(OptSpec::opt(
@@ -337,8 +407,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown queue policy {:?}", p.get_or("policy", "fifo")))?;
     let grant_policy = GrantPolicy::parse(p.get_or("grant", "fixed"))
         .ok_or_else(|| anyhow!("unknown grant policy {:?}", p.get_or("grant", "fixed")))?;
-    let planner_kind = PlannerKind::parse(p.get_or("planner", "fixed"))
-        .ok_or_else(|| anyhow!("unknown planner {:?}", p.get_or("planner", "fixed")))?;
+    let tier = parse_tier(&p)?;
+    // Offload verdicts come out of the joint planner's tier search, so
+    // --cloud flips the planner default from fixed to joint.
+    let planner_default = if tier.is_some() { "joint" } else { "fixed" };
+    let planner_kind = PlannerKind::parse(p.get_or("planner", planner_default))
+        .ok_or_else(|| anyhow!("unknown planner {:?}", p.get_or("planner", planner_default)))?;
     let arrival = match p.get("arrival") {
         Some(spec) => Some(
             divide_and_save::workload::ArrivalProcess::parse(spec)
@@ -368,6 +442,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             pace: p.get_f64("pace")?,
             telemetry: p.get("telemetry").map(str::to_string),
             faults,
+            tier,
+            pin_local: p.flag("pin-local"),
+            checkpoint_dir: p.get("checkpoint-dir").map(str::to_string),
             ..Default::default()
         },
     )?;
@@ -417,6 +494,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         println!(
             "faults: jobs preempted={}  migrations={}",
             report.jobs_preempted, report.migrations
+        );
+    }
+    if report.offloads > 0 {
+        println!(
+            "offloads={}  frames to cloud={}  link tx={:.1} J  link time={:.1}s",
+            report.offloads, report.offloaded_frames, report.link_tx_j, report.link_time_s
         );
     }
     println!(

@@ -1,0 +1,345 @@
+//! Network model for cross-tier offload: links and cloud tiers.
+//!
+//! The paper's question is "how many containers on this edge device?";
+//! the cross-tier extension generalizes it to "which tier, which split,
+//! which mode, how many containers?". That needs the network to be a
+//! first-class cost: a [`LinkSpec`] models an uplink's latency,
+//! bandwidth, per-megabyte transmit energy, expected loss (retransmits
+//! inflate both transfer time and TX energy) and an optional
+//! time-varying bandwidth profile. A [`TierSpec`] wraps a
+//! [`DeviceSpec`] (the remote pool is modeled with the same calibrated
+//! speedup/power curves as the edge) with an energy/price multiplier
+//! and the link that reaches it.
+//!
+//! Everything here is deterministic closed forms — loss enters as the
+//! expected retransmit factor `1 / (1 - loss)`, never as sampled drops
+//! — so a lossy-link serving run is bit-for-bit reproducible, which the
+//! CI determinism smoke asserts.
+//!
+//! Spec grammar (the `--link` CLI flag):
+//!
+//! ```text
+//! <latency><ms|s> : <bandwidth><kbps|mbps|gbps> [: key=value ...]
+//!   loss=P        expected packet-loss probability in [0, 1)
+//!   tx=J          transmit energy, joules per megabyte (default 0.05)
+//!   framekb=KB    payload size per frame, kilobytes (default 150)
+//!   prof=T@M;...  bandwidth multiplier M from time T seconds onward
+//! ```
+//!
+//! e.g. `50ms:100mbps`, `20ms:1gbps:loss=0.02:tx=0.1`,
+//! `50ms:100mbps:prof=0@1;30@0.25` (bandwidth collapses to a quarter
+//! after t=30 s).
+
+use crate::device::DeviceSpec;
+
+/// Default transmit energy, joules per megabyte sent. Ballpark for an
+/// embedded WiFi/LTE radio (a few nJ/bit); override with `tx=J`.
+pub const DEFAULT_TX_J_PER_MB: f64 = 0.05;
+
+/// Default payload per frame, kilobytes — a compressed detection-input
+/// frame; override with `framekb=KB`.
+pub const DEFAULT_FRAME_KB: f64 = 150.0;
+
+/// A modeled uplink: the cost of moving frames to an offload tier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    /// The spec string this link was parsed from (reports, logs).
+    pub spec: String,
+    /// One-way latency, seconds, paid once per transfer.
+    pub latency_s: f64,
+    /// Base uplink bandwidth, megabits per second.
+    pub bandwidth_mbps: f64,
+    /// Transmit energy, joules per megabyte actually sent (retransmits
+    /// included).
+    pub tx_j_per_mb: f64,
+    /// Expected packet-loss probability in `[0, 1)`. Enters the model
+    /// as the deterministic retransmit factor `1 / (1 - loss)`.
+    pub loss: f64,
+    /// Payload per frame, kilobytes.
+    pub frame_kb: f64,
+    /// Piecewise-constant bandwidth multipliers `(from_s, mult)`,
+    /// sorted by `from_s`; the multiplier is 1.0 before the first
+    /// entry. Models diurnal or degrading links.
+    pub profile: Vec<(f64, f64)>,
+}
+
+impl LinkSpec {
+    /// A free link: zero latency, infinite bandwidth, zero TX energy.
+    /// The offload conservation oracle runs against this — with the
+    /// network term removed, an offloaded run must complete exactly the
+    /// frames a local run does.
+    pub fn zero_cost() -> LinkSpec {
+        LinkSpec {
+            spec: "zero-cost".to_string(),
+            latency_s: 0.0,
+            bandwidth_mbps: f64::INFINITY,
+            tx_j_per_mb: 0.0,
+            loss: 0.0,
+            frame_kb: DEFAULT_FRAME_KB,
+            profile: Vec::new(),
+        }
+    }
+
+    /// Parse the `--link` grammar (see the module docs). Returns `None`
+    /// on any malformed segment — callers turn that into a CLI error.
+    pub fn parse(spec: &str) -> Option<LinkSpec> {
+        let mut parts = spec.split(':');
+        let latency_s = parse_latency(parts.next()?.trim())?;
+        let bandwidth_mbps = parse_bandwidth(parts.next()?.trim())?;
+        let mut link = LinkSpec {
+            spec: spec.to_string(),
+            latency_s,
+            bandwidth_mbps,
+            tx_j_per_mb: DEFAULT_TX_J_PER_MB,
+            loss: 0.0,
+            frame_kb: DEFAULT_FRAME_KB,
+            profile: Vec::new(),
+        };
+        for part in parts {
+            let (key, value) = part.trim().split_once('=')?;
+            match key.trim() {
+                "loss" => {
+                    let p: f64 = value.trim().parse().ok()?;
+                    if !p.is_finite() || !(0.0..1.0).contains(&p) {
+                        return None;
+                    }
+                    link.loss = p;
+                }
+                "tx" => {
+                    let j: f64 = value.trim().parse().ok()?;
+                    if !j.is_finite() || j < 0.0 {
+                        return None;
+                    }
+                    link.tx_j_per_mb = j;
+                }
+                "framekb" => {
+                    let kb: f64 = value.trim().parse().ok()?;
+                    if !kb.is_finite() || kb <= 0.0 {
+                        return None;
+                    }
+                    link.frame_kb = kb;
+                }
+                "prof" => {
+                    let mut prof = Vec::new();
+                    for seg in value.split(';') {
+                        let (t, m) = seg.trim().split_once('@')?;
+                        let t: f64 = t.trim().parse().ok()?;
+                        let m: f64 = m.trim().parse().ok()?;
+                        if !t.is_finite() || t < 0.0 || !m.is_finite() || m <= 0.0 {
+                            return None;
+                        }
+                        prof.push((t, m));
+                    }
+                    prof.sort_by(|a, b| a.0.total_cmp(&b.0));
+                    link.profile = prof;
+                }
+                _ => return None,
+            }
+        }
+        Some(link)
+    }
+
+    /// Expected send inflation from loss: every lost packet is resent,
+    /// so `1 / (1 - loss)` copies go over the wire on average.
+    pub fn retransmit_factor(&self) -> f64 {
+        1.0 / (1.0 - self.loss)
+    }
+
+    /// Bandwidth in force at absolute time `at_s`, megabits per second
+    /// (the base rate scaled by the profile's multiplier).
+    pub fn bandwidth_at(&self, at_s: f64) -> f64 {
+        let mult = self
+            .profile
+            .iter()
+            .take_while(|(from, _)| *from <= at_s)
+            .last()
+            .map_or(1.0, |(_, m)| *m);
+        self.bandwidth_mbps * mult
+    }
+
+    /// Megabytes on the wire for `frames`, retransmits included.
+    fn payload_mb(&self, frames: usize) -> f64 {
+        frames as f64 * self.frame_kb / 1000.0 * self.retransmit_factor()
+    }
+
+    /// Time to move `frames` across the link starting at `at_s`:
+    /// latency plus serialization at the bandwidth then in force.
+    pub fn transfer_time_s(&self, frames: usize, at_s: f64) -> f64 {
+        if frames == 0 {
+            return 0.0;
+        }
+        let bw = self.bandwidth_at(at_s);
+        if bw.is_infinite() {
+            return self.latency_s;
+        }
+        self.latency_s + self.payload_mb(frames) * 8.0 / bw
+    }
+
+    /// Radio energy to transmit `frames`, joules.
+    pub fn tx_energy_j(&self, frames: usize) -> f64 {
+        self.payload_mb(frames) * self.tx_j_per_mb
+    }
+}
+
+/// An offload tier: a remote pool reachable over a [`LinkSpec`],
+/// modeled as a [`DeviceSpec`] whose energy is billed at `energy_mult`
+/// (price-of-power, PUE, or a cloud price spike — `2.0` means every
+/// remote joule costs two local joules in the planner's objective).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierSpec {
+    /// Display name for reports and telemetry (`cloud:<device>`).
+    pub name: String,
+    pub device: DeviceSpec,
+    /// Multiplier applied to the remote compute energy in the planning
+    /// objective and the billed totals.
+    pub energy_mult: f64,
+    pub link: LinkSpec,
+}
+
+impl TierSpec {
+    /// Parse the `--cloud` grammar: `<device>[*<energy_mult>]`, where
+    /// `<device>` is any [`DeviceSpec::by_name`] preset. Examples:
+    /// `orin`, `orin*1.5`, `tx2*4`.
+    pub fn parse(spec: &str, link: LinkSpec) -> Option<TierSpec> {
+        let (name, mult) = match spec.split_once('*') {
+            Some((n, m)) => {
+                let mult: f64 = m.trim().parse().ok()?;
+                if !mult.is_finite() || mult <= 0.0 {
+                    return None;
+                }
+                (n.trim(), mult)
+            }
+            None => (spec.trim(), 1.0),
+        };
+        let device = DeviceSpec::by_name(name)?;
+        Some(TierSpec {
+            name: format!("cloud:{}", device.name),
+            device,
+            energy_mult: mult,
+            link,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_ci_smoke_spec() {
+        let l = LinkSpec::parse("50ms:100mbps").unwrap();
+        assert!((l.latency_s - 0.05).abs() < 1e-12);
+        assert!((l.bandwidth_mbps - 100.0).abs() < 1e-12);
+        assert_eq!(l.loss, 0.0);
+        // 96 frames x 150 kB = 14.4 MB = 115.2 Mb -> 1.152 s + 50 ms.
+        let t = l.transfer_time_s(96, 0.0);
+        assert!((t - (0.05 + 115.2 / 100.0)).abs() < 1e-9, "t={t}");
+        assert!((l.tx_energy_j(96) - 14.4 * DEFAULT_TX_J_PER_MB).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parses_units_and_extensions() {
+        let l = LinkSpec::parse("1.5s:2gbps:loss=0.2:tx=0.5:framekb=300").unwrap();
+        assert!((l.latency_s - 1.5).abs() < 1e-12);
+        assert!((l.bandwidth_mbps - 2000.0).abs() < 1e-9);
+        assert!((l.retransmit_factor() - 1.25).abs() < 1e-12);
+        // Loss inflates both time and TX energy by the same factor.
+        let clean = LinkSpec::parse("1.5s:2gbps:tx=0.5:framekb=300").unwrap();
+        let serialization = l.transfer_time_s(10, 0.0) - 1.5;
+        let clean_serialization = clean.transfer_time_s(10, 0.0) - 1.5;
+        assert!((serialization / clean_serialization - 1.25).abs() < 1e-9);
+        assert!((l.tx_energy_j(10) / clean.tx_energy_j(10) - 1.25).abs() < 1e-9);
+        assert!(LinkSpec::parse("500kbps").is_none(), "latency is mandatory");
+        let kbps = LinkSpec::parse("0ms:500kbps").unwrap();
+        assert!((kbps.bandwidth_mbps - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "50ms",
+            "fast:100mbps",
+            "50ms:furious",
+            "50ms:-1mbps",
+            "50ms:0mbps",
+            "-1ms:100mbps",
+            "50ms:100mbps:loss=1.0",
+            "50ms:100mbps:loss=nope",
+            "50ms:100mbps:tx=-2",
+            "50ms:100mbps:framekb=0",
+            "50ms:100mbps:warp=9",
+            "50ms:100mbps:prof=0@0",
+            "50ms:100mbps:prof=x@1",
+        ] {
+            assert!(LinkSpec::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn profile_scales_bandwidth_over_time() {
+        let l = LinkSpec::parse("0ms:100mbps:prof=10@0.5;30@2").unwrap();
+        assert!((l.bandwidth_at(0.0) - 100.0).abs() < 1e-9, "before the profile");
+        assert!((l.bandwidth_at(10.0) - 50.0).abs() < 1e-9);
+        assert!((l.bandwidth_at(29.9) - 50.0).abs() < 1e-9);
+        assert!((l.bandwidth_at(1e6) - 200.0).abs() < 1e-9);
+        assert!(l.transfer_time_s(96, 10.0) > l.transfer_time_s(96, 0.0));
+    }
+
+    #[test]
+    fn zero_cost_link_has_no_cost() {
+        let l = LinkSpec::zero_cost();
+        assert_eq!(l.transfer_time_s(10_000, 0.0), 0.0);
+        assert_eq!(l.tx_energy_j(10_000), 0.0);
+        assert_eq!(l.transfer_time_s(0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn tier_parses_device_and_multiplier() {
+        let t = TierSpec::parse("orin", LinkSpec::zero_cost()).unwrap();
+        assert_eq!(t.device.name, DeviceSpec::orin().name);
+        assert_eq!(t.energy_mult, 1.0);
+        assert_eq!(t.name, format!("cloud:{}", DeviceSpec::orin().name));
+        let t = TierSpec::parse("tx2*2.5", LinkSpec::zero_cost()).unwrap();
+        assert_eq!(t.device.name, DeviceSpec::tx2().name);
+        assert!((t.energy_mult - 2.5).abs() < 1e-12);
+        assert!(TierSpec::parse("warpcore", LinkSpec::zero_cost()).is_none());
+        assert!(TierSpec::parse("orin*0", LinkSpec::zero_cost()).is_none());
+        assert!(TierSpec::parse("orin*-1", LinkSpec::zero_cost()).is_none());
+    }
+}
+
+/// `"50ms"` / `"1.5s"` -> seconds.
+fn parse_latency(s: &str) -> Option<f64> {
+    let (value, scale) = if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        return None;
+    };
+    let v: f64 = value.trim().parse().ok()?;
+    if !v.is_finite() || v < 0.0 {
+        return None;
+    }
+    Some(v * scale)
+}
+
+/// `"100mbps"` / `"1gbps"` / `"500kbps"` -> megabits per second.
+fn parse_bandwidth(s: &str) -> Option<f64> {
+    let lower = s.to_ascii_lowercase();
+    let (value, scale) = if let Some(v) = lower.strip_suffix("gbps") {
+        (v.to_string(), 1e3)
+    } else if let Some(v) = lower.strip_suffix("mbps") {
+        (v.to_string(), 1.0)
+    } else if let Some(v) = lower.strip_suffix("kbps") {
+        (v.to_string(), 1e-3)
+    } else {
+        return None;
+    };
+    let v: f64 = value.trim().parse().ok()?;
+    if !v.is_finite() || v <= 0.0 {
+        return None;
+    }
+    Some(v * scale)
+}

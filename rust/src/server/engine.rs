@@ -27,12 +27,13 @@ use super::allocator::{
 use super::policy::{PlacementPolicy, QueuePolicy};
 use super::queue::AdmissionQueue;
 use super::telemetry::TelemetrySink;
-use crate::coordinator::planner::{Plan, PlanRequest};
+use crate::coordinator::planner::{OffloadPlan, Plan, PlanAction, PlanRequest};
 use crate::coordinator::Coordinator;
 use crate::device::DeviceSpec;
 use crate::exec::{
     ExecutionBackend, Session, SessionCmd, SessionReport, SessionSpec, SessionState,
 };
+use crate::net::TierSpec;
 use crate::metrics::Registry;
 use crate::sched::des::{EventHandle, EventQueue};
 use crate::util::jsonl::JsonWriter;
@@ -53,11 +54,23 @@ pub struct EngineJob {
     pub affinity: Option<usize>,
     /// Absolute deadline, for EDF ordering.
     pub deadline_s: Option<f64>,
+    /// Privacy pin: this job's frames must not leave its edge device.
+    /// The planner never produces an offload verdict for it, whatever
+    /// the tier economics say.
+    pub pin_local: bool,
 }
 
 impl EngineJob {
     pub fn new(id: u64, arrival_s: f64, frames: usize, task: TaskProfile) -> Self {
-        EngineJob { id, arrival_s, frames, task, affinity: None, deadline_s: None }
+        EngineJob {
+            id,
+            arrival_s,
+            frames,
+            task,
+            affinity: None,
+            deadline_s: None,
+            pin_local: false,
+        }
     }
 }
 
@@ -213,6 +226,16 @@ pub struct EngineConfig {
     /// runs the event loop as fast as it can — the default, and the
     /// only sensible setting for pure-model runs.
     pub pace: Option<f64>,
+    /// Offload tier reachable from every node, if any: a cloud device
+    /// behind a link. With a joint planner, fresh unpinned admissions
+    /// may split their frames between the local node and this tier
+    /// ([`PlanAction::Offload`]).
+    pub tier: Option<TierSpec>,
+    /// Directory checkpoints are persisted to: every preemption writes
+    /// the victim's [`SessionState`] as `job-<id>.json`, and a later
+    /// admission of the same job id (this process or the next) restores
+    /// from it. `None` keeps checkpoints in memory only.
+    pub checkpoint_dir: Option<String>,
 }
 
 impl EngineConfig {
@@ -234,6 +257,8 @@ impl EngineConfig {
             placement_seed: 0x9E37_79B9_7F4A_7C15,
             faults: Vec::new(),
             pace: None,
+            tier: None,
+            checkpoint_dir: None,
         }
     }
 }
@@ -271,6 +296,20 @@ pub struct EngineOutcome {
     /// metrics registry: the registry's lock + string keys are far too
     /// slow to touch once per event.
     pub des_events: u64,
+    /// Jobs that split work to the offload tier (0 without a tier).
+    pub offloads: u64,
+    /// Frames shipped over the link across all offloaded jobs.
+    pub offloaded_frames: u64,
+    /// Radio TX energy spent shipping those frames, joules.
+    pub link_tx_j: f64,
+    /// Total link transfer time across all offloads, seconds (latency
+    /// + serialization + retransmit expectation; halves overlap local
+    /// compute, so this is NOT wall time).
+    pub link_time_s: f64,
+    /// Billed remote-tier compute energy (the tier's `energy_mult`
+    /// applied) plus TX energy — what a fleet report adds on top of
+    /// the edge nodes' own meters.
+    pub offload_energy_j: f64,
     pub metrics: Registry,
 }
 
@@ -287,6 +326,57 @@ enum Ev {
     Completion { node: usize, job: usize, gen: u64 },
     /// A scripted fault fires (index into `EngineConfig::faults`).
     Fault(usize),
+    /// The shipped half of an offloaded job lands back from the tier
+    /// (link transfer + remote compute both done). No generation tag:
+    /// the remote half is never regranted, so the event can't go stale.
+    OffloadDone { job: usize },
+}
+
+/// In-flight state of one offloaded job: the local half runs as a
+/// normal resident (regrants, preemption and all) while `remote_frames`
+/// cross the link and run on the tier. The job completes — one
+/// [`CompletedJob`], one merged [`SessionReport`] — only when BOTH
+/// halves are done, whichever finishes last.
+struct ActiveOffload {
+    remote_frames: usize,
+    link_time_s: f64,
+    link_tx_j: f64,
+    /// Predicted billed remote compute energy (`energy_mult` applied) —
+    /// the model-authority figure folded into the run totals, like node
+    /// energy itself.
+    remote_energy_j: f64,
+    /// The tier's billing multiplier, re-applied to the *actual* remote
+    /// session energy when a data plane runs one.
+    energy_mult: f64,
+    remote_done: bool,
+    /// Remote data-plane session (None on pure-model runs).
+    session: Option<Box<dyn Session>>,
+    remote_report: Option<SessionReport>,
+    /// Stashed local completion, parked until the remote half lands.
+    local: Option<LocalDone>,
+}
+
+/// The local half's completion record, held back from `completed` until
+/// the offloaded half returns.
+#[derive(Debug)]
+struct LocalDone {
+    node: usize,
+    start_s: f64,
+    containers: usize,
+    grant_cores: f64,
+    regrants: usize,
+    report: Option<SessionReport>,
+}
+
+/// Running totals over all finalized offloads (see the matching
+/// [`EngineOutcome`] fields).
+#[derive(Debug, Default, Clone, Copy)]
+struct OffloadTotals {
+    count: u64,
+    frames: u64,
+    link_tx_j: f64,
+    link_time_s: f64,
+    energy_j: f64,
 }
 
 /// A preempted job's parked context between eviction and re-admission.
@@ -350,6 +440,10 @@ pub struct ServingEngine<'a> {
     node_down: Vec<bool>,
     /// Preempted jobs parked for re-admission, keyed by job index.
     migrations: BTreeMap<usize, PendingMigration>,
+    /// Offloaded jobs with a half still in flight, keyed by job index.
+    offloads: BTreeMap<usize, ActiveOffload>,
+    /// Totals over finalized offloads, folded into the outcome.
+    offload_totals: OffloadTotals,
     /// Per-event JSONL stream (None = no telemetry requested).
     telemetry: Option<TelemetrySink>,
     /// Wall-clock pacing governor (None = free-running).
@@ -422,6 +516,8 @@ impl<'a> ServingEngine<'a> {
             session_reports: Vec::new(),
             node_down,
             migrations: BTreeMap::new(),
+            offloads: BTreeMap::new(),
+            offload_totals: OffloadTotals::default(),
             telemetry: None,
             pacer,
         }
@@ -545,15 +641,42 @@ impl<'a> ServingEngine<'a> {
                         continue;
                     }
                     self.completion_handles[job] = None;
-                    if let Some(mut session) = self.sessions.remove(&job) {
-                        // The data plane finishes the job for real (a
-                        // REAL session blocks until its workers drain).
-                        let rep = session.drain()?;
-                        self.metrics.inc("session_resizes", rep.resizes as u64);
-                        self.metrics.inc("session_frames", rep.frames as u64);
+                    let local_report = match self.sessions.remove(&job) {
+                        Some(mut session) => {
+                            // The data plane finishes the job for real
+                            // (a REAL session blocks until its workers
+                            // drain).
+                            let rep = session.drain()?;
+                            self.metrics.inc("session_resizes", rep.resizes as u64);
+                            self.metrics.inc("session_frames", rep.frames as u64);
+                            Some(rep)
+                        }
+                        None => None,
+                    };
+                    let done = self.nodes[node].complete(t, job);
+                    self.forget_checkpoint_file(job);
+                    if let Some(off) = self.offloads.get_mut(&job) {
+                        // The local half finished, but `remote_frames`
+                        // are still out on the tier: park the record
+                        // and complete the job when they land. The
+                        // node's capacity is free either way.
+                        off.local = Some(LocalDone {
+                            node,
+                            start_s: done.start_s,
+                            containers: done.plan.k,
+                            grant_cores: done.plan.grant_cores,
+                            regrants: done.regrants,
+                            report: local_report,
+                        });
+                        if off.remote_done {
+                            self.finalize_offload(t, job)?;
+                        }
+                        self.schedule_dispatch(t);
+                        continue;
+                    }
+                    if let Some(rep) = local_report {
                         self.session_reports.push(rep);
                     }
-                    let done = self.nodes[node].complete(t, job);
                     let j = &self.jobs[job];
                     let (id, arrival_s) = (j.id, j.arrival_s);
                     self.completed.push(CompletedJob {
@@ -616,6 +739,25 @@ impl<'a> ServingEngine<'a> {
                         }
                     }
                 }
+                Ev::OffloadDone { job } => {
+                    let session = {
+                        let off = self
+                            .offloads
+                            .get_mut(&job)
+                            .expect("offload landed for a job with no offload state");
+                        off.remote_done = true;
+                        off.session.take()
+                    };
+                    if let Some(mut session) = session {
+                        let rep = session.drain()?;
+                        self.metrics.inc("session_frames", rep.frames as u64);
+                        let off = self.offloads.get_mut(&job).expect("offload state vanished");
+                        off.remote_report = Some(rep);
+                    }
+                    if self.offloads[&job].local.is_some() {
+                        self.finalize_offload(t, job)?;
+                    }
+                }
             }
         }
         Ok(())
@@ -638,6 +780,11 @@ impl<'a> ServingEngine<'a> {
             "engine drained with {} jobs still queued (jobs can never be admitted \
              under this node/memory/min-cores configuration)",
             self.queue.len()
+        );
+        anyhow::ensure!(
+            self.offloads.is_empty(),
+            "engine drained with {} offloaded halves still in flight",
+            self.offloads.len()
         );
         anyhow::ensure!(
             self.completed.len() == self.jobs.len(),
@@ -681,6 +828,11 @@ impl<'a> ServingEngine<'a> {
             mode_switches: self.metrics.counter("mode_switches"),
             session_reports: self.session_reports,
             des_events: self.des_events,
+            offloads: self.offload_totals.count,
+            offloaded_frames: self.offload_totals.frames,
+            link_tx_j: self.offload_totals.link_tx_j,
+            link_time_s: self.offload_totals.link_time_s,
+            offload_energy_j: self.offload_totals.energy_j,
             metrics: self.metrics,
         }
     }
@@ -722,23 +874,209 @@ impl<'a> ServingEngine<'a> {
         sink.emit(&w.finish())
     }
 
-    /// Preempt up to `max_victims` residents of `node` at `t`, youngest
-    /// (latest-started) first — an overload shock sheds the job that
-    /// has sunk the least progress. Each victim's live session is
+    /// Launch the remote half of an offload verdict for job `j`, just
+    /// admitted locally on `node_i` for its remaining frames: open a
+    /// data-plane session on the tier's device (when a backend runs),
+    /// schedule the land-back event at `now + link + remote compute`,
+    /// and park the merge state.
+    fn launch_offload(
+        &mut self,
+        j: usize,
+        node_i: usize,
+        now_s: f64,
+        split: usize,
+        off: OffloadPlan,
+    ) -> Result<()> {
+        let tier =
+            self.cfg.tier.clone().expect("offload verdict from a planner without a tier");
+        let session = match self.backend.as_mut() {
+            Some(backend) => {
+                let job = &self.jobs[j];
+                let spec = SessionSpec {
+                    device: tier.device.clone(),
+                    task: job.task.clone(),
+                    segments: split_even(split, off.remote_k.max(1)),
+                    cpus_each: off.remote_cpus_each.max(f64::MIN_POSITIVE),
+                    seed: job.id,
+                    sensor_period_s: self.cfg.session_sensor_period_s,
+                    variant: self.cfg.session_variant.clone(),
+                };
+                let mut session = backend.open_session(&spec)?;
+                if !off.remote_mode.is_default_for(&tier.device) {
+                    session.apply(SessionCmd::SetMode(off.remote_mode.clone()), now_s)?;
+                }
+                // The remote clock starts when the frames land, after
+                // the link transfer.
+                session.start(now_s + off.link_time_s)?;
+                self.metrics.inc("sessions_opened", 1);
+                Some(session)
+            }
+            None => None,
+        };
+        self.events
+            .push(now_s + off.link_time_s + off.remote_time_s, Ev::OffloadDone { job: j });
+        let id = self.jobs[j].id;
+        let (tier_name, link_time_s, link_tx_j) =
+            (off.tier.clone(), off.link_time_s, off.link_tx_j);
+        self.emit_event("offload", now_s, |w| {
+            w.field_num("job", id as f64)
+                .field_usize("node", node_i)
+                .field_str("tier", &tier_name)
+                .field_usize("frames", split)
+                .field_num("link_time_s", link_time_s)
+                .field_num("link_tx_j", link_tx_j);
+        })?;
+        self.metrics.inc("offloads", 1);
+        self.offloads.insert(
+            j,
+            ActiveOffload {
+                remote_frames: split,
+                link_time_s: off.link_time_s,
+                link_tx_j: off.link_tx_j,
+                remote_energy_j: off.remote_energy_j,
+                energy_mult: tier.energy_mult,
+                remote_done: false,
+                session,
+                remote_report: None,
+                local: None,
+            },
+        );
+        Ok(())
+    }
+
+    /// Both halves of an offloaded job are done: emit ONE completion —
+    /// record, metrics, telemetry, closed-loop arrival — covering the
+    /// full frame count, with the two session reports merged into one.
+    fn finalize_offload(&mut self, t: f64, job: usize) -> Result<()> {
+        let off = self.offloads.remove(&job).expect("finalize without offload state");
+        let local = off.local.expect("finalize before the local half completed");
+        let j = &self.jobs[job];
+        let (id, arrival_s, total_frames) = (j.id, j.arrival_s, j.frames);
+        if let Some(mut rep) = local.report {
+            if let Some(remote) = off.remote_report {
+                // Frames sum; the clock is the slower half (the remote
+                // one pays the link first); the bill adds the tier's
+                // marked-up compute plus the radio TX. Remote idle
+                // stays inside the billed remote energy — the local
+                // idle-floor split (`idle_energy_j`) keeps describing
+                // the edge node only.
+                rep.frames += remote.frames;
+                rep.time_s = rep.time_s.max(off.link_time_s + remote.time_s);
+                rep.energy_j += off.energy_mult * remote.energy_j + off.link_tx_j;
+                rep.workers += remote.workers;
+                rep.total_detections += remote.total_detections;
+                rep.resizes += remote.resizes;
+                rep.reassigns += remote.reassigns;
+                rep.mode_switches += remote.mode_switches;
+                rep.worker_outcomes.extend(remote.worker_outcomes);
+            }
+            rep.offloaded_frames = off.remote_frames;
+            rep.link_tx_j = off.link_tx_j;
+            rep.link_time_s = off.link_time_s;
+            self.session_reports.push(rep);
+        }
+        self.completed.push(CompletedJob {
+            id,
+            node: local.node,
+            arrival_s,
+            start_s: local.start_s,
+            finish_s: t,
+            containers: local.containers,
+            grant_cores: local.grant_cores,
+            frames: total_frames,
+            regrants: local.regrants,
+        });
+        self.metrics.inc("jobs_completed", 1);
+        self.metrics.inc("frames_processed", total_frames as u64);
+        self.metrics.inc("offloaded_frames", off.remote_frames as u64);
+        self.metrics.histogram("job_latency_s").record_s(t - arrival_s);
+        self.metrics.histogram("job_service_s").record_s(t - local.start_s);
+        self.offload_totals.count += 1;
+        self.offload_totals.frames += off.remote_frames as u64;
+        self.offload_totals.link_tx_j += off.link_tx_j;
+        self.offload_totals.link_time_s += off.link_time_s;
+        self.offload_totals.energy_j += off.remote_energy_j + off.link_tx_j;
+        let (node, start_s) = (local.node, local.start_s);
+        self.emit_event("complete", t, |w| {
+            w.field_num("job", id as f64)
+                .field_usize("node", node)
+                .field_usize("frames", total_frames)
+                .field_num("latency_s", t - arrival_s)
+                .field_num("service_s", t - start_s);
+        })?;
+        if self.closed_loop {
+            self.emit_next_arrival(t);
+        }
+        self.schedule_dispatch(t);
+        Ok(())
+    }
+
+    /// Persist a preemption checkpoint to the configured directory as
+    /// `job-<id>.json` — the wire form [`SessionState`] already
+    /// round-trips. No-op without `--checkpoint-dir`.
+    fn write_checkpoint_file(&self, job: usize, state: &SessionState) -> Result<()> {
+        let Some(dir) = self.cfg.checkpoint_dir.as_deref() else { return Ok(()) };
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join(format!("job-{}.json", self.jobs[job].id));
+        std::fs::write(&path, state.to_json_string())?;
+        Ok(())
+    }
+
+    /// Drop job `job`'s on-disk checkpoint once it has genuinely
+    /// completed — a later run must not resurrect finished work.
+    fn forget_checkpoint_file(&self, job: usize) {
+        if let Some(dir) = self.cfg.checkpoint_dir.as_deref() {
+            let path =
+                std::path::Path::new(dir).join(format!("job-{}.json", self.jobs[job].id));
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    /// Cross-process resume: if a previous run (or a previous life of
+    /// this one) left a checkpoint for job `j` on disk and nothing is
+    /// parked in memory, rehydrate it as a pending migration so the
+    /// admission path restores instead of restarting from frame zero.
+    /// The mode name in the snapshot resolves against the target
+    /// node's base device.
+    fn load_checkpoint_file(&self, j: usize, node_i: usize) -> Option<PendingMigration> {
+        let dir = self.cfg.checkpoint_dir.as_deref()?;
+        let path = std::path::Path::new(dir).join(format!("job-{}.json", self.jobs[j].id));
+        let text = std::fs::read_to_string(&path).ok()?;
+        let state = SessionState::from_json(&text, &self.nodes[node_i].base_device).ok()?;
+        Some(PendingMigration {
+            from_node: node_i,
+            work_left: state.frames_left as f64,
+            state: Some(state),
+        })
+    }
+
+    /// Preempt up to `max_victims` residents of `node` at `t`, in
+    /// deadline-slack order: the job that can best afford the migration
+    /// detour — most slack against its deadline at the current finish
+    /// estimate — is evicted first. Jobs without a deadline have
+    /// infinite slack, so they are shed before any urgent job, and the
+    /// start-time tiebreak among them preserves the old youngest-first
+    /// order (least sunk progress). Each victim's live session is
     /// checkpointed (REAL workers park; no completed frame is lost),
     /// its allocator entry evicted, and the job re-queued with its
     /// remaining work parked in [`Self::migrations`] for the dispatcher
     /// to re-admit elsewhere (or here again, after a restart).
     fn fault_preempt(&mut self, t: f64, node: usize, max_victims: usize) -> Result<()> {
-        let mut victims: Vec<(f64, usize)> = self.nodes[node]
+        let mut victims: Vec<(f64, f64, usize)> = self.nodes[node]
             .active
             .iter()
-            .map(|a| (a.start_s, a.job_idx))
+            .map(|a| {
+                let slack = self.jobs[a.job_idx]
+                    .deadline_s
+                    .map(|d| d - a.finish_s)
+                    .unwrap_or(f64::INFINITY);
+                (slack, a.start_s, a.job_idx)
+            })
             .collect();
         victims
             .sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
         victims.truncate(max_victims.min(victims.len()));
-        for (_, j) in victims {
+        for (_, _, j) in victims {
             // The in-flight completion is dead: the job will finish on
             // whatever node re-admits it.
             if let Some(h) = self.completion_handles[j].take() {
@@ -754,6 +1092,9 @@ impl<'a> ServingEngine<'a> {
                 Some(mut session) => Some(session.checkpoint(t)?),
                 None => None,
             };
+            if let Some(state) = state.as_ref() {
+                self.write_checkpoint_file(j, state)?;
+            }
             self.nodes[node].evict(t, j);
             let id = self.jobs[j].id;
             let (frames_done, frames_left) = state
@@ -779,7 +1120,9 @@ impl<'a> ServingEngine<'a> {
 
     /// Open a backend session for job `j` just admitted on `node_i`
     /// under `plan` (k workers at `plan.cpus_each`), and start its
-    /// measured window at `now_s`. With `restore`, the session is
+    /// measured window at `now_s`. `local_frames` is the frame count
+    /// the session covers — the whole job normally, only the local
+    /// half under an offload verdict. With `restore`, the session is
     /// opened for only the checkpoint's remaining frames and rehydrated
     /// from it before starting — completed frames are neither re-run
     /// nor re-billed. No-op without a backend.
@@ -789,6 +1132,7 @@ impl<'a> ServingEngine<'a> {
         node_i: usize,
         now_s: f64,
         plan: &ServicePlan,
+        local_frames: usize,
         restore: Option<&SessionState>,
     ) -> Result<()> {
         let Some(backend) = self.backend.as_mut() else { return Ok(()) };
@@ -796,7 +1140,7 @@ impl<'a> ServingEngine<'a> {
         let nd = &self.nodes[node_i];
         let frames = match restore {
             Some(s) => s.frames_left,
-            None => job.frames,
+            None => local_frames,
         };
         // Sessions derive power modes from the device THEY are given:
         // hand them the calibrated base spec and re-apply the node's
@@ -853,6 +1197,15 @@ impl<'a> ServingEngine<'a> {
         let order = self.queue.ordered(self.cfg.queue_policy, &self.jobs, &self.cfg.nodes);
         for j in order {
             let Some(node_i) = self.choose_node(j, now_s) else { continue };
+            if self.cfg.checkpoint_dir.is_some() && !self.migrations.contains_key(&j) {
+                // Cross-process resume: a checkpoint a previous run
+                // left on disk parks as a pending migration BEFORE
+                // planning, so the planner sees `migrating` and the
+                // admission restores instead of restarting at frame 0.
+                if let Some(p) = self.load_checkpoint_file(j, node_i) {
+                    self.migrations.insert(j, p);
+                }
+            }
             if self.nodes[node_i].has_slot() && self.cfg.grant_policy == GrantPolicy::Elastic
             {
                 // Reclaim cores on the node this job is actually headed
@@ -910,6 +1263,21 @@ impl<'a> ServingEngine<'a> {
             // `frames` stays the job's original total so completion
             // counts conserve frames fleet-wide.
             let pending = self.migrations.remove(&j);
+            // A fresh admission may carry an offload verdict: `split`
+            // frames ship to the cloud tier while the rest run here as
+            // a normal local admission. Preemption victims never
+            // re-offload (the planner's eligibility gate), so `pending`
+            // and `offload` are mutually exclusive.
+            let offload = match (&pending, decision.action) {
+                (None, PlanAction::Offload { split }) => {
+                    decision.offload.clone().map(|remote| (split, remote))
+                }
+                _ => None,
+            };
+            let local_frames = match &offload {
+                Some((split, _)) => frames - split,
+                None => frames,
+            };
             let plan = {
                 let nd = &self.nodes[node_i];
                 match &pending {
@@ -925,7 +1293,7 @@ impl<'a> ServingEngine<'a> {
                     None => plan_service(
                         &nd.device,
                         &self.jobs[j].task,
-                        frames,
+                        local_frames,
                         k,
                         grant,
                         nd.resident_containers(),
@@ -936,13 +1304,14 @@ impl<'a> ServingEngine<'a> {
                 Some(m) => {
                     self.nodes[node_i].admit_with_work(now_s, j, frames, plan, m.work_left)
                 }
-                None => self.nodes[node_i].admit(now_s, j, frames, plan),
+                None => self.nodes[node_i].admit(now_s, j, local_frames, plan),
             };
             self.open_session_for(
                 j,
                 node_i,
                 now_s,
                 &plan,
+                local_frames,
                 pending.as_ref().and_then(|m| m.state.as_ref()),
             )?;
             let id = self.jobs[j].id;
@@ -965,9 +1334,12 @@ impl<'a> ServingEngine<'a> {
                             .field_usize("node", node_i)
                             .field_usize("k", plan.k)
                             .field_num("grant_cores", plan.grant_cores)
-                            .field_usize("frames", frames);
+                            .field_usize("frames", local_frames);
                     })?;
                 }
+            }
+            if let Some((split, remote)) = offload {
+                self.launch_offload(j, node_i, now_s, split, remote)?;
             }
             self.queue.remove(now_s, j);
             let h = self.events.push(finish, Ev::Completion { node: node_i, job: j, gen: 0 });
@@ -1492,6 +1864,15 @@ impl<'a> ServingEngine<'a> {
         .with_grant(grant_cores, avail_mem_mib);
         req.current_k = current_k;
         req.deadline_s = self.jobs[j].deadline_s.map(|d| (d - now_s).max(0.0));
+        req.now_s = now_s;
+        req.pin_local = self.jobs[j].pin_local;
+        if current_k.is_none() && !self.migrations.contains_key(&j) {
+            // Only a fresh whole-job admission may split work to the
+            // tier; regrants and migrations keep their frames where
+            // they are (the planner gates on this too — the clone is
+            // simply not worth paying on those paths).
+            req.tier = self.cfg.tier.clone();
+        }
         if !mode_free {
             req.pinned_mode = Some(nd.mode.clone());
         }

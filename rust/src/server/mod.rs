@@ -90,6 +90,17 @@ pub struct ServeConfig {
     /// Scripted fault plan injected into the run (node kills, restarts,
     /// overload shocks).
     pub faults: Vec<FaultEvent>,
+    /// Cloud tier reachable over a modeled link (`None` = edge-only).
+    /// When set, the joint planner may answer an admission with an
+    /// `Offload` verdict splitting the job across edge and cloud.
+    pub tier: Option<crate::net::TierSpec>,
+    /// Stamp every job privacy-pinned: frames never leave the edge even
+    /// when a cloud tier is configured.
+    pub pin_local: bool,
+    /// Directory for on-disk `SessionState` checkpoints (`None` = keep
+    /// checkpoints in memory only). Files left behind by a previous
+    /// process are restored on the next dispatch of the same job id.
+    pub checkpoint_dir: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -110,6 +121,9 @@ impl Default for ServeConfig {
             pace: None,
             telemetry: None,
             faults: Vec::new(),
+            tier: None,
+            pin_local: false,
+            checkpoint_dir: None,
         }
     }
 }
@@ -185,6 +199,15 @@ pub struct ServeReport {
     /// on unsharded runs). Read from the merged registry's
     /// `shard{i}_queue_depth_peak` gauges.
     pub shard_queue_depth_peaks: Vec<usize>,
+    /// Jobs the planner split across edge and cloud (0 edge-only).
+    pub offloads: u64,
+    /// Frames shipped to the cloud tier across all offloaded jobs.
+    pub offloaded_frames: u64,
+    /// Radio/NIC energy spent transmitting offloaded frames (J),
+    /// already folded into `total_energy_j`.
+    pub link_tx_j: f64,
+    /// Total one-way transfer time paid by offloaded jobs (s).
+    pub link_time_s: f64,
 }
 
 impl ServeReport {
@@ -203,7 +226,10 @@ impl ServeReport {
             wall_s: wall,
             jobs_per_s: outcome.completed.len() as f64 / wall,
             frames_per_s: frames as f64 / wall,
-            total_energy_j: outcome.node_energy_j.iter().sum(),
+            // Edge-node timelines plus the cloud bill (billed remote
+            // energy × tier multiplier + link TX) for offloaded halves.
+            total_energy_j: outcome.node_energy_j.iter().sum::<f64>()
+                + outcome.offload_energy_j,
             max_queue_depth: outcome.max_queue_depth,
             mean_queue_depth: outcome.mean_queue_depth,
             node_utilization: outcome.node_utilization.clone(),
@@ -243,6 +269,10 @@ impl ServeReport {
                 .take_while(Option::is_some)
                 .map(|g| g.unwrap_or(0.0) as usize)
                 .collect(),
+            offloads: outcome.offloads,
+            offloaded_frames: outcome.offloaded_frames,
+            link_tx_j: outcome.link_tx_j,
+            link_time_s: outcome.link_time_s,
         };
         report.apply_battery(&Battery::pack_50wh());
         report
@@ -264,7 +294,7 @@ impl ServeReport {
         };
     }
 
-    /// Write the versioned (`"schema": 2`) report through the shared
+    /// Write the versioned (`"schema": 3`) report through the shared
     /// streaming encoder — the same writer the telemetry stream and the
     /// session reports use — so bench runs can be diffed across PRs and
     /// consumers can gate on the schema number instead of sniffing
@@ -281,7 +311,7 @@ impl ServeReport {
                 .end_obj();
         }
         w.begin_obj()
-            .field_usize("schema", 2)
+            .field_usize("schema", 3)
             .field_usize("jobs", self.jobs)
             .field_usize("frames", self.frames);
         summary(w, "latency", &self.latency);
@@ -308,6 +338,10 @@ impl ServeReport {
             .field_num("plan_cache_misses", self.plan_cache_misses as f64)
             .field_usize("plans_cached", self.plans_cached)
             .field_num("p2c_fallback_scans", self.p2c_fallback_scans as f64)
+            .field_num("offloads", self.offloads as f64)
+            .field_num("offloaded_frames", self.offloaded_frames as f64)
+            .field_num("link_tx_j", self.link_tx_j)
+            .field_num("link_time_s", self.link_time_s)
             .key("shard_queue_depth_peaks")
             .begin_arr();
         for &d in &self.shard_queue_depth_peaks {
@@ -379,6 +413,7 @@ pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeRe
         .map(|(i, &arrival)| {
             let mut job = EngineJob::new(i as u64, arrival, cfg.frames_per_job, task.clone());
             job.deadline_s = cfg.deadline_s.map(|d| arrival + d);
+            job.pin_local = cfg.pin_local;
             job
         })
         .collect();
@@ -396,6 +431,8 @@ pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeRe
     engine_cfg.session_sensor_period_s = coordinator.base.sensor_period_s;
     engine_cfg.faults = cfg.faults.clone();
     engine_cfg.pace = cfg.pace;
+    engine_cfg.tier = cfg.tier.clone();
+    engine_cfg.checkpoint_dir = cfg.checkpoint_dir.clone();
 
     let mut engine =
         ServingEngine::new(engine_cfg, jobs, SplitDecider::Coordinator(&mut *coordinator));
@@ -577,7 +614,7 @@ mod tests {
         )
         .unwrap();
         let j = Json::parse(&report.to_json_string()).unwrap();
-        assert_eq!(j.get("schema").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("schema").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("jobs").unwrap().as_usize(), Some(4));
         assert!(j.get("latency").unwrap().get("p99_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("total_energy_j").unwrap().as_f64().unwrap() > 0.0);
@@ -599,6 +636,10 @@ mod tests {
             j.get("shard_queue_depth_peaks").unwrap().as_array().map(|a| a.len()),
             Some(0)
         );
+        // Edge-only run: the cross-tier fields still export, zeroed.
+        assert_eq!(j.get("offloads").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("offloaded_frames").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("link_tx_j").unwrap().as_f64(), Some(0.0));
         // Pure-model run, no fault plan: the ops fields still export.
         assert_eq!(j.get("node_idle_j").unwrap().as_array().map(|a| a.len()), Some(1));
         assert_eq!(j.get("jobs_preempted").unwrap().as_usize(), Some(0));
@@ -623,7 +664,7 @@ mod tests {
         assert_eq!(c.metrics.counter("plan_cache_hits"), 5);
         assert_eq!(c.metrics.counter("plan_cache_misses"), 1);
         let j = Json::parse(&report.to_json_string()).unwrap();
-        assert_eq!(j.get("schema").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("schema").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("plans_cached").unwrap().as_usize(), Some(1));
     }

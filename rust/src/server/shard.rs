@@ -277,6 +277,9 @@ pub fn run_sharded(
     let pools: Vec<&[DeviceSpec]> =
         ranges.iter().map(|&(start, len)| &cfg.base.nodes[start..start + len]).collect();
     let mut router = ShardRouter::new(&pools, cfg.queue_saturation);
+    if let Some(tier) = &cfg.base.tier {
+        router = router.with_tier(tier.clone());
+    }
 
     let mut to_shard = Vec::with_capacity(shards);
     let mut from_shard = Vec::with_capacity(shards);
@@ -338,7 +341,19 @@ pub fn run_sharded(
                     job.affinity = Some(g - ranges[s].0);
                     s
                 }
-                None => router.choose(&job.task, job.frames, &snapshots),
+                None => {
+                    let s = router.choose(&job.task, job.frames, &snapshots);
+                    // A shard that already undercuts the billed cloud
+                    // estimate keeps the whole job on the edge; only
+                    // saturated/expensive shards leave their jobs
+                    // offload-eligible for the joint planner's split
+                    // search. (No-op without a configured tier: jobs
+                    // stay pinned and the planner has no tier anyway.)
+                    if !router.cloud_favors(s, &job.task, job.frames, &snapshots) {
+                        job.pin_local = true;
+                    }
+                    s
+                }
             };
             batches[s].push(job);
         }
@@ -411,7 +426,17 @@ fn merge(
     let mut wall_s = 0f64;
     let mut max_queue_depth = 0usize;
     let mut depth_area = 0f64;
+    let mut offloads = 0u64;
+    let mut offloaded_frames = 0u64;
+    let mut link_tx_j = 0f64;
+    let mut link_time_s = 0f64;
+    let mut offload_energy_j = 0f64;
     for (i, (&(start, len), o)) in ranges.iter().zip(outcomes).enumerate() {
+        offloads += o.offloads;
+        offloaded_frames += o.offloaded_frames;
+        link_tx_j += o.link_tx_j;
+        link_time_s += o.link_time_s;
+        offload_energy_j += o.offload_energy_j;
         per_shard.push(ShardStats {
             shard: i,
             first_node: start,
@@ -462,6 +487,11 @@ fn merge(
         mode_switches: metrics.counter("mode_switches"),
         session_reports,
         des_events,
+        offloads,
+        offloaded_frames,
+        link_tx_j,
+        link_time_s,
+        offload_energy_j,
         metrics,
     };
     ShardedOutcome { outcome, per_shard, overflow_reroutes: router.overflow_reroutes }

@@ -1,7 +1,7 @@
 //! Per-event JSON-lines telemetry for serving runs.
 //!
 //! The engine emits one line per lifecycle event — admission, regrant,
-//! shed, mode switch, checkpoint, fault, restart, migration,
+//! shed, mode switch, checkpoint, fault, restart, migration, offload,
 //! completion — encoded with [`crate::util::jsonl::JsonWriter`] (no
 //! tree building on the hot path) and decoded by
 //! [`crate::util::jsonl::decode_line`]. Every record carries `event`
@@ -30,6 +30,7 @@ pub const EVENT_NAMES: &[&str] = &[
     "fault",
     "restart",
     "migrate",
+    "offload",
     "complete",
 ];
 

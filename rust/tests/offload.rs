@@ -1,0 +1,332 @@
+//! Cross-tier offload integration tests (tier-1): the network model,
+//! the joint planner's (tier, split) axis, and the engine's coupled
+//! edge/cloud execution, end to end.
+//!
+//! * **Acceptance scenario** — a TX2 behind the paper's 100 Mbps /
+//!   50 ms link with a deadline no local plan can meet: the joint
+//!   planner must answer with an `Offload` verdict whose predicted
+//!   energy beats the best local-only plan.
+//! * **Privacy / dominance properties** — over random frame counts,
+//!   deadlines and links: a `pin_local` request never offloads, and a
+//!   link priced out of contention (slow *and* expensive) never wins.
+//! * **Conservation** — a zero-cost link changes where frames run, not
+//!   how many: an offloaded stub-engine run completes exactly the
+//!   frames of its local-only twin, one merged session report per job.
+//! * **Determinism** — a lossy link is modeled in expectation, so two
+//!   same-seed serving runs produce byte-identical schema-3 reports.
+//! * **Slack-ordered eviction** — an overload shock sheds the resident
+//!   with the most deadline slack, not merely the youngest.
+//! * **Cross-process resume** — an on-disk `SessionState` checkpoint
+//!   left by one engine is restored by a fresh engine that has no
+//!   in-memory history, then retired from disk on completion.
+//! * **Fault-plan parsing** — every malformed `kind:NODE@T` entry is
+//!   rejected, whitespace and case are tolerated.
+
+use divide_and_save::config::{ExecMode, ExperimentConfig};
+use divide_and_save::coordinator::router::SplitPolicy;
+use divide_and_save::coordinator::{
+    Coordinator, JointPlanner, PlanAction, PlanRequest, Planner, PlannerKind,
+};
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::exec::{ExecutionBackend, SessionSpec, SimBackend};
+use divide_and_save::net::{LinkSpec, TierSpec};
+use divide_and_save::server::{
+    serve, EngineConfig, EngineJob, FaultEvent, FaultKind, ServeConfig, ServingEngine,
+    SplitDecider, TelemetrySink,
+};
+use divide_and_save::util::json::Json;
+use divide_and_save::util::jsonl::decode_line;
+use divide_and_save::util::proptest::{ensure, forall};
+use divide_and_save::workload::{ArrivalProcess, TaskProfile};
+
+fn tier(cloud: &str, link: &str) -> TierSpec {
+    TierSpec::parse(cloud, LinkSpec::parse(link).unwrap()).unwrap()
+}
+
+fn joint() -> JointPlanner {
+    JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4))
+}
+
+/// A coordinator whose planner searches the joint (tier, split, mode,
+/// k) grid — the only decider that can produce `Offload` verdicts.
+fn joint_coordinator(base: ExperimentConfig) -> Coordinator {
+    let planner = PlannerKind::Joint.build(base.clone(), SplitPolicy::Fixed(4));
+    Coordinator::with_planner(base, planner)
+}
+
+fn tx2_req(frames: usize) -> PlanRequest {
+    PlanRequest::new(DeviceSpec::tx2(), TaskProfile::yolo_tiny(), frames)
+}
+
+/// The acceptance scenario from the issue: a TX2 full video behind the
+/// paper's WAN (100 Mbps, 50 ms) with a deadline far inside anything
+/// the local mode×k grid can reach. The planner must split the job
+/// across the tiers, and the split must beat the best local-only plan
+/// on predicted energy — otherwise the verdict is an empty gesture.
+#[test]
+fn paper_link_offload_beats_the_best_local_plan() {
+    let offloaded = joint()
+        .plan(&tx2_req(720).with_tier(tier("orin", "50ms:100mbps")).with_deadline(100.0))
+        .unwrap();
+    let o = offloaded.offload.as_ref().expect("a hopeless local deadline must offload");
+    assert!(matches!(offloaded.action, PlanAction::Offload { split } if split == o.remote_frames));
+    assert!(o.remote_frames >= 1 && o.remote_frames < 720);
+    assert!(o.link_time_s > 0.0 && o.link_tx_j > 0.0, "a real link is never free");
+    assert!(o.remote_energy_j > 0.0);
+
+    // The same request with no tier on offer: the best the local grid
+    // can do (here: race, the deadline is unreachable).
+    let local = joint().plan(&tx2_req(720).with_deadline(100.0)).unwrap();
+    assert!(local.offload.is_none());
+    assert!(
+        offloaded.predicted_energy_j < local.predicted_energy_j,
+        "offload {:.0} J must beat local-only {:.0} J",
+        offloaded.predicted_energy_j,
+        local.predicted_energy_j
+    );
+    assert!(offloaded.predicted_time_s <= 100.0 + 1e-9, "and it must make the deadline");
+}
+
+/// Privacy property: whatever the frame count, deadline or link — even
+/// a free, instantaneous one — a `pin_local` request never produces an
+/// offload verdict. The pin is absolute, not economic.
+#[test]
+fn pinned_requests_never_offload_whatever_the_link() {
+    let links = ["0ms:1gbps", "50ms:100mbps", "10ms:1gbps:tx=0.001", "5ms:10mbps:loss=0.2"];
+    forall(
+        0x0FF1,
+        24,
+        |r| (2 + r.usize(719), 30.0 + r.range_f64(0.0, 300.0), r.usize(links.len())),
+        |&(frames, deadline, li)| {
+            let req = tx2_req(frames)
+                .with_tier(tier("orin", links[li]))
+                .with_deadline(deadline)
+                .pinned_local();
+            let plan = joint().plan(&req).map_err(|e| format!("{e:#}"))?;
+            ensure(
+                plan.offload.is_none() && !matches!(plan.action, PlanAction::Offload { .. }),
+                format!("pinned request offloaded: {:?}", plan.action),
+            )
+        },
+    );
+}
+
+/// Dominance property: a link that is both slow (10 kbps — two minutes
+/// per frame shipped) and punitively priced (10 kJ per megabyte) makes
+/// every offload candidate worse than local on *both* axes, so the
+/// planner must never choose one — with or without a deadline, even
+/// when the deadline forces the race fallback.
+#[test]
+fn a_priced_out_link_never_wins_the_split_search() {
+    forall(
+        0x0FF2,
+        24,
+        |r| {
+            let frames = 2 + r.usize(719);
+            let deadline = r.bool().then(|| 30.0 + r.range_f64(0.0, 570.0));
+            (frames, deadline)
+        },
+        |&(frames, deadline)| {
+            let mut req = tx2_req(frames).with_tier(tier("orin", "2000ms:10kbps:tx=10000"));
+            if let Some(d) = deadline {
+                req = req.with_deadline(d);
+            }
+            let plan = joint().plan(&req).map_err(|e| format!("{e:#}"))?;
+            ensure(
+                plan.offload.is_none(),
+                format!(
+                    "dominated link won anyway: {} frames, deadline {:?}, {:?}",
+                    frames, deadline, plan.action
+                ),
+            )
+        },
+    );
+}
+
+/// A zero-cost link moves frames without cost, so offloading must be
+/// pure relocation: the offloaded run completes exactly the frames of
+/// its local-only twin, drains one *merged* session report per job,
+/// and bills nothing for transmission.
+#[test]
+fn zero_cost_link_offload_conserves_every_frame() {
+    let mut base = ExperimentConfig::default(); // TX2, yolo-tiny
+    base.mode = ExecMode::Real;
+    base.stub_engine = true;
+    let cfg = ServeConfig {
+        jobs: 3,
+        frames_per_job: 720,
+        deadline_s: Some(100.0),
+        // Wide deterministic spacing: every job plans with its full
+        // deadline slack, none queues behind another.
+        arrival: Some(ArrivalProcess::Deterministic { gap_s: 500.0 }),
+        ..ServeConfig::default()
+    };
+    let free_tier = TierSpec::parse("orin", LinkSpec::zero_cost()).unwrap();
+    let offloaded = serve(
+        &mut joint_coordinator(base.clone()),
+        &ServeConfig { tier: Some(free_tier), ..cfg.clone() },
+    )
+    .unwrap();
+    let local = serve(&mut joint_coordinator(base), &cfg).unwrap();
+
+    assert!(offloaded.offloads >= 1, "a free better tier must attract work");
+    assert!(offloaded.offloaded_frames > 0);
+    assert_eq!(offloaded.jobs, 3);
+    assert_eq!(offloaded.frames, 3 * 720, "offloaded run must conserve frames");
+    assert_eq!(local.frames, 3 * 720, "local twin must conserve frames");
+    assert_eq!(offloaded.frames, local.frames);
+    assert_eq!(offloaded.sessions, 3, "edge and cloud halves merge into one report per job");
+    assert_eq!(offloaded.link_tx_j, 0.0, "a zero-cost link bills no TX energy");
+}
+
+/// Loss is modeled as a deterministic expected-retransmit factor, never
+/// sampled — so two same-seed runs over a lossy link must serialize
+/// byte-identical schema-3 reports, offload fields included.
+#[test]
+fn lossy_link_serving_is_deterministic_and_reports_schema_3() {
+    let cfg = ServeConfig {
+        jobs: 3,
+        frames_per_job: 720,
+        deadline_s: Some(100.0),
+        arrival: Some(ArrivalProcess::Deterministic { gap_s: 500.0 }),
+        seed: 11,
+        tier: Some(tier("orin", "50ms:100mbps:loss=0.08")),
+        ..ServeConfig::default()
+    };
+    let run = || serve(&mut joint_coordinator(ExperimentConfig::default()), &cfg).unwrap();
+    let a = run().to_json_string();
+    let b = run().to_json_string();
+    assert_eq!(a, b, "same seed over a lossy link must replay byte-for-byte");
+
+    let j = Json::parse(&a).unwrap();
+    let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("no {k}"));
+    assert_eq!(num("schema"), 3.0);
+    assert!(num("offloads") >= 1.0);
+    assert!(num("offloaded_frames") > 0.0);
+    assert!(num("link_tx_j") > 0.0, "loss inflates, never erases, the TX bill");
+    assert!(num("link_time_s") > 0.0);
+}
+
+/// Satellite regression: an overload shock must evict the resident
+/// that can best afford the detour — the deadline-less job (infinite
+/// slack) — and leave the urgent co-resident alone. The pre-change
+/// youngest-first order would have shed the urgent job here, since it
+/// shares the older job's start time and carries the higher index.
+#[test]
+fn overload_sheds_the_slack_rich_resident_not_the_urgent_one() {
+    let mut cfg = EngineConfig::single_node(DeviceSpec::orin());
+    cfg.max_concurrent_jobs = 2;
+    cfg.faults = FaultEvent::parse_plan("overload:0@2").unwrap();
+    let relaxed = EngineJob::new(0, 0.0, 480, TaskProfile::yolo_tiny()); // no deadline
+    let mut urgent = EngineJob::new(1, 0.0, 480, TaskProfile::yolo_tiny());
+    urgent.deadline_s = Some(60.0);
+    let (sink, buf) = TelemetrySink::to_buffer();
+    let out = ServingEngine::new(cfg, vec![relaxed, urgent], SplitDecider::Fixed(2))
+        .with_telemetry(sink)
+        .run()
+        .unwrap();
+
+    assert_eq!(out.completed.len(), 2, "both jobs must still finish");
+    assert_eq!(out.metrics.counter("jobs_preempted"), 1);
+    assert_eq!(out.metrics.counter("migrations"), 1);
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    let mut evicted = None;
+    for line in text.lines() {
+        let v = decode_line(line).unwrap();
+        if v.get("event").and_then(Json::as_str) == Some("checkpoint") {
+            evicted = v.get("job").and_then(Json::as_f64);
+        }
+    }
+    assert_eq!(evicted, Some(0.0), "the slack-rich job is the victim, not the urgent one");
+    let urgent_done = out.completed.iter().find(|c| c.id == 1).unwrap();
+    assert!(
+        urgent_done.finish_s <= 60.0,
+        "undisturbed, the urgent job makes its deadline (finished {:.1}s)",
+        urgent_done.finish_s
+    );
+}
+
+/// Satellite: a checkpoint written to disk by one process resumes in
+/// another. "Process 1" is a SIM session checkpointed mid-job and
+/// persisted under the engine's filename contract; "process 2" is a
+/// fresh engine with no in-memory history, which must restore the
+/// snapshot as a migration, finish only the remainder, and retire the
+/// consumed file.
+#[test]
+fn on_disk_checkpoint_resumes_in_a_fresh_engine() {
+    let dir = std::env::temp_dir().join(format!("dsplit-ckpt-xproc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut c = ExperimentConfig::default(); // TX2, 720 frames
+    c.containers = 4;
+    let mut s = SimBackend.open_session(&SessionSpec::from_config(&c)).unwrap();
+    s.start(0.0).unwrap();
+    let state = s.checkpoint(60.0).unwrap();
+    assert!(state.frames_done > 0 && state.frames_left > 0, "checkpoint must land mid-job");
+    std::fs::write(dir.join("job-7.json"), state.to_json_string()).unwrap();
+
+    let run = |checkpoint_dir: Option<String>| {
+        let mut cfg = EngineConfig::single_node(DeviceSpec::tx2());
+        cfg.checkpoint_dir = checkpoint_dir;
+        ServingEngine::new(
+            cfg,
+            vec![EngineJob::new(7, 0.0, 720, TaskProfile::yolo_tiny())],
+            SplitDecider::Fixed(4),
+        )
+        .run()
+        .unwrap()
+    };
+    let resumed = run(Some(dir.to_str().unwrap().to_string()));
+    let fresh = run(None);
+
+    assert_eq!(resumed.completed.len(), 1);
+    assert_eq!(resumed.completed[0].frames, 720, "completion reports the whole job");
+    assert_eq!(resumed.metrics.counter("migrations"), 1, "the restore is a migration");
+    assert!(
+        resumed.completed[0].service_s() < fresh.completed[0].service_s() - 1.0,
+        "resume must run only the remainder: {:.1}s vs a fresh {:.1}s",
+        resumed.completed[0].service_s(),
+        fresh.completed[0].service_s()
+    );
+    assert!(
+        !dir.join("job-7.json").exists(),
+        "a consumed checkpoint must not resurrect finished work"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: the fault-plan grammar is strict. Valid entries tolerate
+/// whitespace and case; any malformed entry rejects the whole plan.
+#[test]
+fn fault_plan_parser_is_strict_about_malformed_entries() {
+    let plan = FaultEvent::parse_plan(" kill:0@2 , RESTART:1@4.5, overload:2@0 ").unwrap();
+    assert_eq!(
+        plan,
+        vec![
+            FaultEvent { at_s: 2.0, node: 0, kind: FaultKind::Kill },
+            FaultEvent { at_s: 4.5, node: 1, kind: FaultKind::Restart },
+            FaultEvent { at_s: 0.0, node: 2, kind: FaultKind::Overload },
+        ]
+    );
+    // Empty and all-whitespace plans are valid and empty, not errors.
+    assert_eq!(FaultEvent::parse_plan("").unwrap(), vec![]);
+    assert_eq!(FaultEvent::parse_plan(" , ,").unwrap(), vec![]);
+    for bad in [
+        "explode:0@1", // unknown verb
+        "kill",        // no node, no time
+        "kill:0",      // no time
+        "kill@2",      // no node separator
+        "kill:0@",     // empty time
+        "kill:@2",     // empty node
+        "kill:-1@2",   // negative node
+        "kill:1e2@5",  // non-integer node
+        "kill:0@2x",   // trailing junk in the time
+        "kill:0@-0.5", // negative time
+        "kill:0@nan",  // undefined time
+        "kill:0@inf",  // unbounded time
+        "restart:0@2,boom:1@3", // one bad entry poisons the plan
+    ] {
+        assert!(FaultEvent::parse_plan(bad).is_none(), "{bad:?} must be rejected");
+    }
+}
