@@ -39,6 +39,6 @@ pub use executor::{run_sim, ExperimentResult, SegmentResult};
 pub use optimizer::{OnlineOptimizer, OptimizeObjective};
 pub use planner::{
     FixedModePlanner, JointPlanner, OffloadPlan, Plan, PlanAction, PlanCacheStats, PlanRequest,
-    Planner, PlannerKind,
+    Planner, PlannerKind, SplitPoint,
 };
 pub use router::{Coordinator, InferenceJob, JobResult};

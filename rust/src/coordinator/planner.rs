@@ -39,6 +39,7 @@ use crate::coordinator::router::SplitPolicy;
 use crate::device::dvfs::PowerMode;
 use crate::device::intern::{intern, Sym};
 use crate::device::DeviceSpec;
+use crate::model::{LayerGraph, SplitMode};
 use crate::net::TierSpec;
 use crate::sched::interference;
 use crate::util::hash::FxHashMap;
@@ -88,6 +89,14 @@ pub struct PlanRequest {
     /// offload verdict is never produced for a pinned request,
     /// whatever the tier economics say.
     pub pin_local: bool,
+    /// Per-layer cost/size graph of the task's network, when one is
+    /// profiled. With a tier present this grows the split search with
+    /// layer-boundary candidates: run layers `0..i` locally, ship the
+    /// layer-`i` activation, run `i..L` remotely.
+    pub model: Option<LayerGraph>,
+    /// Which split axes the offload search may use. Irrelevant without
+    /// a tier; [`SplitMode::Layers`] requires `model`.
+    pub split_mode: SplitMode,
     /// Absolute clock at planning time — only consulted by the link
     /// model's time-varying bandwidth profile (0.0 is always safe).
     pub now_s: f64,
@@ -112,6 +121,8 @@ impl PlanRequest {
             migrating: false,
             tier: None,
             pin_local: false,
+            model: None,
+            split_mode: SplitMode::default(),
             now_s: 0.0,
         }
     }
@@ -161,10 +172,45 @@ impl PlanRequest {
         self
     }
 
+    /// Attach a layer graph so the offload search may split within a
+    /// frame at a layer boundary.
+    pub fn with_model(mut self, model: LayerGraph) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    /// Restrict the offload search to one split axis.
+    pub fn with_split_mode(mut self, mode: SplitMode) -> Self {
+        self.split_mode = mode;
+        self
+    }
+
     /// Set the absolute planning clock (time-varying link profiles).
     pub fn at(mut self, now_s: f64) -> Self {
         self.now_s = now_s;
         self
+    }
+}
+
+/// Where an offload verdict cuts the job in two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitPoint {
+    /// Frame-range split: `f` frames ship to the tier (raw frames over
+    /// the link at the link's `framekb`), the rest run locally.
+    Frames(usize),
+    /// Layer split at boundary `i`: every frame runs layers `0..i`
+    /// locally, the layer-`i` activation ships over the link, and
+    /// layers `i..L` run on the tier.
+    Layer(usize),
+}
+
+impl SplitPoint {
+    /// Report/telemetry tag for the split axis.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SplitPoint::Frames(_) => "frames",
+            SplitPoint::Layer(_) => "layer",
+        }
     }
 }
 
@@ -183,10 +229,11 @@ pub enum PlanAction {
     /// containers (full startup) that restore saved progress instead of
     /// recomputing completed frames.
     Migrate,
-    /// Split admission: `split` frames ship over the tier's link and
-    /// run remotely while the rest are admitted locally as a fresh
-    /// start. The plan's `offload` field carries the remote half.
-    Offload { split: usize },
+    /// Split admission: part of the work ships over the tier's link and
+    /// runs remotely while the rest is admitted locally as a fresh
+    /// start — by frame range or at a layer boundary, per `split`. The
+    /// plan's `offload` field carries the remote half.
+    Offload { split: SplitPoint },
 }
 
 /// A joint (mode, k) decision with its predicted cost.
@@ -221,8 +268,16 @@ pub struct Plan {
 pub struct OffloadPlan {
     /// Tier display name (reports, telemetry).
     pub tier: String,
-    /// Frames shipped to the tier.
+    /// Frames the tier computes (for a layer split: every frame's tail
+    /// half, so this equals the job's full frame count).
     pub remote_frames: usize,
+    /// Layer boundary of a [`SplitPoint::Layer`] split, `None` for a
+    /// frame-range split.
+    pub split_layer: Option<usize>,
+    /// Per-frame uplink payload of a layer split, KB (the boundary
+    /// activation size). `0.0` for frame-range splits, which ship raw
+    /// frames at the link's own `framekb`.
+    pub activation_kb: f64,
     /// Container split on the remote device.
     pub remote_k: usize,
     /// Per-container cpu share on the remote device.
@@ -431,34 +486,92 @@ fn offload_eligible_tier(req: &PlanRequest) -> Option<&TierSpec> {
     req.tier.as_ref()
 }
 
-/// Push one combined candidate per split fraction onto `candidates`.
+/// Push one combined candidate per split point onto `candidates` —
+/// frame-range fractions, and (with a layer graph) every interior
+/// layer boundary.
 ///
 /// The halves run in parallel — the local containers start while the
-/// shipped frames are in flight — so the joint completion time is
+/// shipped payload is in flight — so the joint completion time is
 /// `max(local, link + remote)` and feasibility decomposes: a split is
 /// within budget iff each half is (the remote half's clock includes
 /// the transfer). Since the energy objective is also a sum
 /// (`local + mult * remote + tx`), the best (mode, k) for each half
 /// can be chosen independently per split without losing optimality.
+/// A layer split's halves are the whole frame count under head/tail
+/// cost-scaled tasks, and its payload is the boundary activation —
+/// `activation_kb(i) * frames` through the link's KB methods instead
+/// of the flat `framekb`. Layer candidates compete in the same pool,
+/// so a fat-activation boundary can never beat a frame-range or local
+/// plan it doesn't dominate.
 fn offload_candidates(
     req: &PlanRequest,
     tier: &TierSpec,
     budget_s: f64,
     candidates: &mut Vec<Plan>,
 ) {
-    let mut splits: Vec<usize> = (1..8).map(|i| req.frames * i / 8).collect();
-    splits.sort_unstable();
-    splits.dedup();
-    for split in splits {
-        if split == 0 || split >= req.frames {
-            continue;
+    if req.split_mode != SplitMode::Layers {
+        let mut splits: Vec<usize> = (1..8).map(|i| req.frames * i / 8).collect();
+        splits.sort_unstable();
+        splits.dedup();
+        for split in splits {
+            if split == 0 || split >= req.frames {
+                continue;
+            }
+            let local_req = PlanRequest {
+                frames: req.frames - split,
+                tier: None,
+                model: None,
+                ..req.clone()
+            };
+            let link_time_s = tier.link.transfer_time_s(split, req.now_s);
+            let link_tx_j = tier.link.tx_energy_j(split);
+            let mut remote_req =
+                PlanRequest::new(tier.device.clone(), req.task.clone(), split);
+            remote_req.k_cap = req.k_cap;
+            let local = best_half(&local_req, budget_s);
+            let remote = best_half(&remote_req, budget_s - link_time_s);
+            let remote_energy_j = tier.energy_mult * remote.predicted_energy_j;
+            let mut plan = local;
+            plan.predicted_time_s =
+                plan.predicted_time_s.max(link_time_s + remote.predicted_time_s);
+            plan.predicted_energy_j += remote_energy_j + link_tx_j;
+            plan.action = PlanAction::Offload { split: SplitPoint::Frames(split) };
+            plan.offload = Some(OffloadPlan {
+                tier: tier.name.clone(),
+                remote_frames: split,
+                split_layer: None,
+                activation_kb: 0.0,
+                remote_k: remote.k,
+                remote_cpus_each: remote.cpus_each,
+                remote_mode: remote.mode,
+                remote_time_s: remote.predicted_time_s,
+                remote_energy_j,
+                link_time_s,
+                link_tx_j,
+            });
+            candidates.push(plan);
         }
-        let local_req =
-            PlanRequest { frames: req.frames - split, tier: None, ..req.clone() };
-        let link_time_s = tier.link.transfer_time_s(split, req.now_s);
-        let link_tx_j = tier.link.tx_energy_j(split);
+    }
+    let model = match (&req.model, req.split_mode) {
+        (Some(m), SplitMode::Layers | SplitMode::Auto) => m,
+        _ => return,
+    };
+    // Interior boundaries only: i = 0 ships raw frames (that's the
+    // frame axis done worse) and i = L is the local-only plan.
+    for i in 1..model.len() {
+        let head_task = model.head_task(&req.task, i);
+        let tail_task = model.tail_task(&req.task, i);
+        let local_req = PlanRequest {
+            task: head_task,
+            tier: None,
+            model: None,
+            ..req.clone()
+        };
+        let payload_kb = model.activation_kb(i) * req.frames as f64;
+        let link_time_s = tier.link.transfer_time_kb(payload_kb, req.now_s);
+        let link_tx_j = tier.link.tx_energy_kb(payload_kb);
         let mut remote_req =
-            PlanRequest::new(tier.device.clone(), req.task.clone(), split);
+            PlanRequest::new(tier.device.clone(), tail_task, req.frames);
         remote_req.k_cap = req.k_cap;
         let local = best_half(&local_req, budget_s);
         let remote = best_half(&remote_req, budget_s - link_time_s);
@@ -467,10 +580,12 @@ fn offload_candidates(
         plan.predicted_time_s =
             plan.predicted_time_s.max(link_time_s + remote.predicted_time_s);
         plan.predicted_energy_j += remote_energy_j + link_tx_j;
-        plan.action = PlanAction::Offload { split };
+        plan.action = PlanAction::Offload { split: SplitPoint::Layer(i) };
         plan.offload = Some(OffloadPlan {
             tier: tier.name.clone(),
-            remote_frames: split,
+            remote_frames: req.frames,
+            split_layer: Some(i),
+            activation_kb: model.activation_kb(i),
             remote_k: remote.k,
             remote_cpus_each: remote.cpus_each,
             remote_mode: remote.mode,
@@ -1064,10 +1179,12 @@ mod tests {
             .plan(&req(DeviceSpec::tx2()).with_tier(tier).with_deadline(100.0))
             .unwrap();
         let off = j.offload.as_ref().expect("tight deadline must force a split");
-        let PlanAction::Offload { split } = j.action else {
+        let PlanAction::Offload { split: SplitPoint::Frames(split) } = j.action else {
             panic!("verdict {:?} disagrees with offload field", j.action)
         };
         assert_eq!(split, off.remote_frames);
+        assert_eq!(off.split_layer, None);
+        assert_eq!(off.activation_kb, 0.0);
         assert!(split >= 1 && split < 720);
         // The combined prediction is exactly max(local, link+remote).
         assert!(
@@ -1099,6 +1216,67 @@ mod tests {
             off.remote_energy_j,
             raw.1
         );
+    }
+
+    #[test]
+    fn layer_candidates_join_the_pool_only_with_a_model() {
+        use crate::model::LayerGraph;
+        use crate::net::{LinkSpec, TierSpec};
+        let link = LinkSpec::parse("50ms:100mbps").unwrap();
+        let tier = TierSpec::parse("orin", link).unwrap();
+        let mut joint =
+            JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        // Layers-only without a model: the search has no candidates on
+        // the layer axis and none on the frame axis — a local verdict.
+        let r = req(DeviceSpec::tx2())
+            .with_tier(tier.clone())
+            .with_split_mode(SplitMode::Layers)
+            .with_deadline(60.0);
+        let j = joint.plan(&r).unwrap();
+        assert!(j.offload.is_none(), "no model, layers-only: {:?}", j.action);
+        // With the built-in graph, the same hopeless deadline offloads
+        // at a layer boundary, and the plan's split metadata is
+        // self-consistent with the graph.
+        let r = r.with_model(LayerGraph::yolo_embedded());
+        let j = joint.plan(&r).unwrap();
+        let off = j.offload.as_ref().expect("layer split expected");
+        let PlanAction::Offload { split: SplitPoint::Layer(i) } = j.action else {
+            panic!("expected a layer verdict, got {:?}", j.action)
+        };
+        assert_eq!(off.split_layer, Some(i));
+        assert!(i >= 1 && i < LayerGraph::yolo_embedded().len());
+        assert_eq!(off.remote_frames, 720, "a layer split tails every frame");
+        let g = LayerGraph::yolo_embedded();
+        assert_eq!(off.activation_kb, g.activation_kb(i));
+        let payload = g.activation_kb(i) * 720.0;
+        assert!((off.link_tx_j - g_link().tx_energy_kb(payload)).abs() < 1e-9);
+        assert!((off.link_time_s - g_link().transfer_time_kb(payload, 0.0)).abs() < 1e-9);
+    }
+
+    fn g_link() -> crate::net::LinkSpec {
+        crate::net::LinkSpec::parse("50ms:100mbps").unwrap()
+    }
+
+    #[test]
+    fn frames_mode_suppresses_layer_candidates() {
+        use crate::model::LayerGraph;
+        use crate::net::{LinkSpec, TierSpec};
+        let tier = TierSpec::parse("orin", LinkSpec::parse("50ms:100mbps").unwrap()).unwrap();
+        let mut joint =
+            JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4));
+        let r = req(DeviceSpec::tx2())
+            .with_tier(tier)
+            .with_model(LayerGraph::yolo_embedded())
+            .with_split_mode(SplitMode::Frames)
+            .with_deadline(60.0);
+        let j = joint.plan(&r).unwrap();
+        let off = j.offload.as_ref().expect("tight deadline must offload");
+        assert!(
+            matches!(j.action, PlanAction::Offload { split: SplitPoint::Frames(_) }),
+            "frames mode produced {:?}",
+            j.action
+        );
+        assert_eq!(off.split_layer, None);
     }
 
     #[test]

@@ -194,16 +194,27 @@ pub struct SessionReport {
     /// Link transfer time for the offloaded frames, seconds (overlapped
     /// with local compute — informational, not additive to `time_s`).
     pub link_time_s: f64,
+    /// Layer boundary of a within-frame split (`None` = frame-range
+    /// offload or purely local session): this session ran layers
+    /// `0..i` of every frame, the tier ran `i..L`.
+    pub split_layer: Option<usize>,
+    /// Per-frame activation payload of a layer split, KB (0.0 unless
+    /// `split_layer` is set).
+    pub activation_kb: f64,
 }
 
 impl SessionReport {
-    /// Write the versioned (`"schema": 3`) report through the shared
+    /// Write the versioned (`"schema": 4`) report through the shared
     /// streaming encoder — the same writer the telemetry stream uses.
-    /// Schema 3 adds the offload fields (`offloaded_frames`,
-    /// `link_tx_j`, `link_time_s`); schema 2 added `idle_energy_j`.
+    /// Schema 4 adds the layer-split fields (`split_kind`,
+    /// `split_layer`, `activation_kb` — emitted only when the job
+    /// split at a layer boundary, so frame-split and local reports are
+    /// byte-identical to schema 3 modulo the version number); schema 3
+    /// added the offload fields (`offloaded_frames`, `link_tx_j`,
+    /// `link_time_s`); schema 2 added `idle_energy_j`.
     pub fn write_json(&self, w: &mut JsonWriter) {
         w.begin_obj()
-            .field_usize("schema", 3)
+            .field_usize("schema", 4)
             .field_str("device", &self.device)
             .field_usize("workers", self.workers)
             .field_usize("frames", self.frames)
@@ -217,9 +228,13 @@ impl SessionReport {
             .field_usize("mode_switches", self.mode_switches)
             .field_usize("offloaded_frames", self.offloaded_frames)
             .field_num("link_tx_j", self.link_tx_j)
-            .field_num("link_time_s", self.link_time_s)
-            .key("workers_detail")
-            .begin_arr();
+            .field_num("link_time_s", self.link_time_s);
+        if let Some(i) = self.split_layer {
+            w.field_str("split_kind", "layer")
+                .field_usize("split_layer", i)
+                .field_num("activation_kb", self.activation_kb);
+        }
+        w.key("workers_detail").begin_arr();
         for o in &self.worker_outcomes {
             w.begin_obj()
                 .field_usize("segment", o.segment.index)

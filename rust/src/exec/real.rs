@@ -832,6 +832,8 @@ impl Session for RealSession {
             offloaded_frames: 0,
             link_tx_j: 0.0,
             link_time_s: 0.0,
+            split_layer: None,
+            activation_kb: 0.0,
         })
     }
 }

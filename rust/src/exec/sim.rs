@@ -519,6 +519,8 @@ impl SimSession {
             offloaded_frames: 0,
             link_tx_j: 0.0,
             link_time_s: 0.0,
+            split_layer: None,
+            activation_kb: 0.0,
         })
     }
 }
@@ -612,6 +614,8 @@ impl Session for SimSession {
             offloaded_frames: 0,
             link_tx_j: 0.0,
             link_time_s: 0.0,
+            split_layer: None,
+            activation_kb: 0.0,
         })
     }
 }

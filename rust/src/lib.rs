@@ -34,6 +34,7 @@ pub mod device;
 pub mod energy;
 pub mod exec;
 pub mod metrics;
+pub mod model;
 pub mod modelfit;
 pub mod net;
 pub mod runtime;

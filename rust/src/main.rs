@@ -61,6 +61,14 @@ fn cloud_opts(cmd: Command) -> Command {
         "edge-cloud link: LAT:BW[:loss=P][:tx=J][:framekb=KB][:prof=T@M;..], e.g. 50ms:100mbps",
     ))
     .opt(OptSpec::flag("pin-local", "privacy pin: frames never leave the edge"))
+    .opt(OptSpec::opt(
+        "model-profile",
+        "layer graph: builtin name (yolo_embedded), JSON path, or inline name:l1=GFLOPS/KB,...",
+    ))
+    .opt(OptSpec::opt(
+        "split",
+        "offload split axis: frames|layers|auto (auto = search both)",
+    ))
 }
 
 fn parse_tier(
@@ -79,6 +87,28 @@ fn parse_tier(
     let tier = divide_and_save::net::TierSpec::parse(cloud, link)
         .ok_or_else(|| anyhow!("bad cloud tier {cloud:?} (want device[*mult], device tx2|orin)"))?;
     Ok(Some(tier))
+}
+
+/// Resolve `--model-profile` / `--split` into a layer graph and split
+/// mode. `--split layers` without a graph is rejected up front: the
+/// planner would silently fall back to frame splits otherwise.
+fn parse_model(
+    p: &divide_and_save::util::cli::Parsed,
+) -> Result<(Option<divide_and_save::model::LayerGraph>, divide_and_save::model::SplitMode)> {
+    use divide_and_save::model::{LayerGraph, SplitMode};
+    let model = match p.get("model-profile") {
+        Some(spec) => Some(LayerGraph::resolve(spec).map_err(|e| anyhow!("{e}"))?),
+        None => None,
+    };
+    let split_mode = match p.get("split") {
+        Some(spec) => SplitMode::parse(spec)
+            .ok_or_else(|| anyhow!("bad split mode {spec:?} (want frames|layers|auto)"))?,
+        None => SplitMode::default(),
+    };
+    if split_mode == SplitMode::Layers && model.is_none() {
+        anyhow::bail!("--split layers needs --model-profile: layer boundaries come from the graph");
+    }
+    Ok((model, split_mode))
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
@@ -284,6 +314,7 @@ fn cmd_optimize(args: &[String]) -> Result<()> {
     let p = parse_or_help(&cmd, args)?;
     let cfg = build_config(&p)?;
     let tier = parse_tier(&p)?;
+    let (model, split_mode) = parse_model(&p)?;
     // A cloud tier implies the joint planner: it owns the tier search.
     let planner_default = if tier.is_some() { "joint" } else { "fixed" };
     let objective = match p.get_or("objective", "energy") {
@@ -325,6 +356,10 @@ fn cmd_optimize(args: &[String]) -> Result<()> {
             if let Some(tier) = tier {
                 req = req.with_tier(tier);
             }
+            if let Some(model) = model {
+                req = req.with_model(model);
+            }
+            req = req.with_split_mode(split_mode);
             if p.flag("pin-local") {
                 req = req.pinned_local();
             }
@@ -342,18 +377,26 @@ fn cmd_optimize(args: &[String]) -> Result<()> {
                 plan.predicted_energy_j
             );
             match &plan.offload {
-                Some(off) => println!(
-                    "offload: {} frames -> {} (k={} @ {:.2} cpus, mode={})  link {:.2}s/{:.2}J  remote {:.1}s/{:.1}J billed",
-                    off.remote_frames,
-                    off.tier,
-                    off.remote_k,
-                    off.remote_cpus_each,
-                    off.remote_mode.name,
-                    off.link_time_s,
-                    off.link_tx_j,
-                    off.remote_time_s,
-                    off.remote_energy_j
-                ),
+                Some(off) => {
+                    if let Some(i) = off.split_layer {
+                        println!(
+                            "offload: layers {i}.. -> {} ({:.1} KB activation/frame, {} frames)",
+                            off.tier, off.activation_kb, off.remote_frames
+                        );
+                    }
+                    println!(
+                        "offload: {} frames -> {} (k={} @ {:.2} cpus, mode={})  link {:.2}s/{:.2}J  remote {:.1}s/{:.1}J billed",
+                        off.remote_frames,
+                        off.tier,
+                        off.remote_k,
+                        off.remote_cpus_each,
+                        off.remote_mode.name,
+                        off.link_time_s,
+                        off.link_tx_j,
+                        off.remote_time_s,
+                        off.remote_energy_j
+                    )
+                }
                 None if req.tier.is_some() => {
                     println!("offload: none (local-only plan wins under this link)")
                 }
@@ -408,6 +451,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let grant_policy = GrantPolicy::parse(p.get_or("grant", "fixed"))
         .ok_or_else(|| anyhow!("unknown grant policy {:?}", p.get_or("grant", "fixed")))?;
     let tier = parse_tier(&p)?;
+    let (model, split_mode) = parse_model(&p)?;
     // Offload verdicts come out of the joint planner's tier search, so
     // --cloud flips the planner default from fixed to joint.
     let planner_default = if tier.is_some() { "joint" } else { "fixed" };
@@ -443,6 +487,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             telemetry: p.get("telemetry").map(str::to_string),
             faults,
             tier,
+            model,
+            split_mode,
             pin_local: p.flag("pin-local"),
             checkpoint_dir: p.get("checkpoint-dir").map(str::to_string),
             ..Default::default()
@@ -500,6 +546,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         println!(
             "offloads={}  frames to cloud={}  link tx={:.1} J  link time={:.1}s",
             report.offloads, report.offloaded_frames, report.link_tx_j, report.link_time_s
+        );
+    }
+    if report.layer_splits > 0 {
+        println!(
+            "layer splits={} (of {} offloads): head local, activation shipped, tail remote",
+            report.layer_splits, report.offloads
         );
     }
     println!(

@@ -1,0 +1,443 @@
+//! Layer-graph model subsystem: per-layer split points for
+//! within-frame edge/cloud partitioning.
+//!
+//! The paper splits inference *by frames*; PR 9's offload subsystem kept
+//! that granularity across the edge/cloud tier. DynaSplit-style
+//! partitioning splits the DNN *within* a frame instead: run layers
+//! `0..i` on the edge, ship the layer-`i` activation over the uplink,
+//! and run layers `i..L` on the tier. The uplink payload is then the
+//! intermediate-tensor size — often far smaller than the raw frame deep
+//! in the network — so a well-chosen boundary can beat every frame-range
+//! split the flat `framekb` model allows.
+//!
+//! A [`LayerGraph`] describes the network as an ordered list of
+//! [`Layer`]s, each with a compute cost (GFLOPs) and an output-tensor
+//! size in KB. The planner only needs two derived quantities per
+//! boundary `i`:
+//!
+//! * `head_frac(i)` / `tail_frac(i)` — the fraction of the whole
+//!   network's compute in layers `0..i` / `i..L` (prefix/suffix sums,
+//!   so `head + tail == 1` exactly at every boundary), used to scale a
+//!   [`TaskProfile`]'s `relative_cost` into head/tail profiles that the
+//!   existing device predictors consume unchanged;
+//! * `activation_kb(i)` — the payload per frame shipped at boundary
+//!   `i`: the raw input at `i = 0`, `layers[i-1].out_kb` otherwise.
+//!
+//! Graphs come from three places, in CLI resolution order: the built-in
+//! [`LayerGraph::yolo_embedded`] profile (by name), a JSON file
+//! (`--model-profile path.json`), or an inline spec
+//! (`name:l1=gflops/kb,l2=gflops/kb,...`).
+
+use crate::workload::TaskProfile;
+
+/// Raw input-frame payload, KB, when splitting at boundary 0 (ship the
+/// whole frame, run nothing locally). Matches `net::DEFAULT_FRAME_KB`.
+pub const DEFAULT_INPUT_KB: f64 = 150.0;
+
+/// One layer of a [`LayerGraph`]: a named compute block with its cost
+/// and the size of the activation tensor it emits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    /// Compute cost, GFLOPs per frame.
+    pub gflops: f64,
+    /// Output-activation size, kilobytes per frame.
+    pub out_kb: f64,
+}
+
+/// How the planner searches offload split points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SplitMode {
+    /// Frame-range splits only (PR 9 behavior; also what you get with
+    /// no `--model-profile`).
+    Frames,
+    /// Layer-boundary splits only — requires a model profile.
+    Layers,
+    /// Search both axes and let the energy objective pick.
+    #[default]
+    Auto,
+}
+
+impl SplitMode {
+    /// Parse the `--split` CLI value.
+    pub fn parse(s: &str) -> Option<SplitMode> {
+        match s.trim() {
+            "frames" => Some(SplitMode::Frames),
+            "layers" => Some(SplitMode::Layers),
+            "auto" => Some(SplitMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SplitMode::Frames => "frames",
+            SplitMode::Layers => "layers",
+            SplitMode::Auto => "auto",
+        }
+    }
+}
+
+/// An ordered per-layer cost/size description of a network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerGraph {
+    pub name: String,
+    /// Raw input payload per frame, KB (the boundary-0 activation).
+    pub input_kb: f64,
+    pub layers: Vec<Layer>,
+    /// Prefix sums of `gflops`: `prefix[i]` = cost of layers `0..i`,
+    /// so `prefix[len]` is the whole-network cost. Cached at
+    /// construction so boundary queries are O(1) in the planner's
+    /// candidate loop.
+    prefix_gflops: Vec<f64>,
+}
+
+impl LayerGraph {
+    /// Build a graph from parts, validating every layer. Returns `None`
+    /// when the graph is empty or any cost/size is non-finite or
+    /// non-positive (a zero-cost layer would make two boundaries alias
+    /// the same split).
+    pub fn new(name: &str, input_kb: f64, layers: Vec<Layer>) -> Option<LayerGraph> {
+        if layers.is_empty() || !input_kb.is_finite() || input_kb <= 0.0 {
+            return None;
+        }
+        for l in &layers {
+            if !l.gflops.is_finite() || l.gflops <= 0.0 || !l.out_kb.is_finite() || l.out_kb <= 0.0
+            {
+                return None;
+            }
+        }
+        let mut prefix = Vec::with_capacity(layers.len() + 1);
+        let mut acc = 0.0;
+        prefix.push(0.0);
+        for l in &layers {
+            acc += l.gflops;
+            prefix.push(acc);
+        }
+        Some(LayerGraph {
+            name: name.to_string(),
+            input_kb,
+            layers,
+            prefix_gflops: prefix,
+        })
+    }
+
+    /// The paper's embedded YOLO, shaped like YOLOv4-tiny at 416x416:
+    /// compute front-loaded in the early convs over big spatial maps,
+    /// activations shrinking as stride grows. Deep boundaries ship a
+    /// few tens of KB instead of a 150 KB frame, which is exactly the
+    /// trade-off that makes layer splits winnable.
+    pub fn yolo_embedded() -> LayerGraph {
+        let layer = |name: &str, gflops: f64, out_kb: f64| Layer {
+            name: name.to_string(),
+            gflops,
+            out_kb,
+        };
+        LayerGraph::new(
+            "yolo_embedded",
+            DEFAULT_INPUT_KB,
+            vec![
+                // name, GFLOPs/frame, activation KB/frame
+                layer("conv1", 0.32, 1352.0),
+                layer("conv2", 1.70, 676.0),
+                layer("csp1", 1.62, 338.0),
+                layer("csp2", 1.55, 169.0),
+                layer("csp3", 1.48, 84.5),
+                layer("conv7", 1.18, 42.2),
+                layer("neck", 0.42, 21.1),
+                layer("heads", 0.23, 7.9),
+            ],
+        )
+        .expect("built-in profile is valid")
+    }
+
+    /// Resolve a `--model-profile` value: a built-in name, a JSON file
+    /// path, or an inline spec — in that order. Returns a human-usable
+    /// error naming what failed.
+    pub fn resolve(spec: &str) -> Result<LayerGraph, String> {
+        if spec.trim() == "yolo_embedded" {
+            return Ok(LayerGraph::yolo_embedded());
+        }
+        if let Ok(text) = std::fs::read_to_string(spec.trim()) {
+            return LayerGraph::parse_json(&text)
+                .ok_or_else(|| format!("invalid model-profile JSON in {spec}"));
+        }
+        LayerGraph::parse_inline(spec).ok_or_else(|| {
+            format!(
+                "--model-profile {spec:?} is not a built-in name, a readable \
+                 JSON file, or an inline name:l1=gflops/kb,... spec"
+            )
+        })
+    }
+
+    /// Parse the inline grammar: `name:l1=gflops/kb,l2=gflops/kb,...`
+    /// with an optional leading `inputkb=KB` entry.
+    ///
+    /// e.g. `tiny:conv=1.2/600,mid=2.0/150,head=0.4/20`.
+    pub fn parse_inline(spec: &str) -> Option<LayerGraph> {
+        let (name, rest) = spec.split_once(':')?;
+        let name = name.trim();
+        if name.is_empty() {
+            return None;
+        }
+        let mut input_kb = DEFAULT_INPUT_KB;
+        let mut layers = Vec::new();
+        for (i, part) in rest.split(',').enumerate() {
+            let (lname, cost) = part.trim().split_once('=')?;
+            let lname = lname.trim();
+            if lname.is_empty() {
+                return None;
+            }
+            if i == 0 && lname == "inputkb" {
+                input_kb = cost.trim().parse().ok()?;
+                continue;
+            }
+            let (gflops, kb) = cost.trim().split_once('/')?;
+            layers.push(Layer {
+                name: lname.to_string(),
+                gflops: gflops.trim().parse().ok()?,
+                out_kb: kb.trim().parse().ok()?,
+            });
+        }
+        LayerGraph::new(name, input_kb, layers)
+    }
+
+    /// Parse the JSON profile format written by profiling tools:
+    ///
+    /// ```json
+    /// {"name": "net", "input_kb": 150.0,
+    ///  "layers": [{"name": "conv1", "gflops": 0.3, "out_kb": 1352.0}]}
+    /// ```
+    ///
+    /// `input_kb` is optional (defaults to [`DEFAULT_INPUT_KB`]).
+    pub fn parse_json(text: &str) -> Option<LayerGraph> {
+        let v = crate::util::json::Json::parse(text).ok()?;
+        let name = v.get("name")?.as_str()?;
+        let input_kb = match v.get("input_kb") {
+            Some(kb) => kb.as_f64()?,
+            None => DEFAULT_INPUT_KB,
+        };
+        let mut layers = Vec::new();
+        for l in v.get("layers")?.as_array()? {
+            layers.push(Layer {
+                name: l.get("name")?.as_str()?.to_string(),
+                gflops: l.get("gflops")?.as_f64()?,
+                out_kb: l.get("out_kb")?.as_f64()?,
+            });
+        }
+        LayerGraph::new(name, input_kb, layers)
+    }
+
+    /// Number of layers `L`. Interior split boundaries are `1..L`
+    /// (both halves non-empty); `0` and `L` are the degenerate
+    /// ship-everything / run-everything-locally ends.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Whole-network compute, GFLOPs per frame.
+    pub fn total_gflops(&self) -> f64 {
+        *self.prefix_gflops.last().unwrap()
+    }
+
+    /// Fraction of the network's compute in layers `0..i`.
+    /// `head_frac(0) == 0`, `head_frac(L) == 1`.
+    pub fn head_frac(&self, i: usize) -> f64 {
+        assert!(i <= self.len(), "boundary {i} out of range");
+        self.prefix_gflops[i] / self.total_gflops()
+    }
+
+    /// Fraction of the network's compute in layers `i..L`. Computed
+    /// from the same prefix sum so `head_frac(i) + tail_frac(i)` is
+    /// exactly 1 at every boundary.
+    pub fn tail_frac(&self, i: usize) -> f64 {
+        assert!(i <= self.len(), "boundary {i} out of range");
+        (self.total_gflops() - self.prefix_gflops[i]) / self.total_gflops()
+    }
+
+    /// Uplink payload per frame at boundary `i`, KB: the raw input at
+    /// `i = 0` (nothing ran locally), the layer-`i` activation
+    /// (`layers[i-1].out_kb`) otherwise.
+    pub fn activation_kb(&self, i: usize) -> f64 {
+        assert!(i <= self.len(), "boundary {i} out of range");
+        if i == 0 {
+            self.input_kb
+        } else {
+            self.layers[i - 1].out_kb
+        }
+    }
+
+    /// The head task at boundary `i`: `base` with `relative_cost`
+    /// scaled by `head_frac(i)`, named `<base>#head<i>` so sessions,
+    /// checkpoints and telemetry show which half they ran.
+    pub fn head_task(&self, base: &TaskProfile, i: usize) -> TaskProfile {
+        self.scaled_task(base, self.head_frac(i), &format!("#head{i}"))
+    }
+
+    /// The tail task at boundary `i`: `base` scaled by `tail_frac(i)`.
+    pub fn tail_task(&self, base: &TaskProfile, i: usize) -> TaskProfile {
+        self.scaled_task(base, self.tail_frac(i), &format!("#tail{i}"))
+    }
+
+    fn scaled_task(&self, base: &TaskProfile, frac: f64, suffix: &str) -> TaskProfile {
+        TaskProfile {
+            name: format!("{}{suffix}", base.name),
+            flops_per_frame: (base.flops_per_frame as f64 * frac).round() as u64,
+            relative_cost: base.relative_cost * frac,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{close, ensure, forall};
+
+    #[test]
+    fn builtin_profile_is_well_formed() {
+        let g = LayerGraph::yolo_embedded();
+        assert_eq!(g.name, "yolo_embedded");
+        assert_eq!(g.len(), 8);
+        assert!(g.total_gflops() > 0.0);
+        assert_eq!(g.head_frac(0), 0.0);
+        assert_eq!(g.head_frac(g.len()), 1.0);
+        assert_eq!(g.activation_kb(0), g.input_kb);
+        // Deep boundaries must ship less than the raw frame — that's
+        // the whole point of the built-in profile.
+        assert!(g.activation_kb(g.len()) < g.input_kb);
+    }
+
+    #[test]
+    fn inline_spec_round_trips() {
+        let g = LayerGraph::parse_inline("tiny:conv=1.2/600,mid=2.0/150,head=0.4/20").unwrap();
+        assert_eq!(g.name, "tiny");
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.input_kb, DEFAULT_INPUT_KB);
+        assert!((g.total_gflops() - 3.6).abs() < 1e-12);
+        assert_eq!(g.activation_kb(1), 600.0);
+        assert_eq!(g.activation_kb(3), 20.0);
+        let g = LayerGraph::parse_inline("t:inputkb=42,a=1/1").unwrap();
+        assert_eq!(g.input_kb, 42.0);
+        assert_eq!(g.activation_kb(0), 42.0);
+    }
+
+    #[test]
+    fn inline_spec_rejects_malformed() {
+        for bad in [
+            "",
+            "noname",
+            ":a=1/1",
+            "t:",
+            "t:a=1",
+            "t:a=/1",
+            "t:a=1/",
+            "t:a=0/1",
+            "t:a=1/0",
+            "t:a=-1/1",
+            "t:a=1/-1",
+            "t:a=nan/1",
+            "t:=1/1",
+            "t:inputkb=42",
+        ] {
+            assert!(
+                LayerGraph::parse_inline(bad).is_none(),
+                "{bad:?} must not parse"
+            );
+        }
+    }
+
+    #[test]
+    fn json_profile_round_trips() {
+        let g = LayerGraph::parse_json(
+            r#"{"name": "net", "input_kb": 99.0, "layers": [
+                {"name": "a", "gflops": 1.0, "out_kb": 10.0},
+                {"name": "b", "gflops": 3.0, "out_kb": 5.0}]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.name, "net");
+        assert_eq!(g.input_kb, 99.0);
+        assert_eq!(g.len(), 2);
+        assert!((g.head_frac(1) - 0.25).abs() < 1e-12);
+        assert!(LayerGraph::parse_json("{}").is_none());
+        assert!(LayerGraph::parse_json(r#"{"name": "x", "layers": []}"#).is_none());
+    }
+
+    #[test]
+    fn resolve_prefers_builtin_name() {
+        assert_eq!(
+            LayerGraph::resolve("yolo_embedded").unwrap(),
+            LayerGraph::yolo_embedded()
+        );
+        assert!(LayerGraph::resolve("no_such_profile").is_err());
+        let g = LayerGraph::resolve("t:a=1/1,b=2/2").unwrap();
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn split_mode_parses() {
+        assert_eq!(SplitMode::parse("frames"), Some(SplitMode::Frames));
+        assert_eq!(SplitMode::parse("layers"), Some(SplitMode::Layers));
+        assert_eq!(SplitMode::parse("auto"), Some(SplitMode::Auto));
+        assert_eq!(SplitMode::parse("diagonal"), None);
+        assert_eq!(SplitMode::default(), SplitMode::Auto);
+    }
+
+    /// Satellite: for every boundary `i`, head-cost(i) + tail-cost(i)
+    /// equals the whole-network cost, and activation payloads decode
+    /// straight from the profile with no off-by-one at `i=0` / `i=L`.
+    #[test]
+    fn prefix_suffix_sums_partition_the_network() {
+        forall(
+            11,
+            200,
+            |r| {
+                let n = r.usize(12) + 1;
+                let layers: Vec<Layer> = (0..n)
+                    .map(|i| Layer {
+                        name: format!("l{i}"),
+                        gflops: r.range_f64(0.05, 8.0),
+                        out_kb: r.range_f64(1.0, 2000.0),
+                    })
+                    .collect();
+                let input_kb = r.range_f64(50.0, 500.0);
+                LayerGraph::new("p", input_kb, layers).unwrap()
+            },
+            |g| {
+                let base = TaskProfile::yolo_tiny();
+                for i in 0..=g.len() {
+                    close(g.head_frac(i) + g.tail_frac(i), 1.0, 1e-12)?;
+                    let head = g.head_task(&base, i);
+                    let tail = g.tail_task(&base, i);
+                    close(
+                        head.relative_cost + tail.relative_cost,
+                        base.relative_cost,
+                        1e-12,
+                    )?;
+                    let expect_kb = if i == 0 {
+                        g.input_kb
+                    } else {
+                        g.layers[i - 1].out_kb
+                    };
+                    ensure(
+                        g.activation_kb(i) == expect_kb,
+                        format!("activation_kb({i}) decoded wrong"),
+                    )?;
+                }
+                ensure(g.head_frac(0) == 0.0, "head_frac(0) != 0")?;
+                ensure(g.tail_frac(g.len()) == 0.0, "tail_frac(L) != 0")?;
+                // head_frac is monotone in i: prefix sums of positive costs.
+                for i in 1..=g.len() {
+                    ensure(
+                        g.head_frac(i) > g.head_frac(i - 1),
+                        format!("head_frac not strictly increasing at {i}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

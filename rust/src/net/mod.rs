@@ -140,8 +140,15 @@ impl LinkSpec {
     }
 
     /// Expected send inflation from loss: every lost packet is resent,
-    /// so `1 / (1 - loss)` copies go over the wire on average.
+    /// so `1 / (1 - loss)` copies go over the wire on average. `parse`
+    /// rejects `loss >= 1.0`; a directly-constructed spec that smuggles
+    /// one in would silently divide by zero here, so assert instead.
     pub fn retransmit_factor(&self) -> f64 {
+        assert!(
+            (0.0..1.0).contains(&self.loss),
+            "LinkSpec loss must be in [0, 1), got {}",
+            self.loss
+        );
         1.0 / (1.0 - self.loss)
     }
 
@@ -178,6 +185,28 @@ impl LinkSpec {
     /// Radio energy to transmit `frames`, joules.
     pub fn tx_energy_j(&self, frames: usize) -> f64 {
         self.payload_mb(frames) * self.tx_j_per_mb
+    }
+
+    /// Time to move an explicit `total_kb` payload starting at `at_s`.
+    /// Layer-split offloads ship intermediate activations whose size
+    /// comes from the model graph, not the link's flat `framekb` —
+    /// this is the same latency + serialization + retransmit model
+    /// with the payload supplied by the caller.
+    pub fn transfer_time_kb(&self, total_kb: f64, at_s: f64) -> f64 {
+        if total_kb <= 0.0 {
+            return 0.0;
+        }
+        let bw = self.bandwidth_at(at_s);
+        if bw.is_infinite() {
+            return self.latency_s;
+        }
+        let mb = total_kb / 1000.0 * self.retransmit_factor();
+        self.latency_s + mb * 8.0 / bw
+    }
+
+    /// Radio energy to transmit an explicit `total_kb` payload, joules.
+    pub fn tx_energy_kb(&self, total_kb: f64) -> f64 {
+        total_kb / 1000.0 * self.retransmit_factor() * self.tx_j_per_mb
     }
 }
 
@@ -271,9 +300,42 @@ mod tests {
             "50ms:100mbps:warp=9",
             "50ms:100mbps:prof=0@0",
             "50ms:100mbps:prof=x@1",
+            // Strict-rejection satellite rows: loss at exactly the
+            // retransmit pole, and empty/dangling profile segments.
+            "50ms:100mbps:loss=1",
+            "50ms:100mbps:loss=1.5",
+            "50ms:100mbps:prof=",
+            "50ms:100mbps:prof=0@1;",
+            "50ms:100mbps:prof=;0@1",
+            "50ms:100mbps:loss=",
         ] {
             assert!(LinkSpec::parse(bad).is_none(), "{bad:?} must not parse");
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "loss must be in [0, 1)")]
+    fn directly_constructed_total_loss_is_caught() {
+        // `parse` rejects loss >= 1.0; a hand-built spec must trip the
+        // assert instead of silently dividing by zero.
+        let mut l = LinkSpec::zero_cost();
+        l.loss = 1.0;
+        let _ = l.retransmit_factor();
+    }
+
+    #[test]
+    fn kb_payload_methods_agree_with_frame_methods() {
+        let l = LinkSpec::parse("50ms:100mbps:loss=0.2:tx=0.3:framekb=200").unwrap();
+        for frames in [1usize, 7, 96] {
+            let kb = frames as f64 * l.frame_kb;
+            assert!((l.transfer_time_kb(kb, 0.0) - l.transfer_time_s(frames, 0.0)).abs() < 1e-9);
+            assert!((l.tx_energy_kb(kb) - l.tx_energy_j(frames)).abs() < 1e-9);
+        }
+        assert_eq!(l.transfer_time_kb(0.0, 0.0), 0.0);
+        assert_eq!(l.tx_energy_kb(0.0), 0.0);
+        // A small activation beats the flat frame payload on both axes.
+        assert!(l.transfer_time_kb(10.0, 0.0) < l.transfer_time_s(1, 0.0));
+        assert!(l.tx_energy_kb(10.0) < l.tx_energy_j(1));
     }
 
     #[test]
@@ -306,6 +368,13 @@ mod tests {
         assert!(TierSpec::parse("warpcore", LinkSpec::zero_cost()).is_none());
         assert!(TierSpec::parse("orin*0", LinkSpec::zero_cost()).is_none());
         assert!(TierSpec::parse("orin*-1", LinkSpec::zero_cost()).is_none());
+        // Strict-rejection satellite rows: dangling or doubled
+        // multiplier markers and an empty device name.
+        assert!(TierSpec::parse("orin*", LinkSpec::zero_cost()).is_none());
+        assert!(TierSpec::parse("orin*nan", LinkSpec::zero_cost()).is_none());
+        assert!(TierSpec::parse("orin*1*2", LinkSpec::zero_cost()).is_none());
+        assert!(TierSpec::parse("*2", LinkSpec::zero_cost()).is_none());
+        assert!(TierSpec::parse("", LinkSpec::zero_cost()).is_none());
     }
 }
 

@@ -27,12 +27,13 @@ use super::allocator::{
 use super::policy::{PlacementPolicy, QueuePolicy};
 use super::queue::AdmissionQueue;
 use super::telemetry::TelemetrySink;
-use crate::coordinator::planner::{OffloadPlan, Plan, PlanAction, PlanRequest};
+use crate::coordinator::planner::{OffloadPlan, Plan, PlanAction, PlanRequest, SplitPoint};
 use crate::coordinator::Coordinator;
 use crate::device::DeviceSpec;
 use crate::exec::{
     ExecutionBackend, Session, SessionCmd, SessionReport, SessionSpec, SessionState,
 };
+use crate::model::{LayerGraph, SplitMode};
 use crate::net::TierSpec;
 use crate::metrics::Registry;
 use crate::sched::des::{EventHandle, EventQueue};
@@ -231,6 +232,12 @@ pub struct EngineConfig {
     /// may split their frames between the local node and this tier
     /// ([`PlanAction::Offload`]).
     pub tier: Option<TierSpec>,
+    /// Per-layer cost/size graph of the serving task, when profiled
+    /// (`--model-profile`). With a tier it lets the planner split each
+    /// frame at a layer boundary instead of by frame ranges.
+    pub model: Option<LayerGraph>,
+    /// Which split axes the offload search may use (`--split`).
+    pub split_mode: SplitMode,
     /// Directory checkpoints are persisted to: every preemption writes
     /// the victim's [`SessionState`] as `job-<id>.json`, and a later
     /// admission of the same job id (this process or the next) restores
@@ -258,6 +265,8 @@ impl EngineConfig {
             faults: Vec::new(),
             pace: None,
             tier: None,
+            model: None,
+            split_mode: SplitMode::default(),
             checkpoint_dir: None,
         }
     }
@@ -298,7 +307,12 @@ pub struct EngineOutcome {
     pub des_events: u64,
     /// Jobs that split work to the offload tier (0 without a tier).
     pub offloads: u64,
-    /// Frames shipped over the link across all offloaded jobs.
+    /// Offloads that split within the frame at a layer boundary
+    /// instead of by frame ranges (subset of `offloads`; 0 without a
+    /// `--model-profile`).
+    pub layer_splits: u64,
+    /// Frames shipped over the link across all offloaded jobs (for a
+    /// layer split: every frame whose activation crossed the link).
     pub offloaded_frames: u64,
     /// Radio TX energy spent shipping those frames, joules.
     pub link_tx_j: f64,
@@ -339,6 +353,12 @@ enum Ev {
 /// halves are done, whichever finishes last.
 struct ActiveOffload {
     remote_frames: usize,
+    /// Layer boundary of a [`SplitPoint::Layer`] split (`None` =
+    /// frame-range split): the resident session runs the head half of
+    /// every frame, the tier runs the tail.
+    split_layer: Option<usize>,
+    /// Per-frame activation payload of a layer split, KB.
+    activation_kb: f64,
     link_time_s: f64,
     link_tx_j: f64,
     /// Predicted billed remote compute energy (`energy_mult` applied) —
@@ -373,6 +393,8 @@ struct LocalDone {
 #[derive(Debug, Default, Clone, Copy)]
 struct OffloadTotals {
     count: u64,
+    /// Offloads that split at a layer boundary (subset of `count`).
+    layer_splits: u64,
     frames: u64,
     link_tx_j: f64,
     link_time_s: f64,
@@ -570,6 +592,19 @@ impl<'a> ServingEngine<'a> {
     /// feeds jobs through [`Self::push_job`] at the epoch barriers.
     /// Jobs already scheduled (via `push_job`) are not re-scheduled.
     pub fn prime(&mut self) {
+        // Announce the layer graph once per stream so a telemetry
+        // consumer can decode later `offload` records' `split_layer`
+        // boundaries against the profile that produced them.
+        if let Some(model) = self.cfg.model.clone() {
+            let split_mode = self.cfg.split_mode.as_str();
+            let _ = self.emit_event("model", 0.0, |w| {
+                w.field_str("name", &model.name)
+                    .field_str("split_mode", split_mode)
+                    .field_usize("layers", model.len())
+                    .field_num("total_gflops", model.total_gflops())
+                    .field_num("input_kb", model.input_kb);
+            });
+        }
         if self.closed_loop {
             self.emit_next_arrival(0.0);
         } else {
@@ -829,6 +864,7 @@ impl<'a> ServingEngine<'a> {
             session_reports: self.session_reports,
             des_events: self.des_events,
             offloads: self.offload_totals.count,
+            layer_splits: self.offload_totals.layer_splits,
             offloaded_frames: self.offload_totals.frames,
             link_tx_j: self.offload_totals.link_tx_j,
             link_time_s: self.offload_totals.link_time_s,
@@ -875,17 +911,21 @@ impl<'a> ServingEngine<'a> {
     }
 
     /// Launch the remote half of an offload verdict for job `j`, just
-    /// admitted locally on `node_i` for its remaining frames: open a
+    /// admitted locally on `node_i` for its share of the work: open a
     /// data-plane session on the tier's device (when a backend runs),
     /// schedule the land-back event at `now + link + remote compute`,
-    /// and park the merge state.
+    /// and park the merge state. For a layer split, `tail_task` is the
+    /// tail-scaled profile the remote session runs (every frame,
+    /// layers `i..L`); frame-range splits run the job's own task over
+    /// the shipped frame range.
     fn launch_offload(
         &mut self,
         j: usize,
         node_i: usize,
         now_s: f64,
-        split: usize,
+        split: SplitPoint,
         off: OffloadPlan,
+        tail_task: Option<TaskProfile>,
     ) -> Result<()> {
         let tier =
             self.cfg.tier.clone().expect("offload verdict from a planner without a tier");
@@ -894,8 +934,8 @@ impl<'a> ServingEngine<'a> {
                 let job = &self.jobs[j];
                 let spec = SessionSpec {
                     device: tier.device.clone(),
-                    task: job.task.clone(),
-                    segments: split_even(split, off.remote_k.max(1)),
+                    task: tail_task.clone().unwrap_or_else(|| job.task.clone()),
+                    segments: split_even(off.remote_frames, off.remote_k.max(1)),
                     cpus_each: off.remote_cpus_each.max(f64::MIN_POSITIVE),
                     seed: job.id,
                     sensor_period_s: self.cfg.session_sensor_period_s,
@@ -905,7 +945,7 @@ impl<'a> ServingEngine<'a> {
                 if !off.remote_mode.is_default_for(&tier.device) {
                     session.apply(SessionCmd::SetMode(off.remote_mode.clone()), now_s)?;
                 }
-                // The remote clock starts when the frames land, after
+                // The remote clock starts when the payload lands, after
                 // the link transfer.
                 session.start(now_s + off.link_time_s)?;
                 self.metrics.inc("sessions_opened", 1);
@@ -918,19 +958,26 @@ impl<'a> ServingEngine<'a> {
         let id = self.jobs[j].id;
         let (tier_name, link_time_s, link_tx_j) =
             (off.tier.clone(), off.link_time_s, off.link_tx_j);
+        let (split_kind, remote_frames) = (split.kind(), off.remote_frames);
+        let (split_layer, activation_kb) = (off.split_layer, off.activation_kb);
         self.emit_event("offload", now_s, |w| {
             w.field_num("job", id as f64)
                 .field_usize("node", node_i)
                 .field_str("tier", &tier_name)
-                .field_usize("frames", split)
-                .field_num("link_time_s", link_time_s)
-                .field_num("link_tx_j", link_tx_j);
+                .field_usize("frames", remote_frames)
+                .field_str("split", split_kind);
+            if let Some(i) = split_layer {
+                w.field_usize("split_layer", i).field_num("activation_kb", activation_kb);
+            }
+            w.field_num("link_time_s", link_time_s).field_num("link_tx_j", link_tx_j);
         })?;
         self.metrics.inc("offloads", 1);
         self.offloads.insert(
             j,
             ActiveOffload {
-                remote_frames: split,
+                remote_frames: off.remote_frames,
+                split_layer: off.split_layer,
+                activation_kb: off.activation_kb,
                 link_time_s: off.link_time_s,
                 link_tx_j: off.link_tx_j,
                 remote_energy_j: off.remote_energy_j,
@@ -954,13 +1001,18 @@ impl<'a> ServingEngine<'a> {
         let (id, arrival_s, total_frames) = (j.id, j.arrival_s, j.frames);
         if let Some(mut rep) = local.report {
             if let Some(remote) = off.remote_report {
-                // Frames sum; the clock is the slower half (the remote
-                // one pays the link first); the bill adds the tier's
-                // marked-up compute plus the radio TX. Remote idle
-                // stays inside the billed remote energy — the local
-                // idle-floor split (`idle_energy_j`) keeps describing
-                // the edge node only.
-                rep.frames += remote.frames;
+                // Frames sum for a frame-range split; a layer split's
+                // head session already covered every frame, so adding
+                // the remote tail's count would double-bill them. The
+                // clock is the slower half (the remote one pays the
+                // link first); the bill adds the tier's marked-up
+                // compute plus the radio TX. Remote idle stays inside
+                // the billed remote energy — the local idle-floor
+                // split (`idle_energy_j`) keeps describing the edge
+                // node only.
+                if off.split_layer.is_none() {
+                    rep.frames += remote.frames;
+                }
                 rep.time_s = rep.time_s.max(off.link_time_s + remote.time_s);
                 rep.energy_j += off.energy_mult * remote.energy_j + off.link_tx_j;
                 rep.workers += remote.workers;
@@ -973,6 +1025,8 @@ impl<'a> ServingEngine<'a> {
             rep.offloaded_frames = off.remote_frames;
             rep.link_tx_j = off.link_tx_j;
             rep.link_time_s = off.link_time_s;
+            rep.split_layer = off.split_layer;
+            rep.activation_kb = off.activation_kb;
             self.session_reports.push(rep);
         }
         self.completed.push(CompletedJob {
@@ -992,6 +1046,10 @@ impl<'a> ServingEngine<'a> {
         self.metrics.histogram("job_latency_s").record_s(t - arrival_s);
         self.metrics.histogram("job_service_s").record_s(t - local.start_s);
         self.offload_totals.count += 1;
+        if off.split_layer.is_some() {
+            self.offload_totals.layer_splits += 1;
+            self.metrics.inc("layer_splits", 1);
+        }
         self.offload_totals.frames += off.remote_frames as u64;
         self.offload_totals.link_tx_j += off.link_tx_j;
         self.offload_totals.link_time_s += off.link_time_s;
@@ -1263,21 +1321,39 @@ impl<'a> ServingEngine<'a> {
             // `frames` stays the job's original total so completion
             // counts conserve frames fleet-wide.
             let pending = self.migrations.remove(&j);
-            // A fresh admission may carry an offload verdict: `split`
-            // frames ship to the cloud tier while the rest run here as
-            // a normal local admission. Preemption victims never
-            // re-offload (the planner's eligibility gate), so `pending`
-            // and `offload` are mutually exclusive.
-            let offload = match (&pending, decision.action) {
-                (None, PlanAction::Offload { split }) => {
-                    decision.offload.clone().map(|remote| (split, remote))
-                }
+            // A fresh admission may carry an offload verdict: part of
+            // the work ships to the cloud tier while the rest runs here
+            // as a normal local admission — a frame range, or (layer
+            // split) the tail half of every frame. Preemption victims
+            // never re-offload (the planner's eligibility gate), so
+            // `pending` and `offload` are mutually exclusive.
+            let mut offload = match (&pending, decision.action) {
+                (None, PlanAction::Offload { split }) => decision
+                    .offload
+                    .clone()
+                    .map(|remote| (split, remote, None::<TaskProfile>)),
                 _ => None,
             };
             let local_frames = match &offload {
-                Some((split, _)) => frames - split,
-                None => frames,
+                Some((SplitPoint::Frames(f), _, _)) => frames - f,
+                // A layer split keeps every frame local: the resident
+                // session runs the head half of each one.
+                Some((SplitPoint::Layer(_), _, _)) | None => frames,
             };
+            // A layer split reshapes the job in place: from here on the
+            // job's task IS the head half (sessions, regrants and
+            // checkpoints all see the head cost), and the tail profile
+            // rides along to the remote session.
+            if let Some((SplitPoint::Layer(i), _, tail)) = &mut offload {
+                let model = self
+                    .cfg
+                    .model
+                    .clone()
+                    .expect("layer-split verdict without a model profile");
+                let base = self.jobs[j].task.clone();
+                *tail = Some(model.tail_task(&base, *i));
+                self.jobs[j].task = model.head_task(&base, *i);
+            }
             let plan = {
                 let nd = &self.nodes[node_i];
                 match &pending {
@@ -1338,8 +1414,8 @@ impl<'a> ServingEngine<'a> {
                     })?;
                 }
             }
-            if let Some((split, remote)) = offload {
-                self.launch_offload(j, node_i, now_s, split, remote)?;
+            if let Some((split, remote, tail_task)) = offload {
+                self.launch_offload(j, node_i, now_s, split, remote, tail_task)?;
             }
             self.queue.remove(now_s, j);
             let h = self.events.push(finish, Ev::Completion { node: node_i, job: j, gen: 0 });
@@ -1872,6 +1948,8 @@ impl<'a> ServingEngine<'a> {
             // they are (the planner gates on this too — the clone is
             // simply not worth paying on those paths).
             req.tier = self.cfg.tier.clone();
+            req.model = self.cfg.model.clone();
+            req.split_mode = self.cfg.split_mode;
         }
         if !mode_free {
             req.pinned_mode = Some(nd.mode.clone());

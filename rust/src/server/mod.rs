@@ -97,6 +97,12 @@ pub struct ServeConfig {
     /// Stamp every job privacy-pinned: frames never leave the edge even
     /// when a cloud tier is configured.
     pub pin_local: bool,
+    /// Per-layer cost/size profile of the serving task
+    /// (`--model-profile`). With a tier, lets the planner split each
+    /// frame at a layer boundary (ship the activation, not the frame).
+    pub model: Option<crate::model::LayerGraph>,
+    /// Which split axes the offload search may use (`--split`).
+    pub split_mode: crate::model::SplitMode,
     /// Directory for on-disk `SessionState` checkpoints (`None` = keep
     /// checkpoints in memory only). Files left behind by a previous
     /// process are restored on the next dispatch of the same job id.
@@ -123,6 +129,8 @@ impl Default for ServeConfig {
             faults: Vec::new(),
             tier: None,
             pin_local: false,
+            model: None,
+            split_mode: crate::model::SplitMode::default(),
             checkpoint_dir: None,
         }
     }
@@ -201,6 +209,9 @@ pub struct ServeReport {
     pub shard_queue_depth_peaks: Vec<usize>,
     /// Jobs the planner split across edge and cloud (0 edge-only).
     pub offloads: u64,
+    /// Offloads that split within the frame at a layer boundary
+    /// (subset of `offloads`; 0 without a `--model-profile`).
+    pub layer_splits: u64,
     /// Frames shipped to the cloud tier across all offloaded jobs.
     pub offloaded_frames: u64,
     /// Radio/NIC energy spent transmitting offloaded frames (J),
@@ -270,6 +281,7 @@ impl ServeReport {
                 .map(|g| g.unwrap_or(0.0) as usize)
                 .collect(),
             offloads: outcome.offloads,
+            layer_splits: outcome.layer_splits,
             offloaded_frames: outcome.offloaded_frames,
             link_tx_j: outcome.link_tx_j,
             link_time_s: outcome.link_time_s,
@@ -294,7 +306,7 @@ impl ServeReport {
         };
     }
 
-    /// Write the versioned (`"schema": 3`) report through the shared
+    /// Write the versioned (`"schema": 4`) report through the shared
     /// streaming encoder — the same writer the telemetry stream and the
     /// session reports use — so bench runs can be diffed across PRs and
     /// consumers can gate on the schema number instead of sniffing
@@ -311,7 +323,7 @@ impl ServeReport {
                 .end_obj();
         }
         w.begin_obj()
-            .field_usize("schema", 3)
+            .field_usize("schema", 4)
             .field_usize("jobs", self.jobs)
             .field_usize("frames", self.frames);
         summary(w, "latency", &self.latency);
@@ -338,8 +350,11 @@ impl ServeReport {
             .field_num("plan_cache_misses", self.plan_cache_misses as f64)
             .field_usize("plans_cached", self.plans_cached)
             .field_num("p2c_fallback_scans", self.p2c_fallback_scans as f64)
-            .field_num("offloads", self.offloads as f64)
-            .field_num("offloaded_frames", self.offloaded_frames as f64)
+            .field_num("offloads", self.offloads as f64);
+        if self.layer_splits > 0 {
+            w.field_num("layer_splits", self.layer_splits as f64);
+        }
+        w.field_num("offloaded_frames", self.offloaded_frames as f64)
             .field_num("link_tx_j", self.link_tx_j)
             .field_num("link_time_s", self.link_time_s)
             .key("shard_queue_depth_peaks")
@@ -432,6 +447,8 @@ pub fn serve(coordinator: &mut Coordinator, cfg: &ServeConfig) -> Result<ServeRe
     engine_cfg.faults = cfg.faults.clone();
     engine_cfg.pace = cfg.pace;
     engine_cfg.tier = cfg.tier.clone();
+    engine_cfg.model = cfg.model.clone();
+    engine_cfg.split_mode = cfg.split_mode;
     engine_cfg.checkpoint_dir = cfg.checkpoint_dir.clone();
 
     let mut engine =
@@ -614,7 +631,7 @@ mod tests {
         )
         .unwrap();
         let j = Json::parse(&report.to_json_string()).unwrap();
-        assert_eq!(j.get("schema").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("schema").unwrap().as_usize(), Some(4));
         assert_eq!(j.get("jobs").unwrap().as_usize(), Some(4));
         assert!(j.get("latency").unwrap().get("p99_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("total_energy_j").unwrap().as_f64().unwrap() > 0.0);
@@ -664,7 +681,7 @@ mod tests {
         assert_eq!(c.metrics.counter("plan_cache_hits"), 5);
         assert_eq!(c.metrics.counter("plan_cache_misses"), 1);
         let j = Json::parse(&report.to_json_string()).unwrap();
-        assert_eq!(j.get("schema").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("schema").unwrap().as_usize(), Some(4));
         assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("plans_cached").unwrap().as_usize(), Some(1));
     }

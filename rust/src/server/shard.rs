@@ -427,12 +427,14 @@ fn merge(
     let mut max_queue_depth = 0usize;
     let mut depth_area = 0f64;
     let mut offloads = 0u64;
+    let mut layer_splits = 0u64;
     let mut offloaded_frames = 0u64;
     let mut link_tx_j = 0f64;
     let mut link_time_s = 0f64;
     let mut offload_energy_j = 0f64;
     for (i, (&(start, len), o)) in ranges.iter().zip(outcomes).enumerate() {
         offloads += o.offloads;
+        layer_splits += o.layer_splits;
         offloaded_frames += o.offloaded_frames;
         link_tx_j += o.link_tx_j;
         link_time_s += o.link_time_s;
@@ -488,6 +490,7 @@ fn merge(
         session_reports,
         des_events,
         offloads,
+        layer_splits,
         offloaded_frames,
         link_tx_j,
         link_time_s,

@@ -2,7 +2,8 @@
 //!
 //! The engine emits one line per lifecycle event — admission, regrant,
 //! shed, mode switch, checkpoint, fault, restart, migration, offload,
-//! completion — encoded with [`crate::util::jsonl::JsonWriter`] (no
+//! completion, plus a one-shot `model` record when a layer graph is
+//! loaded — encoded with [`crate::util::jsonl::JsonWriter`] (no
 //! tree building on the hot path) and decoded by
 //! [`crate::util::jsonl::decode_line`]. Every record carries `event`
 //! (one of [`EVENT_NAMES`]) and `t_s` (sim-clock seconds); the rest of
@@ -32,6 +33,7 @@ pub const EVENT_NAMES: &[&str] = &[
     "migrate",
     "offload",
     "complete",
+    "model",
 ];
 
 /// Destination for the engine's event stream: a line-buffered writer
@@ -116,6 +118,31 @@ pub fn lint_line(line: &str) -> Result<String> {
         Some(t) if t.is_finite() && t >= 0.0 => {}
         _ => bail!("event {event:?} has no finite non-negative \"t_s\""),
     }
+    if event == "offload" {
+        match v.get("split").and_then(|s| s.as_str()) {
+            Some("frames") => {}
+            Some("layer") => {
+                if v.get("split_layer").and_then(|l| l.as_usize()).is_none() {
+                    bail!("layer-split offload record has no integral \"split_layer\"");
+                }
+                match v.get("activation_kb").and_then(|a| a.as_f64()) {
+                    Some(kb) if kb.is_finite() && kb > 0.0 => {}
+                    _ => bail!("layer-split offload record has no positive \"activation_kb\""),
+                }
+            }
+            Some(other) => bail!("offload record has unknown split kind {other:?}"),
+            None => bail!("offload record has no string \"split\" field"),
+        }
+    }
+    if event == "model" {
+        if v.get("name").and_then(|n| n.as_str()).is_none() {
+            bail!("model record has no string \"name\" field");
+        }
+        match v.get("layers").and_then(|l| l.as_usize()) {
+            Some(l) if l >= 1 => {}
+            _ => bail!("model record has no positive integral \"layers\""),
+        }
+    }
     Ok(event.to_string())
 }
 
@@ -145,5 +172,56 @@ mod tests {
         assert!(lint_line(r#"{"event":"warp","t_s":1}"#).is_err(), "unknown event");
         assert!(lint_line(r#"{"event":"admit"}"#).is_err(), "missing t_s");
         assert!(lint_line(r#"{"event":"admit","t_s":-1}"#).is_err(), "negative t_s");
+    }
+
+    #[test]
+    fn lint_checks_offload_split_fields() {
+        let ok_frames = r#"{"event":"offload","t_s":1,"split":"frames"}"#;
+        assert_eq!(lint_line(ok_frames).unwrap(), "offload");
+        let ok_layer = concat!(
+            r#"{"event":"offload","t_s":1,"split":"layer","#,
+            r#""split_layer":3,"activation_kb":169}"#
+        );
+        assert_eq!(lint_line(ok_layer).unwrap(), "offload");
+        assert!(lint_line(r#"{"event":"offload","t_s":1}"#).is_err(), "missing split");
+        assert!(
+            lint_line(r#"{"event":"offload","t_s":1,"split":"halves"}"#).is_err(),
+            "unknown split kind"
+        );
+        assert!(
+            lint_line(r#"{"event":"offload","t_s":1,"split":"layer","activation_kb":5}"#)
+                .is_err(),
+            "layer split without a boundary index"
+        );
+        assert!(
+            lint_line(r#"{"event":"offload","t_s":1,"split":"layer","split_layer":3}"#)
+                .is_err(),
+            "layer split without an activation payload"
+        );
+        assert!(
+            lint_line(
+                concat!(
+                    r#"{"event":"offload","t_s":1,"split":"layer","#,
+                    r#""split_layer":3,"activation_kb":0}"#
+                )
+            )
+            .is_err(),
+            "zero activation payload"
+        );
+    }
+
+    #[test]
+    fn lint_checks_model_records() {
+        let ok = r#"{"event":"model","t_s":0,"name":"yolo_embedded","layers":8}"#;
+        assert_eq!(lint_line(ok).unwrap(), "model");
+        assert!(lint_line(r#"{"event":"model","t_s":0,"layers":8}"#).is_err(), "no name");
+        assert!(
+            lint_line(r#"{"event":"model","t_s":0,"name":"m","layers":0}"#).is_err(),
+            "zero layers"
+        );
+        assert!(
+            lint_line(r#"{"event":"model","t_s":0,"name":"m"}"#).is_err(),
+            "missing layers"
+        );
     }
 }

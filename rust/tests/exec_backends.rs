@@ -258,7 +258,7 @@ fn serve_real_mode_runs_concurrent_stub_sessions_end_to_end() {
     assert!(report.session_energy_j > 0.0);
     assert!(report.total_energy_j > 0.0);
     let j = divide_and_save::util::json::Json::parse(&report.to_json_string()).unwrap();
-    assert_eq!(j.get("schema").unwrap().as_usize(), Some(3));
+    assert_eq!(j.get("schema").unwrap().as_usize(), Some(4));
     assert_eq!(j.get("sessions").unwrap().as_usize(), Some(3));
     assert!(j.get("session_energy_j").unwrap().as_f64().unwrap() > 0.0);
 }

@@ -1,0 +1,221 @@
+//! Layer-split acceptance tests (tier-1): the per-layer model subsystem
+//! end to end — the inline graph grammar, the planner's layer-boundary
+//! split axis, and the engine's coupled head/tail execution.
+//!
+//! * **Acceptance (a)** — a profile whose dominant middle block ends at
+//!   a tiny activation, behind a link with fat raw frames (1500 KB) and
+//!   an expensive radio: the best layer split must beat both the best
+//!   frame split and the best local-only plan on predicted energy.
+//! * **Acceptance (b)** — an adversarial fat-activation profile (every
+//!   boundary ships far more bytes than a raw frame): over random frame
+//!   counts, deadlines and links, the auto split search must never pick
+//!   a layer boundary.
+//! * **End to end** — a stub-engine serving run in `--split layers`
+//!   mode executes at least one coupled head/tail split, conserves
+//!   every frame, merges each pair into one session report, and streams
+//!   lint-clean telemetry (`model` record, per-offload split metadata).
+
+use divide_and_save::config::{ExecMode, ExperimentConfig};
+use divide_and_save::coordinator::router::SplitPolicy;
+use divide_and_save::coordinator::{
+    Coordinator, JointPlanner, PlanAction, PlanRequest, Planner, PlannerKind, SplitPoint,
+};
+use divide_and_save::device::DeviceSpec;
+use divide_and_save::model::{LayerGraph, SplitMode};
+use divide_and_save::net::{LinkSpec, TierSpec};
+use divide_and_save::server::telemetry::lint_line;
+use divide_and_save::server::{serve, ServeConfig};
+use divide_and_save::util::proptest::{ensure, forall};
+use divide_and_save::workload::{ArrivalProcess, TaskProfile};
+
+fn tier(cloud: &str, link: &str) -> TierSpec {
+    TierSpec::parse(cloud, LinkSpec::parse(link).unwrap()).unwrap()
+}
+
+fn joint() -> JointPlanner {
+    JointPlanner::new(ExperimentConfig::default(), SplitPolicy::Fixed(4))
+}
+
+fn tx2_req(frames: usize) -> PlanRequest {
+    PlanRequest::new(DeviceSpec::tx2(), TaskProfile::yolo_tiny(), frames)
+}
+
+/// A lab profile built for within-frame partitioning: a cheap stem
+/// whose output activation (10 KB) is two orders of magnitude smaller
+/// than the raw frame, then a dominant body block. Splitting after the
+/// stem ships almost nothing and moves 90% of the compute.
+fn lab_graph() -> LayerGraph {
+    LayerGraph::parse_inline("lab:stem=1.0/10,body=8.0/5,head=1.0/2").unwrap()
+}
+
+/// Acceptance (a): raw frames are fat (1500 KB) and the radio is
+/// priced at 1 J/MB, so the frame axis pays ~150x the layer axis in
+/// uplink bytes per unit of compute moved. With a deadline no local
+/// plan can meet, the layer-boundary split must win — and win on
+/// predicted energy against both the best frame split and the best
+/// local-only race, not merely squeak under the deadline.
+#[test]
+fn layer_split_beats_the_best_frame_split_and_local_plan() {
+    let link = "50ms:100mbps:framekb=1500:tx=1.0";
+    let layered = joint()
+        .plan(
+            &tx2_req(720)
+                .with_deadline(200.0)
+                .with_tier(tier("orin", link))
+                .with_model(lab_graph())
+                .with_split_mode(SplitMode::Layers),
+        )
+        .unwrap();
+    let o = layered.offload.as_ref().expect("a hopeless local deadline must split somewhere");
+    let PlanAction::Offload { split: SplitPoint::Layer(i) } = layered.action else {
+        panic!("layers mode must split at a boundary, got {:?}", layered.action)
+    };
+    assert_eq!(o.split_layer, Some(i));
+    assert_eq!(o.remote_frames, 720, "a layer split ships every frame's tail");
+    assert_eq!(o.activation_kb, lab_graph().activation_kb(i));
+    assert!(
+        o.activation_kb < 1500.0 / 10.0,
+        "the winning boundary must undercut the raw frame payload by far, \
+         shipped {} KB",
+        o.activation_kb
+    );
+    assert!(layered.predicted_time_s <= 200.0 + 1e-9, "the split must make the deadline");
+
+    // The same request forced onto the frame axis: the planner still
+    // offloads (locally the deadline is unreachable), but every frame
+    // candidate pays the 1500 KB/frame uplink toll.
+    let framed = joint()
+        .plan(
+            &tx2_req(720)
+                .with_deadline(200.0)
+                .with_tier(tier("orin", link))
+                .with_model(lab_graph())
+                .with_split_mode(SplitMode::Frames),
+        )
+        .unwrap();
+    if let Some(fo) = &framed.offload {
+        assert_eq!(fo.split_layer, None, "frames mode must never pick a boundary");
+    }
+    // And with no tier at all: the best the local mode x k grid can do.
+    let local = joint().plan(&tx2_req(720).with_deadline(200.0)).unwrap();
+    assert!(local.offload.is_none());
+
+    assert!(
+        layered.predicted_energy_j < framed.predicted_energy_j,
+        "layer split {:.0} J must beat the best frame split {:.0} J",
+        layered.predicted_energy_j,
+        framed.predicted_energy_j
+    );
+    assert!(
+        layered.predicted_energy_j < local.predicted_energy_j,
+        "layer split {:.0} J must beat the best local-only plan {:.0} J",
+        layered.predicted_energy_j,
+        local.predicted_energy_j
+    );
+}
+
+/// Acceptance (b): an adversarial profile whose every boundary ships a
+/// 2000 KB activation — 13x the raw frame. A matched frame split moves
+/// the same compute for a fraction of the bytes and overlaps the halves
+/// besides (a layer tail waits for its head; frame halves run
+/// concurrently), so over random frame counts, deadlines and links the
+/// auto search must never pick a layer boundary, feasible set or race.
+///
+/// Frame counts start at 8: at a couple of frames the frame axis has a
+/// single coarse split point (`frames * i / 8` collapses to one value)
+/// while layer boundaries still offer fine fractions, and a few MB of
+/// activation is energy-noise — the byte-dominance argument only binds
+/// once the job is more than a handful of frames (the analytic
+/// crossover is 4; 8 keeps a 2x margin).
+#[test]
+fn fat_activation_profiles_never_win_the_auto_split_search() {
+    let links = ["0ms:1gbps", "50ms:100mbps", "5ms:10mbps:loss=0.2", "100ms:20mbps:tx=0.5"];
+    let fat =
+        || LayerGraph::parse_inline("fat:a=2.0/2000,b=2.0/2000,c=2.0/2000,d=2.0/2000").unwrap();
+    forall(
+        0x1A7E,
+        24,
+        |r| {
+            let frames = 8 + r.usize(713);
+            let deadline = r.bool().then(|| 30.0 + r.range_f64(0.0, 300.0));
+            (frames, deadline, r.usize(links.len()))
+        },
+        |&(frames, deadline, li)| {
+            let mut req = tx2_req(frames)
+                .with_tier(tier("orin", links[li]))
+                .with_model(fat())
+                .with_split_mode(SplitMode::Auto);
+            if let Some(d) = deadline {
+                req = req.with_deadline(d);
+            }
+            let plan = joint().plan(&req).map_err(|e| format!("{e:#}"))?;
+            if let Some(o) = &plan.offload {
+                ensure(
+                    o.split_layer.is_none(),
+                    format!(
+                        "fat activations won at boundary {:?}: {} frames, deadline {:?}, \
+                         link {}",
+                        o.split_layer, frames, deadline, links[li]
+                    ),
+                )?;
+            }
+            ensure(
+                !matches!(plan.action, PlanAction::Offload { split: SplitPoint::Layer(_) }),
+                format!("layer-split verdict for the fat profile: {:?}", plan.action),
+            )
+        },
+    );
+}
+
+/// End to end: a stub-engine fleet in layers mode under the CI smoke
+/// config (deadline 100 s — only the post-`conv2` boundary of the
+/// built-in graph is feasible) must execute its offloads as coupled
+/// head/tail splits, conserve every frame without double-counting the
+/// tails, merge each pair into one session report, and stream telemetry
+/// that lints clean and carries the model record plus per-offload split
+/// metadata.
+#[test]
+fn layers_mode_serving_executes_coupled_head_tail_splits() {
+    let mut base = ExperimentConfig::default(); // TX2, yolo-tiny
+    base.mode = ExecMode::Real;
+    base.stub_engine = true;
+    let path =
+        std::env::temp_dir().join(format!("dsplit-layer-split-{}.jsonl", std::process::id()));
+    let cfg = ServeConfig {
+        jobs: 3,
+        frames_per_job: 720,
+        deadline_s: Some(100.0),
+        arrival: Some(ArrivalProcess::Deterministic { gap_s: 500.0 }),
+        tier: Some(tier("orin", "50ms:100mbps")),
+        model: Some(LayerGraph::yolo_embedded()),
+        split_mode: SplitMode::Layers,
+        telemetry: Some(path.to_str().unwrap().to_string()),
+        ..ServeConfig::default()
+    };
+    let planner = PlannerKind::Joint.build(base.clone(), SplitPolicy::Fixed(4));
+    let report = serve(&mut Coordinator::with_planner(base, planner), &cfg).unwrap();
+
+    assert!(report.layer_splits >= 1, "layers mode must produce at least one layer split");
+    assert_eq!(report.offloads, report.layer_splits, "layers mode never splits on frames");
+    assert_eq!(report.jobs, 3);
+    assert_eq!(report.frames, 3 * 720, "head+tail pairs must not double-count frames");
+    assert_eq!(report.sessions, 3, "each head/tail pair merges into one session report");
+    assert!(report.link_tx_j > 0.0, "shipped activations are billed on the radio");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let mut model_records = 0u64;
+    let mut layer_offloads = 0u64;
+    for line in text.lines() {
+        match lint_line(line).unwrap().as_str() {
+            "model" => model_records += 1,
+            "offload" => {
+                assert!(line.contains(r#""split":"layer""#), "layers mode offload: {line}");
+                layer_offloads += 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(model_records, 1, "the model record is one-shot");
+    assert_eq!(layer_offloads, report.layer_splits);
+}

@@ -13,7 +13,10 @@
 //!   how many: an offloaded stub-engine run completes exactly the
 //!   frames of its local-only twin, one merged session report per job.
 //! * **Determinism** — a lossy link is modeled in expectation, so two
-//!   same-seed serving runs produce byte-identical schema-3 reports.
+//!   same-seed serving runs produce byte-identical schema-4 reports.
+//! * **Parity oracle** — a layer graph riding along in `--split frames`
+//!   mode changes nothing: the report is byte-identical to a run with
+//!   no model profile at all.
 //! * **Slack-ordered eviction** — an overload shock sheds the resident
 //!   with the most deadline slack, not merely the youngest.
 //! * **Cross-process resume** — an on-disk `SessionState` checkpoint
@@ -25,7 +28,7 @@
 use divide_and_save::config::{ExecMode, ExperimentConfig};
 use divide_and_save::coordinator::router::SplitPolicy;
 use divide_and_save::coordinator::{
-    Coordinator, JointPlanner, PlanAction, PlanRequest, Planner, PlannerKind,
+    Coordinator, JointPlanner, PlanAction, PlanRequest, Planner, PlannerKind, SplitPoint,
 };
 use divide_and_save::device::DeviceSpec;
 use divide_and_save::exec::{ExecutionBackend, SessionSpec, SimBackend};
@@ -69,7 +72,11 @@ fn paper_link_offload_beats_the_best_local_plan() {
         .plan(&tx2_req(720).with_tier(tier("orin", "50ms:100mbps")).with_deadline(100.0))
         .unwrap();
     let o = offloaded.offload.as_ref().expect("a hopeless local deadline must offload");
-    assert!(matches!(offloaded.action, PlanAction::Offload { split } if split == o.remote_frames));
+    assert!(matches!(
+        offloaded.action,
+        PlanAction::Offload { split: SplitPoint::Frames(f) } if f == o.remote_frames
+    ));
+    assert_eq!(o.split_layer, None, "no model profile: the split axis is frames");
     assert!(o.remote_frames >= 1 && o.remote_frames < 720);
     assert!(o.link_time_s > 0.0 && o.link_tx_j > 0.0, "a real link is never free");
     assert!(o.remote_energy_j > 0.0);
@@ -181,9 +188,9 @@ fn zero_cost_link_offload_conserves_every_frame() {
 
 /// Loss is modeled as a deterministic expected-retransmit factor, never
 /// sampled — so two same-seed runs over a lossy link must serialize
-/// byte-identical schema-3 reports, offload fields included.
+/// byte-identical schema-4 reports, offload fields included.
 #[test]
-fn lossy_link_serving_is_deterministic_and_reports_schema_3() {
+fn lossy_link_serving_is_deterministic_and_reports_schema_4() {
     let cfg = ServeConfig {
         jobs: 3,
         frames_per_job: 720,
@@ -200,11 +207,48 @@ fn lossy_link_serving_is_deterministic_and_reports_schema_3() {
 
     let j = Json::parse(&a).unwrap();
     let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("no {k}"));
-    assert_eq!(num("schema"), 3.0);
+    assert_eq!(num("schema"), 4.0);
     assert!(num("offloads") >= 1.0);
     assert!(num("offloaded_frames") > 0.0);
     assert!(num("link_tx_j") > 0.0, "loss inflates, never erases, the TX bill");
     assert!(num("link_time_s") > 0.0);
+}
+
+/// Parity oracle: loading a layer graph but pinning the split axis to
+/// frames must be a no-op — the serve report (and therefore every
+/// planning decision behind it) is byte-identical to a run that never
+/// heard of the model. Guards against the layer subsystem leaking into
+/// the schema-3-era output paths it is supposed to leave untouched.
+#[test]
+fn frames_mode_report_is_byte_identical_to_the_model_free_run() {
+    use divide_and_save::model::{LayerGraph, SplitMode};
+    let cfg = ServeConfig {
+        jobs: 3,
+        frames_per_job: 720,
+        deadline_s: Some(100.0),
+        arrival: Some(ArrivalProcess::Deterministic { gap_s: 500.0 }),
+        seed: 7,
+        tier: Some(tier("orin", "50ms:100mbps")),
+        ..ServeConfig::default()
+    };
+    let run = |cfg: &ServeConfig| {
+        serve(&mut joint_coordinator(ExperimentConfig::default()), cfg)
+            .unwrap()
+            .to_json_string()
+    };
+    let bare = run(&cfg);
+    let frames_pinned = run(&ServeConfig {
+        model: Some(LayerGraph::yolo_embedded()),
+        split_mode: SplitMode::Frames,
+        ..cfg.clone()
+    });
+    assert_eq!(
+        bare, frames_pinned,
+        "a layer graph in frames mode must not perturb the report"
+    );
+    let j = Json::parse(&bare).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_usize(), Some(4));
+    assert!(j.get("layer_splits").is_none(), "no layer splits: the field stays absent");
 }
 
 /// Satellite regression: an overload shock must evict the resident
